@@ -1,0 +1,47 @@
+//! Quickstart: quantize a trained LM with Student Float (SF4) and compare
+//! against NF4 / INT4 / fp32 on completion accuracy and perplexity.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --offline --example quickstart
+//! ```
+
+use anyhow::Result;
+use llm_datatypes::coordinator::model::{GraphKind, LmHandle};
+use llm_datatypes::coordinator::pipeline::{fp32_values, quantize_lm, PipelineConfig};
+use llm_datatypes::coordinator::{corpus_for, Session};
+use llm_datatypes::exp::ensure_model;
+use llm_datatypes::model_io::zoo;
+use llm_datatypes::tasks::{completion_accuracy, perplexity};
+
+fn main() -> Result<()> {
+    let session = Session::open("artifacts", "checkpoints", "results")?;
+    let model = "micro";
+    ensure_model(&session, model)?; // trains in ~20s if no checkpoint yet
+    let cfg = zoo(model)?;
+    let ckpt = session.load_checkpoint(model)?;
+    let corpus = corpus_for(&cfg);
+    let windows = corpus.heldout_windows(128, cfg.seq);
+
+    println!("model `{model}`: {} params", cfg.n_params());
+    println!("{:<8} {:>10} {:>10}", "format", "LAMB acc%", "Wiki ppl");
+
+    // fp32 baseline
+    let values = fp32_values(&cfg, &ckpt)?;
+    let mut handle = LmHandle::bind(&session.engine, &cfg, GraphKind::Fp32, &values)?;
+    let acc = completion_accuracy(&mut handle, &windows)?;
+    let ppl = perplexity(&mut handle, &windows[..32])?;
+    println!("{:<8} {:>10.2} {:>10.2}", "fp32", acc * 100.0, ppl);
+
+    // quantized: the datatype is runtime data — same compiled artifact,
+    // different 16-entry codebook + codes.
+    for fmt in ["sf4", "nf4", "e2m1", "e2m1_sp", "int4"] {
+        let pc = PipelineConfig::weight_only(fmt);
+        let qm = quantize_lm(&cfg, &ckpt, &pc, &corpus)?;
+        let mut handle =
+            LmHandle::bind(&session.engine, &cfg, GraphKind::WeightOnly, &qm.values)?;
+        let acc = completion_accuracy(&mut handle, &windows)?;
+        let ppl = perplexity(&mut handle, &windows[..32])?;
+        println!("{:<8} {:>10.2} {:>10.2}   (recon MSE {:.2e})", fmt, acc * 100.0, ppl, qm.recon_mse);
+    }
+    Ok(())
+}

@@ -1,0 +1,64 @@
+//! Serving demo: a quantized LM behind the request router + dynamic
+//! batcher, with a batch-1 vs batched throughput comparison — the
+//! memory-bound serving scenario that motivates weight-only quantization.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --offline --example serve_demo
+//! ```
+
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+use llm_datatypes::coordinator::model::{GraphKind, LmHandle};
+use llm_datatypes::coordinator::pipeline::{quantize_lm, PipelineConfig};
+use llm_datatypes::coordinator::serve::{run_loadgen, ServeConfig, Server};
+use llm_datatypes::coordinator::{corpus_for, Session};
+use llm_datatypes::exp::ensure_model;
+use llm_datatypes::model_io::zoo;
+use llm_datatypes::rng::Pcg64;
+
+fn main() -> Result<()> {
+    let session = Session::open("artifacts", "checkpoints", "results")?;
+    let model = "micro";
+    ensure_model(&session, model)?;
+    let cfg = zoo(model)?;
+    let ckpt = session.load_checkpoint(model)?;
+    let corpus = corpus_for(&cfg);
+
+    let pc = PipelineConfig::weight_only("sf4");
+    let qm = quantize_lm(&cfg, &ckpt, &pc, &corpus)?;
+
+    let mut rng = Pcg64::new(3);
+    let prompts: Vec<Vec<i32>> = (0..128)
+        .map(|_| {
+            let start = rng.below(corpus.heldout.len() - cfg.seq);
+            corpus.heldout[start..start + cfg.seq / 2].to_vec()
+        })
+        .collect();
+
+    println!("serving `{model}` quantized to SF4 (batch capacity {})", cfg.batch_eval);
+    for (label, clients, wait) in [
+        ("batch=1 (no coalescing)", 1usize, Duration::from_micros(1)),
+        ("dynamic batching, 16 clients", 16usize, Duration::from_millis(2)),
+    ] {
+        let handle =
+            LmHandle::bind(&session.engine, &cfg, GraphKind::WeightOnly, &qm.values)?;
+        let server =
+            Server::new(handle, ServeConfig { max_wait: wait, max_requests: 0 });
+        let t0 = Instant::now();
+        let total = 128;
+        let stats = run_loadgen(server, prompts.clone(), clients, total / clients)?;
+        let secs = t0.elapsed().as_secs_f64();
+        println!(
+            "{label:32} served {:>4} in {secs:5.2}s = {:6.1} req/s | batches {:>3} \
+             (fill {:.2}) | p50 {:?} p99 {:?}",
+            stats.served,
+            stats.served as f64 / secs,
+            stats.batches,
+            stats.mean_batch_fill,
+            stats.p50_latency,
+            stats.p99_latency
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,268 @@
+"""AOT lowering: JAX graphs -> HLO *text* artifacts for the Rust runtime.
+
+Run once at build time (`make artifacts`); Python never sits on the request
+path. HLO text (not `.serialize()`) is the interchange format: jax >= 0.5
+emits protos with 64-bit instruction ids that xla_extension 0.5.1 rejects;
+the text parser reassigns ids (see /opt/xla-example/README.md).
+
+Every artifact gets a sibling `<name>.params.txt` manifest that the Rust
+loader uses to marshal inputs:  lines of `<param-name> <dtype> <d0,d1,...>`
+in exact parameter order, then `-- outputs --` and the output descriptors.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import formats
+from compile import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _dt(dtype: str):
+    return {"f32": jnp.float32, "i8": jnp.int8, "i32": jnp.int32}[dtype]
+
+
+def _spec(shape, dtype="f32"):
+    return jax.ShapeDtypeStruct(tuple(shape), _dt(dtype))
+
+
+class Artifact:
+    """One lowered graph: fn + ordered input specs + output names."""
+
+    def __init__(self, name, fn, inputs, output_names):
+        self.name = name
+        self.fn = fn
+        self.inputs = inputs  # list of (name, shape, dtype)
+        self.output_names = output_names
+
+    def emit(self, outdir: str) -> None:
+        specs = [_spec(shape, dtype) for _, shape, dtype in self.inputs]
+        lowered = jax.jit(self.fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        if "custom-call" in text and "Mosaic" in text:
+            raise RuntimeError(f"{self.name}: Mosaic custom-call leaked into "
+                               "HLO; pallas must be interpret=True")
+        path = os.path.join(outdir, f"{self.name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        # Output shapes from the lowered signature.
+        out_avals = jax.eval_shape(self.fn, *specs)
+        flat, _ = jax.tree_util.tree_flatten(out_avals)
+        with open(os.path.join(outdir, f"{self.name}.params.txt"), "w") as f:
+            for name, shape, dtype in self.inputs:
+                dims = ",".join(str(d) for d in shape)
+                f.write(f"{name} {dtype} {dims}\n")
+            f.write("-- outputs --\n")
+            for oname, aval in zip(self.output_names, flat):
+                dt = {np.dtype("float32"): "f32", np.dtype("int32"): "i32",
+                      np.dtype("int8"): "i8"}[np.dtype(aval.dtype)]
+                dims = ",".join(str(d) for d in aval.shape)
+                f.write(f"{oname} {dt} {dims}\n")
+        print(f"  wrote {self.name}.hlo.txt ({len(text)} chars, "
+              f"{len(self.inputs)} inputs)")
+
+
+# ---------------------------------------------------------------------------
+# LM artifacts
+# ---------------------------------------------------------------------------
+
+
+def lm_artifacts(cfg: M.ModelConfig) -> list[Artifact]:
+    arts = []
+    fp32_specs = [(n, s, "f32") for n, s in M.param_specs(cfg)]
+    names_fp32 = [n for n, _ in M.param_specs(cfg)]
+
+    def unflatten(names, args):
+        return dict(zip(names, args))
+
+    # --- fp32 eval (baselines) ---
+    def fwd_fp32(tokens, *params):
+        p = unflatten(names_fp32, params)
+        return (M.lm_forward(cfg, p, tokens, quant=False, use_pallas=False),)
+
+    arts.append(Artifact(
+        f"lm_fwd_fp32_{cfg.name}", fwd_fp32,
+        [("tokens", (cfg.batch_eval, cfg.seq), "i32")] + fp32_specs,
+        ["logits"]))
+
+    def loss_fp32(tokens, *params):
+        p = unflatten(names_fp32, params)
+        return M.lm_loss(cfg, p, tokens, quant=False, use_pallas=False)
+
+    arts.append(Artifact(
+        f"lm_loss_fp32_{cfg.name}", loss_fp32,
+        [("tokens", (cfg.batch_eval, cfg.seq + 1), "i32")] + fp32_specs,
+        ["nll_sum", "count"]))
+
+    # --- quantized weight-only eval ---
+    for w4a4, tag in ((False, ""), (True, "_w4a4")):
+        qspecs = M.quant_param_specs(cfg, w4a4=w4a4)
+        qnames = [n for n, _, _ in qspecs]
+
+        def fwd_q(tokens, *params, _qn=qnames, _w=w4a4):
+            p = unflatten(_qn, params)
+            return (M.lm_forward(cfg, p, tokens, quant=True, w4a4=_w,
+                                 use_pallas=True),)
+
+        arts.append(Artifact(
+            f"lm_fwd{tag}_{cfg.name}", fwd_q,
+            [("tokens", (cfg.batch_eval, cfg.seq), "i32")] + qspecs,
+            ["logits"]))
+
+        def loss_q(tokens, *params, _qn=qnames, _w=w4a4):
+            p = unflatten(_qn, params)
+            return M.lm_loss(cfg, p, tokens, quant=True, w4a4=_w,
+                             use_pallas=True)
+
+        arts.append(Artifact(
+            f"lm_loss{tag}_{cfg.name}", loss_q,
+            [("tokens", (cfg.batch_eval, cfg.seq + 1), "i32")] + qspecs,
+            ["nll_sum", "count"]))
+
+    # --- fused train step ---
+    def train(step, tokens, *pmv):
+        n = len(names_fp32)
+        p = unflatten(names_fp32, pmv[:n])
+        m = unflatten(names_fp32, pmv[n:2 * n])
+        v = unflatten(names_fp32, pmv[2 * n:])
+        loss, p2, m2, v2 = M.train_step(cfg, p, m, v, step, tokens)
+        outs = [loss]
+        outs += [p2[k] for k in names_fp32]
+        outs += [m2[k] for k in names_fp32]
+        outs += [v2[k] for k in names_fp32]
+        return tuple(outs)
+
+    train_inputs = (
+        [("step", (), "f32"),
+         ("tokens", (cfg.batch_train, cfg.seq + 1), "i32")]
+        + fp32_specs
+        + [(f"m.{n}", s, "f32") for n, s in M.param_specs(cfg)]
+        + [(f"v.{n}", s, "f32") for n, s in M.param_specs(cfg)]
+    )
+    out_names = (["loss"] + names_fp32 + [f"m.{n}" for n in names_fp32]
+                 + [f"v.{n}" for n in names_fp32])
+    arts.append(Artifact(f"lm_train_{cfg.name}", train, train_inputs,
+                         out_names))
+    return arts
+
+
+# ---------------------------------------------------------------------------
+# Classifier artifacts
+# ---------------------------------------------------------------------------
+
+
+def cls_artifacts(cfg: M.ClassifierConfig) -> list[Artifact]:
+    arts = []
+    fp32_specs = [(n, s, "f32") for n, s in M.cls_param_specs(cfg)]
+    names = [n for n, _ in M.cls_param_specs(cfg)]
+    n_in = cfg.image * cfg.image
+
+    def fwd_fp32(x, *params):
+        p = dict(zip(names, params))
+        return (M.cls_forward(cfg, p, x, quant=False, use_pallas=False),)
+
+    arts.append(Artifact(
+        f"cls_fwd_fp32_{cfg.name}", fwd_fp32,
+        [("x", (cfg.batch_eval, n_in), "f32")] + fp32_specs, ["logits"]))
+
+    for w4a4, tag in ((False, ""), (True, "_w4a4")):
+        qspecs = M.cls_quant_param_specs(cfg, w4a4=w4a4)
+        qnames = [n for n, _, _ in qspecs]
+
+        def fwd_q(x, *params, _qn=qnames, _w=w4a4):
+            p = dict(zip(_qn, params))
+            return (M.cls_forward(cfg, p, x, quant=True, w4a4=_w,
+                                  use_pallas=True),)
+
+        arts.append(Artifact(
+            f"cls_fwd{tag}_{cfg.name}", fwd_q,
+            [("x", (cfg.batch_eval, n_in), "f32")] + qspecs, ["logits"]))
+
+    def train(step, x, labels, *pmv):
+        n = len(names)
+        p = dict(zip(names, pmv[:n]))
+        m = dict(zip(names, pmv[n:2 * n]))
+        v = dict(zip(names, pmv[2 * n:]))
+        loss, p2, m2, v2 = M.cls_train_step(cfg, p, m, v, step, x, labels)
+        return tuple([loss] + [p2[k] for k in names] + [m2[k] for k in names]
+                     + [v2[k] for k in names])
+
+    arts.append(Artifact(
+        f"cls_train_{cfg.name}", train,
+        [("step", (), "f32"), ("x", (cfg.batch_train, n_in), "f32"),
+         ("labels", (cfg.batch_train,), "i32")]
+        + fp32_specs
+        + [(f"m.{n}", s, "f32") for n, s in M.cls_param_specs(cfg)]
+        + [(f"v.{n}", s, "f32") for n, s in M.cls_param_specs(cfg)],
+        ["loss"] + names + [f"m.{n}" for n in names]
+        + [f"v.{n}" for n in names]))
+    return arts
+
+
+# ---------------------------------------------------------------------------
+# Standalone kernel bench artifact (blocked path)
+# ---------------------------------------------------------------------------
+
+
+def kernel_artifacts() -> list[Artifact]:
+    from compile.kernels import lut_matmul as K
+    mm, kk, nn, blk = 256, 512, 512, 128
+
+    def bench(x, codes, scales, cb):
+        return (K.lut_matmul(x, codes.astype(jnp.int32), scales, cb,
+                             block=blk),)
+
+    return [Artifact(
+        "lut_matmul_bench", bench,
+        [("x", (mm, kk), "f32"), ("codes", (kk, nn), "i8"),
+         ("scales", (kk // blk, nn), "f32"), ("codebook", (16,), "f32")],
+        ["y"])]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--models", default="nano,micro,small,med,large")
+    ap.add_argument("--only", default="", help="emit artifacts whose name contains this")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    arts: list[Artifact] = []
+    for name in args.models.split(","):
+        arts += lm_artifacts(M.ZOO[name])
+    for cfg in M.CLS_ZOO.values():
+        arts += cls_artifacts(cfg)
+    arts += kernel_artifacts()
+
+    emitted = []
+    for a in arts:
+        if args.only and args.only not in a.name:
+            continue
+        a.emit(args.out)
+        emitted.append(a.name)
+
+    formats.dump_tsv(os.path.join(args.out, "codebooks.tsv"))
+    with open(os.path.join(args.out, "MANIFEST.txt"), "w") as f:
+        for name in emitted:
+            f.write(name + "\n")
+        f.write("codebooks.tsv\n")
+    print(f"emitted {len(emitted)} artifacts + codebooks.tsv -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,277 @@
+"""Datatype zoo: every numeric format evaluated in the paper.
+
+Each format is represented as a *codebook*: the sorted list of representable
+values, normalized so that max |v| == 1.  Quantization of a tensor block is
+then `deq = s * nearest(codebook, x / s)` with a scale `s` chosen per block
+(absmax or MSE-searched).  This uniform "lookup" view is exactly how the
+paper treats all formats (Table 15 lists each format's value set) and lets a
+single compiled artifact serve every format: the codebook is runtime data.
+
+Lookup formats (NF4/SF4/NF3/SF3) are derived with Algorithm 1 of the paper;
+hardened formats (INT, E2M1 variants, E3M0, E2M0, APoT4 variants) enumerate
+their bit patterns.  Golden values: paper Table 15.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+import numpy as np
+from scipy import stats
+
+# ---------------------------------------------------------------------------
+# Algorithm 1: quantile-derived lookup formats (NF-k, SF-k)
+# ---------------------------------------------------------------------------
+
+
+def _algorithm1(quantile, n_values: int) -> np.ndarray:
+    """Paper Algorithm 1, generalized to ``n_values`` levels.
+
+    Produces ``n_values`` codes: ``ceil(n/2)`` on the negative side and the
+    rest (one more) on the positive side, sharing an exact zero at p = 1/2.
+    The probability offset follows QLoRA: delta = (1/(2n) + 1/(2(n-1))) / 2.
+    """
+    if n_values < 4:
+        raise ValueError("need at least 4 levels")
+    delta = 0.5 * (1.0 / (2 * n_values) + 1.0 / (2 * (n_values - 1)))
+    n_neg = n_values // 2  # values at p in [delta, 1/2], rightmost is zero
+    n_pos = n_values - n_neg + 1  # values at p in [1/2, 1-delta], first is zero
+    p_neg = np.linspace(delta, 0.5, n_neg)
+    p_pos = np.linspace(0.5, 1.0 - delta, n_pos)
+    q = np.concatenate([quantile(p_neg), quantile(p_pos)[1:]])
+    q[n_neg - 1] = 0.0  # p = 1/2 maps to exactly zero
+    return q / np.max(np.abs(q))
+
+
+def normal_float(bits: int = 4) -> np.ndarray:
+    """NF-k: Algorithm 1 with the standard-normal quantile (QLoRA's NF4)."""
+    return _algorithm1(stats.norm.ppf, 2**bits)
+
+
+def student_float(nu: float = 5.0, bits: int = 4) -> np.ndarray:
+    """SF-k(nu): Algorithm 1 with the Student-t quantile. Paper Section 3.3."""
+    return _algorithm1(lambda p: stats.t.ppf(p, nu), 2**bits)
+
+
+# ---------------------------------------------------------------------------
+# Integer formats
+# ---------------------------------------------------------------------------
+
+
+def int_format(bits: int) -> np.ndarray:
+    """Symmetric two's-complement integers -2^(b-1) .. 2^(b-1)-1, normalized."""
+    lo, hi = -(2 ** (bits - 1)), 2 ** (bits - 1) - 1
+    v = np.arange(lo, hi + 1, dtype=np.float64)
+    return v / np.max(np.abs(v))
+
+
+# ---------------------------------------------------------------------------
+# Minifloat formats (E-e M-m, with named industry variants)
+# ---------------------------------------------------------------------------
+
+
+def _minifloat_magnitudes(exp_bits: int, man_bits: int, bias: int,
+                          subnormals: bool = True) -> list[float]:
+    """All non-negative magnitudes of a sign+exp+mantissa minifloat.
+
+    No inf/nan encodings at these widths (everything is a finite value), as
+    in all the paper's FP4 variants.
+    """
+    mags = [0.0]
+    n_exp = 2**exp_bits
+    n_man = 2**man_bits
+    for e in range(n_exp):
+        for m in range(n_man):
+            if e == 0:
+                if not subnormals:
+                    continue
+                # subnormal: m/2^man * 2^(1-bias)
+                val = (m / n_man) * 2.0 ** (1 - bias)
+            else:
+                val = (1.0 + m / n_man) * 2.0 ** (e - bias)
+            if val != 0.0:
+                mags.append(val)
+    return sorted(set(mags))
+
+
+def _signed(mags: list[float], extra_pos: list[float] = ()) -> np.ndarray:
+    """Mirror magnitudes to a signed codebook, append supernormal extras.
+
+    Supernormal extras are *positive-side only*: they reassign the redundant
+    negative-zero bit pattern (paper Section 3.5), matching SF4's asymmetry.
+    """
+    pos = sorted(set(list(mags) + list(extra_pos)))
+    neg = [-v for v in mags if v != 0.0]
+    v = np.array(sorted(neg) + pos, dtype=np.float64)
+    return v / np.max(np.abs(v))
+
+
+def e2m1(variant: str = "base") -> np.ndarray:
+    """E2M1 FP4 and its variants.
+
+    base : +-{0, .5, 1, 1.5, 2, 3, 4, 6}          (15 values; +-0 redundancy)
+    i    : Intel neural-compressor scaling, subnormal at 1/16 of min normal
+    b    : bitsandbytes scaling (doubled range, same tiny subnormal)
+    ns   : no subnormal support
+    sr   : super-range  — negative-zero code reassigned to +8 (edge point)
+    sp   : super-precision — negative-zero code reassigned to +5 (gap fill)
+    """
+    base = _minifloat_magnitudes(2, 1, bias=1)  # 0,.5,1,1.5,2,3,4,6
+    if variant == "base":
+        return _signed(base)
+    if variant == "sr":
+        return _signed(base, extra_pos=[8.0])
+    if variant == "sp":
+        return _signed(base, extra_pos=[5.0])
+    if variant == "ns":
+        return _signed(_minifloat_magnitudes(2, 1, bias=1, subnormals=False))
+    if variant == "i":
+        # Intel: normals 1..6 like base but the sole subnormal collapses to
+        # 1/16 = 0.0625 (paper Table 15 lists +-0.062 on the +-6 range).
+        mags = [0.0, 0.0625] + [m for m in base if m >= 1.0]
+        return _signed(mags)
+    if variant == "b":
+        # bitsandbytes: doubled normal range {2,3,4,6,8,12}, subnormal 1/16.
+        mags = [0.0, 0.0625] + [2.0 * m for m in base if m >= 1.0]
+        return _signed(mags)
+    raise ValueError(f"unknown e2m1 variant: {variant}")
+
+
+def e3m0() -> np.ndarray:
+    """E3M0 FP4: pure powers of two +-{0, .25, .5, 1, 2, 4, 8, 16}."""
+    return _signed(_minifloat_magnitudes(3, 0, bias=2))
+
+
+def e2m0() -> np.ndarray:
+    """E2M0 FP3: the only well-defined FP3 (paper Section 4.5): +-{0,1,2,4}."""
+    return _signed(_minifloat_magnitudes(2, 0, bias=0))
+
+
+# ---------------------------------------------------------------------------
+# Additive Powers-of-Two (APoT)
+# ---------------------------------------------------------------------------
+
+APOT4_S1 = (0.0, 0.5, 0.25, 0.0625)  # {0, 2^-1, 2^-2, 2^-4}
+APOT4_S2 = (0.0, 0.125)  # {0, 2^-3}
+
+
+def apot_from_sets(*sets: tuple[float, ...],
+                   extra_pos: tuple[float, ...] = ()) -> np.ndarray:
+    """General APoT: all sums taking one element per set, mirrored to signed."""
+    sums = {0.0}
+    acc = [0.0]
+    for s in sets:
+        acc = [a + b for a in acc for b in s]
+    mags = sorted(set(round(a, 12) for a in acc))
+    mx = max(mags)
+    mags = [m / mx for m in mags]
+    return _signed(mags, extra_pos=[e for e in extra_pos])
+
+
+def apot4(variant: str = "base") -> np.ndarray:
+    """APoT4 `2S (3)` variant of the paper: S1={0,2^-1,2^-2,2^-4}, S2={0,2^-3}.
+
+    Magnitudes {0,.1,.2,.3,.4,.6,.8,1}; `sp` adds 0.5 (paper Table 15 +SP).
+    """
+    if variant == "base":
+        return apot_from_sets(APOT4_S1, APOT4_S2)
+    if variant == "sp":
+        return apot_from_sets(APOT4_S1, APOT4_S2, extra_pos=(0.5,))
+    raise ValueError(f"unknown apot4 variant: {variant}")
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class FormatSpec:
+    """A named quantization datatype: codebook + hardware metadata."""
+
+    name: str
+    codebook: tuple[float, ...]
+    bits: int
+    family: str  # lookup | int | float | apot
+    #: (exp_bits, man_bits) for minifloats, None otherwise
+    fp_split: tuple[int, int] | None = None
+
+    @property
+    def n_values(self) -> int:
+        return len(self.codebook)
+
+    def as_array(self) -> np.ndarray:
+        return np.array(self.codebook, dtype=np.float64)
+
+    def padded(self, n: int = 16) -> np.ndarray:
+        """Codebook padded to length ``n`` by repeating the max value.
+
+        The compiled artifacts take a fixed-size f32[16] codebook input;
+        padding with duplicates of the top value never changes nearest-value
+        quantization results.
+        """
+        cb = self.as_array()
+        if len(cb) > n:
+            raise ValueError(f"{self.name}: codebook longer than {n}")
+        pad = np.full(n - len(cb), cb[-1])
+        return np.concatenate([cb, pad]).astype(np.float32)
+
+
+def _mk(name, arr, bits, family, fp_split=None) -> FormatSpec:
+    return FormatSpec(name, tuple(round(float(v), 10) for v in arr), bits,
+                      family, fp_split)
+
+
+def registry() -> dict[str, FormatSpec]:
+    """All formats used in the paper's evaluation plus profiling extras."""
+    r = {}
+
+    def add(spec: FormatSpec):
+        r[spec.name] = spec
+
+    add(_mk("nf4", normal_float(4), 4, "lookup"))
+    add(_mk("nf3", normal_float(3), 3, "lookup"))
+    for nu in (3, 4, 5, 6, 7, 8, 10, 20):
+        add(_mk(f"sf4_v{nu}", student_float(nu, 4), 4, "lookup"))
+    add(_mk("sf4", student_float(5.0, 4), 4, "lookup"))  # the paper's SF4
+    add(_mk("sf3", student_float(5.0, 3), 3, "lookup"))
+    add(_mk("int3", int_format(3), 3, "int"))
+    add(_mk("int4", int_format(4), 4, "int"))
+    add(_mk("int5", int_format(5), 5, "int"))
+    add(_mk("int8", int_format(8), 8, "int"))
+    add(_mk("e2m1", e2m1("base"), 4, "float", (2, 1)))
+    add(_mk("e2m1_i", e2m1("i"), 4, "float", (2, 1)))
+    add(_mk("e2m1_b", e2m1("b"), 4, "float", (2, 1)))
+    add(_mk("e2m1_ns", e2m1("ns"), 4, "float", (2, 1)))
+    add(_mk("e2m1_sr", e2m1("sr"), 4, "float", (2, 1)))
+    add(_mk("e2m1_sp", e2m1("sp"), 4, "float", (2, 1)))
+    add(_mk("e3m0", e3m0(), 4, "float", (3, 0)))
+    add(_mk("e2m0", e2m0(), 3, "float", (2, 0)))
+    add(_mk("apot4", apot4("base"), 4, "apot"))
+    add(_mk("apot4_sp", apot4("sp"), 4, "apot"))
+    return r
+
+
+#: The 11 datatypes of the paper's main evaluation (Tables 3-8, Fig. 3).
+MAIN_FORMATS = (
+    "nf4", "sf4", "int4", "e2m1_i", "e2m1_b", "e2m1", "e2m1_sr", "e2m1_sp",
+    "e3m0", "apot4", "apot4_sp",
+)
+
+
+def dump_tsv(path: str) -> None:
+    """Write every codebook as TSV (consumed by the Rust cross-check test)."""
+    reg = registry()
+    with open(path, "w") as f:
+        f.write("# name\tbits\tfamily\tvalues...\n")
+        for name in sorted(reg):
+            s = reg[name]
+            vals = "\t".join(f"{v:.10f}" for v in s.codebook)
+            f.write(f"{name}\t{s.bits}\t{s.family}\t{vals}\n")
+
+
+if __name__ == "__main__":
+    for name, spec in sorted(registry().items()):
+        print(f"{name:10s} [{spec.n_values:2d}] " +
+              " ".join(f"{v:+.3f}" for v in spec.codebook))

@@ -1,0 +1,109 @@
+"""Pallas kernel: fused LUT-dequantize -> sub-channel rescale -> matmul.
+
+This is the paper's compute hot-spot re-thought for TPU (DESIGN.md
+SHardware-Adaptation): the original systems run CUDA LUT kernels / custom MAC
+arrays; here the 16-entry codebook is runtime data held in VMEM, tiles are
+BlockSpec'd to MXU-friendly shapes so the dequantized tile feeds the systolic
+array, and HBM->VMEM traffic is codes (int8-held 4-bit) + per-block scales
+rather than dequantized f32.
+
+interpret=True always: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so lowering stays plain-HLO (see /opt/xla-example/README.md).
+Real-TPU efficiency is estimated analytically in DESIGN.md SPerf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-shaped tile defaults. K is kept whole per tile (our model dims are
+# <= ~1.5k) so each grid cell performs one full dot-product panel; the scale
+# tile then covers all K/block rows of the scale matrix.
+TILE_M = 128
+TILE_N = 128
+
+
+def _lut_matmul_kernel(x_ref, codes_ref, scales_ref, cb_ref, o_ref, *,
+                       block: int):
+    """One (TILE_M, TILE_N) output tile.
+
+    x_ref      : f32 [TILE_M, K]
+    codes_ref  : i32 [K, TILE_N]
+    scales_ref : f32 [K // block, TILE_N]
+    cb_ref     : f32 [16]          (the datatype, runtime data)
+    o_ref      : f32 [TILE_M, TILE_N]
+    """
+    codes = codes_ref[...]
+    cb = cb_ref[...]
+    # LUT gather: one take per weight element, then one fma for the scale.
+    vals = jnp.take(cb, codes, axis=0)  # [K, TILE_N]
+    scales = scales_ref[...]
+    w = vals * jnp.repeat(scales, block, axis=0)
+    # MXU op: dense f32 dot on the dequantized tile.
+    o_ref[...] = jnp.dot(x_ref[...], w, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def lut_matmul(x: jnp.ndarray, codes: jnp.ndarray, scales: jnp.ndarray,
+               codebook: jnp.ndarray, block: int = 128) -> jnp.ndarray:
+    """x [M, K] @ (codebook[codes] * scales) [K, N] -> f32 [M, N].
+
+    Shapes need not be tile-multiples; grid sizes use ceil-division and
+    Pallas masks the ragged edges.
+    """
+    m, k = x.shape
+    k2, n = codes.shape
+    assert k == k2, (k, k2)
+    assert k % block == 0, (k, block)
+    assert scales.shape == (k // block, n), (scales.shape, k, block, n)
+
+    tm, tn = min(TILE_M, m), min(TILE_N, n)
+    grid = (pl.cdiv(m, tm), pl.cdiv(n, tn))
+    return pl.pallas_call(
+        functools.partial(_lut_matmul_kernel, block=block),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, tn), lambda i, j: (0, j)),
+            pl.BlockSpec((k // block, tn), lambda i, j: (0, j)),
+            pl.BlockSpec((16,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, codes.astype(jnp.int32), scales, codebook)
+
+
+def _act_quant_kernel(x_ref, cb_ref, o_ref):
+    """Fake-quantize one row-tile of activations against the codebook."""
+    x = x_ref[...]
+    cb = cb_ref[...]
+    cbmax = jnp.max(jnp.abs(cb))
+    absmax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = jnp.where(absmax > 0, absmax / cbmax, 1.0)
+    xn = x / scale
+    mid = (cb[1:] + cb[:-1]) * 0.5
+    idx = jnp.sum(xn[..., None] > mid, axis=-1)
+    o_ref[...] = jnp.take(cb, idx, axis=0) * scale
+
+
+@jax.jit
+def act_quant(x: jnp.ndarray, codebook: jnp.ndarray) -> jnp.ndarray:
+    """Per-row (per-token) activation fake-quant; W4A4 path. [M, K]->[M, K]."""
+    m, k = x.shape
+    tm = min(TILE_M, m)
+    return pl.pallas_call(
+        _act_quant_kernel,
+        grid=(pl.cdiv(m, tm),),
+        in_specs=[
+            pl.BlockSpec((tm, k), lambda i: (i, 0)),
+            pl.BlockSpec((16,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tm, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, k), jnp.float32),
+        interpret=True,
+    )(x, codebook)

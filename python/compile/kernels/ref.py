@@ -1,0 +1,48 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness ground truth: pytest sweeps the Pallas kernels
+(interpret=True) against these over shapes/blocks/codebooks, and the L2 model
+can be built against either implementation (`use_pallas` flag) so any model
+mismatch isolates to the kernel.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def dequant(codes: jnp.ndarray, scales: jnp.ndarray,
+            codebook: jnp.ndarray, block: int) -> jnp.ndarray:
+    """Reconstruct f32 weights from 4-bit codes + sub-channel scales.
+
+    codes    : int8/int32 [K, N] -- indices into ``codebook``
+    scales   : f32 [K//block, N] -- one scale per (block of K) x (column)
+    codebook : f32 [16] -- the datatype's value set (padded, normalized)
+    returns  : f32 [K, N]
+    """
+    vals = codebook[codes]  # [K, N]
+    s = jnp.repeat(scales, block, axis=0)  # [K, N]
+    return vals * s
+
+
+def lut_matmul(x: jnp.ndarray, codes: jnp.ndarray, scales: jnp.ndarray,
+               codebook: jnp.ndarray, block: int) -> jnp.ndarray:
+    """x [M, K] @ dequant(codes, scales)[K, N] -> [M, N]."""
+    w = dequant(codes, scales, codebook, block)
+    return x @ w
+
+
+def act_quant(x: jnp.ndarray, codebook: jnp.ndarray) -> jnp.ndarray:
+    """Fake-quantize activations per-row (per-token) against ``codebook``.
+
+    The scale maps each row's absmax onto the codebook's max magnitude
+    (which is 1 for normalized codebooks). Nearest-value rounding uses the
+    sorted codebook's midpoints, identical to the Rust RTN quantizer.
+    """
+    cbmax = jnp.max(jnp.abs(codebook))
+    absmax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = jnp.where(absmax > 0, absmax / cbmax, 1.0)
+    xn = x / scale
+    mid = (codebook[1:] + codebook[:-1]) * 0.5  # [15]
+    idx = jnp.sum(xn[..., None] > mid, axis=-1)  # [..., K] in 0..15
+    return codebook[idx] * scale

@@ -1,0 +1,420 @@
+"""L2: JAX model definitions — decoder-only transformer LM + classifiers.
+
+Three graph families, all AOT-lowered to HLO text by `aot.py`:
+
+  * fp32 train step (fwd+bwd+AdamW fused) — used by the Rust driver to train
+    the model zoo on synthetic corpora (the E2E example);
+  * quantized-weight eval graphs (`fwd` -> logits, `loss` -> summed NLL):
+    every quantized linear takes (codes i8, scales f32) + one shared 16-entry
+    codebook, so the *datatype is runtime data* and a single artifact serves
+    all formats in the paper;
+  * W4A4 variants that additionally fake-quantize activations in-graph
+    (per-token absmax) and accept per-linear SmoothQuant vectors.
+
+Weight layout convention: all linear weights are [in, out] ("K x N"), matching
+the lut_matmul kernel. Sub-channel block structure is applied by the Rust
+quantizer, which expands per-block scales to per-row scales before upload;
+the graph-level kernel therefore runs with block=1 while the blocked kernel
+path is exercised by the standalone kernel artifact and the pytest sweeps
+(DESIGN.md S6).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import ref as kref
+from compile.kernels import lut_matmul as kpallas
+
+
+# ---------------------------------------------------------------------------
+# Configs
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Decoder-only LM hyperparameters (one per zoo member)."""
+
+    name: str
+    vocab: int
+    seq: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ff: int
+    batch_eval: int
+    batch_train: int
+    train_steps: int
+    lr: float = 3e-3
+    warmup: int = 20
+
+    @property
+    def d_head(self) -> int:
+        return self.d_model // self.n_heads
+
+    def n_params(self) -> int:
+        total = 0
+        for _, shape in param_specs(self):
+            n = 1
+            for s in shape:
+                n *= s
+            total += n
+        return total
+
+
+#: The model zoo. Role mapping to the paper's models is in DESIGN.md S2.
+ZOO = {
+    c.name: c
+    for c in [
+        ModelConfig("nano", 64, 32, 32, 2, 2, 128, 4, 16, 60),
+        ModelConfig("micro", 128, 64, 64, 2, 4, 256, 8, 16, 300),
+        ModelConfig("small", 128, 64, 128, 4, 4, 512, 8, 16, 300),
+        ModelConfig("med", 128, 128, 256, 4, 8, 1024, 8, 8, 300),
+        ModelConfig("large", 128, 128, 384, 6, 8, 1536, 8, 4, 200),
+    ]
+}
+
+#: linear weights that get quantized (paper: every nn.Linear; lm_head and
+#: embeddings stay fp32, as in neural-compressor's default).
+QUANT_LINEARS = ("wq", "wk", "wv", "wo", "w1", "w2")
+
+
+def param_specs(cfg: ModelConfig) -> list[tuple[str, tuple[int, ...]]]:
+    """Canonical (name, shape) list for the fp32 parameter flattening."""
+    d, f, v, s = cfg.d_model, cfg.d_ff, cfg.vocab, cfg.seq
+    specs: list[tuple[str, tuple[int, ...]]] = [
+        ("embed", (v, d)),
+        ("pos", (s, d)),
+    ]
+    for i in range(cfg.n_layers):
+        specs += [
+            (f"l{i}.ln1_g", (d,)),
+            (f"l{i}.ln1_b", (d,)),
+            (f"l{i}.wq", (d, d)),
+            (f"l{i}.wk", (d, d)),
+            (f"l{i}.wv", (d, d)),
+            (f"l{i}.wo", (d, d)),
+            (f"l{i}.ln2_g", (d,)),
+            (f"l{i}.ln2_b", (d,)),
+            (f"l{i}.w1", (d, f)),
+            (f"l{i}.w2", (f, d)),
+        ]
+    specs += [("lnf_g", (d,)), ("lnf_b", (d,)), ("head", (d, v))]
+    return specs
+
+
+def quant_param_specs(cfg: ModelConfig, w4a4: bool = False
+                      ) -> list[tuple[str, tuple[int, ...], str]]:
+    """(name, shape, dtype) list for the quantized-eval parameter set.
+
+    Quantized linears are replaced by `<name>.codes` (i8 [K,N]) and
+    `<name>.scales` (f32 [K,N], pre-expanded from sub-channel blocks).
+    W4A4 adds a `<name>.smooth` inverse-SmoothQuant vector (f32 [K]).
+    One shared `codebook` (+ `act_codebook` for W4A4) rides along.
+    """
+    out: list[tuple[str, tuple[int, ...], str]] = []
+    for name, shape in param_specs(cfg):
+        leaf = name.split(".")[-1]
+        if leaf in QUANT_LINEARS:
+            out.append((f"{name}.codes", shape, "i8"))
+            out.append((f"{name}.scales", shape, "f32"))
+            if w4a4:
+                out.append((f"{name}.smooth", (shape[0],), "f32"))
+        else:
+            out.append((name, shape, "f32"))
+    out.append(("codebook", (16,), "f32"))
+    if w4a4:
+        out.append(("act_codebook", (16,), "f32"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Forward pass
+# ---------------------------------------------------------------------------
+
+
+def _layernorm(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * g + b
+
+
+def _gelu(x):
+    return jax.nn.gelu(x, approximate=True)
+
+
+def _linear(p, x, name, *, quant, w4a4, use_pallas):
+    """Dense [.., K] @ [K, N]; quantized path goes through the L1 kernel."""
+    if not quant:
+        return x @ p[name]
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    x2 = x.reshape((-1, k))
+    if w4a4:
+        x2 = x2 * p[f"{name}.smooth"][None, :]
+        if use_pallas:
+            x2 = kpallas.act_quant(x2, p["act_codebook"])
+        else:
+            x2 = kref.act_quant(x2, p["act_codebook"])
+    codes = p[f"{name}.codes"].astype(jnp.int32)
+    scales = p[f"{name}.scales"]
+    if use_pallas:
+        y = kpallas.lut_matmul(x2, codes, scales, p["codebook"], block=1)
+    else:
+        y = kref.lut_matmul(x2, codes, scales, p["codebook"], block=1)
+    return y.reshape(lead + (y.shape[-1],))
+
+
+def _attention(cfg: ModelConfig, p, x, i, *, quant, w4a4, use_pallas):
+    b, s, d = x.shape
+    h, dh = cfg.n_heads, cfg.d_head
+    kw = dict(quant=quant, w4a4=w4a4, use_pallas=use_pallas)
+    q = _linear(p, x, f"l{i}.wq", **kw).reshape(b, s, h, dh).transpose(0, 2, 1, 3)
+    k = _linear(p, x, f"l{i}.wk", **kw).reshape(b, s, h, dh).transpose(0, 2, 1, 3)
+    v = _linear(p, x, f"l{i}.wv", **kw).reshape(b, s, h, dh).transpose(0, 2, 1, 3)
+    att = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(float(dh))
+    mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+    att = jnp.where(mask[None, None], att, -1e9)
+    att = jax.nn.softmax(att, axis=-1)
+    y = jnp.einsum("bhqk,bhkd->bhqd", att, v)
+    y = y.transpose(0, 2, 1, 3).reshape(b, s, d)
+    return _linear(p, y, f"l{i}.wo", **kw)
+
+
+def lm_forward(cfg: ModelConfig, p: dict, tokens: jnp.ndarray, *,
+               quant: bool = False, w4a4: bool = False,
+               use_pallas: bool = True) -> jnp.ndarray:
+    """tokens i32 [B, S] -> logits f32 [B, S, V]."""
+    b, s = tokens.shape
+    x = p["embed"][tokens] + p["pos"][None, :s]
+    kw = dict(quant=quant, w4a4=w4a4, use_pallas=use_pallas)
+    for i in range(cfg.n_layers):
+        h = _layernorm(x, p[f"l{i}.ln1_g"], p[f"l{i}.ln1_b"])
+        x = x + _attention(cfg, p, h, i, **kw)
+        h = _layernorm(x, p[f"l{i}.ln2_g"], p[f"l{i}.ln2_b"])
+        h = _linear(p, h, f"l{i}.w1", **kw)
+        h = _gelu(h)
+        x = x + _linear(p, h, f"l{i}.w2", **kw)
+    x = _layernorm(x, p["lnf_g"], p["lnf_b"])
+    return x @ p["head"]
+
+
+def lm_loss(cfg: ModelConfig, p: dict, tokens: jnp.ndarray, *,
+            quant: bool = False, w4a4: bool = False,
+            use_pallas: bool = True) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """tokens i32 [B, S+1] -> (summed next-token NLL, token count)."""
+    inp, tgt = tokens[:, :-1], tokens[:, 1:]
+    logits = lm_forward(cfg, p, inp, quant=quant, w4a4=w4a4,
+                        use_pallas=use_pallas)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    return jnp.sum(nll), jnp.float32(nll.size)
+
+
+# ---------------------------------------------------------------------------
+# Training (fp32, fused AdamW step)
+# ---------------------------------------------------------------------------
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> dict:
+    """Scaled-normal init matching the Rust checkpoint loader's layout."""
+    p = {}
+    for name, shape in param_specs(cfg):
+        key, sub = jax.random.split(key)
+        leaf = name.split(".")[-1]
+        if leaf.endswith("_g"):
+            p[name] = jnp.ones(shape, jnp.float32)
+        elif leaf.endswith("_b"):
+            p[name] = jnp.zeros(shape, jnp.float32)
+        elif leaf in ("embed", "pos"):
+            p[name] = 0.02 * jax.random.normal(sub, shape, jnp.float32)
+        else:
+            # Student-t(nu=5) init, matching the Rust trainer (DESIGN.md §2):
+            # plants the heavy-tailed weight distribution of trained LLMs.
+            std = (2.0 / shape[0] / (5.0 / 3.0)) ** 0.5
+            p[name] = std * jax.random.t(sub, 5.0, shape, jnp.float32)
+    return p
+
+
+def _lr_schedule(cfg: ModelConfig, step: jnp.ndarray) -> jnp.ndarray:
+    warm = jnp.minimum(step / max(cfg.warmup, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup) / max(cfg.train_steps - cfg.warmup, 1),
+                    0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (0.1 + 0.9 * cos)
+
+
+def train_step(cfg: ModelConfig, p: dict, m: dict, v: dict,
+               step: jnp.ndarray, tokens: jnp.ndarray):
+    """One fused AdamW step. Returns (loss, p', m', v').
+
+    Global-norm gradient clipping at 1.0; weight decay 0.01 on matrices.
+    """
+
+    def loss_fn(params):
+        s, n = lm_loss(cfg, params, tokens, quant=False, use_pallas=False)
+        return s / n
+
+    loss, grads = jax.value_and_grad(loss_fn)(p)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g)) for g in grads.values()))
+    clip = jnp.minimum(1.0, 1.0 / (gnorm + 1e-6))
+    lr = _lr_schedule(cfg, step)
+    b1, b2, eps, wd = 0.9, 0.95, 1e-8, 0.01
+    t = step + 1.0
+    p2, m2, v2 = {}, {}, {}
+    for name in p:
+        g = grads[name] * clip
+        m2[name] = b1 * m[name] + (1 - b1) * g
+        v2[name] = b2 * v[name] + (1 - b2) * jnp.square(g)
+        mhat = m2[name] / (1 - b1**t)
+        vhat = v2[name] / (1 - b2**t)
+        upd = mhat / (jnp.sqrt(vhat) + eps)
+        if p[name].ndim > 1:
+            upd = upd + wd * p[name]
+        p2[name] = p[name] - lr * upd
+    return loss, p2, m2, v2
+
+
+# ---------------------------------------------------------------------------
+# Vision-role classifiers (Table 9): MLP and im2col CNN
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ClassifierConfig:
+    name: str
+    kind: str  # "mlp" | "cnn"
+    image: int = 16  # image side (1 channel)
+    classes: int = 10
+    hidden: int = 128
+    channels: int = 16
+    batch_eval: int = 64
+    batch_train: int = 64
+    train_steps: int = 400
+    lr: float = 2e-3
+
+
+CLS_ZOO = {
+    c.name: c
+    for c in [
+        ClassifierConfig("mlp", "mlp"),
+        ClassifierConfig("cnn", "cnn"),
+    ]
+}
+
+
+def cls_param_specs(cfg: ClassifierConfig) -> list[tuple[str, tuple[int, ...]]]:
+    n_in = cfg.image * cfg.image
+    if cfg.kind == "mlp":
+        return [
+            ("fc1", (n_in, cfg.hidden)),
+            ("b1", (cfg.hidden,)),
+            ("fc2", (cfg.hidden, cfg.hidden)),
+            ("b2", (cfg.hidden,)),
+            ("fc3", (cfg.hidden, cfg.classes)),
+            ("b3", (cfg.classes,)),
+        ]
+    # CNN: two 3x3 conv layers (as im2col matmuls) + global pool + fc.
+    c = cfg.channels
+    return [
+        ("conv1", (9, c)),  # 3x3x1 -> c
+        ("cb1", (c,)),
+        ("conv2", (9 * c, c)),  # 3x3xc -> c
+        ("cb2", (c,)),
+        ("fc", (c, cfg.classes)),
+        ("fcb", (cfg.classes,)),
+    ]
+
+
+CLS_QUANT = {"mlp": ("fc1", "fc2", "fc3"), "cnn": ("conv1", "conv2", "fc")}
+
+
+def cls_quant_param_specs(cfg: ClassifierConfig, w4a4: bool = True
+                          ) -> list[tuple[str, tuple[int, ...], str]]:
+    out = []
+    qnames = CLS_QUANT[cfg.kind]
+    for name, shape in cls_param_specs(cfg):
+        if name in qnames:
+            out.append((f"{name}.codes", shape, "i8"))
+            out.append((f"{name}.scales", shape, "f32"))
+            if w4a4:
+                out.append((f"{name}.smooth", (shape[0],), "f32"))
+        else:
+            out.append((name, shape, "f32"))
+    out.append(("codebook", (16,), "f32"))
+    if w4a4:
+        out.append(("act_codebook", (16,), "f32"))
+    return out
+
+
+def _im2col(x, side, chans):
+    """x [B, side*side*chans] -> patches [B*side*side, 9*chans] (pad=1)."""
+    b = x.shape[0]
+    img = x.reshape(b, side, side, chans)
+    img = jnp.pad(img, ((0, 0), (1, 1), (1, 1), (0, 0)))
+    cols = []
+    for dy in range(3):
+        for dx in range(3):
+            cols.append(img[:, dy:dy + side, dx:dx + side, :])
+    pat = jnp.concatenate(cols, axis=-1)  # [B, side, side, 9*chans]
+    return pat.reshape(b * side * side, 9 * chans)
+
+
+def cls_forward(cfg: ClassifierConfig, p: dict, x: jnp.ndarray, *,
+                quant: bool = False, w4a4: bool = False,
+                use_pallas: bool = True) -> jnp.ndarray:
+    """x f32 [B, image*image] -> logits [B, classes]."""
+    kw = dict(quant=quant, w4a4=w4a4, use_pallas=use_pallas)
+    if cfg.kind == "mlp":
+        h = _gelu(_linear(p, x, "fc1", **kw) + p["b1"])
+        h = _gelu(_linear(p, h, "fc2", **kw) + p["b2"])
+        return _linear(p, h, "fc3", **kw) + p["b3"]
+    b, side, c = x.shape[0], cfg.image, cfg.channels
+    h = _im2col(x, side, 1)
+    h = _gelu(_linear(p, h, "conv1", **kw) + p["cb1"])
+    h = _im2col(h.reshape(b, -1), side, c)
+    h = _gelu(_linear(p, h, "conv2", **kw) + p["cb2"])
+    h = h.reshape(b, side * side, c).mean(axis=1)  # global average pool
+    return _linear(p, h, "fc", **kw) + p["fcb"]
+
+
+def cls_loss(cfg, p, x, labels, **kw):
+    logits = cls_forward(cfg, p, x, **kw)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(nll)
+
+
+def cls_init(cfg: ClassifierConfig, key: jax.Array) -> dict:
+    p = {}
+    for name, shape in cls_param_specs(cfg):
+        key, sub = jax.random.split(key)
+        if len(shape) == 1:
+            p[name] = jnp.zeros(shape, jnp.float32)
+        else:
+            p[name] = (2.0 / shape[0]) ** 0.5 * jax.random.normal(
+                sub, shape, jnp.float32)
+    return p
+
+
+def cls_train_step(cfg: ClassifierConfig, p: dict, m: dict, v: dict,
+                   step: jnp.ndarray, x: jnp.ndarray, labels: jnp.ndarray):
+    """One fused Adam step for the classifiers."""
+    loss, grads = jax.value_and_grad(
+        lambda q: cls_loss(cfg, q, x, labels, quant=False, use_pallas=False)
+    )(p)
+    b1, b2, eps = 0.9, 0.99, 1e-8
+    t = step + 1.0
+    p2, m2, v2 = {}, {}, {}
+    for name in p:
+        g = grads[name]
+        m2[name] = b1 * m[name] + (1 - b1) * g
+        v2[name] = b2 * v[name] + (1 - b2) * jnp.square(g)
+        mhat = m2[name] / (1 - b1**t)
+        vhat = v2[name] / (1 - b2**t)
+        p2[name] = p[name] - cfg.lr * mhat / (jnp.sqrt(vhat) + eps)
+    return loss, p2, m2, v2

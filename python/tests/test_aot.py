@@ -1,0 +1,78 @@
+"""AOT emission checks: HLO text artifacts + manifests are loader-ready."""
+
+import os
+
+import pytest
+
+from compile import aot
+from compile import model as M
+
+
+@pytest.fixture(scope="module")
+def emitted(tmp_path_factory):
+    out = str(tmp_path_factory.mktemp("artifacts"))
+    arts = aot.lm_artifacts(M.ZOO["nano"]) + aot.kernel_artifacts()
+    for a in arts:
+        a.emit(out)
+    return out, arts
+
+
+def test_hlo_text_parses_as_hlo(emitted):
+    out, arts = emitted
+    for a in arts:
+        text = open(os.path.join(out, f"{a.name}.hlo.txt")).read()
+        assert text.startswith("HloModule"), a.name
+        assert "ENTRY" in text, a.name
+
+
+def test_no_mosaic_custom_calls(emitted):
+    """interpret=True must keep pallas out of Mosaic lowering."""
+    out, arts = emitted
+    for a in arts:
+        text = open(os.path.join(out, f"{a.name}.hlo.txt")).read()
+        assert "mosaic" not in text.lower(), a.name
+
+
+def test_manifest_matches_parameter_count(emitted):
+    out, arts = emitted
+    for a in arts:
+        lines = open(os.path.join(out, f"{a.name}.params.txt")).read().splitlines()
+        sep = lines.index("-- outputs --")
+        inputs, outputs = lines[:sep], lines[sep + 1:]
+        assert len(inputs) == len(a.inputs), a.name
+        assert len(outputs) == len(a.output_names), a.name
+        # parameter count in the HLO entry computation must agree
+        text = open(os.path.join(out, f"{a.name}.hlo.txt")).read()
+        entry = text[text.index("ENTRY"):]
+        n_params = entry.count(" parameter(")
+        assert n_params == len(a.inputs), (a.name, n_params, len(a.inputs))
+
+
+def test_manifest_shapes_parse(emitted):
+    out, arts = emitted
+    for a in arts:
+        for line in open(os.path.join(out, f"{a.name}.params.txt")):
+            line = line.strip()
+            if line == "-- outputs --" or not line:
+                continue
+            parts = line.split(" ")
+            name, dtype = parts[0], parts[1]
+            dims = parts[2] if len(parts) > 2 else ""  # scalar: no dims field
+            assert dtype in ("f32", "i32", "i8"), line
+            if dims:
+                [int(d) for d in dims.split(",") if d]
+
+
+def test_train_artifact_io_symmetry(emitted):
+    """Train step outputs (params', m', v') must mirror its param inputs so
+    the Rust driver can feed outputs back as next-step inputs."""
+    out, _ = emitted
+    lines = open(os.path.join(out, "lm_train_nano.params.txt")).read().splitlines()
+    sep = lines.index("-- outputs --")
+    inputs = [l.split(" ") for l in lines[:sep]]
+    outputs = [l.split(" ") for l in lines[sep + 1:]]
+    # inputs: step, tokens, then 3N tensors; outputs: loss then the same 3N
+    assert inputs[0][0] == "step" and inputs[1][0] == "tokens"
+    assert outputs[0][0] == "loss"
+    assert [i[1:] for i in inputs[2:]] == [o[1:] for o in outputs[1:]]
+    assert [i[0] for i in inputs[2:]] == [o[0] for o in outputs[1:]]

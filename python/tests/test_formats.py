@@ -1,0 +1,136 @@
+"""Golden + invariant tests for the datatype zoo (paper Table 15)."""
+
+import numpy as np
+import pytest
+
+from compile import formats as F
+
+REG = F.registry()
+
+# Paper Table 15 rows (raw values normalized to max |v| = 1).
+GOLDEN = {
+    "nf4": [-1.000, -0.696, -0.525, -0.395, -0.284, -0.185, -0.091, 0.000,
+            0.080, 0.161, 0.246, 0.338, 0.441, 0.563, 0.723, 1.000],
+    "int4": [v / 8.0 for v in range(-8, 8)],
+    "e2m1": [v / 6.0 for v in
+             [-6, -4, -3, -2, -1.5, -1, -0.5, 0, 0.5, 1, 1.5, 2, 3, 4, 6]],
+    "e2m1_i": [v / 6.0 for v in
+               [-6, -4, -3, -2, -1.5, -1, -0.0625, 0, 0.0625, 1, 1.5, 2, 3, 4, 6]],
+    "e2m1_b": [v / 12.0 for v in
+               [-12, -8, -6, -4, -3, -2, -0.0625, 0, 0.0625, 2, 3, 4, 6, 8, 12]],
+    "e2m1_sp": [v / 6.0 for v in
+                [-6, -4, -3, -2, -1.5, -1, -0.5, 0, 0.5, 1, 1.5, 2, 3, 4, 5, 6]],
+    "e2m1_sr": [v / 8.0 for v in
+                [-6, -4, -3, -2, -1.5, -1, -0.5, 0, 0.5, 1, 1.5, 2, 3, 4, 6, 8]],
+    "e3m0": [v / 16.0 for v in
+             [-16, -8, -4, -2, -1, -0.5, -0.25, 0, 0.25, 0.5, 1, 2, 4, 8, 16]],
+    "apot4": [-1.0, -0.8, -0.6, -0.4, -0.3, -0.2, -0.1, 0.0,
+              0.1, 0.2, 0.3, 0.4, 0.6, 0.8, 1.0],
+    "apot4_sp": [-1.0, -0.8, -0.6, -0.4, -0.3, -0.2, -0.1, 0.0,
+                 0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.8, 1.0],
+}
+
+# SF4 per-nu spot values from Table 15 (second value and second-to-last).
+SF4_SPOTS = {3: (-0.576, 0.606), 4: (-0.609, 0.638),
+             5: (-0.628, 0.657), 6: (-0.640, 0.669)}
+
+
+@pytest.mark.parametrize("name", sorted(GOLDEN))
+def test_golden_values(name):
+    got = REG[name].as_array()
+    want = np.array(GOLDEN[name])
+    assert got.shape == want.shape, (name, got.shape, want.shape)
+    np.testing.assert_allclose(got, want, atol=2e-3)
+
+
+@pytest.mark.parametrize("nu", sorted(SF4_SPOTS))
+def test_sf4_spot_values(nu):
+    cb = REG[f"sf4_v{nu}"].as_array()
+    lo, hi = SF4_SPOTS[nu]
+    assert abs(cb[1] - lo) < 1e-3
+    assert abs(cb[-2] - hi) < 1e-3
+
+
+def test_sf4_v4_full_positive_side():
+    # Table 15 lists the whole positive side for nu=4.
+    cb = REG["sf4_v4"].as_array()
+    want = [0.062, 0.126, 0.194, 0.270, 0.359, 0.472, 0.638, 1.000]
+    np.testing.assert_allclose(cb[8:], want, atol=1e-3)
+
+
+@pytest.mark.parametrize("name", sorted(REG))
+def test_invariants(name):
+    spec = REG[name]
+    cb = spec.as_array()
+    assert np.all(np.diff(cb) > 0), f"{name}: not strictly sorted"
+    assert 0.0 in cb, f"{name}: zero is not exactly representable"
+    assert np.isclose(np.max(np.abs(cb)), 1.0), f"{name}: not normalized"
+    assert spec.n_values <= 2 ** spec.bits
+
+
+def test_main_formats_value_counts():
+    # FP4 wastes one code on -0; supernormal variants recover it (16 values).
+    assert REG["e2m1"].n_values == 15
+    assert REG["e2m1_sr"].n_values == 16
+    assert REG["e2m1_sp"].n_values == 16
+    assert REG["apot4"].n_values == 15
+    assert REG["apot4_sp"].n_values == 16
+    assert REG["nf4"].n_values == 16
+    assert REG["sf4"].n_values == 16
+
+
+def test_supernormal_is_positive_side_only():
+    base = set(REG["e2m1"].codebook)
+    sp = set(REG["e2m1_sp"].codebook)
+    extra = sp - base
+    assert len(extra) == 1 and next(iter(extra)) > 0
+
+
+def test_sf_converges_to_nf():
+    """Fig. 4: SF4(nu) -> NF4 as nu -> inf."""
+    nf4 = F.normal_float(4)
+    d_small = np.max(np.abs(F.student_float(3, 4) - nf4))
+    d_big = np.max(np.abs(F.student_float(200, 4) - nf4))
+    assert d_big < 0.01
+    assert d_big < d_small / 10
+
+
+def test_algorithm1_positive_bias():
+    """More values on the positive side (paper Section 3.3)."""
+    for cb in (F.normal_float(4), F.student_float(5, 4), F.normal_float(3)):
+        assert (cb > 0).sum() == (cb < 0).sum() + 1
+
+
+def test_padded_codebook_preserves_quantization():
+    spec = REG["nf3"]
+    cb, padded = spec.as_array(), spec.padded()
+    assert len(padded) == 16
+    # nearest-value quantization must agree between raw and padded books
+    xs = np.linspace(-1.5, 1.5, 101)
+    for x in xs:
+        q1 = cb[np.argmin(np.abs(cb - x))]
+        q2 = padded[np.argmin(np.abs(padded - x))]
+        assert np.isclose(q1, q2)
+
+
+def test_int_format_shapes():
+    assert REG["int3"].n_values == 8
+    assert REG["int5"].n_values == 32
+    assert REG["e2m0"].n_values == 7
+
+
+def test_apot_from_sets_matches_paper_sets():
+    cb = F.apot_from_sets(F.APOT4_S1, F.APOT4_S2)
+    np.testing.assert_allclose(cb, GOLDEN["apot4"], atol=1e-9)
+
+
+def test_dump_tsv_roundtrip(tmp_path):
+    path = tmp_path / "codebooks.tsv"
+    F.dump_tsv(str(path))
+    lines = [l for l in path.read_text().splitlines() if not l.startswith("#")]
+    assert len(lines) == len(REG)
+    for line in lines:
+        parts = line.split("\t")
+        name, bits = parts[0], int(parts[1])
+        vals = [float(v) for v in parts[3:]]
+        np.testing.assert_allclose(vals, REG[name].as_array(), atol=1e-9)

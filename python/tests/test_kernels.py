@@ -1,0 +1,127 @@
+"""Pallas kernels vs pure-jnp oracle — the core L1 correctness signal.
+
+hypothesis sweeps shapes, block sizes, and codebooks; fixed cases cover the
+paper's formats and the degenerate inputs (zero rows, single tiles).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import formats as F
+from compile.kernels import ref
+from compile.kernels.lut_matmul import act_quant, lut_matmul
+
+REG = F.registry()
+
+
+def _case(seed, m, k, n, block, scale_lo=0.25, scale_hi=4.0):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((m, k)).astype(np.float32)
+    codes = rng.integers(0, 16, (k, n)).astype(np.int32)
+    scales = rng.uniform(scale_lo, scale_hi, (k // block, n)).astype(np.float32)
+    return jnp.asarray(x), jnp.asarray(codes), jnp.asarray(scales)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    m=st.integers(1, 200),
+    kb=st.integers(1, 6),
+    n=st.integers(1, 200),
+    block=st.sampled_from([1, 16, 32, 64, 128]),
+)
+def test_lut_matmul_matches_ref(seed, m, kb, n, block):
+    k = kb * block
+    x, codes, scales = _case(seed, m, k, n, block)
+    cb = jnp.asarray(np.sort(np.random.default_rng(seed).standard_normal(16))
+                     .astype(np.float32))
+    got = lut_matmul(x, codes, scales, cb, block=block)
+    want = ref.lut_matmul(x, codes, scales, cb, block=block)
+    # f32 accumulation order differs between the tiled kernel and the oracle
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=5e-4, atol=5e-4)
+
+
+@pytest.mark.parametrize("fmt", list(F.MAIN_FORMATS))
+def test_lut_matmul_paper_formats(fmt):
+    cb = jnp.asarray(REG[fmt].padded())
+    x, codes, scales = _case(7, 64, 256, 96, 64)
+    got = lut_matmul(x, codes, scales, cb, block=64)
+    want = ref.lut_matmul(x, codes, scales, cb, block=64)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_lut_matmul_tile_boundaries():
+    # shapes straddling the 128-tile boundary exercise ragged-edge masking
+    for m, k, n in [(127, 128, 129), (128, 128, 128), (129, 256, 127),
+                    (1, 128, 1), (256, 384, 256)]:
+        x, codes, scales = _case(m * 7 + n, m, k, n, 128)
+        cb = jnp.asarray(REG["sf4"].padded())
+        got = lut_matmul(x, codes, scales, cb, block=128)
+        want = ref.lut_matmul(x, codes, scales, cb, block=128)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_dequant_zero_codes_give_zero():
+    """Code pointing at the codebook's zero entry must reconstruct 0 exactly
+    (paper Section 3.3: lossless zero)."""
+    cb = REG["sf4"].padded()
+    zero_idx = int(np.where(cb == 0.0)[0][0])
+    codes = jnp.full((64, 8), zero_idx, dtype=jnp.int32)
+    scales = jnp.full((1, 8), 3.7, dtype=jnp.float32)
+    w = ref.dequant(codes, scales, jnp.asarray(cb), block=64)
+    assert np.all(np.asarray(w) == 0.0)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    m=st.integers(1, 300),
+    k=st.integers(1, 300),
+    fmt=st.sampled_from(list(F.MAIN_FORMATS)),
+)
+def test_act_quant_matches_ref(seed, m, k, fmt):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray((rng.standard_normal((m, k)) *
+                     rng.uniform(0.01, 10)).astype(np.float32))
+    cb = jnp.asarray(REG[fmt].padded())
+    got = act_quant(x, cb)
+    want = ref.act_quant(x, cb)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-7)
+
+
+def test_act_quant_zero_row():
+    """An all-zero token must survive (scale guard, no NaN)."""
+    x = jnp.zeros((4, 32), jnp.float32)
+    cb = jnp.asarray(REG["nf4"].padded())
+    y = np.asarray(act_quant(x, cb))
+    assert np.all(y == 0.0)
+
+
+def test_act_quant_idempotent():
+    """Quantizing an already-quantized tensor is a fixed point."""
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.standard_normal((32, 64)).astype(np.float32))
+    cb = jnp.asarray(REG["sf4"].padded())
+    y1 = act_quant(x, cb)
+    y2 = act_quant(y1, cb)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_act_quant_values_land_on_codebook():
+    rng = np.random.default_rng(11)
+    x = jnp.asarray(rng.standard_normal((16, 128)).astype(np.float32))
+    cb_arr = REG["int4"].padded()
+    y = np.asarray(act_quant(x, jnp.asarray(cb_arr)))
+    absmax = np.max(np.abs(np.asarray(x)), axis=-1, keepdims=True)
+    scale = absmax / np.max(np.abs(cb_arr))
+    yn = y / scale
+    # every normalized output must be (almost) a codebook entry
+    d = np.min(np.abs(yn[..., None] - cb_arr[None, None]), axis=-1)
+    assert np.max(d) < 1e-5

@@ -1,0 +1,12 @@
+//! Bench target: regenerate paper Figure 2 (histogram + Q-Q fit data).
+use llm_datatypes::bench_util::bench;
+use llm_datatypes::coordinator::Session;
+use llm_datatypes::exp;
+
+fn main() -> anyhow::Result<()> {
+    let session = Session::open("artifacts", "checkpoints", "results")?;
+    exp::ensure_model(&session, "nano")?;
+    println!("{}", exp::profile::run_fig2(&session, "nano")?);
+    bench("fig02_qq", 3, || exp::profile::run_fig2(&session, "nano").unwrap());
+    Ok(())
+}

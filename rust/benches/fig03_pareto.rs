@@ -1,0 +1,14 @@
+//! Bench target: regenerate paper Figure 3/8 (quality-vs-area Pareto).
+use llm_datatypes::bench_util::bench;
+use llm_datatypes::coordinator::Session;
+use llm_datatypes::exp::{self, Scale};
+
+fn main() -> anyhow::Result<()> {
+    let session = Session::open("artifacts", "checkpoints", "results")?;
+    exp::ensure_model(&session, "nano")?;
+    let (rendered, points) = exp::pareto::run(&session, Scale::Quick)?;
+    println!("{rendered}");
+    println!("Pareto front: {}", exp::pareto::pareto_front(&points).join(" -> "));
+    bench("fig03_pareto", 1, || exp::pareto::run(&session, Scale::Quick).unwrap());
+    Ok(())
+}

@@ -1,0 +1,15 @@
+//! Bench target: regenerate paper Figure 4/5 (SF4 -> NF4) at quick scale and time it.
+//! Full-scale regeneration: `repro figure 4`.
+#![allow(unused_imports)]
+use llm_datatypes::bench_util::bench;
+use llm_datatypes::coordinator::Session;
+use llm_datatypes::exp::{self, Scale};
+
+fn main() -> anyhow::Result<()> {
+    let session = Session::open("artifacts", "checkpoints", "results")?;
+
+    let table = exp::convergence::run_fig4(&session)?;
+    println!("{}", table.render());
+    bench("fig04_convergence", 2, || exp::convergence::run_fig4(&session).unwrap());
+    Ok(())
+}

@@ -1,0 +1,15 @@
+//! Bench target: regenerate paper Figure 7 (APoT variants) at quick scale and time it.
+//! Full-scale regeneration: `repro figure 7`.
+#![allow(unused_imports)]
+use llm_datatypes::bench_util::bench;
+use llm_datatypes::coordinator::Session;
+use llm_datatypes::exp::{self, Scale};
+
+fn main() -> anyhow::Result<()> {
+    let session = Session::open("artifacts", "checkpoints", "results")?;
+
+    let table = exp::convergence::run_fig7()?;
+    println!("{}", table.render());
+    bench("fig07_apot", 2, || exp::convergence::run_fig7().unwrap());
+    Ok(())
+}

@@ -1,0 +1,50 @@
+//! Perf: L1 kernel path — the lut_matmul artifact end-to-end through PJRT
+//! (upload codes/scales once, stream activations), vs the pure-Rust
+//! dequant+matmul on the same problem.
+use std::collections::HashMap;
+
+use llm_datatypes::bench_util::{bench, report_throughput};
+use llm_datatypes::coordinator::Session;
+use llm_datatypes::formats;
+use llm_datatypes::rng::Pcg64;
+use llm_datatypes::runtime::Value;
+use llm_datatypes::tensor::Tensor;
+
+fn main() -> anyhow::Result<()> {
+    let session = Session::open("artifacts", "checkpoints", "results")?;
+    let exe = session.engine.load("lut_matmul_bench")?;
+    let (m, k, n, blk) = (256usize, 512usize, 512usize, 128usize);
+    let mut rng = Pcg64::new(2);
+    let x = Tensor::new(&[m, k], rng.normal_vec(m * k, 1.0));
+    let codes: Vec<i8> = (0..k * n).map(|_| rng.below(16) as i8).collect();
+    let scales = Tensor::new(&[k / blk, n], (0..(k / blk) * n).map(|_| 1.0f32).collect());
+    let cb = Tensor::new(&[16], formats::must("sf4").padded16());
+    let flops = 2 * m * k * n;
+
+    let mut fixed = HashMap::new();
+    fixed.insert("codes".to_string(), Value::I8(codes.clone(), vec![k, n]));
+    fixed.insert("scales".to_string(), Value::F32(scales.clone()));
+    fixed.insert("codebook".to_string(), Value::F32(cb.clone()));
+    let bound = exe.bind(&fixed)?;
+    let mut rest = HashMap::new();
+    rest.insert("x".to_string(), Value::F32(x.clone()));
+    let s = bench("xla_lut_matmul_256x512x512", 32, || exe.run_bound(&bound, &rest).unwrap());
+    println!("bench {:40} gflops={:.2}", "xla_lut_matmul_256x512x512", flops as f64 / s.mean_secs() / 1e9);
+    report_throughput(&s, k * n); // 4-bit codes held as i8: weight traffic
+
+    // pure-Rust oracle on the same problem
+    let spec = formats::must("sf4");
+    let s2 = bench("rust_dequant_matmul_256x512x512", 8, || {
+        let cbv: Vec<f32> = spec.padded16();
+        let mut w = vec![0.0f32; k * n];
+        for kk in 0..k {
+            for j in 0..n {
+                w[kk * n + j] = cbv[codes[kk * n + j] as usize];
+            }
+        }
+        let wt = Tensor::new(&[k, n], w);
+        x.matmul(&wt)
+    });
+    println!("bench {:40} gflops={:.2}", "rust_dequant_matmul_256x512x512", flops as f64 / s2.mean_secs() / 1e9);
+    Ok(())
+}

@@ -1,0 +1,33 @@
+//! Perf: quantization engine hot path — RTN / MSE / GPTQ throughput.
+//! §Perf targets: RTN >= 100 MB/s of f32 weights (EXPERIMENTS.md).
+use llm_datatypes::bench_util::{bench, report_throughput};
+use llm_datatypes::formats;
+use llm_datatypes::quant::{gptq_quantize, quantize_weight, BlockSize, Calib, GptqConfig, QuantConfig};
+use llm_datatypes::rng::Pcg64;
+use llm_datatypes::tensor::Tensor;
+
+fn main() {
+    let mut rng = Pcg64::new(1);
+    let (k, n) = (1024usize, 1024usize);
+    let w = Tensor::new(&[k, n], rng.student_t_vec(k * n, 5.0, 0.02));
+    let bytes = k * n * 4;
+
+    for fmt in ["sf4", "int4", "e2m1"] {
+        let spec = formats::must(fmt);
+        let cfg = QuantConfig { format: spec.clone(), block: BlockSize::Sub(128), calib: Calib::None };
+        let s = bench(&format!("rtn_{fmt}_1Mx4B"), 24, || quantize_weight(&w, &cfg));
+        report_throughput(&s, bytes);
+    }
+    let spec = formats::must("sf4");
+    let cfg = QuantConfig { format: spec.clone(), block: BlockSize::Sub(128), calib: Calib::Mse };
+    let s = bench("mse_sf4_1Mx4B", 6, || quantize_weight(&w, &cfg));
+    report_throughput(&s, bytes);
+
+    // GPTQ on a layer-sized problem
+    let (k2, n2) = (256usize, 256usize);
+    let w2 = Tensor::new(&[k2, n2], rng.student_t_vec(k2 * n2, 5.0, 0.02));
+    let x2 = Tensor::new(&[512, k2], rng.normal_vec(512 * k2, 1.0));
+    let qc = QuantConfig { format: spec, block: BlockSize::Sub(128), calib: Calib::None };
+    let s = bench("gptq_256x256_cal512", 4, || gptq_quantize(&w2, &x2, &qc, &GptqConfig::default()));
+    report_throughput(&s, k2 * n2 * 4);
+}

@@ -1,0 +1,48 @@
+//! Perf: serve loop — dynamic batching win vs batch=1 (§Perf target >= 2x
+//! throughput at 16+ concurrent clients).
+use std::time::{Duration, Instant};
+
+use llm_datatypes::coordinator::model::{GraphKind, LmHandle};
+use llm_datatypes::coordinator::pipeline::{quantize_lm, PipelineConfig};
+use llm_datatypes::coordinator::serve::{run_loadgen, ServeConfig, Server};
+use llm_datatypes::coordinator::{corpus_for, Session};
+use llm_datatypes::exp::ensure_model;
+use llm_datatypes::model_io::zoo;
+use llm_datatypes::rng::Pcg64;
+
+fn main() -> anyhow::Result<()> {
+    let session = Session::open("artifacts", "checkpoints", "results")?;
+    ensure_model(&session, "nano")?;
+    let cfg = zoo("nano")?;
+    let ckpt = session.load_checkpoint("nano")?;
+    let corpus = corpus_for(&cfg);
+    let qm = quantize_lm(&cfg, &ckpt, &PipelineConfig::weight_only("sf4"), &corpus)?;
+    let mut rng = Pcg64::new(7);
+    let prompts: Vec<Vec<i32>> = (0..64)
+        .map(|_| {
+            let start = rng.below(corpus.heldout.len() - cfg.seq);
+            corpus.heldout[start..start + cfg.seq / 2].to_vec()
+        })
+        .collect();
+
+    let mut results = Vec::new();
+    for (label, clients, wait) in [
+        ("serve_batch1", 1usize, Duration::from_micros(1)),
+        ("serve_batched_16c", 16usize, Duration::from_millis(2)),
+    ] {
+        let handle = LmHandle::bind(&session.engine, &cfg, GraphKind::WeightOnly, &qm.values)?;
+        let server = Server::new(handle, ServeConfig { max_wait: wait, max_requests: 0 });
+        let total = 192;
+        let t0 = Instant::now();
+        let stats = run_loadgen(server, prompts.clone(), clients, total / clients)?;
+        let rps = stats.served as f64 / t0.elapsed().as_secs_f64();
+        println!(
+            "bench {label:40} req/s={rps:8.1} fill={:.2} p50={:?} p99={:?}",
+            stats.mean_batch_fill, stats.p50_latency, stats.p99_latency
+        );
+        results.push((label, rps));
+    }
+    let speedup = results[1].1 / results[0].1;
+    println!("bench serve_batching_speedup                  x{speedup:.2}");
+    Ok(())
+}

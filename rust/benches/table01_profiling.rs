@@ -1,0 +1,15 @@
+//! Bench target: regenerate paper Table 1/11 (profiling) at quick scale and time it.
+//! Full-scale regeneration: `repro table 1`.
+#![allow(unused_imports)]
+use llm_datatypes::bench_util::bench;
+use llm_datatypes::coordinator::Session;
+use llm_datatypes::exp::{self, Scale};
+
+fn main() -> anyhow::Result<()> {
+    let session = Session::open("artifacts", "checkpoints", "results")?;
+    exp::ensure_model(&session, "nano")?;
+    let table = exp::profile::run(&session, Scale::Quick)?;
+    println!("{}", table.render());
+    bench("table01_profiling", 2, || exp::profile::run(&session, Scale::Quick).unwrap());
+    Ok(())
+}

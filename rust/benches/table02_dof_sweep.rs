@@ -1,0 +1,15 @@
+//! Bench target: regenerate paper Table 2 (SF4 nu sweep) at quick scale and time it.
+//! Full-scale regeneration: `repro table 2`.
+#![allow(unused_imports)]
+use llm_datatypes::bench_util::bench;
+use llm_datatypes::coordinator::Session;
+use llm_datatypes::exp::{self, Scale};
+
+fn main() -> anyhow::Result<()> {
+    let session = Session::open("artifacts", "checkpoints", "results")?;
+    exp::ensure_model(&session, "nano")?;
+    let table = exp::dof_sweep::run(&session, Scale::Quick)?;
+    println!("{}", table.render());
+    bench("table02_dof_sweep", 2, || exp::dof_sweep::run(&session, Scale::Quick).unwrap());
+    Ok(())
+}

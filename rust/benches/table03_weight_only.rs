@@ -1,0 +1,15 @@
+//! Bench target: regenerate paper Table 3/13 (weight-only eval) at quick scale and time it.
+//! Full-scale regeneration: `repro table 3`.
+#![allow(unused_imports)]
+use llm_datatypes::bench_util::bench;
+use llm_datatypes::coordinator::Session;
+use llm_datatypes::exp::{self, Scale};
+
+fn main() -> anyhow::Result<()> {
+    let session = Session::open("artifacts", "checkpoints", "results")?;
+    exp::ensure_model(&session, "nano")?;
+    let table = exp::weight_only::run(&session, Scale::Quick)?;
+    println!("{}", table.render());
+    bench("table03_weight_only", 2, || exp::weight_only::run(&session, Scale::Quick).unwrap());
+    Ok(())
+}

@@ -1,0 +1,15 @@
+//! Bench target: regenerate paper Table 5 (block-size sweep) at quick scale and time it.
+//! Full-scale regeneration: `repro table 5`.
+#![allow(unused_imports)]
+use llm_datatypes::bench_util::bench;
+use llm_datatypes::coordinator::Session;
+use llm_datatypes::exp::{self, Scale};
+
+fn main() -> anyhow::Result<()> {
+    let session = Session::open("artifacts", "checkpoints", "results")?;
+    exp::ensure_model(&session, "nano")?;
+    let table = exp::blocksize::run(&session, Scale::Quick, "nano")?;
+    println!("{}", table.render());
+    bench("table05_blocksize", 2, || exp::blocksize::run(&session, Scale::Quick, "nano").unwrap());
+    Ok(())
+}

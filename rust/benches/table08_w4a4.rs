@@ -1,0 +1,15 @@
+//! Bench target: regenerate paper Table 8 (W4A4 +- SmoothQuant) at quick scale and time it.
+//! Full-scale regeneration: `repro table 8`.
+#![allow(unused_imports)]
+use llm_datatypes::bench_util::bench;
+use llm_datatypes::coordinator::Session;
+use llm_datatypes::exp::{self, Scale};
+
+fn main() -> anyhow::Result<()> {
+    let session = Session::open("artifacts", "checkpoints", "results")?;
+    exp::ensure_model(&session, "nano")?;
+    let table = exp::w4a4::run(&session, Scale::Quick)?;
+    println!("{}", table.render());
+    bench("table08_w4a4", 2, || exp::w4a4::run(&session, Scale::Quick).unwrap());
+    Ok(())
+}

@@ -1,0 +1,16 @@
+//! Bench target: regenerate paper Table 9 (vision models) at quick scale and time it.
+//! Full-scale regeneration: `repro table 9`.
+#![allow(unused_imports)]
+use llm_datatypes::bench_util::bench;
+use llm_datatypes::coordinator::Session;
+use llm_datatypes::exp::{self, Scale};
+
+fn main() -> anyhow::Result<()> {
+    let session = Session::open("artifacts", "checkpoints", "results")?;
+    exp::ensure_cls(&session, "mlp")?;
+    exp::ensure_cls(&session, "cnn")?;
+    let table = exp::vision::run(&session, Scale::Quick)?;
+    println!("{}", table.render());
+    bench("table09_vision", 2, || exp::vision::run(&session, Scale::Quick).unwrap());
+    Ok(())
+}

@@ -1,0 +1,15 @@
+//! Bench target: regenerate paper Table 10 (MAC area/power) at quick scale and time it.
+//! Full-scale regeneration: `repro table 10`.
+#![allow(unused_imports)]
+use llm_datatypes::bench_util::bench;
+use llm_datatypes::coordinator::Session;
+use llm_datatypes::exp::{self, Scale};
+
+fn main() -> anyhow::Result<()> {
+    let session = Session::open("artifacts", "checkpoints", "results")?;
+
+    let table = exp::hardware::run()?;
+    println!("{}", table.render());
+    bench("table10_hardware", 2, || exp::hardware::run().unwrap());
+    Ok(())
+}

@@ -1,0 +1,15 @@
+//! Bench target: regenerate paper Table 12 (per-layer profiling) at quick scale and time it.
+//! Full-scale regeneration: `repro table 12`.
+#![allow(unused_imports)]
+use llm_datatypes::bench_util::bench;
+use llm_datatypes::coordinator::Session;
+use llm_datatypes::exp::{self, Scale};
+
+fn main() -> anyhow::Result<()> {
+    let session = Session::open("artifacts", "checkpoints", "results")?;
+    exp::ensure_model(&session, "nano")?;
+    let table = exp::profile::run_breakdown(&session, Scale::Quick, "nano")?;
+    println!("{}", table.render());
+    bench("table12_layer_breakdown", 2, || exp::profile::run_breakdown(&session, Scale::Quick, "nano").unwrap());
+    Ok(())
+}

@@ -1,0 +1,15 @@
+//! Bench target: regenerate paper Table 15 (datatype values) at quick scale and time it.
+//! Full-scale regeneration: `repro table 15`.
+#![allow(unused_imports)]
+use llm_datatypes::bench_util::bench;
+use llm_datatypes::coordinator::Session;
+use llm_datatypes::exp::{self, Scale};
+
+fn main() -> anyhow::Result<()> {
+    let session = Session::open("artifacts", "checkpoints", "results")?;
+
+    let table = exp::convergence::run_table15()?;
+    println!("{}", table.render());
+    bench("table15_codebooks", 2, || exp::convergence::run_table15().unwrap());
+    Ok(())
+}

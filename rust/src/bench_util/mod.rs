@@ -1,0 +1,161 @@
+//! Hand-rolled benchmark harness (criterion is not in the offline vendor
+//! set). Used by every target under `rust/benches/` with `harness = false`.
+//!
+//! Reports mean / p50 / p99 wall time over a warmup + timed phase, plus an
+//! optional throughput figure, in a stable greppable format:
+//!
+//! ```text
+//! bench <name>  iters=64  mean=1.234ms  p50=1.200ms  p99=1.900ms  thrpt=123.4 MB/s
+//! ```
+
+use std::time::{Duration, Instant};
+
+/// One benchmark run's statistics.
+#[derive(Clone, Debug)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p99: Duration,
+    pub min: Duration,
+}
+
+impl BenchStats {
+    pub fn mean_secs(&self) -> f64 {
+        self.mean.as_secs_f64()
+    }
+}
+
+fn fmt_dur(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s >= 1.0 {
+        format!("{s:.3}s")
+    } else if s >= 1e-3 {
+        format!("{:.3}ms", s * 1e3)
+    } else {
+        format!("{:.1}us", s * 1e6)
+    }
+}
+
+/// Benchmark a closure: `warmup` untimed runs then up to `iters` timed runs
+/// (capped by `budget`). The closure's return value is black-boxed.
+pub fn bench<T>(name: &str, iters: usize, mut f: impl FnMut() -> T) -> BenchStats {
+    bench_with_budget(name, iters, Duration::from_secs(20), &mut f)
+}
+
+pub fn bench_with_budget<T>(
+    name: &str,
+    iters: usize,
+    budget: Duration,
+    f: &mut impl FnMut() -> T,
+) -> BenchStats {
+    // warmup: 2 runs or 10% of budget, whichever first
+    let warm_start = Instant::now();
+    for _ in 0..2 {
+        black_box(f());
+        if warm_start.elapsed() > budget / 10 {
+            break;
+        }
+    }
+    let mut samples = Vec::with_capacity(iters);
+    let start = Instant::now();
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        black_box(f());
+        samples.push(t0.elapsed());
+        if start.elapsed() > budget {
+            break;
+        }
+    }
+    samples.sort();
+    let n = samples.len().max(1);
+    let mean = samples.iter().sum::<Duration>() / n as u32;
+    let stats = BenchStats {
+        name: name.to_string(),
+        iters: n,
+        mean,
+        p50: samples[(n / 2).min(n - 1)],
+        p99: samples[(n * 99 / 100).min(n - 1)],
+        min: samples[0],
+    };
+    println!(
+        "bench {:40} iters={:<5} mean={:>10} p50={:>10} p99={:>10}",
+        stats.name,
+        stats.iters,
+        fmt_dur(stats.mean),
+        fmt_dur(stats.p50),
+        fmt_dur(stats.p99),
+    );
+    stats
+}
+
+/// Report a throughput line alongside a bench.
+pub fn report_throughput(stats: &BenchStats, bytes_per_iter: usize) {
+    let mbps = bytes_per_iter as f64 / stats.mean_secs() / 1e6;
+    println!("bench {:40} thrpt={mbps:.1} MB/s", stats.name);
+}
+
+/// Opaque value sink to prevent the optimizer from deleting the work.
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Parse `--quick` style flags every bench target accepts.
+pub struct BenchArgs {
+    pub quick: bool,
+    pub filter: Option<String>,
+}
+
+impl BenchArgs {
+    pub fn from_env() -> Self {
+        let mut quick = false;
+        let mut filter = None;
+        for a in std::env::args().skip(1) {
+            match a.as_str() {
+                "--quick" => quick = true,
+                "--bench" => {} // cargo bench passes this through
+                s if !s.starts_with('-') => filter = Some(s.to_string()),
+                _ => {}
+            }
+        }
+        // cargo test --benches runs bench targets with --test-threads etc.;
+        // treat that as quick mode.
+        if std::env::var("LLMDT_BENCH_QUICK").is_ok() {
+            quick = true;
+        }
+        BenchArgs { quick, filter }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let stats = bench("noop", 16, || 1 + 1);
+        assert!(stats.iters >= 1);
+        assert!(stats.mean <= Duration::from_millis(50));
+    }
+
+    #[test]
+    fn single_iteration_does_not_divide_by_zero() {
+        let stats = bench_with_budget("one", 1, Duration::from_secs(5), &mut || 7);
+        assert_eq!(stats.iters, 1);
+        assert_eq!(stats.p50, stats.min);
+    }
+
+    #[test]
+    fn percentiles_ordered() {
+        let stats = bench("spin", 32, || {
+            let mut acc = 0u64;
+            for i in 0..1000 {
+                acc = acc.wrapping_add(i);
+            }
+            acc
+        });
+        assert!(stats.min <= stats.p50);
+        assert!(stats.p50 <= stats.p99);
+    }
+}

@@ -1,0 +1,282 @@
+//! Hand-rolled CLI (clap is not in the offline vendor set).
+//!
+//! ```text
+//! repro train   [--model NAME | --all] [--force]
+//! repro table   <1|2|3|4|5|6|7|8|9|10|12|14|15> [--quick] [--model NAME]
+//! repro figure  <2|3|4|7> [--quick] [--model NAME]
+//! repro serve   [--model NAME] [--format FMT] [--clients N] [--requests N]
+//! repro all     [--quick]
+//! ```
+//! Global flags: `--artifacts DIR --checkpoints DIR --results DIR`.
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::{corpus_for, trainer, Session};
+use crate::data::ImageSet;
+use crate::exp::{self, Scale};
+use crate::model_io::{zoo, ZOO};
+use crate::nn::CLS_ZOO;
+
+/// Parsed command line.
+pub struct Args {
+    pub cmd: String,
+    pub positional: Vec<String>,
+    flags: std::collections::HashMap<String, String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let mut cmd = String::new();
+        let mut positional = Vec::new();
+        let mut flags = std::collections::HashMap::new();
+        let mut it = argv.iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                let value = match it.peek() {
+                    Some(v) if !v.starts_with("--") => it.next().unwrap().clone(),
+                    _ => "true".to_string(),
+                };
+                flags.insert(name.to_string(), value);
+            } else if cmd.is_empty() {
+                cmd = a.clone();
+            } else {
+                positional.push(a.clone());
+            }
+        }
+        Ok(Args { cmd, positional, flags })
+    }
+
+    pub fn flag(&self, name: &str, default: &str) -> String {
+        self.flags.get(name).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.flags.contains_key(name)
+    }
+
+    fn scale(&self) -> Scale {
+        if self.has("quick") {
+            Scale::Quick
+        } else {
+            Scale::Full
+        }
+    }
+}
+
+const USAGE: &str = "\
+repro — Student-t datatypes for LLMs (ICML 2024 reproduction)
+
+commands:
+  train   [--model NAME | --all] [--force]     train the model zoo (AOT step)
+  table   <id> [--quick] [--model NAME]        regenerate a paper table
+          ids: 1 2 3 4 5 6 7 8 9 10 12 14 15
+  figure  <id> [--quick] [--model NAME]        regenerate a paper figure
+          ids: 2 3 4 7
+  serve   [--model N] [--format F] [--clients C] [--requests R]
+  all     [--quick]                            every table + figure
+global flags: --artifacts DIR --checkpoints DIR --results DIR
+";
+
+pub fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv)?;
+    if args.cmd.is_empty() || args.cmd == "help" {
+        print!("{USAGE}");
+        return Ok(());
+    }
+    let session = Session::open(
+        &args.flag("artifacts", crate::paths::ARTIFACTS),
+        &args.flag("checkpoints", crate::paths::CHECKPOINTS),
+        &args.flag("results", crate::paths::RESULTS),
+    )?;
+    std::fs::create_dir_all(&session.results_dir).ok();
+
+    match args.cmd.as_str() {
+        "train" => cmd_train(&session, &args),
+        "table" => cmd_table(&session, &args),
+        "figure" => cmd_figure(&session, &args),
+        "serve" => cmd_serve(&session, &args),
+        "all" => cmd_all(&session, &args),
+        other => bail!("unknown command `{other}`\n{USAGE}"),
+    }
+}
+
+fn cmd_train(session: &Session, args: &Args) -> Result<()> {
+    let force = args.has("force");
+    let models: Vec<&str> = if args.has("models") {
+        args.flag("models", "").split(',').map(|s| Box::leak(s.to_string().into_boxed_str()) as &str).collect()
+    } else if args.has("all") {
+        ZOO.iter().map(|c| c.name).collect()
+    } else if args.has("cls") {
+        vec![]
+    } else {
+        vec![Box::leak(args.flag("model", "small").into_boxed_str())]
+    };
+    for model in models {
+        let cfg = zoo(model)?;
+        let corpus = corpus_for(&cfg);
+        trainer::train_and_save(&session.engine, &cfg, &corpus, &session.checkpoints_dir, force)?;
+    }
+    if args.has("all") || args.has("cls") {
+        let images = ImageSet::new(16, 10, 7, 0.6);
+        for cfg in CLS_ZOO {
+            trainer::train_cls_and_save(
+                &session.engine,
+                &cfg,
+                &images,
+                &session.checkpoints_dir,
+                force,
+            )?;
+        }
+    }
+    Ok(())
+}
+
+fn default_single_model(args: &Args, scale: Scale) -> String {
+    args.flag("model", match scale {
+        Scale::Quick => "nano",
+        Scale::Full => "small",
+    })
+}
+
+fn cmd_table(session: &Session, args: &Args) -> Result<()> {
+    let id = args.positional.first().context("table needs an id")?.as_str();
+    let scale = args.scale();
+    let model = default_single_model(args, scale);
+    let table = match id {
+        "1" | "11" => exp::profile::run(session, scale)?,
+        "2" => exp::dof_sweep::run(session, scale)?,
+        "3" | "13" => exp::weight_only::run(session, scale)?,
+        "4" => exp::zeroshot::run(session, scale, &model)?,
+        "5" => exp::blocksize::run(session, scale, &model)?,
+        "6" => exp::gptq_cmp::run(session, scale, &model)?,
+        "7" => exp::three_bit::run(session, scale, &model)?,
+        "8" => exp::w4a4::run(session, scale)?,
+        "9" => exp::vision::run(session, scale)?,
+        "10" => exp::hardware::run()?,
+        "12" => exp::profile::run_breakdown(session, scale, &model)?,
+        "14" => exp::multilingual::run(session, scale, &model)?,
+        "15" => exp::convergence::run_table15()?,
+        other => bail!("unknown table id {other}"),
+    };
+    exp::emit(session, &format!("table{id}"), &table)
+}
+
+fn cmd_figure(session: &Session, args: &Args) -> Result<()> {
+    let id = args.positional.first().context("figure needs an id")?.as_str();
+    let scale = args.scale();
+    let model = default_single_model(args, scale);
+    match id {
+        "2" => {
+            let txt = exp::profile::run_fig2(session, &model)?;
+            println!("{txt}");
+            std::fs::write(
+                std::path::Path::new(&session.results_dir).join("fig2.txt"),
+                txt,
+            )?;
+        }
+        "3" | "8" => {
+            let (rendered, points) = exp::pareto::run(session, scale)?;
+            let front = exp::pareto::pareto_front(&points);
+            let txt = format!("{rendered}\nPareto front: {}\n", front.join(" -> "));
+            println!("{txt}");
+            std::fs::write(
+                std::path::Path::new(&session.results_dir).join("fig3.txt"),
+                txt,
+            )?;
+        }
+        "4" | "5" => {
+            let table = exp::convergence::run_fig4(session)?;
+            exp::emit(session, "fig4", &table)?;
+        }
+        "6" => {
+            let table = exp::convergence::run_table15()?;
+            exp::emit(session, "fig6_gallery", &table)?;
+        }
+        "7" => {
+            let table = exp::convergence::run_fig7()?;
+            exp::emit(session, "fig7_apot", &table)?;
+        }
+        other => bail!("unknown figure id {other}"),
+    }
+    Ok(())
+}
+
+fn cmd_serve(session: &Session, args: &Args) -> Result<()> {
+    use crate::coordinator::model::{GraphKind, LmHandle};
+    use crate::coordinator::pipeline::{quantize_lm, PipelineConfig};
+    use crate::coordinator::serve::{run_loadgen, ServeConfig, Server};
+    use crate::rng::Pcg64;
+
+    let model = args.flag("model", "small");
+    let format = args.flag("format", "sf4");
+    let clients: usize = args.flag("clients", "8").parse()?;
+    let requests: usize = args.flag("requests", "64").parse()?;
+
+    let cfg = zoo(&model)?;
+    let ckpt = session.load_checkpoint(&model)?;
+    let corpus = corpus_for(&cfg);
+    let pc = PipelineConfig::weight_only(&format);
+    let qm = quantize_lm(&cfg, &ckpt, &pc, &corpus)?;
+    let handle = LmHandle::bind(&session.engine, &cfg, GraphKind::WeightOnly, &qm.values)?;
+    let server = Server::new(handle, ServeConfig::default());
+
+    let mut rng = Pcg64::new(1);
+    let prompts: Vec<Vec<i32>> = (0..64)
+        .map(|_| {
+            let start = rng.below(corpus.heldout.len() - cfg.seq);
+            corpus.heldout[start..start + cfg.seq / 2].to_vec()
+        })
+        .collect();
+    let stats = run_loadgen(server, prompts, clients, requests / clients.max(1))?;
+    println!(
+        "served {} requests in {} batches (mean fill {:.2}/{}) p50 {:?} p99 {:?}",
+        stats.served,
+        stats.batches,
+        stats.mean_batch_fill,
+        cfg.batch_eval,
+        stats.p50_latency,
+        stats.p99_latency
+    );
+    Ok(())
+}
+
+fn cmd_all(session: &Session, args: &Args) -> Result<()> {
+    let scale = args.scale();
+    let model = default_single_model(args, scale);
+    for id in ["10", "15", "1", "2", "3", "4", "5", "6", "7", "8", "9", "12", "14"] {
+        let mut sub = Args::parse(&[id.to_string()])?;
+        sub.flags = args.flags.clone();
+        sub.positional = vec![id.to_string()];
+        if let Err(e) = cmd_table(session, &sub) {
+            eprintln!("table {id} failed: {e:#}");
+        }
+        let _ = &model;
+    }
+    for id in ["2", "3", "4", "7"] {
+        let mut sub = Args::parse(&[id.to_string()])?;
+        sub.flags = args.flags.clone();
+        sub.positional = vec![id.to_string()];
+        if let Err(e) = cmd_figure(session, &sub) {
+            eprintln!("figure {id} failed: {e:#}");
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn args_parse_flags_and_positionals() {
+        let argv: Vec<String> =
+            ["table", "3", "--quick", "--model", "small"].iter().map(|s| s.to_string()).collect();
+        let a = Args::parse(&argv).unwrap();
+        assert_eq!(a.cmd, "table");
+        assert_eq!(a.positional, vec!["3"]);
+        assert!(a.has("quick"));
+        assert_eq!(a.flag("model", "x"), "small");
+        assert_eq!(a.flag("missing", "dflt"), "dflt");
+    }
+}

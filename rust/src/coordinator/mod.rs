@@ -1,0 +1,103 @@
+//! The L3 coordinator: everything between the CLI and the PJRT runtime.
+//!
+//! * [`pipeline`] — the PTQ pipeline: checkpoint + format + method ->
+//!   artifact-ready quantized parameter set (RTN / MSE / GPTQ / SmoothQuant).
+//! * [`model`] — `LmHandle`: a model's executables with device-resident
+//!   weights, implementing [`crate::tasks::LmScorer`].
+//! * [`trainer`] — drives the fused AOT train-step artifacts to train the
+//!   model zoo on synthetic corpora (the E2E path).
+//! * [`serve`] — request router + dynamic batcher over a quantized model.
+//! * [`runner`] — experiment grid scheduler over a worker pool.
+
+pub mod model;
+pub mod pipeline;
+pub mod runner;
+pub mod serve;
+pub mod trainer;
+
+pub use model::LmHandle;
+pub use pipeline::{PipelineConfig, QuantMethod, QuantizedModel};
+pub use runner::{run_grid, GridJob};
+pub use serve::{ServeConfig, ServeStats, Server};
+
+use anyhow::Result;
+
+use crate::data::{Corpus, Language};
+use crate::model_io::ModelConfig;
+
+/// Shared experiment context: engine + directories.
+pub struct Session {
+    pub engine: crate::runtime::Engine,
+    pub checkpoints_dir: String,
+    pub results_dir: String,
+}
+
+impl Session {
+    pub fn open(artifacts: &str, checkpoints: &str, results: &str) -> Result<Session> {
+        Ok(Session {
+            engine: crate::runtime::Engine::cpu(artifacts)?,
+            checkpoints_dir: checkpoints.to_string(),
+            results_dir: results.to_string(),
+        })
+    }
+
+    pub fn corpus_for(&self, cfg: &ModelConfig) -> Corpus {
+        corpus_for(cfg)
+    }
+
+    pub fn load_checkpoint(&self, model: &str) -> Result<crate::model_io::Checkpoint> {
+        crate::model_io::Checkpoint::load(crate::model_io::checkpoint_path(
+            &self.checkpoints_dir,
+            model,
+        ))
+    }
+}
+
+/// Deterministic corpus for a zoo model: each model trains/evals on its own
+/// language seed, so zoo members play the role of "different models" in the
+/// paper's tables.
+pub fn corpus_for(cfg: &ModelConfig) -> Corpus {
+    let seed = cfg.name.bytes().fold(0u64, |a, b| a.wrapping_mul(31).wrapping_add(b as u64));
+    let lang = Language::default_for(cfg.vocab, seed);
+    // train stream sized generously relative to the model's step budget
+    let train_len = (cfg.train_steps * cfg.batch_train * (cfg.seq + 1) / 2).max(200_000);
+    Corpus::build(&lang, train_len, 120_000, seed ^ 0x5eed)
+}
+
+/// Corpus in a specific "language" (Table 14 multi-lingual suite): the
+/// model's own Markov chain structure (same permutation seed as its
+/// training corpus) with language-specific Zipf exponent and smoothing —
+/// related-but-shifted statistics, like the multilingual LAMBADA variants.
+pub fn corpus_for_language(cfg: &ModelConfig, language: &str) -> Corpus {
+    let base_seed = cfg.name.bytes().fold(0u64, |a, b| a.wrapping_mul(31).wrapping_add(b as u64));
+    let (name, zipf_s, _, smooth) = crate::data::LANGUAGES
+        .iter()
+        .copied()
+        .find(|(l, ..)| *l == language)
+        .unwrap_or(crate::data::LANGUAGES[0]);
+    let lang = Language::new(name, cfg.vocab, zipf_s, base_seed, smooth);
+    Corpus::build(&lang, 200_000, 120_000, base_seed ^ 0x7ab1e14)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model_io::zoo;
+
+    #[test]
+    fn corpus_for_is_deterministic_and_distinct() {
+        let a = corpus_for(&zoo("nano").unwrap());
+        let b = corpus_for(&zoo("nano").unwrap());
+        assert_eq!(a.train[..100], b.train[..100]);
+        let c = corpus_for(&zoo("micro").unwrap());
+        assert_ne!(a.train[..100], c.train[..100]);
+    }
+
+    #[test]
+    fn language_corpora_differ() {
+        let cfg = zoo("micro").unwrap();
+        let en = corpus_for_language(&cfg, "en");
+        let de = corpus_for_language(&cfg, "de");
+        assert_ne!(en.train[..64], de.train[..64]);
+    }
+}

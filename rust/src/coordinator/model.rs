@@ -1,0 +1,119 @@
+//! `LmHandle`: one model's eval executables with device-resident weights,
+//! exposing the [`LmScorer`] interface the task suite consumes.
+
+use std::collections::HashMap;
+
+use anyhow::{Context, Result};
+
+use crate::model_io::ModelConfig;
+use crate::runtime::{BoundInputs, Engine, Executable, Value};
+use crate::tasks::LmScorer;
+use crate::tensor::Tensor;
+
+/// Which eval graphs to bind: fp32 baseline, weight-only, or W4A4.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GraphKind {
+    Fp32,
+    WeightOnly,
+    W4A4,
+}
+
+impl GraphKind {
+    fn fwd_name(&self, model: &str) -> String {
+        match self {
+            GraphKind::Fp32 => format!("lm_fwd_fp32_{model}"),
+            GraphKind::WeightOnly => format!("lm_fwd_{model}"),
+            GraphKind::W4A4 => format!("lm_fwd_w4a4_{model}"),
+        }
+    }
+
+    fn loss_name(&self, model: &str) -> String {
+        match self {
+            GraphKind::Fp32 => format!("lm_loss_fp32_{model}"),
+            GraphKind::WeightOnly => format!("lm_loss_{model}"),
+            GraphKind::W4A4 => format!("lm_loss_w4a4_{model}"),
+        }
+    }
+}
+
+/// A ready-to-eval model: compiled fwd/loss graphs + bound weight buffers.
+pub struct LmHandle {
+    pub cfg: ModelConfig,
+    fwd: Executable,
+    loss: Executable,
+    fwd_bound: BoundInputs,
+    loss_bound: BoundInputs,
+    /// executions since construction (used by perf reporting)
+    pub calls: std::cell::Cell<u64>,
+}
+
+impl LmHandle {
+    /// Compile + bind. `values` must contain every input except `tokens`
+    /// (from [`super::pipeline::quantize_lm`] or `fp32_values`).
+    pub fn bind(
+        engine: &Engine,
+        cfg: &ModelConfig,
+        kind: GraphKind,
+        values: &HashMap<String, Value>,
+    ) -> Result<LmHandle> {
+        let fwd = engine
+            .load(&kind.fwd_name(cfg.name))
+            .with_context(|| format!("loading fwd graph for {}", cfg.name))?;
+        let loss = engine.load(&kind.loss_name(cfg.name))?;
+        let fwd_bound = fwd.bind(values)?;
+        let loss_bound = loss.bind(values)?;
+        anyhow::ensure!(
+            fwd_bound.missing == vec!["tokens".to_string()],
+            "fwd graph has unexpected unbound inputs: {:?}",
+            fwd_bound.missing
+        );
+        Ok(LmHandle {
+            cfg: *cfg,
+            fwd,
+            loss,
+            fwd_bound,
+            loss_bound,
+            calls: std::cell::Cell::new(0),
+        })
+    }
+
+    /// Raw forward: tokens `[B*S]` -> logits tensor `[B*S, V]`.
+    pub fn forward(&self, tokens: &[i32]) -> Result<Tensor> {
+        let (b, s, v) = (self.cfg.batch_eval, self.cfg.seq, self.cfg.vocab);
+        anyhow::ensure!(tokens.len() == b * s, "bad token count {}", tokens.len());
+        let mut rest = HashMap::new();
+        rest.insert("tokens".to_string(), Value::I32(tokens.to_vec(), vec![b, s]));
+        let outs = self.fwd.run_bound(&self.fwd_bound, &rest)?;
+        self.calls.set(self.calls.get() + 1);
+        let logits = outs[0].as_f32()?;
+        Ok(logits.clone().reshape(&[b * s, v]))
+    }
+}
+
+impl LmScorer for LmHandle {
+    fn batch(&self) -> usize {
+        self.cfg.batch_eval
+    }
+
+    fn seq(&self) -> usize {
+        self.cfg.seq
+    }
+
+    fn vocab(&self) -> usize {
+        self.cfg.vocab
+    }
+
+    fn logits(&mut self, tokens: &[i32]) -> Result<Tensor> {
+        self.forward(tokens)
+    }
+
+    fn nll_sum(&mut self, tokens: &[i32]) -> Result<(f64, f64)> {
+        let (b, s) = (self.cfg.batch_eval, self.cfg.seq);
+        anyhow::ensure!(tokens.len() == b * (s + 1), "bad token count");
+        let mut rest = HashMap::new();
+        rest.insert("tokens".to_string(), Value::I32(tokens.to_vec(), vec![b, s + 1]));
+        let outs = self.loss.run_bound(&self.loss_bound, &rest)?;
+        self.calls.set(self.calls.get() + 1);
+        Ok((outs[0].scalar_f32()? as f64, outs[1].scalar_f32()? as f64))
+    }
+}

@@ -1,0 +1,104 @@
+//! Experiment grid runner: a worker pool over (model x format x method)
+//! cells. Quantization (GPTQ especially) is CPU-heavy Rust work that
+//! parallelizes across cells; XLA executions serialize behind the PJRT lock
+//! but overlap with other cells' quantization.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use anyhow::Result;
+
+/// One grid cell: a label + the closure that computes its result rows.
+pub struct GridJob<R> {
+    pub label: String,
+    pub run: Box<dyn FnOnce() -> Result<R> + Send>,
+}
+
+impl<R> GridJob<R> {
+    pub fn new(label: impl Into<String>, run: impl FnOnce() -> Result<R> + Send + 'static) -> Self {
+        GridJob { label: label.into(), run: Box::new(run) }
+    }
+}
+
+/// Run jobs on `workers` threads; results keep submission order.
+/// Failures are reported per-cell and do not sink the whole grid.
+pub fn run_grid<R: Send + 'static>(
+    jobs: Vec<GridJob<R>>,
+    workers: usize,
+) -> Vec<(String, Result<R>)> {
+    let n = jobs.len();
+    let jobs: Vec<Mutex<Option<GridJob<R>>>> =
+        jobs.into_iter().map(|j| Mutex::new(Some(j))).collect();
+    let results: Vec<Mutex<Option<(String, Result<R>)>>> =
+        (0..n).map(|_| Mutex::new(None)).collect();
+    let next = AtomicUsize::new(0);
+    let workers = workers.max(1).min(n.max(1));
+
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let job = jobs[i].lock().unwrap().take().expect("job taken twice");
+                let label = job.label.clone();
+                eprintln!("[grid] {label} ...");
+                let t0 = std::time::Instant::now();
+                let res = (job.run)();
+                eprintln!(
+                    "[grid] {label} done in {:.1}s{}",
+                    t0.elapsed().as_secs_f32(),
+                    if res.is_err() { " (FAILED)" } else { "" }
+                );
+                *results[i].lock().unwrap() = Some((label, res));
+            });
+        }
+    });
+
+    results
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("job completed"))
+        .collect()
+}
+
+/// Default worker count: physical parallelism minus one for the PJRT queue.
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism().map(|n| n.get().saturating_sub(1).max(1)).unwrap_or(4)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_preserves_order_and_collects_errors() {
+        let jobs: Vec<GridJob<usize>> = (0..10)
+            .map(|i| {
+                GridJob::new(format!("job{i}"), move || {
+                    if i == 3 {
+                        anyhow::bail!("planned failure")
+                    }
+                    Ok(i * i)
+                })
+            })
+            .collect();
+        let results = run_grid(jobs, 4);
+        assert_eq!(results.len(), 10);
+        for (i, (label, res)) in results.iter().enumerate() {
+            assert_eq!(label, &format!("job{i}"));
+            if i == 3 {
+                assert!(res.is_err());
+            } else {
+                assert_eq!(*res.as_ref().unwrap(), i * i);
+            }
+        }
+    }
+
+    #[test]
+    fn grid_runs_with_more_workers_than_jobs() {
+        let jobs = vec![GridJob::new("only", || Ok(42))];
+        let results = run_grid(jobs, 16);
+        assert_eq!(*results[0].1.as_ref().unwrap(), 42);
+    }
+}

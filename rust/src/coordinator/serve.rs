@@ -1,0 +1,196 @@
+//! Serve mode: request router + dynamic batcher over a quantized model.
+//!
+//! The paper's formats are motivated by serving economics (memory-bound
+//! weight-only quantization); this module is the runnable demonstration: a
+//! next-token scoring service where client threads submit prompts, a
+//! batcher coalesces them into fixed-`B` executions of the bound quantized
+//! executable, and a router fans responses back. The dynamic-batching win
+//! is measured by `perf_serve` (EXPERIMENTS.md §Perf).
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::coordinator::model::LmHandle;
+use crate::tensor::Tensor;
+
+/// One scoring request: a prompt (<= seq tokens); response = distribution
+/// over the next token (top-1 id + logprob here).
+pub struct Request {
+    pub prompt: Vec<i32>,
+    pub resp: mpsc::Sender<Response>,
+    pub submitted: Instant,
+}
+
+/// Next-token prediction for one request.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub next_token: i32,
+    pub logprob: f32,
+    pub latency: Duration,
+}
+
+/// Batching policy.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeConfig {
+    /// max time the batcher waits to fill a batch
+    pub max_wait: Duration,
+    /// stop serving after this many requests (0 = run until channel closes)
+    pub max_requests: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig { max_wait: Duration::from_millis(2), max_requests: 0 }
+    }
+}
+
+/// Aggregate serving statistics.
+#[derive(Clone, Debug, Default)]
+pub struct ServeStats {
+    pub served: usize,
+    pub batches: usize,
+    pub p50_latency: Duration,
+    pub p99_latency: Duration,
+    pub mean_batch_fill: f64,
+}
+
+/// The server: owns the handle; `run` consumes a request channel.
+pub struct Server {
+    handle: LmHandle,
+    cfg: ServeConfig,
+}
+
+impl Server {
+    pub fn new(handle: LmHandle, cfg: ServeConfig) -> Server {
+        Server { handle, cfg }
+    }
+
+    /// Serve until the channel closes (or `max_requests`); returns stats.
+    pub fn run(&mut self, rx: mpsc::Receiver<Request>) -> Result<ServeStats> {
+        let b = self.handle.cfg.batch_eval;
+        let s = self.handle.cfg.seq;
+        let mut latencies: Vec<Duration> = Vec::new();
+        let mut fills: Vec<usize> = Vec::new();
+        let mut batches = 0usize;
+        let mut served = 0usize;
+
+        'outer: loop {
+            // block for the first request of a batch
+            let first = match rx.recv() {
+                Ok(r) => r,
+                Err(_) => break,
+            };
+            let mut batch = vec![first];
+            let deadline = Instant::now() + self.cfg.max_wait;
+            while batch.len() < b {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                match rx.recv_timeout(deadline - now) {
+                    Ok(r) => batch.push(r),
+                    Err(mpsc::RecvTimeoutError::Timeout) => break,
+                    Err(mpsc::RecvTimeoutError::Disconnected) => {
+                        if batch.is_empty() {
+                            break 'outer;
+                        }
+                        break;
+                    }
+                }
+            }
+
+            // marshal: left-pad short prompts into fixed [B, S]
+            let mut tokens = vec![0i32; b * s];
+            let mut cue = vec![0usize; batch.len()];
+            for (r, req) in batch.iter().enumerate() {
+                let p = &req.prompt;
+                let n = p.len().min(s);
+                tokens[r * s..r * s + n].copy_from_slice(&p[p.len() - n..]);
+                cue[r] = n - 1;
+            }
+            let logits = self.handle.forward(&tokens)?;
+            let logp = log_softmax_rows(&logits);
+            for (r, req) in batch.iter().enumerate() {
+                let row = logp.row(r * s + cue[r]);
+                let best = crate::tensor::argmax(row);
+                let latency = req.submitted.elapsed();
+                latencies.push(latency);
+                let _ = req.resp.send(Response {
+                    next_token: best as i32,
+                    logprob: row[best],
+                    latency,
+                });
+            }
+            served += batch.len();
+            fills.push(batch.len());
+            batches += 1;
+            if self.cfg.max_requests > 0 && served >= self.cfg.max_requests {
+                break;
+            }
+        }
+
+        latencies.sort();
+        let pick = |q: f64| {
+            latencies
+                .get(((latencies.len() as f64 * q) as usize).min(latencies.len().saturating_sub(1)))
+                .copied()
+                .unwrap_or_default()
+        };
+        Ok(ServeStats {
+            served,
+            batches,
+            p50_latency: pick(0.50),
+            p99_latency: pick(0.99),
+            mean_batch_fill: fills.iter().sum::<usize>() as f64 / fills.len().max(1) as f64,
+        })
+    }
+}
+
+fn log_softmax_rows(logits: &Tensor) -> Tensor {
+    logits.log_softmax_last()
+}
+
+/// Drive a server with `n_clients` synthetic clients issuing `per_client`
+/// requests each; returns the server stats (used by the example + bench).
+pub fn run_loadgen(
+    mut server: Server,
+    prompts: Vec<Vec<i32>>,
+    n_clients: usize,
+    per_client: usize,
+) -> Result<ServeStats> {
+    let (tx, rx) = mpsc::channel::<Request>();
+    let prompts = Arc::new(prompts);
+    let stats = Arc::new(Mutex::new(None));
+    let stats2 = stats.clone();
+    std::thread::scope(|scope| -> Result<()> {
+        let server_thread = scope.spawn(move || {
+            let st = server.run(rx);
+            *stats2.lock().unwrap() = Some(st);
+        });
+        for c in 0..n_clients {
+            let tx = tx.clone();
+            let prompts = prompts.clone();
+            scope.spawn(move || {
+                for i in 0..per_client {
+                    let (rtx, rrx) = mpsc::channel();
+                    let prompt = prompts[(c * per_client + i) % prompts.len()].clone();
+                    if tx
+                        .send(Request { prompt, resp: rtx, submitted: Instant::now() })
+                        .is_err()
+                    {
+                        return;
+                    }
+                    let _ = rrx.recv();
+                }
+            });
+        }
+        drop(tx);
+        server_thread.join().unwrap();
+        Ok(())
+    })?;
+    let st = stats.lock().unwrap().take().expect("server finished");
+    st
+}

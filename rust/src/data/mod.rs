@@ -1,0 +1,281 @@
+//! Synthetic data: Zipf-Markov language corpora (the LM training/eval
+//! substitute for the paper's web-text datasets) and Gaussian-cluster image
+//! sets (the ImageNet substitute for the vision models of Table 9).
+//!
+//! A "language" is a seeded Markov chain over the token vocabulary whose
+//! per-state emission ranking is a permuted Zipf distribution. Different
+//! languages (Table 14's multi-lingual suite) use different Zipf exponents
+//! and permutation seeds, giving corpora with distinct statistics but the
+//! same mechanics — models transfer imperfectly across them, exactly the
+//! stress the multi-lingual table applies.
+
+use crate::rng::{Pcg64, Zipf};
+use crate::tensor::Tensor;
+
+/// A synthetic language: Markov transition structure over `vocab` tokens.
+pub struct Language {
+    pub name: String,
+    pub vocab: usize,
+    /// per-state permutation of the Zipf ranking
+    perms: Vec<Vec<u32>>,
+    zipf: Zipf,
+    /// interpolation to the unigram distribution (smoothing)
+    pub smoothing: f64,
+}
+
+/// The five "languages" of the multi-lingual suite (Table 14 roles).
+pub const LANGUAGES: [(&str, f64, u64, f64); 5] = [
+    ("en", 1.25, 11, 0.05),
+    ("fr", 1.10, 23, 0.10),
+    ("de", 1.40, 37, 0.10),
+    ("it", 1.05, 51, 0.15),
+    ("es", 1.18, 67, 0.12),
+];
+
+impl Language {
+    pub fn new(name: &str, vocab: usize, zipf_s: f64, seed: u64, smoothing: f64) -> Language {
+        let mut rng = Pcg64::with_stream(seed, 0x11);
+        // a handful of shared "syntax classes" keeps the chain learnable:
+        // each state uses one of `n_classes` permutations.
+        let n_classes = 16.min(vocab);
+        let mut class_perms: Vec<Vec<u32>> = Vec::with_capacity(n_classes);
+        for _ in 0..n_classes {
+            let mut perm: Vec<u32> = (0..vocab as u32).collect();
+            rng.shuffle(&mut perm);
+            class_perms.push(perm);
+        }
+        let perms =
+            (0..vocab).map(|s| class_perms[s % n_classes].clone()).collect();
+        Language { name: name.to_string(), vocab, perms, zipf: Zipf::new(vocab, zipf_s), smoothing }
+    }
+
+    /// The default language for a given model role (keyed by seed).
+    pub fn default_for(vocab: usize, seed: u64) -> Language {
+        // zipf 1.1 + 10% smoothing keeps next-token argmax margins narrow
+        // enough that 4-bit formats separate on completion accuracy.
+        Language::new("en", vocab, 1.1, seed, 0.10)
+    }
+
+    pub fn by_name(name: &str, vocab: usize) -> Language {
+        let (n, s, seed, sm) = LANGUAGES
+            .iter()
+            .copied()
+            .find(|(l, ..)| *l == name)
+            .unwrap_or(LANGUAGES[0]);
+        Language::new(n, vocab, s, seed, sm)
+    }
+
+    /// Sample the next token given the previous one.
+    pub fn next(&self, prev: usize, rng: &mut Pcg64) -> usize {
+        if rng.uniform() < self.smoothing {
+            return rng.below(self.vocab);
+        }
+        let rank = self.zipf.sample(rng);
+        self.perms[prev][rank] as usize
+    }
+
+    /// Generate a token stream of length `n`.
+    pub fn stream(&self, n: usize, rng: &mut Pcg64) -> Vec<i32> {
+        let mut out = Vec::with_capacity(n);
+        let mut prev = rng.below(self.vocab);
+        for _ in 0..n {
+            let t = self.next(prev, rng);
+            out.push(t as i32);
+            prev = t;
+        }
+        out
+    }
+}
+
+/// A corpus: train stream + held-out stream from the same language.
+pub struct Corpus {
+    pub language: String,
+    pub vocab: usize,
+    pub train: Vec<i32>,
+    pub heldout: Vec<i32>,
+}
+
+impl Corpus {
+    /// Build deterministically from (language, vocab, seed).
+    pub fn build(lang: &Language, train_len: usize, heldout_len: usize, seed: u64) -> Corpus {
+        let mut rng = Pcg64::with_stream(seed, 0x22);
+        Corpus {
+            language: lang.name.clone(),
+            vocab: lang.vocab,
+            train: lang.stream(train_len, &mut rng),
+            heldout: lang.stream(heldout_len, &mut rng),
+        }
+    }
+
+    /// Random [B, S+1] training batch (flattened row-major), i32 tokens.
+    pub fn batch(&self, b: usize, s: usize, rng: &mut Pcg64) -> Vec<i32> {
+        let mut out = Vec::with_capacity(b * (s + 1));
+        for _ in 0..b {
+            let start = rng.below(self.train.len() - s - 1);
+            out.extend_from_slice(&self.train[start..start + s + 1]);
+        }
+        out
+    }
+
+    /// Deterministic non-overlapping held-out windows `[n, S+1]`.
+    pub fn heldout_windows(&self, n: usize, s: usize) -> Vec<Vec<i32>> {
+        let mut out = Vec::with_capacity(n);
+        let mut pos = 0;
+        while out.len() < n && pos + s + 1 <= self.heldout.len() {
+            out.push(self.heldout[pos..pos + s + 1].to_vec());
+            pos += s + 1;
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Synthetic images (vision roles)
+// ---------------------------------------------------------------------------
+
+/// Gaussian-cluster image set: each class has a smooth random prototype;
+/// samples are prototype + noise. 16x16 single channel, values ~ N(0,1).
+pub struct ImageSet {
+    pub side: usize,
+    pub classes: usize,
+    prototypes: Vec<Vec<f32>>,
+    pub noise: f32,
+}
+
+impl ImageSet {
+    pub fn new(side: usize, classes: usize, seed: u64, noise: f32) -> ImageSet {
+        let mut rng = Pcg64::with_stream(seed, 0x33);
+        let n = side * side;
+        let mut prototypes = Vec::with_capacity(classes);
+        for _ in 0..classes {
+            // smooth pattern: sum of a few random low-frequency waves
+            let mut img = vec![0.0f32; n];
+            for _ in 0..4 {
+                let fx = rng.range(0.5, 3.0);
+                let fy = rng.range(0.5, 3.0);
+                let px = rng.range(0.0, std::f64::consts::TAU);
+                let py = rng.range(0.0, std::f64::consts::TAU);
+                let amp = rng.range(0.4, 1.0);
+                for y in 0..side {
+                    for x in 0..side {
+                        let vx = (fx * x as f64 / side as f64 * std::f64::consts::TAU + px).sin();
+                        let vy = (fy * y as f64 / side as f64 * std::f64::consts::TAU + py).cos();
+                        img[y * side + x] += (amp * vx * vy) as f32;
+                    }
+                }
+            }
+            prototypes.push(img);
+        }
+        ImageSet { side, classes, prototypes, noise }
+    }
+
+    /// Sample a batch: returns (images `[B, side*side]`, labels `[B]`).
+    pub fn batch(&self, b: usize, rng: &mut Pcg64) -> (Tensor, Vec<i32>) {
+        let n = self.side * self.side;
+        let mut data = Vec::with_capacity(b * n);
+        let mut labels = Vec::with_capacity(b);
+        for _ in 0..b {
+            let cls = rng.below(self.classes);
+            labels.push(cls as i32);
+            let proto = &self.prototypes[cls];
+            for &p in proto {
+                data.push(p + (rng.normal() as f32) * self.noise);
+            }
+        }
+        (Tensor::new(&[b, n], data), labels)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn corpus_is_deterministic() {
+        let lang = Language::default_for(128, 7);
+        let c1 = Corpus::build(&lang, 1000, 200, 9);
+        let c2 = Corpus::build(&lang, 1000, 200, 9);
+        assert_eq!(c1.train, c2.train);
+        assert_eq!(c1.heldout, c2.heldout);
+    }
+
+    #[test]
+    fn languages_differ() {
+        let en = Language::by_name("en", 128);
+        let de = Language::by_name("de", 128);
+        let mut r1 = Pcg64::new(1);
+        let mut r2 = Pcg64::new(1);
+        assert_ne!(en.stream(200, &mut r1), de.stream(200, &mut r2));
+    }
+
+    #[test]
+    fn stream_is_predictable_not_uniform() {
+        // a Markov-Zipf stream has strongly non-uniform bigram stats
+        let lang = Language::default_for(64, 3);
+        let mut rng = Pcg64::new(5);
+        let s = lang.stream(20_000, &mut rng);
+        let mut bigram = std::collections::HashMap::new();
+        for w in s.windows(2) {
+            *bigram.entry((w[0], w[1])).or_insert(0usize) += 1;
+        }
+        let max = *bigram.values().max().unwrap();
+        let expected_uniform = 20_000.0 / (64.0 * 64.0);
+        assert!(max as f64 > 8.0 * expected_uniform, "max={max}");
+    }
+
+    #[test]
+    fn tokens_in_vocab() {
+        let lang = Language::by_name("fr", 128);
+        let mut rng = Pcg64::new(2);
+        for t in lang.stream(5000, &mut rng) {
+            assert!((0..128).contains(&t));
+        }
+    }
+
+    #[test]
+    fn batch_shapes() {
+        let lang = Language::default_for(128, 1);
+        let c = Corpus::build(&lang, 5000, 1000, 2);
+        let mut rng = Pcg64::new(3);
+        let b = c.batch(4, 32, &mut rng);
+        assert_eq!(b.len(), 4 * 33);
+        let w = c.heldout_windows(8, 32);
+        assert_eq!(w.len(), 8);
+        assert!(w.iter().all(|s| s.len() == 33));
+    }
+
+    #[test]
+    fn heldout_windows_disjoint_and_capped() {
+        let lang = Language::default_for(64, 4);
+        let c = Corpus::build(&lang, 100, 100, 5);
+        let w = c.heldout_windows(100, 32);
+        assert_eq!(w.len(), 3); // 100 / 33
+    }
+
+    #[test]
+    fn images_cluster_by_class() {
+        let set = ImageSet::new(16, 10, 1, 0.3);
+        let mut rng = Pcg64::new(6);
+        let (x, labels) = set.batch(64, &mut rng);
+        // same-class pairs must be closer than cross-class pairs on average
+        let dist = |a: &[f32], b: &[f32]| -> f64 {
+            a.iter().zip(b).map(|(&p, &q)| ((p - q) as f64).powi(2)).sum()
+        };
+        let mut same = (0.0, 0);
+        let mut diff = (0.0, 0);
+        for i in 0..64 {
+            for j in i + 1..64 {
+                let d = dist(x.row(i), x.row(j));
+                if labels[i] == labels[j] {
+                    same = (same.0 + d, same.1 + 1);
+                } else {
+                    diff = (diff.0 + d, diff.1 + 1);
+                }
+            }
+        }
+        if same.1 > 0 && diff.1 > 0 {
+            assert!(same.0 / same.1 as f64 > 0.0);
+            assert!(same.0 / same.1 as f64 <= diff.0 / diff.1 as f64);
+        }
+    }
+}

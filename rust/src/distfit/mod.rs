@@ -1,0 +1,288 @@
+//! Distribution fitting: Student-t maximum likelihood (profile over nu),
+//! normal fits, Kolmogorov-Smirnov distances and Q-Q extraction.
+//!
+//! This reproduces the paper's profiling methodology (Section 3.2, Tables
+//! 1/11/12, Figure 2): fit both distributions to a weight/activation tensor,
+//! report the fitted degrees of freedom and the KS-distance difference
+//! `KS_normal - KS_t` (positive => the t-distribution fits better).
+
+use crate::special::{normal, student_t};
+
+/// A fitted location-scale Student-t.
+#[derive(Clone, Copy, Debug)]
+pub struct TFit {
+    pub mu: f64,
+    pub sigma: f64,
+    pub nu: f64,
+    pub loglik: f64,
+}
+
+/// A fitted normal.
+#[derive(Clone, Copy, Debug)]
+pub struct NormalFit {
+    pub mu: f64,
+    pub sigma: f64,
+}
+
+/// Full profiling result for one tensor (one row of Table 1/11).
+#[derive(Clone, Copy, Debug)]
+pub struct ProfileResult {
+    pub t: TFit,
+    pub normal: NormalFit,
+    pub ks_t: f64,
+    pub ks_normal: f64,
+}
+
+impl ProfileResult {
+    /// KS-Delta of the paper: positive means the t-distribution is closer.
+    pub fn ks_delta(&self) -> f64 {
+        self.ks_normal - self.ks_t
+    }
+}
+
+/// Normal MLE.
+pub fn fit_normal(xs: &[f64]) -> NormalFit {
+    let n = xs.len() as f64;
+    let mu = xs.iter().sum::<f64>() / n;
+    let var = xs.iter().map(|x| (x - mu).powi(2)).sum::<f64>() / n;
+    NormalFit { mu, sigma: var.sqrt().max(1e-12) }
+}
+
+/// Scale MLE for fixed (mu, nu) via the standard EM weights iteration.
+fn t_scale_mle(xs: &[f64], mu: f64, nu: f64, init: f64) -> f64 {
+    let mut s2 = init * init;
+    for _ in 0..50 {
+        let mut acc = 0.0;
+        for &x in xs {
+            let d2 = (x - mu).powi(2);
+            let w = (nu + 1.0) / (nu + d2 / s2);
+            acc += w * d2;
+        }
+        let next = acc / xs.len() as f64;
+        if (next - s2).abs() < 1e-12 * s2.max(1e-300) {
+            s2 = next;
+            break;
+        }
+        s2 = next;
+    }
+    s2.sqrt().max(1e-12)
+}
+
+fn t_loglik(xs: &[f64], mu: f64, sigma: f64, nu: f64) -> f64 {
+    let ln_sigma = sigma.ln();
+    xs.iter()
+        .map(|&x| student_t::ln_pdf((x - mu) / sigma, nu) - ln_sigma)
+        .sum()
+}
+
+/// Student-t MLE: golden-section search over ln(nu) on the profile
+/// likelihood (scale re-estimated by EM at each candidate nu).
+pub fn fit_student_t(xs: &[f64]) -> TFit {
+    let nf = fit_normal(xs);
+    let mu = nf.mu;
+    let profile = |ln_nu: f64| -> (f64, f64) {
+        let nu = ln_nu.exp();
+        let sigma = t_scale_mle(xs, mu, nu, nf.sigma);
+        (t_loglik(xs, mu, sigma, nu), sigma)
+    };
+    // golden-section maximize over ln nu in [ln 0.6, ln 150]
+    let phi = (5.0f64.sqrt() - 1.0) / 2.0;
+    let (mut a, mut b) = (0.6f64.ln(), 150.0f64.ln());
+    let mut c = b - phi * (b - a);
+    let mut d = a + phi * (b - a);
+    let (mut fc, _) = profile(c);
+    let (mut fd, _) = profile(d);
+    for _ in 0..40 {
+        if fc > fd {
+            b = d;
+            d = c;
+            fd = fc;
+            c = b - phi * (b - a);
+            fc = profile(c).0;
+        } else {
+            a = c;
+            c = d;
+            fc = fd;
+            d = a + phi * (b - a);
+            fd = profile(d).0;
+        }
+        if (b - a).abs() < 1e-4 {
+            break;
+        }
+    }
+    let ln_nu = 0.5 * (a + b);
+    let nu = ln_nu.exp();
+    let (ll, sigma) = profile(ln_nu);
+    TFit { mu, sigma, nu, loglik: ll }
+}
+
+/// Two-sided KS distance between sorted samples and a CDF.
+pub fn ks_distance(sorted: &[f64], cdf: impl Fn(f64) -> f64) -> f64 {
+    let n = sorted.len() as f64;
+    let mut d = 0.0f64;
+    for (i, &x) in sorted.iter().enumerate() {
+        let f = cdf(x);
+        let lo = i as f64 / n;
+        let hi = (i + 1) as f64 / n;
+        d = d.max((f - lo).abs()).max((hi - f).abs());
+    }
+    d
+}
+
+/// Deterministic stride subsample to at most `cap` values (profiling only
+/// needs shape, and the paper likewise downsamples huge tensors).
+pub fn subsample(xs: &[f32], cap: usize) -> Vec<f64> {
+    if xs.len() <= cap {
+        return xs.iter().map(|&v| v as f64).collect();
+    }
+    let stride = xs.len() as f64 / cap as f64;
+    (0..cap).map(|i| xs[(i as f64 * stride) as usize] as f64).collect()
+}
+
+/// Profile one tensor: fit t + normal, compute both KS distances.
+pub fn profile_tensor(values: &[f32]) -> ProfileResult {
+    let mut xs = subsample(values, 4096);
+    let t = fit_student_t(&xs);
+    let nfit = fit_normal(&xs);
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let ks_t = ks_distance(&xs, |x| student_t::cdf((x - t.mu) / t.sigma, t.nu));
+    let ks_n = ks_distance(&xs, |x| normal::cdf((x - nfit.mu) / nfit.sigma));
+    ProfileResult { t, normal: nfit, ks_t, ks_normal: ks_n }
+}
+
+/// Q-Q data (Figure 2, right): theoretical quantiles of the fitted t and
+/// normal against the empirical quantiles.
+pub struct QqData {
+    pub probs: Vec<f64>,
+    pub empirical: Vec<f64>,
+    pub theo_t: Vec<f64>,
+    pub theo_normal: Vec<f64>,
+}
+
+pub fn qq_data(values: &[f32], n_points: usize) -> QqData {
+    let mut xs = subsample(values, 8192);
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pr = profile_tensor(values);
+    let mut probs = Vec::with_capacity(n_points);
+    let mut empirical = Vec::with_capacity(n_points);
+    let mut theo_t = Vec::with_capacity(n_points);
+    let mut theo_normal = Vec::with_capacity(n_points);
+    for i in 0..n_points {
+        let p = (i as f64 + 0.5) / n_points as f64;
+        let idx = ((p * xs.len() as f64) as usize).min(xs.len() - 1);
+        probs.push(p);
+        empirical.push(xs[idx]);
+        theo_t.push(pr.t.mu + pr.t.sigma * student_t::ppf(p, pr.t.nu));
+        theo_normal.push(pr.normal.mu + pr.normal.sigma * normal::ppf(p));
+    }
+    QqData { probs, empirical, theo_t, theo_normal }
+}
+
+/// Equal-width histogram (Figure 2, left), normalized to a density.
+pub fn histogram(values: &[f32], bins: usize, lo: f64, hi: f64) -> Vec<(f64, f64)> {
+    let mut counts = vec![0usize; bins];
+    let mut total = 0usize;
+    for &v in values {
+        let v = v as f64;
+        if v < lo || v >= hi {
+            continue;
+        }
+        counts[((v - lo) / (hi - lo) * bins as f64) as usize] += 1;
+        total += 1;
+    }
+    let w = (hi - lo) / bins as f64;
+    counts
+        .iter()
+        .enumerate()
+        .map(|(i, &c)| (lo + (i as f64 + 0.5) * w, c as f64 / (total as f64 * w)))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn recovers_planted_nu() {
+        let mut rng = Pcg64::new(1);
+        for nu_true in [3.0, 5.0, 8.0] {
+            let xs: Vec<f32> = rng.student_t_vec(20_000, nu_true, 0.02);
+            let fit = fit_student_t(&subsample(&xs, 20_000));
+            assert!(
+                (fit.nu - nu_true).abs() < nu_true * 0.35,
+                "planted {nu_true}, recovered {}",
+                fit.nu
+            );
+            assert!((fit.sigma - 0.02).abs() < 0.004, "{}", fit.sigma);
+        }
+    }
+
+    #[test]
+    fn normal_data_fits_high_nu() {
+        let mut rng = Pcg64::new(2);
+        let xs: Vec<f32> = rng.normal_vec(20_000, 1.0);
+        let fit = fit_student_t(&subsample(&xs, 20_000));
+        assert!(fit.nu > 20.0, "normal data should fit high nu, got {}", fit.nu);
+    }
+
+    #[test]
+    fn ks_delta_positive_for_t_data() {
+        let mut rng = Pcg64::new(3);
+        let xs: Vec<f32> = rng.student_t_vec(10_000, 4.0, 1.0);
+        let pr = profile_tensor(&xs);
+        assert!(pr.ks_delta() > 0.0, "{:?}", pr);
+        assert!(pr.ks_t < 0.03, "t fit should be tight: {}", pr.ks_t);
+    }
+
+    #[test]
+    fn ks_delta_near_zero_for_normal_data() {
+        let mut rng = Pcg64::new(4);
+        let xs: Vec<f32> = rng.normal_vec(10_000, 0.5);
+        let pr = profile_tensor(&xs);
+        assert!(pr.ks_delta().abs() < 0.02, "{}", pr.ks_delta());
+        assert!(pr.ks_normal < 0.03);
+    }
+
+    #[test]
+    fn ks_distance_uniform_sanity() {
+        // empirical uniform sample vs its own CDF -> small distance
+        let n = 1000;
+        let xs: Vec<f64> = (0..n).map(|i| (i as f64 + 0.5) / n as f64).collect();
+        let d = ks_distance(&xs, |x| x.clamp(0.0, 1.0));
+        assert!(d < 0.01, "{d}");
+        // against a wrong CDF -> large
+        let d2 = ks_distance(&xs, |x| (x * x).clamp(0.0, 1.0));
+        assert!(d2 > 0.2);
+    }
+
+    #[test]
+    fn qq_straight_line_for_matching_dist() {
+        let mut rng = Pcg64::new(5);
+        let xs: Vec<f32> = rng.student_t_vec(20_000, 5.0, 1.0);
+        let qq = qq_data(&xs, 64);
+        // center-region points should track the fitted-t line closely
+        for i in 8..56 {
+            let d = (qq.empirical[i] - qq.theo_t[i]).abs();
+            assert!(d < 0.15, "i={i} emp={} theo={}", qq.empirical[i], qq.theo_t[i]);
+        }
+    }
+
+    #[test]
+    fn histogram_integrates_to_one() {
+        let mut rng = Pcg64::new(6);
+        let xs: Vec<f32> = rng.normal_vec(50_000, 1.0);
+        let h = histogram(&xs, 50, -4.0, 4.0);
+        let w = 8.0 / 50.0;
+        let total: f64 = h.iter().map(|(_, d)| d * w).sum();
+        assert!((total - 1.0).abs() < 0.02, "{total}");
+    }
+
+    #[test]
+    fn subsample_caps_length() {
+        let xs = vec![1.0f32; 100_000];
+        assert_eq!(subsample(&xs, 4096).len(), 4096);
+        let ys = vec![1.0f32; 10];
+        assert_eq!(subsample(&ys, 4096).len(), 10);
+    }
+}

@@ -1,0 +1,56 @@
+//! Table 5: sub-channel block-size sweep (16..256 + channelwise) — format
+//! differences persist even at tiny blocks; SR collapses at block 16.
+
+use anyhow::Result;
+
+use super::quality::{eval_cell, paper_format_rows, require_ckpt, Metrics};
+use super::Scale;
+use crate::coordinator::{corpus_for, PipelineConfig, Session};
+use crate::quant::BlockSize;
+use crate::report::{pct, Table};
+
+pub fn run(session: &Session, scale: Scale, model: &str) -> Result<Table> {
+    let suite = scale.suite();
+    let (cfg, ckpt) = require_ckpt(session, model)?;
+    let corpus = corpus_for(&cfg);
+    let blocks: Vec<BlockSize> = match scale {
+        Scale::Quick => vec![BlockSize::Sub(16), BlockSize::Channelwise],
+        Scale::Full => vec![
+            BlockSize::Sub(16),
+            BlockSize::Sub(32),
+            BlockSize::Sub(64),
+            BlockSize::Sub(128),
+            BlockSize::Sub(256),
+            BlockSize::Channelwise,
+        ],
+    };
+    // blocks must divide d_model; drop those that don't
+    let blocks: Vec<BlockSize> = blocks
+        .into_iter()
+        .filter(|b| match b {
+            BlockSize::Sub(b) => cfg.d_model % b == 0 && cfg.d_ff % b == 0,
+            BlockSize::Channelwise => true,
+        })
+        .collect();
+
+    let mut headers = vec!["format".to_string()];
+    headers.extend(blocks.iter().map(|b| b.label()));
+    let mut table = Table::new(
+        &format!("Table 5 — {model} sub-channel block-size sweep (mean D% vs fp32)"),
+        &headers.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+    );
+
+    let base = eval_cell(session, &cfg, &ckpt, &corpus, None, &suite, Metrics::FullSuite)?;
+    for fmt in paper_format_rows() {
+        let mut row = vec![fmt.to_string()];
+        for block in &blocks {
+            let mut pc = PipelineConfig::weight_only(fmt);
+            pc.block = *block;
+            let cell =
+                eval_cell(session, &cfg, &ckpt, &corpus, Some(&pc), &suite, Metrics::FullSuite)?;
+            row.push(pct(cell.rel_change_pct(&base)));
+        }
+        table.row(row);
+    }
+    Ok(table)
+}

@@ -1,0 +1,135 @@
+//! Figures 4/5/6/7: analytic format studies — SF4(nu) -> NF4 convergence,
+//! t-distribution PDF shapes, the datatype gallery and APoT variant space.
+
+use anyhow::Result;
+
+use crate::coordinator::Session;
+use crate::formats::{self, enumerate_apot_variants, normal_float, student_float};
+use crate::report::{fnum, Table};
+use crate::special::student_t;
+
+/// Figure 4: max |SF4(nu) - NF4| as nu grows (convergence curve).
+pub fn run_fig4(session: &Session) -> Result<Table> {
+    let nf4 = normal_float(4);
+    let mut table = Table::new(
+        "Figure 4 — SF4(nu) convergence to NF4 (max codebook distance)",
+        &["nu", "max|SF4-NF4|", "mean|SF4-NF4|"],
+    );
+    let mut tsv = String::from("nu\tmax_dist\tmean_dist\n");
+    for nu in [1.5, 2.0, 3.0, 4.0, 5.0, 6.0, 8.0, 10.0, 15.0, 20.0, 50.0, 100.0, 1000.0] {
+        let sf = student_float(nu, 4);
+        let max: f64 =
+            sf.iter().zip(&nf4).map(|(a, b)| (a - b).abs()).fold(0.0, f64::max);
+        let mean: f64 =
+            sf.iter().zip(&nf4).map(|(a, b)| (a - b).abs()).sum::<f64>() / 16.0;
+        table.row(vec![fnum(nu, 1), fnum(max, 4), fnum(mean, 4)]);
+        tsv.push_str(&format!("{nu}\t{max:.6}\t{mean:.6}\n"));
+    }
+    let dir = std::path::Path::new(&session.results_dir);
+    std::fs::create_dir_all(dir)?;
+    std::fs::write(dir.join("fig4_convergence.tsv"), tsv)?;
+
+    // Figure 5 data: t-pdf shapes across nu
+    let mut tsv5 = String::from("x");
+    let nus = [1.0, 2.0, 5.0, 10.0, 100.0];
+    for nu in nus {
+        tsv5.push_str(&format!("\tnu{nu}"));
+    }
+    tsv5.push('\n');
+    for i in 0..201 {
+        let x = -5.0 + 10.0 * i as f64 / 200.0;
+        tsv5.push_str(&format!("{x:.3}"));
+        for nu in nus {
+            tsv5.push_str(&format!("\t{:.6}", student_t::pdf(x, nu)));
+        }
+        tsv5.push('\n');
+    }
+    std::fs::write(dir.join("fig5_tpdf.tsv"), tsv5)?;
+    Ok(table)
+}
+
+/// Figure 6 / Table 15: the full datatype gallery (codebook values).
+pub fn run_table15() -> Result<Table> {
+    let mut table = Table::new(
+        "Table 15 — Quantized datatype values (normalized)",
+        &["format", "n", "values"],
+    );
+    for name in formats::all_names() {
+        let s = formats::must(name);
+        let values = s
+            .codebook
+            .iter()
+            .map(|v| format!("{v:+.3}"))
+            .collect::<Vec<_>>()
+            .join(" ");
+        table.row(vec![name.to_string(), s.n_values().to_string(), values]);
+    }
+    Ok(table)
+}
+
+/// Figure 7: APoT variant enumeration with distance-to-SF4 (the paper's
+/// argument for the 2S(3) choice).
+pub fn run_fig7() -> Result<Table> {
+    let sf4 = formats::must("sf4");
+    let mut table = Table::new(
+        "Figure 7 — APoT 4-bit variant space (distance to SF4 reference)",
+        &["variant", "n_values", "rms_dist_to_sf4", "is_paper_2S3"],
+    );
+    let paper = formats::must("apot4");
+    let mut rows: Vec<(String, usize, f64, bool)> = Vec::new();
+    for v in enumerate_apot_variants() {
+        // rms distance between quantization behaviours: compare nearest-value
+        // maps over a dense grid (codebooks have different sizes).
+        let mut acc = 0.0;
+        let n_grid = 401;
+        for i in 0..n_grid {
+            let x = -1.0 + 2.0 * i as f64 / (n_grid - 1) as f64;
+            let qa = nearest(&v.codebook, x);
+            let qs = sf4.quantize(x);
+            acc += (qa - qs).powi(2);
+        }
+        let rms = (acc / n_grid as f64).sqrt();
+        let is_paper = v.codebook.len() == paper.codebook.len()
+            && v.codebook.iter().zip(&paper.codebook).all(|(a, b)| (a - b).abs() < 1e-9);
+        rows.push((v.label.clone(), v.codebook.len(), rms, is_paper));
+    }
+    rows.sort_by(|a, b| a.2.partial_cmp(&b.2).unwrap());
+    for (label, n, rms, is_paper) in rows {
+        table.row(vec![
+            label,
+            n.to_string(),
+            fnum(rms, 4),
+            if is_paper { "YES".into() } else { "".into() },
+        ]);
+    }
+    Ok(table)
+}
+
+fn nearest(cb: &[f64], x: f64) -> f64 {
+    cb.iter()
+        .copied()
+        .min_by(|a, b| (a - x).abs().partial_cmp(&(b - x).abs()).unwrap())
+        .unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_variant_is_near_the_top_of_fig7() {
+        // the 2S(3) variant is chosen for its SF4 proximity; it must rank
+        // in the upper half of the enumeration.
+        let t = run_fig7().unwrap();
+        let pos = t.rows.iter().position(|r| r[3] == "YES").expect("paper row");
+        // several near-ties sit within one RMS hair of each other; require
+        // the paper variant in the upper ~60% rather than a strict median.
+        assert!(pos * 5 <= t.rows.len() * 3, "paper variant ranked {pos}/{}", t.rows.len());
+    }
+
+    #[test]
+    fn table15_covers_all_formats() {
+        let t = run_table15().unwrap();
+        assert_eq!(t.rows.len(), formats::all_names().len());
+    }
+}

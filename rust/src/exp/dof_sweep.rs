@@ -1,0 +1,62 @@
+//! Table 2: SF4 degrees-of-freedom sweep — accuracy peaks near nu = 5,
+//! well before SF4 converges to NF4.
+
+use anyhow::Result;
+
+use super::quality::{eval_cell, require_ckpt, Metrics};
+use super::Scale;
+use crate::coordinator::{corpus_for, PipelineConfig, Session};
+use crate::report::{fnum, Table};
+
+pub fn run(session: &Session, scale: Scale) -> Result<Table> {
+    let models = match scale {
+        Scale::Quick => vec!["nano"],
+        Scale::Full => vec!["micro", "small"],
+    };
+    let suite = scale.suite();
+    let mut headers = vec!["format".to_string(), "nu".to_string()];
+    for m in &models {
+        headers.push(format!("{m}:PPL"));
+        headers.push(format!("{m}:ACC"));
+    }
+    let mut table = Table::new(
+        "Table 2 — SF4 Degrees of Freedom sweep (Wiki PPL / LAMB ACC)",
+        &headers.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+    );
+
+    let cells: Vec<(String, String, Vec<(f64, f64)>)> = Vec::new();
+    let mut rows_spec: Vec<(&str, &str)> = vec![("fp32", "-"), ("nf4", "-")];
+    for nu in ["3", "4", "5", "6", "7", "8"] {
+        rows_spec.push(("sf4", nu));
+    }
+
+    let mut per_model: Vec<Vec<(f64, f64)>> = vec![Vec::new(); rows_spec.len()];
+    for (mi, model) in models.iter().enumerate() {
+        let (cfg, ckpt) = require_ckpt(session, model)?;
+        let corpus = corpus_for(&cfg);
+        for (ri, (fmt, nu)) in rows_spec.iter().enumerate() {
+            let cell = match (*fmt, *nu) {
+                ("fp32", _) => {
+                    eval_cell(session, &cfg, &ckpt, &corpus, None, &suite, Metrics::LambWiki)?
+                }
+                (f, nu) => {
+                    let name = if f == "sf4" { format!("sf4_v{nu}") } else { f.to_string() };
+                    let pc = PipelineConfig::weight_only(&name);
+                    eval_cell(session, &cfg, &ckpt, &corpus, Some(&pc), &suite, Metrics::LambWiki)?
+                }
+            };
+            per_model[ri].push((cell.wiki_ppl, cell.lamb));
+            let _ = mi;
+        }
+    }
+    for (ri, (fmt, nu)) in rows_spec.iter().enumerate() {
+        let mut row = vec![fmt.to_string(), nu.to_string()];
+        for &(ppl, acc) in &per_model[ri] {
+            row.push(fnum(ppl, 2));
+            row.push(fnum(acc * 100.0, 2));
+        }
+        table.row(row);
+        let _ = &cells;
+    }
+    Ok(table)
+}

@@ -1,0 +1,44 @@
+//! Table 6: RTN vs GPTQ, channelwise vs sub-channel — format quality
+//! differences persist under second-order PTQ optimization.
+
+use anyhow::Result;
+
+use super::quality::{eval_cell, paper_format_rows, require_ckpt, Metrics};
+use super::Scale;
+use crate::coordinator::{corpus_for, PipelineConfig, QuantMethod, Session};
+use crate::quant::BlockSize;
+use crate::report::{pct, Table};
+
+pub fn run(session: &Session, scale: Scale, model: &str) -> Result<Table> {
+    let suite = scale.suite();
+    let (cfg, ckpt) = require_ckpt(session, model)?;
+    let corpus = corpus_for(&cfg);
+    let mut table = Table::new(
+        &format!("Table 6 — {model} RTN vs GPTQ (mean D% vs fp32)"),
+        &["format", "CW:RTN", "CW:GPTQ", "Sub128:RTN", "Sub128:GPTQ"],
+    );
+    let base = eval_cell(session, &cfg, &ckpt, &corpus, None, &suite, Metrics::FullSuite)?;
+    let cells: Vec<(BlockSize, QuantMethod)> = vec![
+        (BlockSize::Channelwise, QuantMethod::Rtn),
+        (BlockSize::Channelwise, QuantMethod::Gptq),
+        (BlockSize::Sub(128), QuantMethod::Rtn),
+        (BlockSize::Sub(128), QuantMethod::Gptq),
+    ];
+    for fmt in paper_format_rows() {
+        let mut row = vec![fmt.to_string()];
+        for (block, method) in &cells {
+            let mut pc = PipelineConfig::weight_only(fmt);
+            pc.block = *block;
+            pc.method = *method;
+            pc.calib_seqs = match scale {
+                Scale::Quick => 4,
+                Scale::Full => 8,
+            };
+            let cell =
+                eval_cell(session, &cfg, &ckpt, &corpus, Some(&pc), &suite, Metrics::FullSuite)?;
+            row.push(pct(cell.rel_change_pct(&base)));
+        }
+        table.row(row);
+    }
+    Ok(table)
+}

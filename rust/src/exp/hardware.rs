@@ -1,0 +1,49 @@
+//! Table 10: MAC area/power from the unit-gate model, side by side with
+//! the paper's Synopsys DC numbers.
+
+use anyhow::Result;
+
+use crate::hw;
+use crate::report::{fnum, Table};
+
+/// Paper Table 10 values for the comparison columns.
+pub const PAPER_TABLE10: [(&str, u32, f64, f64); 10] = [
+    ("int4", 16, 160.7, 48.5),
+    ("int5", 18, 203.6, 59.8),
+    ("e2m1_i", 20, 228.2, 59.7),
+    ("e2m1_b", 23, 268.9, 67.9),
+    ("e2m1", 17, 170.4, 49.6),
+    ("e2m1_sr", 18, 191.3, 53.5),
+    ("e2m1_sp", 19, 218.0, 54.6),
+    ("e3m0", 22, 217.7, 59.5),
+    ("apot4", 16, 181.6, 47.2),
+    ("apot4_sp", 16, 185.1, 45.5),
+];
+
+pub fn run() -> Result<Table> {
+    let mut table = Table::new(
+        "Table 10 — MAC unit area/power (unit-gate model vs paper synthesis)",
+        &[
+            "format", "accum.bits", "mult.um2", "accum.um2", "MAC.um2", "uW",
+            "overhead%", "paper.bits", "paper.MAC", "MAC.err%",
+        ],
+    );
+    let rows = hw::table10();
+    for row in rows {
+        let paper = PAPER_TABLE10.iter().find(|(n, ..)| *n == row.format);
+        let (pb, pa) = paper.map(|(_, b, a, _)| (*b as i64, *a)).unwrap_or((-1, f64::NAN));
+        table.row(vec![
+            row.format.clone(),
+            row.accum_bits.to_string(),
+            fnum(row.mult_area, 1),
+            fnum(row.accum_area, 1),
+            fnum(row.mac_area, 1),
+            fnum(row.power, 1),
+            fnum(row.overhead_pct, 1),
+            pb.to_string(),
+            fnum(pa, 1),
+            fnum(100.0 * (row.mac_area - pa) / pa, 1),
+        ]);
+    }
+    Ok(table)
+}

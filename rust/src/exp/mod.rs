@@ -1,0 +1,99 @@
+//! Experiment modules: one per paper table/figure (DESIGN.md §5 index).
+//!
+//! Every module exposes a `run(...) -> report::Table` (or figure string)
+//! that the CLI (`repro table N` / `repro figure N`) and the bench targets
+//! both call; results are also saved as TSV under `results/`.
+
+pub mod blocksize;
+pub mod convergence;
+pub mod dof_sweep;
+pub mod gptq_cmp;
+pub mod hardware;
+pub mod multilingual;
+pub mod pareto;
+pub mod profile;
+pub mod quality;
+pub mod three_bit;
+pub mod vision;
+pub mod w4a4;
+pub mod weight_only;
+pub mod zeroshot;
+
+use anyhow::Result;
+
+use crate::coordinator::Session;
+
+/// Scale knob shared by all experiments: `quick` shrinks workloads ~8x for
+/// tests and smoke benches; `full` is the EXPERIMENTS.md configuration.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scale {
+    Quick,
+    Full,
+}
+
+impl Scale {
+    pub fn suite(&self) -> crate::tasks::SuiteConfig {
+        match self {
+            Scale::Quick => crate::tasks::SuiteConfig::quick(),
+            Scale::Full => crate::tasks::SuiteConfig::standard(),
+        }
+    }
+
+    /// Models used by the multi-model tables at this scale. `med` is kept
+    /// out of the XLA-heavy quality tables (CPU budget) but profiled in
+    /// Tables 1/12; add it back per-run with `--model med`.
+    pub fn table_models(&self) -> Vec<&'static str> {
+        match self {
+            Scale::Quick => vec!["nano"],
+            Scale::Full => vec!["micro", "small"],
+        }
+    }
+}
+
+/// Save a rendered table + its TSV under the session's results dir.
+pub fn emit(session: &Session, id: &str, table: &crate::report::Table) -> Result<()> {
+    let dir = std::path::Path::new(&session.results_dir);
+    table.save_tsv(&dir.join(format!("{id}.tsv")))?;
+    let txt = table.render();
+    std::fs::write(dir.join(format!("{id}.txt")), &txt)?;
+    println!("{txt}");
+    Ok(())
+}
+
+/// Ensure a zoo model's checkpoint exists (trains it if missing) — used by
+/// the bench targets and examples so they are self-contained.
+pub fn ensure_model(session: &Session, model: &str) -> Result<()> {
+    let path = crate::model_io::checkpoint_path(&session.checkpoints_dir, model);
+    if path.exists() {
+        return Ok(());
+    }
+    let cfg = crate::model_io::zoo(model)?;
+    let corpus = crate::coordinator::corpus_for(&cfg);
+    crate::coordinator::trainer::train_and_save(
+        &session.engine,
+        &cfg,
+        &corpus,
+        &session.checkpoints_dir,
+        false,
+    )?;
+    Ok(())
+}
+
+/// Ensure a classifier checkpoint exists (Table 9 benches).
+pub fn ensure_cls(session: &Session, name: &str) -> Result<()> {
+    let path =
+        crate::model_io::checkpoint_path(&session.checkpoints_dir, &format!("cls_{name}"));
+    if path.exists() {
+        return Ok(());
+    }
+    let cfg = crate::nn::cls_zoo(name)?;
+    let images = crate::data::ImageSet::new(16, 10, 7, 0.6);
+    crate::coordinator::trainer::train_cls_and_save(
+        &session.engine,
+        &cfg,
+        &images,
+        &session.checkpoints_dir,
+        false,
+    )?;
+    Ok(())
+}

@@ -1,0 +1,60 @@
+//! Table 14: multi-lingual evaluation — a model quantized once and
+//! evaluated on five synthetic "languages" (per-language corpora).
+
+use anyhow::Result;
+
+use super::quality::{eval_cell, require_ckpt, Metrics};
+use super::Scale;
+use crate::coordinator::{corpus_for_language, PipelineConfig, Session};
+use crate::data::LANGUAGES;
+use crate::report::{fnum, Table};
+
+pub const ML_FORMATS: [&str; 7] =
+    ["nf4", "sf4", "int4", "e2m1", "e2m1_sr", "e2m1_sp", "apot4_sp"];
+
+pub fn run(session: &Session, scale: Scale, model: &str) -> Result<Table> {
+    let suite = scale.suite();
+    let (cfg, ckpt) = require_ckpt(session, model)?;
+    let mut headers = vec!["format".to_string()];
+    for (lang, ..) in LANGUAGES {
+        headers.push(lang.to_uppercase());
+    }
+    headers.push("Wiki(en)".into());
+    let mut table = Table::new(
+        &format!("Table 14 — {model} multi-lingual completion accuracy"),
+        &headers.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+    );
+
+    let corpora: Vec<_> =
+        LANGUAGES.iter().map(|(l, ..)| corpus_for_language(&cfg, l)).collect();
+
+    // fp32 baseline row
+    let mut row = vec!["fp32".to_string()];
+    let mut wiki = f64::NAN;
+    for (i, corpus) in corpora.iter().enumerate() {
+        let cell = eval_cell(session, &cfg, &ckpt, corpus, None, &suite, Metrics::LambWiki)?;
+        row.push(fnum(cell.lamb * 100.0, 2));
+        if i == 0 {
+            wiki = cell.wiki_ppl;
+        }
+    }
+    row.push(fnum(wiki, 2));
+    table.row(row);
+
+    for fmt in ML_FORMATS {
+        let pc = PipelineConfig::weight_only(fmt);
+        let mut row = vec![fmt.to_string()];
+        let mut wiki = f64::NAN;
+        for (i, corpus) in corpora.iter().enumerate() {
+            let cell =
+                eval_cell(session, &cfg, &ckpt, corpus, Some(&pc), &suite, Metrics::LambWiki)?;
+            row.push(fnum(cell.lamb * 100.0, 2));
+            if i == 0 {
+                wiki = cell.wiki_ppl;
+            }
+        }
+        row.push(fnum(wiki, 2));
+        table.row(row);
+    }
+    Ok(table)
+}

@@ -1,0 +1,107 @@
+//! Figure 3 / Figure 8: quality-vs-area Pareto — W4A4 quality deltas
+//! (Table 8 machinery) against the MAC-unit system overhead (Table 10).
+
+use anyhow::Result;
+
+use super::w4a4;
+use super::Scale;
+use crate::coordinator::Session;
+use crate::hw;
+use crate::report::AsciiScatter;
+
+/// Marker characters per format for the ASCII scatter.
+fn marker(fmt: &str) -> char {
+    match fmt {
+        "int4" => 'I',
+        "e2m1" => 'E',
+        "e2m1_i" => 'i',
+        "e2m1_b" => 'b',
+        "e2m1_sr" => 'R',
+        "e2m1_sp" => 'P',
+        "e3m0" => '3',
+        "apot4" => 'A',
+        "apot4_sp" => 'S',
+        "nf4" => 'n',
+        "sf4" => 's',
+        _ => '?',
+    }
+}
+
+/// Build the Pareto from fresh W4A4 results; returns (rendered figure,
+/// (format, overhead%, delta%) points, Pareto-front format names).
+pub fn run(session: &Session, scale: Scale) -> Result<(String, Vec<(String, f64, f64)>)> {
+    // reuse a previous Table 8 run when available (it is the expensive part)
+    let res = match w4a4::cached(session) {
+        Some(r) => r,
+        None => w4a4::compute(session, scale)?,
+    };
+    let mut points = Vec::new();
+    for (fmt, per_model) in &res.rows {
+        let Some(overhead) = hw::overhead_pct(fmt) else {
+            continue; // lookup formats have no hardened MAC (as in paper)
+        };
+        // best-of SQ policy per model, averaged (the paper's figure uses
+        // the SmoothQuant-on numbers for the models that need it)
+        let mut acc = 0.0f64;
+        let mut n = 0.0f64;
+        for (no_sq, sq) in per_model {
+            let v = no_sq.max(*sq);
+            if v.is_finite() {
+                acc += v;
+                n += 1.0;
+            }
+        }
+        points.push((fmt.clone(), overhead, acc / n.max(1.0)));
+    }
+
+    let mut fig = AsciiScatter::new(
+        "Figure 3 — Quality vs Area (mean D% accuracy vs chip overhead %)",
+        "chip overhead % vs INT4",
+        "mean accuracy D% vs fp32",
+    );
+    for (fmt, x, y) in &points {
+        fig.point(*x, *y, marker(fmt), fmt);
+    }
+    let rendered = fig.render(64, 20);
+
+    // save TSV
+    let dir = std::path::Path::new(&session.results_dir);
+    std::fs::create_dir_all(dir)?;
+    let mut tsv = String::from("format\toverhead_pct\tdelta_pct\n");
+    for (fmt, x, y) in &points {
+        tsv.push_str(&format!("{fmt}\t{x:.3}\t{y:.3}\n"));
+    }
+    std::fs::write(dir.join("fig3_pareto.tsv"), tsv)?;
+    Ok((rendered, points))
+}
+
+/// The Pareto front (formats not dominated in (area, quality)).
+pub fn pareto_front(points: &[(String, f64, f64)]) -> Vec<String> {
+    let mut front = Vec::new();
+    for (f, x, y) in points {
+        let dominated = points.iter().any(|(f2, x2, y2)| {
+            f2 != f && x2 <= x && y2 >= y && (x2 < x || y2 > y)
+        });
+        if !dominated {
+            front.push(f.clone());
+        }
+    }
+    front
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pareto_front_filters_dominated() {
+        let pts = vec![
+            ("a".to_string(), 0.0, -5.0),
+            ("b".to_string(), 1.0, -2.0),
+            ("c".to_string(), 2.0, -3.0), // dominated by b
+            ("d".to_string(), 3.0, -1.0),
+        ];
+        let front = pareto_front(&pts);
+        assert_eq!(front, vec!["a", "b", "d"]);
+    }
+}

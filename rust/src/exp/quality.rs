@@ -1,0 +1,96 @@
+//! Shared quality-evaluation plumbing for the accuracy tables: quantize a
+//! checkpoint per [`PipelineConfig`], bind the right eval graph, run the
+//! task suite (or the cheap LAMB+Wiki subset), and cache fp32 baselines.
+
+use anyhow::Result;
+
+use crate::coordinator::model::{GraphKind, LmHandle};
+use crate::coordinator::pipeline::{fp32_values, quantize_lm, PipelineConfig};
+use crate::coordinator::Session;
+use crate::data::Corpus;
+use crate::model_io::{zoo, Checkpoint, ModelConfig};
+use crate::tasks::{
+    completion_accuracy, mc_accuracy, gen_mc_items, perplexity, McTask, SuiteConfig, SuiteResult,
+};
+
+/// Which metrics a table needs (LAMB+Wiki is ~10x cheaper than the suite).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Metrics {
+    LambWiki,
+    FullSuite,
+}
+
+/// One evaluated cell.
+#[derive(Clone, Debug)]
+pub struct CellResult {
+    pub lamb: f64,
+    pub wiki_ppl: f64,
+    pub mc: Vec<(McTask, f64)>,
+}
+
+impl CellResult {
+    pub fn to_suite(&self) -> SuiteResult {
+        SuiteResult { lamb: self.lamb, wiki_ppl: self.wiki_ppl, mc: self.mc.clone() }
+    }
+
+    /// Mean relative accuracy change (%) vs baseline across all accuracy
+    /// metrics present in both (the paper's Delta% aggregation).
+    pub fn rel_change_pct(&self, base: &CellResult) -> f64 {
+        self.to_suite().rel_change_pct(&base.to_suite())
+    }
+}
+
+/// Evaluate one (checkpoint, pipeline) cell. `pc = None` -> fp32 baseline.
+pub fn eval_cell(
+    session: &Session,
+    cfg: &ModelConfig,
+    ckpt: &Checkpoint,
+    corpus: &Corpus,
+    pc: Option<&PipelineConfig>,
+    suite: &SuiteConfig,
+    metrics: Metrics,
+) -> Result<CellResult> {
+    let (kind, values) = match pc {
+        None => (GraphKind::Fp32, fp32_values(cfg, ckpt)?),
+        Some(pc) => {
+            let qm = quantize_lm(cfg, ckpt, pc, corpus)?;
+            let kind = if qm.w4a4 { GraphKind::W4A4 } else { GraphKind::WeightOnly };
+            (kind, qm.values)
+        }
+    };
+    let mut handle = LmHandle::bind(&session.engine, cfg, kind, &values)?;
+    let windows = corpus.heldout_windows(suite.n_completion.max(suite.n_ppl_windows), cfg.seq);
+    let lamb =
+        completion_accuracy(&mut handle, &windows[..suite.n_completion.min(windows.len())])?;
+    let wiki = perplexity(&mut handle, &windows[..suite.n_ppl_windows.min(windows.len())])?;
+    let mc = match metrics {
+        Metrics::LambWiki => Vec::new(),
+        Metrics::FullSuite => {
+            let mut out = Vec::new();
+            for task in McTask::ALL {
+                let items =
+                    gen_mc_items(corpus, task, suite.n_mc_items, suite.mc_context, suite.seed);
+                out.push((task, mc_accuracy(&mut handle, &items)?));
+            }
+            out
+        }
+    };
+    Ok(CellResult { lamb, wiki_ppl: wiki, mc })
+}
+
+/// Load a model's checkpoint, failing with a actionable message.
+pub fn require_ckpt(session: &Session, model: &str) -> Result<(ModelConfig, Checkpoint)> {
+    let cfg = zoo(model)?;
+    let ckpt = session
+        .load_checkpoint(model)
+        .map_err(|e| anyhow::anyhow!("{e}; run `repro train --model {model}` first"))?;
+    Ok((cfg, ckpt))
+}
+
+/// The 11 main formats + fp32 row labels, paper order (Tables 3/8).
+pub fn paper_format_rows() -> Vec<&'static str> {
+    let mut v = vec!["nf4", "sf4", "int4", "e2m1_i", "e2m1_b", "e2m1", "e2m1_sr", "e2m1_sp",
+                     "e3m0", "apot4", "apot4_sp"];
+    v.shrink_to_fit();
+    v
+}

@@ -1,0 +1,38 @@
+//! Table 7: three-bit formats — SF3 keeps beating NF3; E2M0 (the only
+//! well-defined FP3) beats INT3 everywhere.
+
+use anyhow::Result;
+
+use super::quality::{eval_cell, require_ckpt, Metrics};
+use super::Scale;
+use crate::coordinator::{corpus_for, PipelineConfig, Session};
+use crate::report::{fnum, Table};
+
+pub const THREE_BIT_FORMATS: [&str; 4] = ["nf3", "sf3", "int3", "e2m0"];
+
+pub fn run(session: &Session, scale: Scale, model: &str) -> Result<Table> {
+    let suite = scale.suite();
+    let (cfg, ckpt) = require_ckpt(session, model)?;
+    let corpus = corpus_for(&cfg);
+    let mut table = Table::new(
+        &format!("Table 7 — {model} three-bit formats"),
+        &["format", "LAMB", "Hella", "Wino", "PIQA", "BoolQ", "ARC-c", "Wiki"],
+    );
+    let mut add = |name: &str, cell: &super::quality::CellResult| {
+        let mut row = vec![name.to_string(), fnum(cell.lamb * 100.0, 2)];
+        for (_, acc) in &cell.mc {
+            row.push(fnum(acc * 100.0, 2));
+        }
+        row.push(fnum(cell.wiki_ppl, 2));
+        table.row(row);
+    };
+    let base = eval_cell(session, &cfg, &ckpt, &corpus, None, &suite, Metrics::FullSuite)?;
+    add("fp32", &base);
+    for fmt in THREE_BIT_FORMATS {
+        let pc = PipelineConfig::weight_only(fmt);
+        let cell =
+            eval_cell(session, &cfg, &ckpt, &corpus, Some(&pc), &suite, Metrics::FullSuite)?;
+        add(fmt, &cell);
+    }
+    Ok(table)
+}

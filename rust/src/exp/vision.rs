@@ -1,0 +1,148 @@
+//! Table 9: vision models (MLP + im2col-CNN roles) under weight+activation
+//! quantization — the t-shaped-weights story transfers beyond LLMs.
+
+use std::collections::HashMap;
+
+use anyhow::Result;
+
+use super::Scale;
+use crate::coordinator::Session;
+use crate::data::ImageSet;
+use crate::formats;
+use crate::model_io::Checkpoint;
+use crate::nn::{self, ClsConfig, CLS_ZOO};
+use crate::quant::{quantize_weight, smooth_scales, BlockSize, Calib, QuantConfig, SmoothQuant};
+use crate::report::{fnum, Table};
+use crate::rng::Pcg64;
+use crate::runtime::Value;
+use crate::tensor::{argmax, Tensor};
+
+pub const VISION_FORMATS: [&str; 9] =
+    ["nf4", "sf4", "int4", "e2m1", "e2m1_sr", "e2m1_sp", "e3m0", "apot4", "apot4_sp"];
+
+/// Quantize a classifier checkpoint into W4A4 artifact inputs.
+fn quantize_cls(
+    cfg: &ClsConfig,
+    ckpt: &Checkpoint,
+    fmt: &str,
+    images: &ImageSet,
+) -> Result<HashMap<String, Value>> {
+    let spec = formats::must(fmt);
+    // calibration activations from a fixed batch
+    let mut rng = Pcg64::new(0x0ca1b);
+    let (x, _) = images.batch(64, &mut rng);
+    let mut cap = nn::ActivationCapture::new(4096);
+    nn::forward_cls(cfg, ckpt, &x, Some(&mut cap))?;
+
+    let qnames = cfg.quant_linear_names();
+    let mut values = HashMap::new();
+    for (name, _) in cfg.param_specs() {
+        let t = ckpt.get(&name)?;
+        if !qnames.contains(&name) {
+            values.insert(name.clone(), Value::F32(t.clone()));
+            continue;
+        }
+        let k = t.rows();
+        let acts = cap.stacked(&name).ok_or_else(|| anyhow::anyhow!("no acts for {name}"))?;
+        let smooth = smooth_scales(&acts, t, 0.5);
+        let w = smooth.apply_to_weight(t);
+        let block = if k % 128 == 0 { BlockSize::Sub(128) } else { BlockSize::Channelwise };
+        let q = quantize_weight(&w, &QuantConfig { format: spec.clone(), block, calib: Calib::None });
+        values.insert(format!("{name}.codes"), Value::I8(q.codes.clone(), vec![q.k, q.n]));
+        values.insert(format!("{name}.scales"), Value::F32(q.expanded_scales()));
+        values.insert(
+            format!("{name}.smooth"),
+            Value::F32(Tensor::new(&[k], smooth.inv_smooth.clone())),
+        );
+        let _ = SmoothQuant::identity(k);
+    }
+    values.insert("codebook".into(), Value::F32(Tensor::new(&[16], spec.padded16())));
+    values.insert(
+        "act_codebook".into(),
+        Value::F32(Tensor::new(&[16], spec.padded16())),
+    );
+    Ok(values)
+}
+
+/// Top-1 accuracy of a bound classifier executable over `n_batches`.
+fn accuracy(
+    session: &Session,
+    cfg: &ClsConfig,
+    artifact: &str,
+    values: &HashMap<String, Value>,
+    images: &ImageSet,
+    n_batches: usize,
+) -> Result<f64> {
+    let exe = session.engine.load(artifact)?;
+    let bound = exe.bind(values)?;
+    let mut rng = Pcg64::new(0xe5a1);
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    for _ in 0..n_batches {
+        let (x, labels) = images.batch(cfg.batch_eval, &mut rng);
+        let mut rest = HashMap::new();
+        rest.insert("x".to_string(), Value::F32(x));
+        let outs = exe.run_bound(&bound, &rest)?;
+        let logits = outs[0].as_f32()?;
+        for (r, &lbl) in labels.iter().enumerate() {
+            if argmax(logits.row(r)) == lbl as usize {
+                correct += 1;
+            }
+            total += 1;
+        }
+    }
+    Ok(correct as f64 / total as f64)
+}
+
+pub fn run(session: &Session, scale: Scale) -> Result<Table> {
+    let n_batches = match scale {
+        Scale::Quick => 2,
+        Scale::Full => 16,
+    };
+    let mut table = Table::new(
+        "Table 9 — Vision models, W4A4 channelwise (top-1 accuracy %)",
+        &["format", "mlp", "cnn"],
+    );
+    let images = ImageSet::new(16, 10, 7, 0.6);
+
+    let mut fp32_row = vec!["fp32".to_string()];
+    let mut ckpts = Vec::new();
+    for cfg in CLS_ZOO {
+        let ckpt = session
+            .load_checkpoint(&format!("cls_{}", cfg.name))
+            .map_err(|e| anyhow::anyhow!("{e}; run `repro train --all` first"))?;
+        let mut values = HashMap::new();
+        for (name, _) in cfg.param_specs() {
+            values.insert(name.clone(), Value::F32(ckpt.get(&name)?.clone()));
+        }
+        let acc = accuracy(
+            session,
+            &cfg,
+            &format!("cls_fwd_fp32_{}", cfg.name),
+            &values,
+            &images,
+            n_batches,
+        )?;
+        fp32_row.push(fnum(acc * 100.0, 2));
+        ckpts.push((cfg, ckpt));
+    }
+    table.row(fp32_row);
+
+    for fmt in VISION_FORMATS {
+        let mut row = vec![fmt.to_string()];
+        for (cfg, ckpt) in &ckpts {
+            let values = quantize_cls(cfg, ckpt, fmt, &images)?;
+            let acc = accuracy(
+                session,
+                cfg,
+                &format!("cls_fwd_w4a4_{}", cfg.name),
+                &values,
+                &images,
+                n_batches,
+            )?;
+            row.push(fnum(acc * 100.0, 2));
+        }
+        table.row(row);
+    }
+    Ok(table)
+}

@@ -1,0 +1,121 @@
+//! Table 8 (and Tables 22-28): W4A4 weight+activation quantization with
+//! and without SmoothQuant — mean relative accuracy change vs fp32.
+
+use anyhow::Result;
+
+use super::quality::{eval_cell, paper_format_rows, require_ckpt, CellResult, Metrics};
+use super::Scale;
+use crate::coordinator::{corpus_for, PipelineConfig, Session};
+use crate::report::{pct, Table};
+
+/// Raw results (format, model, smoothquant) -> Delta% — reused by Fig. 3.
+pub struct W4a4Results {
+    pub models: Vec<String>,
+    /// rows[fmt][model] = (no-SQ delta, SQ delta)
+    pub rows: Vec<(String, Vec<(f64, f64)>)>,
+}
+
+pub fn compute(session: &Session, scale: Scale) -> Result<W4a4Results> {
+    // med under the full suite x 22 W4A4 cells is CPU-prohibitive; the
+    // paper's shape needs multiple models, not the largest one.
+    let models = match scale {
+        Scale::Quick => vec!["nano"],
+        Scale::Full => vec!["micro", "small"],
+    };
+    let suite = scale.suite();
+    let mut baselines = Vec::new();
+    for model in &models {
+        let (cfg, ckpt) = require_ckpt(session, model)?;
+        let corpus = corpus_for(&cfg);
+        let base =
+            eval_cell(session, &cfg, &ckpt, &corpus, None, &suite, Metrics::FullSuite)?;
+        baselines.push((cfg, ckpt, corpus, base));
+    }
+    let mut rows = Vec::new();
+    for fmt in paper_format_rows() {
+        let mut per_model = Vec::new();
+        for (cfg, ckpt, corpus, base) in &baselines {
+            let mut deltas = (f64::NAN, f64::NAN);
+            for (sq, slot) in [(false, 0), (true, 1)] {
+                let pc = PipelineConfig::w4a4(fmt, sq);
+                let cell: CellResult =
+                    eval_cell(session, cfg, ckpt, corpus, Some(&pc), &suite, Metrics::FullSuite)?;
+                let d = cell.rel_change_pct(base);
+                if slot == 0 {
+                    deltas.0 = d;
+                } else {
+                    deltas.1 = d;
+                }
+            }
+            per_model.push(deltas);
+        }
+        rows.push((fmt.to_string(), per_model));
+    }
+    let res = W4a4Results { models: models.iter().map(|s| s.to_string()).collect(), rows };
+    cache_write(session, &res).ok();
+    Ok(res)
+}
+
+fn cache_path(session: &Session) -> std::path::PathBuf {
+    std::path::Path::new(&session.results_dir).join("table8_raw.tsv")
+}
+
+fn cache_write(session: &Session, res: &W4a4Results) -> Result<()> {
+    std::fs::create_dir_all(&session.results_dir)?;
+    let mut s = String::from("# format\tmodel\tno_sq\tsq\n");
+    for (fmt, per_model) in &res.rows {
+        for (m, (a, b)) in res.models.iter().zip(per_model) {
+            s.push_str(&format!("{fmt}\t{m}\t{a}\t{b}\n"));
+        }
+    }
+    std::fs::write(cache_path(session), s)?;
+    Ok(())
+}
+
+/// Load cached Table 8 raw results if a previous full run saved them
+/// (Figure 3 reuses them instead of re-running the whole W4A4 grid).
+pub fn cached(session: &Session) -> Option<W4a4Results> {
+    let text = std::fs::read_to_string(cache_path(session)).ok()?;
+    let mut models: Vec<String> = Vec::new();
+    let mut map: std::collections::HashMap<String, Vec<(f64, f64)>> = Default::default();
+    let mut order: Vec<String> = Vec::new();
+    for line in text.lines().skip(1) {
+        let p: Vec<&str> = line.split('\t').collect();
+        if p.len() != 4 {
+            continue;
+        }
+        if !models.contains(&p[1].to_string()) {
+            models.push(p[1].to_string());
+        }
+        if !order.contains(&p[0].to_string()) {
+            order.push(p[0].to_string());
+        }
+        map.entry(p[0].to_string())
+            .or_default()
+            .push((p[2].parse().ok()?, p[3].parse().ok()?));
+    }
+    let rows = order.into_iter().map(|f| (f.clone(), map[&f].clone())).collect();
+    Some(W4a4Results { models, rows })
+}
+
+pub fn run(session: &Session, scale: Scale) -> Result<Table> {
+    let res = compute(session, scale)?;
+    let mut headers = vec!["format".to_string()];
+    for m in &res.models {
+        headers.push(format!("{m}:noSQ"));
+        headers.push(format!("{m}:SQ"));
+    }
+    let mut table = Table::new(
+        "Table 8 — W4A4 eval, mean D% vs fp32 (without / with SmoothQuant)",
+        &headers.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+    );
+    for (fmt, per_model) in &res.rows {
+        let mut row = vec![fmt.clone()];
+        for (no_sq, sq) in per_model {
+            row.push(pct(*no_sq));
+            row.push(pct(*sq));
+        }
+        table.row(row);
+    }
+    Ok(table)
+}

@@ -1,0 +1,61 @@
+//! Table 3 / Table 13: weight-only evaluation — every format x model x
+//! calibration (None / MSE), LAMBADA-role accuracy + WikiText-role ppl.
+
+use anyhow::Result;
+
+use super::quality::{eval_cell, paper_format_rows, require_ckpt, Metrics};
+use super::Scale;
+use crate::coordinator::{corpus_for, PipelineConfig, Session};
+use crate::quant::Calib;
+use crate::report::{fnum, Table};
+
+pub fn run(session: &Session, scale: Scale) -> Result<Table> {
+    let models = scale.table_models();
+    let suite = scale.suite();
+    let mut table = Table::new(
+        "Table 3 — Weight-Only Eval (LAMB accuracy / Wiki perplexity)",
+        &{
+            let mut h = vec!["format"];
+            for m in &models {
+                h.push(Box::leak(format!("{m}:None").into_boxed_str()));
+                h.push(Box::leak(format!("{m}:MSE").into_boxed_str()));
+            }
+            h
+        },
+    );
+
+    // fp32 baselines first
+    let mut baselines = Vec::new();
+    for model in &models {
+        let (cfg, ckpt) = require_ckpt(session, model)?;
+        let corpus = corpus_for(&cfg);
+        let base = eval_cell(session, &cfg, &ckpt, &corpus, None, &suite, Metrics::LambWiki)?;
+        baselines.push((cfg, ckpt, corpus, base));
+    }
+    let mut row = vec!["fp32".to_string()];
+    for (_, _, _, base) in &baselines {
+        let cell = format!("{}/{}", fnum(base.lamb * 100.0, 2), fnum(base.wiki_ppl, 2));
+        row.push(cell.clone());
+        row.push(cell);
+    }
+    table.row(row);
+
+    for fmt in paper_format_rows() {
+        let mut row = vec![fmt.to_string()];
+        for (cfg, ckpt, corpus, _) in &baselines {
+            for calib in [Calib::None, Calib::Mse] {
+                let mut pc = PipelineConfig::weight_only(fmt);
+                pc.calib = calib;
+                let cell =
+                    eval_cell(session, cfg, ckpt, corpus, Some(&pc), &suite, Metrics::LambWiki)?;
+                row.push(format!(
+                    "{}/{}",
+                    fnum(cell.lamb * 100.0, 2),
+                    fnum(cell.wiki_ppl, 2)
+                ));
+            }
+        }
+        table.row(row);
+    }
+    Ok(table)
+}

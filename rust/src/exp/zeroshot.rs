@@ -1,0 +1,39 @@
+//! Table 4 (and Tables 16-21): the zero-shot suite on one model —
+//! LAMB + five MC tasks + the mean relative change vs fp32.
+
+use anyhow::Result;
+
+use super::quality::{eval_cell, paper_format_rows, require_ckpt, Metrics};
+use super::Scale;
+use crate::coordinator::{corpus_for, PipelineConfig, Session};
+use crate::report::{fnum, pct, Table};
+
+pub fn run(session: &Session, scale: Scale, model: &str) -> Result<Table> {
+    let suite = scale.suite();
+    let (cfg, ckpt) = require_ckpt(session, model)?;
+    let corpus = corpus_for(&cfg);
+    let mut table = Table::new(
+        &format!("Table 4 — {model} weight-only zero-shot suite"),
+        &["format", "LAMB", "Hella", "Wino", "PIQA", "BoolQ", "ARC-c", "Wiki", "D%"],
+    );
+    let base =
+        eval_cell(session, &cfg, &ckpt, &corpus, None, &suite, Metrics::FullSuite)?;
+    let fmt_row = |name: &str, cell: &super::quality::CellResult, d: f64| {
+        let mut row = vec![name.to_string(), fnum(cell.lamb * 100.0, 2)];
+        for (_, acc) in &cell.mc {
+            row.push(fnum(acc * 100.0, 2));
+        }
+        row.push(fnum(cell.wiki_ppl, 2));
+        row.push(pct(d));
+        row
+    };
+    table.row(fmt_row("fp32", &base, 0.0));
+    for fmt in paper_format_rows() {
+        let pc = PipelineConfig::weight_only(fmt);
+        let cell =
+            eval_cell(session, &cfg, &ckpt, &corpus, Some(&pc), &suite, Metrics::FullSuite)?;
+        let d = cell.rel_change_pct(&base);
+        table.row(fmt_row(fmt, &cell, d));
+    }
+    Ok(table)
+}

@@ -1,0 +1,172 @@
+//! Additive Powers-of-Two formats (Li et al., ICLR 2020) and the variant
+//! search space of paper Appendix E / Figure 7.
+
+/// The paper's `2S (3)` sets: S1 = {0, 2^-1, 2^-2, 2^-4}, S2 = {0, 2^-3}.
+pub const APOT4_S1: [f64; 4] = [0.0, 0.5, 0.25, 0.0625];
+pub const APOT4_S2: [f64; 2] = [0.0, 0.125];
+
+/// Build an APoT codebook from value sets: all sums taking one element per
+/// set, mirrored to signed, normalized; positive-only supernormal extras.
+pub fn apot_from_sets(sets: &[&[f64]], extra_pos: &[f64]) -> Vec<f64> {
+    let mut sums = vec![0.0f64];
+    for set in sets {
+        let mut next = Vec::with_capacity(sums.len() * set.len());
+        for &a in &sums {
+            for &b in *set {
+                next.push(a + b);
+            }
+        }
+        sums = next;
+    }
+    sums.iter_mut().for_each(|v| *v = (*v * 1e12).round() / 1e12);
+    sums.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    sums.dedup();
+    let mx = *sums.last().unwrap();
+    let mags: Vec<f64> = sums.iter().map(|v| v / mx).collect();
+    let mut all: Vec<f64> = mags.iter().filter(|&&v| v != 0.0).map(|v| -v).collect();
+    all.extend(mags.iter());
+    all.extend(extra_pos.iter());
+    all.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    all.dedup();
+    let mx = all.iter().fold(0.0f64, |m, &v| m.max(v.abs()));
+    all.iter().map(|&v| v / mx).collect()
+}
+
+/// APoT4 of the paper (2S(3) variant); `sp` adds the 0.5 supernormal value.
+pub fn apot4(sp: bool) -> Vec<f64> {
+    let sets: [&[f64]; 2] = [&APOT4_S1, &APOT4_S2];
+    if sp {
+        apot_from_sets(&sets, &[0.5])
+    } else {
+        apot_from_sets(&sets, &[])
+    }
+}
+
+/// One enumerated APoT variant (Fig. 7).
+#[derive(Clone, Debug)]
+pub struct ApotVariant {
+    pub label: String,
+    pub sets: Vec<Vec<f64>>,
+    pub codebook: Vec<f64>,
+    /// Unique magnitudes produced (8 = full 4-bit utilization).
+    pub n_magnitudes: usize,
+}
+
+/// Enumerate the reasonable 4-bit APoT variants: 2-set and 3-set choices
+/// drawn from {0, 2^-1, 2^-2, 2^-3, 2^-4}, filtered to those that produce
+/// eight unique magnitudes (full bitspace use) — Appendix E's search space.
+pub fn enumerate_apot_variants() -> Vec<ApotVariant> {
+    let pool = [0.5f64, 0.25, 0.125, 0.0625];
+    let mut out = Vec::new();
+    let mut seen: Vec<Vec<f64>> = Vec::new();
+
+    // 2-set variants: S1 = {0} + 3 picks, S2 = {0} + 1 pick.
+    for mask in 0u32..16 {
+        if mask.count_ones() != 3 {
+            continue;
+        }
+        let s1: Vec<f64> = std::iter::once(0.0)
+            .chain((0..4).filter(|i| mask >> i & 1 == 1).map(|i| pool[i]))
+            .collect();
+        for (j, &b) in pool.iter().enumerate() {
+            if mask >> j & 1 == 1 {
+                continue;
+            }
+            let s2 = vec![0.0, b];
+            let sets: Vec<&[f64]> = vec![&s1, &s2];
+            let cb = apot_from_sets(&sets, &[]);
+            // 8 unique magnitudes incl. zero = full 3-bit magnitude space
+            let mags = cb.iter().filter(|&&v| v > 0.0).count() + 1;
+            if mags != 8 {
+                continue;
+            }
+            let key: Vec<f64> = cb.clone();
+            if seen.contains(&key) {
+                continue;
+            }
+            seen.push(key);
+            out.push(ApotVariant {
+                label: format!("2S s1={s1:?} s2={s2:?}"),
+                sets: vec![s1.clone(), s2.clone()],
+                codebook: cb,
+                n_magnitudes: mags,
+            });
+        }
+    }
+
+    // 3-set variants: three {0, x} pairs with distinct x.
+    for a in 0..4 {
+        for b in a + 1..4 {
+            for c in b + 1..4 {
+                let s1 = vec![0.0, pool[a]];
+                let s2 = vec![0.0, pool[b]];
+                let s3 = vec![0.0, pool[c]];
+                let sets: Vec<&[f64]> = vec![&s1, &s2, &s3];
+                let cb = apot_from_sets(&sets, &[]);
+                let mags = cb.iter().filter(|&&v| v > 0.0).count() + 1;
+                if mags != 8 {
+                    continue;
+                }
+                if seen.contains(&cb) {
+                    continue;
+                }
+                seen.push(cb.clone());
+                out.push(ApotVariant {
+                    label: format!("3S {:?}/{:?}/{:?}", s1, s2, s3),
+                    sets: vec![s1, s2, s3],
+                    codebook: cb,
+                    n_magnitudes: mags,
+                });
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_variant_magnitudes() {
+        let cb = apot4(false);
+        let pos: Vec<f64> = cb.iter().copied().filter(|&v| v > 0.0).collect();
+        let want = [0.1, 0.2, 0.3, 0.4, 0.6, 0.8, 1.0];
+        assert_eq!(pos.len(), want.len());
+        for (a, b) in pos.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn sp_adds_half() {
+        let base = apot4(false);
+        let sp = apot4(true);
+        assert_eq!(sp.len(), base.len() + 1);
+        assert!(sp.iter().any(|&v| (v - 0.5).abs() < 1e-12));
+        assert!(!base.iter().any(|&v| (v - 0.5).abs() < 1e-12));
+    }
+
+    #[test]
+    fn enumeration_contains_paper_variant() {
+        let variants = enumerate_apot_variants();
+        assert!(!variants.is_empty());
+        let paper = apot4(false);
+        assert!(
+            variants.iter().any(|v| {
+                v.codebook.len() == paper.len()
+                    && v.codebook.iter().zip(&paper).all(|(a, b)| (a - b).abs() < 1e-9)
+            }),
+            "paper 2S(3) variant missing from enumeration"
+        );
+    }
+
+    #[test]
+    fn all_variants_fully_use_bitspace() {
+        for v in enumerate_apot_variants() {
+            assert_eq!(v.n_magnitudes, 8, "{}", v.label);
+            // signed codebook: 8 pos + 7 neg + zero = 15 (sign-bit format)
+            assert_eq!(v.codebook.len(), 15, "{}", v.label);
+        }
+    }
+}

@@ -1,0 +1,488 @@
+//! The datatype zoo — every numeric format in the paper's evaluation,
+//! re-derived natively (Table 15 is the golden reference; the Python
+//! `formats.py` emission is cross-checked in `rust/tests/`).
+//!
+//! Each format is a *codebook*: the sorted set of representable values
+//! normalized so max |v| = 1. Nearest-value rounding against the codebook is
+//! exactly how both the Rust quantizer and the in-graph Pallas kernels
+//! consume a format — the datatype is runtime data end-to-end.
+
+mod apot;
+
+pub use apot::{apot_from_sets, enumerate_apot_variants, ApotVariant};
+
+use crate::special::{normal, student_t};
+
+/// Format family, used by the hardware model to pick a MAC structure.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Family {
+    /// Quantile-derived lookup format (NF/SF): needs LUT decode + fp MAC.
+    Lookup,
+    /// Plain integers: cheapest MAC.
+    Int,
+    /// Minifloat with (exp, man) split.
+    Float,
+    /// Additive powers-of-two: shift-add MAC.
+    Apot,
+}
+
+/// A named quantization datatype.
+#[derive(Clone, Debug)]
+pub struct FormatSpec {
+    pub name: &'static str,
+    /// Sorted, max-|v|-normalized representable values.
+    pub codebook: Vec<f64>,
+    pub bits: u32,
+    pub family: Family,
+    /// (exponent bits, mantissa bits) for minifloats.
+    pub fp_split: Option<(u32, u32)>,
+    /// Number of supernormal values (codes recovered from negative zero).
+    pub supernormal: u32,
+}
+
+impl FormatSpec {
+    /// Midpoints between consecutive codebook entries (for RTN rounding).
+    pub fn midpoints(&self) -> Vec<f64> {
+        self.codebook.windows(2).map(|w| 0.5 * (w[0] + w[1])).collect()
+    }
+
+    /// Nearest codebook *index* for a normalized value.
+    ///
+    /// Convenience path; hot loops should use [`FormatSpec::encoder`], which
+    /// hoists the midpoint table out of the per-element call (§Perf: this
+    /// allocation dominated the RTN profile).
+    pub fn encode(&self, x: f64) -> usize {
+        let mids = self.midpoints();
+        match mids.binary_search_by(|m| m.partial_cmp(&x).unwrap()) {
+            Ok(i) => i + 1,
+            Err(i) => i,
+        }
+    }
+
+    /// Allocation-free nearest-value encoder for hot loops.
+    pub fn encoder(&self) -> Encoder {
+        Encoder {
+            mids: self.midpoints().iter().map(|&m| m as f32).collect(),
+            values: self.codebook.iter().map(|&v| v as f32).collect(),
+        }
+    }
+
+    /// Nearest codebook value for a normalized value.
+    pub fn quantize(&self, x: f64) -> f64 {
+        self.codebook[self.encode(x)]
+    }
+
+    /// Codebook padded to 16 entries (repeat top value) as f32 — the fixed
+    /// shape the AOT artifacts take. Padding never changes nearest-value
+    /// results because duplicates tie-break to the same value.
+    pub fn padded16(&self) -> Vec<f32> {
+        assert!(self.codebook.len() <= 16, "{}: codebook > 16", self.name);
+        let mut cb: Vec<f32> = self.codebook.iter().map(|&v| v as f32).collect();
+        let top = *cb.last().unwrap();
+        cb.resize(16, top);
+        cb
+    }
+
+    pub fn n_values(&self) -> usize {
+        self.codebook.len()
+    }
+
+    /// Max magnitude before normalization — recovers the raw value grids of
+    /// Table 15 for the accumulator-sizing model (`hw`).
+    pub fn raw_max(&self) -> f64 {
+        match self.name {
+            "e2m1" | "e2m1_i" | "e2m1_sp" => 6.0,
+            "e2m1_sr" => 8.0,
+            "e2m1_b" => 12.0,
+            "e3m0" => 16.0,
+            "int4" => 8.0,
+            "int5" => 16.0,
+            "int3" => 4.0,
+            "e2m0" => 4.0,
+            // APoT sums of {0,2^-1,2^-2,2^-4} + {0,2^-3}: dyadic k/16 grid
+            "apot4" | "apot4_sp" => 0.625,
+            _ => 1.0,
+        }
+    }
+
+    /// Smallest *normal* magnitude on the raw grid (minifloats only):
+    /// products of two subnormals fall below this and are flushed by the
+    /// cheap-MAC datapath the paper synthesizes.
+    pub fn min_normal(&self) -> f64 {
+        match self.name {
+            "e2m1" | "e2m1_i" | "e2m1_sp" | "e2m1_sr" | "e2m0" => 1.0,
+            "e2m1_b" => 2.0,
+            "e3m0" => 0.25, // E3M0 has no nonzero subnormals
+            _ => 0.0,
+        }
+    }
+}
+
+/// Precomputed nearest-value encoder (see [`FormatSpec::encoder`]).
+#[derive(Clone, Debug)]
+pub struct Encoder {
+    mids: Vec<f32>,
+    values: Vec<f32>,
+}
+
+impl Encoder {
+    /// Nearest codebook index for a normalized value. Linear scan over the
+    /// <=15 midpoints vectorizes better than binary search at these sizes.
+    #[inline]
+    pub fn encode(&self, x: f32) -> usize {
+        let mut i = 0usize;
+        for &m in &self.mids {
+            i += (x > m) as usize;
+        }
+        i
+    }
+
+    /// Nearest codebook value (dequantized, normalized).
+    #[inline]
+    pub fn quantize(&self, x: f32) -> f32 {
+        self.values[self.encode(x)]
+    }
+
+    #[inline]
+    pub fn value(&self, idx: usize) -> f32 {
+        self.values[idx]
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Algorithm 1 (paper): quantile-derived lookup formats
+// ---------------------------------------------------------------------------
+
+/// Paper Algorithm 1 generalized to `n_values` levels over any quantile fn.
+///
+/// `ceil(n/2)` negative-side probabilities in [delta, 1/2] and the rest
+/// (one more) in [1/2, 1-delta], sharing an exact zero at p = 1/2; offset
+/// delta = (1/(2n) + 1/(2(n-1)))/2 as in QLoRA.
+pub fn algorithm1(quantile: impl Fn(f64) -> f64, n_values: usize) -> Vec<f64> {
+    assert!(n_values >= 4);
+    let n = n_values as f64;
+    let delta = 0.5 * (1.0 / (2.0 * n) + 1.0 / (2.0 * (n - 1.0)));
+    let n_neg = n_values / 2;
+    let n_pos = n_values - n_neg + 1;
+    let mut q = Vec::with_capacity(n_values);
+    for i in 0..n_neg {
+        let p = delta + (0.5 - delta) * i as f64 / (n_neg - 1) as f64;
+        q.push(quantile(p));
+    }
+    q[n_neg - 1] = 0.0; // p = 1/2 -> exactly zero
+    for i in 1..n_pos {
+        let p = 0.5 + (0.5 - delta) * i as f64 / (n_pos - 1) as f64;
+        q.push(quantile(p));
+    }
+    let mx = q.iter().fold(0.0f64, |m, &v| m.max(v.abs()));
+    q.iter().map(|&v| v / mx).collect()
+}
+
+/// NF-k: Algorithm 1 over the standard-normal quantile (QLoRA's NF4).
+pub fn normal_float(bits: u32) -> Vec<f64> {
+    algorithm1(normal::ppf, 1usize << bits)
+}
+
+/// SF-k(nu): Algorithm 1 over the Student-t quantile — the paper's format.
+pub fn student_float(nu: f64, bits: u32) -> Vec<f64> {
+    algorithm1(|p| student_t::ppf(p, nu), 1usize << bits)
+}
+
+// ---------------------------------------------------------------------------
+// Hardened formats
+// ---------------------------------------------------------------------------
+
+fn int_format(bits: u32) -> Vec<f64> {
+    let lo = -(1i64 << (bits - 1));
+    let hi = (1i64 << (bits - 1)) - 1;
+    let mx = lo.unsigned_abs() as f64;
+    (lo..=hi).map(|v| v as f64 / mx).collect()
+}
+
+fn minifloat_magnitudes(exp_bits: u32, man_bits: u32, bias: i32, subnormals: bool) -> Vec<f64> {
+    let mut mags = vec![0.0f64];
+    let n_man = 1u32 << man_bits;
+    for e in 0..(1u32 << exp_bits) {
+        for m in 0..n_man {
+            let val = if e == 0 {
+                if !subnormals {
+                    continue;
+                }
+                (m as f64 / n_man as f64) * 2f64.powi(1 - bias)
+            } else {
+                (1.0 + m as f64 / n_man as f64) * 2f64.powi(e as i32 - bias)
+            };
+            if val != 0.0 {
+                mags.push(val);
+            }
+        }
+    }
+    mags.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    mags.dedup();
+    mags
+}
+
+/// Mirror magnitudes to signed; supernormal `extra_pos` are positive-only
+/// (they reassign the negative-zero code — paper Section 3.5).
+fn signed(mags: &[f64], extra_pos: &[f64]) -> Vec<f64> {
+    let mut pos: Vec<f64> = mags.iter().chain(extra_pos).copied().collect();
+    pos.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    pos.dedup();
+    let mut all: Vec<f64> = mags.iter().filter(|&&v| v != 0.0).map(|v| -v).collect();
+    all.extend(pos);
+    all.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mx = all.iter().fold(0.0f64, |m, &v| m.max(v.abs()));
+    all.iter().map(|&v| v / mx).collect()
+}
+
+fn e2m1(variant: &str) -> Vec<f64> {
+    let base = minifloat_magnitudes(2, 1, 1, true); // 0,.5,1,1.5,2,3,4,6
+    let normals: Vec<f64> = base.iter().copied().filter(|&v| v >= 1.0).collect();
+    match variant {
+        "base" => signed(&base, &[]),
+        "sr" => signed(&base, &[8.0]),
+        "sp" => signed(&base, &[5.0]),
+        "ns" => signed(&minifloat_magnitudes(2, 1, 1, false), &[]),
+        "i" => {
+            let mut m = vec![0.0, 0.0625];
+            m.extend(&normals);
+            signed(&m, &[])
+        }
+        "b" => {
+            let mut m = vec![0.0, 0.0625];
+            m.extend(normals.iter().map(|v| 2.0 * v));
+            signed(&m, &[])
+        }
+        _ => panic!("unknown e2m1 variant {variant}"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Registry
+// ---------------------------------------------------------------------------
+
+/// The 11 datatypes of the paper's main evaluation (Tables 3-8, Fig. 3),
+/// in the paper's row order.
+pub const MAIN_FORMATS: [&str; 11] = [
+    "nf4", "sf4", "int4", "e2m1_i", "e2m1_b", "e2m1", "e2m1_sr", "e2m1_sp",
+    "e3m0", "apot4", "apot4_sp",
+];
+
+/// Every format by name. Unknown names return None.
+pub fn get(name: &str) -> Option<FormatSpec> {
+    let spec = |name: &'static str, cb: Vec<f64>, bits, family, fp, sn| FormatSpec {
+        name,
+        codebook: cb,
+        bits,
+        family,
+        fp_split: fp,
+        supernormal: sn,
+    };
+    Some(match name {
+        "nf4" => spec("nf4", normal_float(4), 4, Family::Lookup, None, 0),
+        "nf3" => spec("nf3", normal_float(3), 3, Family::Lookup, None, 0),
+        "sf4" => spec("sf4", student_float(5.0, 4), 4, Family::Lookup, None, 0),
+        "sf3" => spec("sf3", student_float(5.0, 3), 3, Family::Lookup, None, 0),
+        "sf4_v3" => spec("sf4_v3", student_float(3.0, 4), 4, Family::Lookup, None, 0),
+        "sf4_v4" => spec("sf4_v4", student_float(4.0, 4), 4, Family::Lookup, None, 0),
+        "sf4_v5" => spec("sf4_v5", student_float(5.0, 4), 4, Family::Lookup, None, 0),
+        "sf4_v6" => spec("sf4_v6", student_float(6.0, 4), 4, Family::Lookup, None, 0),
+        "sf4_v7" => spec("sf4_v7", student_float(7.0, 4), 4, Family::Lookup, None, 0),
+        "sf4_v8" => spec("sf4_v8", student_float(8.0, 4), 4, Family::Lookup, None, 0),
+        "sf4_v10" => spec("sf4_v10", student_float(10.0, 4), 4, Family::Lookup, None, 0),
+        "sf4_v20" => spec("sf4_v20", student_float(20.0, 4), 4, Family::Lookup, None, 0),
+        "int3" => spec("int3", int_format(3), 3, Family::Int, None, 0),
+        "int4" => spec("int4", int_format(4), 4, Family::Int, None, 0),
+        "int5" => spec("int5", int_format(5), 5, Family::Int, None, 0),
+        "e2m1" => spec("e2m1", e2m1("base"), 4, Family::Float, Some((2, 1)), 0),
+        "e2m1_i" => spec("e2m1_i", e2m1("i"), 4, Family::Float, Some((2, 1)), 0),
+        "e2m1_b" => spec("e2m1_b", e2m1("b"), 4, Family::Float, Some((2, 1)), 0),
+        "e2m1_ns" => spec("e2m1_ns", e2m1("ns"), 4, Family::Float, Some((2, 1)), 0),
+        "e2m1_sr" => spec("e2m1_sr", e2m1("sr"), 4, Family::Float, Some((2, 1)), 1),
+        "e2m1_sp" => spec("e2m1_sp", e2m1("sp"), 4, Family::Float, Some((2, 1)), 1),
+        "e3m0" => spec("e3m0", signed(&minifloat_magnitudes(3, 0, 2, true), &[]), 4,
+                       Family::Float, Some((3, 0)), 0),
+        "e2m0" => spec("e2m0", signed(&minifloat_magnitudes(2, 0, 0, true), &[]), 3,
+                       Family::Float, Some((2, 0)), 0),
+        "apot4" => spec("apot4", apot::apot4(false), 4, Family::Apot, None, 0),
+        "apot4_sp" => spec("apot4_sp", apot::apot4(true), 4, Family::Apot, None, 1),
+        _ => {
+            // parametric SF4: "sf4_v<nu>" with arbitrary integer nu
+            if let Some(rest) = name.strip_prefix("sf4_v") {
+                if let Ok(nu) = rest.parse::<u32>() {
+                    let cb = student_float(nu as f64, 4);
+                    return Some(FormatSpec {
+                        name: "sf4_vN",
+                        codebook: cb,
+                        bits: 4,
+                        family: Family::Lookup,
+                        fp_split: None,
+                        supernormal: 0,
+                    });
+                }
+            }
+            return None;
+        }
+    })
+}
+
+/// `get` that panics with a clear message (most call sites).
+pub fn must(name: &str) -> FormatSpec {
+    get(name).unwrap_or_else(|| panic!("unknown format: {name}"))
+}
+
+/// Names of all registered formats (stable order).
+pub fn all_names() -> Vec<&'static str> {
+    vec![
+        "nf4", "nf3", "sf4", "sf3", "sf4_v3", "sf4_v4", "sf4_v5", "sf4_v6",
+        "sf4_v7", "sf4_v8", "sf4_v10", "sf4_v20", "int3", "int4", "int5",
+        "e2m1", "e2m1_i", "e2m1_b", "e2m1_ns", "e2m1_sr", "e2m1_sp", "e3m0",
+        "e2m0", "apot4", "apot4_sp",
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn close(a: &[f64], b: &[f64], tol: f64) {
+        assert_eq!(a.len(), b.len(), "{a:?} vs {b:?}");
+        for (x, y) in a.iter().zip(b) {
+            assert!((x - y).abs() < tol, "{x} vs {y} in {a:?}");
+        }
+    }
+
+    #[test]
+    fn nf4_matches_table15() {
+        let want = [
+            -1.000, -0.696, -0.525, -0.395, -0.284, -0.185, -0.091, 0.000,
+            0.080, 0.161, 0.246, 0.338, 0.441, 0.563, 0.723, 1.000,
+        ];
+        close(&must("nf4").codebook, &want, 2e-3);
+    }
+
+    #[test]
+    fn sf4_spot_values_match_table15() {
+        for (nu, lo, hi) in [(3u32, -0.576, 0.606), (4, -0.609, 0.638),
+                             (5, -0.628, 0.657), (6, -0.640, 0.669)] {
+            let cb = must(&format!("sf4_v{nu}")).codebook;
+            assert!((cb[1] - lo).abs() < 1.5e-3, "nu={nu} {}", cb[1]);
+            assert!((cb[14] - hi).abs() < 1.5e-3, "nu={nu} {}", cb[14]);
+        }
+    }
+
+    #[test]
+    fn e2m1_family_matches_table15() {
+        let base: Vec<f64> =
+            [-6.0, -4.0, -3.0, -2.0, -1.5, -1.0, -0.5, 0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0]
+                .iter().map(|v| v / 6.0).collect();
+        close(&must("e2m1").codebook, &base, 1e-9);
+        let sp: Vec<f64> =
+            [-6.0, -4.0, -3.0, -2.0, -1.5, -1.0, -0.5, 0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 5.0, 6.0]
+                .iter().map(|v| v / 6.0).collect();
+        close(&must("e2m1_sp").codebook, &sp, 1e-9);
+        let sr: Vec<f64> =
+            [-6.0, -4.0, -3.0, -2.0, -1.5, -1.0, -0.5, 0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0, 8.0]
+                .iter().map(|v| v / 8.0).collect();
+        close(&must("e2m1_sr").codebook, &sr, 1e-9);
+        assert_eq!(must("e3m0").n_values(), 15);
+        assert_eq!(must("e2m1_i").n_values(), 15);
+        assert_eq!(must("e2m1_b").n_values(), 15);
+    }
+
+    #[test]
+    fn apot_matches_table15() {
+        let want = [
+            -1.0, -0.8, -0.6, -0.4, -0.3, -0.2, -0.1, 0.0, 0.1, 0.2, 0.3, 0.4,
+            0.6, 0.8, 1.0,
+        ];
+        close(&must("apot4").codebook, &want, 1e-9);
+        let want_sp = [
+            -1.0, -0.8, -0.6, -0.4, -0.3, -0.2, -0.1, 0.0, 0.1, 0.2, 0.3, 0.4,
+            0.5, 0.6, 0.8, 1.0,
+        ];
+        close(&must("apot4_sp").codebook, &want_sp, 1e-9);
+    }
+
+    #[test]
+    fn invariants_for_all_formats() {
+        for name in all_names() {
+            let s = must(name);
+            let cb = &s.codebook;
+            assert!(cb.windows(2).all(|w| w[0] < w[1]), "{name} not sorted");
+            assert!(cb.contains(&0.0), "{name} lacks exact zero");
+            let mx = cb.iter().fold(0.0f64, |m, &v| m.max(v.abs()));
+            assert!((mx - 1.0).abs() < 1e-12, "{name} not normalized");
+            assert!(cb.len() <= 1 << s.bits, "{name} too many values");
+        }
+    }
+
+    #[test]
+    fn encode_is_nearest() {
+        let s = must("sf4");
+        for i in 0..=2000 {
+            let x = -1.5 + 3.0 * i as f64 / 2000.0;
+            let got = s.quantize(x);
+            let want = s
+                .codebook
+                .iter()
+                .copied()
+                .min_by(|a, b| ((a - x).abs()).partial_cmp(&(b - x).abs()).unwrap())
+                .unwrap();
+            assert!((got - want).abs() < 1e-12, "x={x}");
+        }
+    }
+
+    #[test]
+    fn padded16_preserves_quantization() {
+        let s = must("nf3");
+        let padded = s.padded16();
+        assert_eq!(padded.len(), 16);
+        for i in 0..200 {
+            let x = -1.2 + 2.4 * i as f64 / 200.0;
+            let q1 = s.quantize(x);
+            let q2 = padded
+                .iter()
+                .copied()
+                .min_by(|a, b| {
+                    ((*a as f64 - x).abs()).partial_cmp(&(*b as f64 - x).abs()).unwrap()
+                })
+                .unwrap() as f64;
+            assert!((q1 - q2).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn sf_converges_to_nf() {
+        let nf = normal_float(4);
+        let sf200 = student_float(200.0, 4);
+        let sf3 = student_float(3.0, 4);
+        let d_big: f64 =
+            nf.iter().zip(&sf200).map(|(a, b)| (a - b).abs()).fold(0.0, f64::max);
+        let d_small: f64 =
+            nf.iter().zip(&sf3).map(|(a, b)| (a - b).abs()).fold(0.0, f64::max);
+        assert!(d_big < 0.01, "{d_big}");
+        assert!(d_big < d_small / 10.0);
+    }
+
+    #[test]
+    fn supernormal_counts() {
+        assert_eq!(must("e2m1").n_values(), 15);
+        assert_eq!(must("e2m1_sr").n_values(), 16);
+        assert_eq!(must("e2m1_sp").n_values(), 16);
+        assert_eq!(must("apot4").n_values(), 15);
+        assert_eq!(must("apot4_sp").n_values(), 16);
+        assert_eq!(must("nf4").n_values(), 16);
+        assert_eq!(must("sf4").n_values(), 16);
+    }
+
+    #[test]
+    fn positive_side_bias_of_lookup_formats() {
+        for name in ["nf4", "sf4", "nf3", "sf3"] {
+            let cb = must(name).codebook;
+            let pos = cb.iter().filter(|&&v| v > 0.0).count();
+            let neg = cb.iter().filter(|&&v| v < 0.0).count();
+            assert_eq!(pos, neg + 1, "{name}");
+        }
+    }
+}

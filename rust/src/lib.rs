@@ -1,0 +1,47 @@
+//! `llm-datatypes` — Rust + JAX + Pallas reproduction of *"Learning from
+//! Students: Applying t-Distributions to Explore Accurate and Efficient
+//! Formats for LLMs"* (Dotzel et al., ICML 2024).
+//!
+//! Layer 3 of the three-layer stack: everything that runs at request time is
+//! Rust. The JAX/Pallas layers (under `python/`) are build-time only — they
+//! author the HLO-text artifacts that [`runtime`] loads through PJRT.
+//!
+//! Module map (see DESIGN.md for the full inventory):
+//!
+//! * substrates: [`tensor`], [`rng`], [`special`], [`distfit`]
+//! * the paper's contribution: [`formats`] (datatype zoo incl. SF4 and the
+//!   supernormal variants), [`quant`] (RTN / MSE-clip / GPTQ / SmoothQuant),
+//!   [`hw`] (MAC-unit area/power model)
+//! * model plumbing: [`nn`] (pure-Rust reference forward), [`model_io`],
+//!   [`data`] (synthetic corpora), [`tasks`] (eval suites)
+//! * execution: [`runtime`] (PJRT), [`coordinator`] (experiment scheduler +
+//!   serve loop), [`exp`] (one module per paper table/figure), [`report`]
+//! * tooling: [`cli`], [`bench_util`]
+
+pub mod bench_util;
+pub mod cli;
+pub mod coordinator;
+pub mod data;
+pub mod distfit;
+pub mod exp;
+pub mod formats;
+pub mod hw;
+pub mod model_io;
+pub mod nn;
+pub mod quant;
+pub mod report;
+pub mod rng;
+pub mod runtime;
+pub mod special;
+pub mod tasks;
+pub mod tensor;
+
+/// Repository-relative default locations, overridable via CLI flags.
+pub mod paths {
+    /// AOT artifacts directory (HLO text + manifests + codebooks.tsv).
+    pub const ARTIFACTS: &str = "artifacts";
+    /// Trained checkpoints directory.
+    pub const CHECKPOINTS: &str = "checkpoints";
+    /// Experiment outputs (tables, figures as TSV).
+    pub const RESULTS: &str = "results";
+}

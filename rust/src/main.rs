@@ -1,0 +1,7 @@
+//! `repro` — CLI entrypoint. See `cli` module for command dispatch.
+fn main() {
+    if let Err(e) = llm_datatypes::cli::main() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

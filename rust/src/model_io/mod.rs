@@ -1,0 +1,265 @@
+//! Model configs (mirroring `python/compile/model.py`'s zoo), the canonical
+//! parameter layout, and a binary checkpoint format shared by the training
+//! driver, the quantization pipeline and the pure-Rust reference model.
+//!
+//! Checkpoint file layout (little-endian):
+//! `LLMDT001` magic, u32 tensor count, then per tensor:
+//! u32 name-len, name bytes, u32 ndim, u64 dims..., f32 data...
+
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::tensor::Tensor;
+
+/// Decoder-only LM hyperparameters — must stay in sync with `model.py` ZOO
+/// (the cross-check test validates against artifact manifests).
+#[derive(Clone, Copy, Debug)]
+pub struct ModelConfig {
+    pub name: &'static str,
+    pub vocab: usize,
+    pub seq: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub batch_eval: usize,
+    pub batch_train: usize,
+    pub train_steps: usize,
+}
+
+pub const ZOO: [ModelConfig; 5] = [
+    ModelConfig { name: "nano", vocab: 64, seq: 32, d_model: 32, n_layers: 2, n_heads: 2, d_ff: 128, batch_eval: 4, batch_train: 16, train_steps: 60 },
+    ModelConfig { name: "micro", vocab: 128, seq: 64, d_model: 64, n_layers: 2, n_heads: 4, d_ff: 256, batch_eval: 8, batch_train: 16, train_steps: 300 },
+    ModelConfig { name: "small", vocab: 128, seq: 64, d_model: 128, n_layers: 4, n_heads: 4, d_ff: 512, batch_eval: 8, batch_train: 16, train_steps: 300 },
+    ModelConfig { name: "med", vocab: 128, seq: 128, d_model: 256, n_layers: 4, n_heads: 8, d_ff: 1024, batch_eval: 8, batch_train: 8, train_steps: 300 },
+    ModelConfig { name: "large", vocab: 128, seq: 128, d_model: 384, n_layers: 6, n_heads: 8, d_ff: 1536, batch_eval: 8, batch_train: 4, train_steps: 200 },
+];
+
+pub fn zoo(name: &str) -> Result<ModelConfig> {
+    ZOO.iter().copied().find(|c| c.name == name).with_context(|| format!("unknown model `{name}`"))
+}
+
+/// The six quantized linear leaves per layer (every nn.Linear of the paper).
+pub const QUANT_LINEARS: [&str; 6] = ["wq", "wk", "wv", "wo", "w1", "w2"];
+
+impl ModelConfig {
+    pub fn d_head(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    /// Canonical fp32 (name, shape) parameter list — same order as model.py.
+    pub fn param_specs(&self) -> Vec<(String, Vec<usize>)> {
+        let (d, f, v, s) = (self.d_model, self.d_ff, self.vocab, self.seq);
+        let mut specs: Vec<(String, Vec<usize>)> =
+            vec![("embed".into(), vec![v, d]), ("pos".into(), vec![s, d])];
+        for i in 0..self.n_layers {
+            for (leaf, shape) in [
+                ("ln1_g", vec![d]),
+                ("ln1_b", vec![d]),
+                ("wq", vec![d, d]),
+                ("wk", vec![d, d]),
+                ("wv", vec![d, d]),
+                ("wo", vec![d, d]),
+                ("ln2_g", vec![d]),
+                ("ln2_b", vec![d]),
+                ("w1", vec![d, f]),
+                ("w2", vec![f, d]),
+            ] {
+                specs.push((format!("l{i}.{leaf}"), shape));
+            }
+        }
+        specs.push(("lnf_g".into(), vec![d]));
+        specs.push(("lnf_b".into(), vec![d]));
+        specs.push(("head".into(), vec![d, v]));
+        specs
+    }
+
+    /// Names of the quantized linear weights, e.g. `l0.wq`.
+    pub fn quant_linear_names(&self) -> Vec<String> {
+        let mut out = Vec::new();
+        for i in 0..self.n_layers {
+            for leaf in QUANT_LINEARS {
+                out.push(format!("l{i}.{leaf}"));
+            }
+        }
+        out
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.param_specs().iter().map(|(_, s)| s.iter().product::<usize>()).sum()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Checkpoints
+// ---------------------------------------------------------------------------
+
+/// Ordered named tensors (insertion order = canonical parameter order).
+#[derive(Clone, Debug, Default)]
+pub struct Checkpoint {
+    names: Vec<String>,
+    map: HashMap<String, Tensor>,
+}
+
+impl Checkpoint {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn insert(&mut self, name: &str, t: Tensor) {
+        if !self.map.contains_key(name) {
+            self.names.push(name.to_string());
+        }
+        self.map.insert(name.to_string(), t);
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.map.get(name).with_context(|| format!("checkpoint missing tensor `{name}`"))
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.map.contains_key(name)
+    }
+
+    pub fn names(&self) -> &[String] {
+        &self.names
+    }
+
+    pub fn len(&self) -> usize {
+        self.names.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.names.is_empty()
+    }
+
+    pub fn total_params(&self) -> usize {
+        self.map.values().map(|t| t.len()).sum()
+    }
+
+    const MAGIC: &'static [u8; 8] = b"LLMDT001";
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut w = std::io::BufWriter::new(std::fs::File::create(path)?);
+        w.write_all(Self::MAGIC)?;
+        w.write_all(&(self.names.len() as u32).to_le_bytes())?;
+        for name in &self.names {
+            let t = &self.map[name];
+            w.write_all(&(name.len() as u32).to_le_bytes())?;
+            w.write_all(name.as_bytes())?;
+            w.write_all(&(t.ndim() as u32).to_le_bytes())?;
+            for &d in t.shape() {
+                w.write_all(&(d as u64).to_le_bytes())?;
+            }
+            let bytes = unsafe {
+                std::slice::from_raw_parts(t.data().as_ptr() as *const u8, t.len() * 4)
+            };
+            w.write_all(bytes)?;
+        }
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Checkpoint> {
+        let path = path.as_ref();
+        let mut r = std::io::BufReader::new(
+            std::fs::File::open(path).with_context(|| format!("opening {}", path.display()))?,
+        );
+        let mut magic = [0u8; 8];
+        r.read_exact(&mut magic)?;
+        if &magic != Self::MAGIC {
+            bail!("{}: not a checkpoint file", path.display());
+        }
+        let mut u32b = [0u8; 4];
+        let mut u64b = [0u8; 8];
+        r.read_exact(&mut u32b)?;
+        let count = u32::from_le_bytes(u32b) as usize;
+        let mut ckpt = Checkpoint::new();
+        for _ in 0..count {
+            r.read_exact(&mut u32b)?;
+            let name_len = u32::from_le_bytes(u32b) as usize;
+            let mut name = vec![0u8; name_len];
+            r.read_exact(&mut name)?;
+            let name = String::from_utf8(name)?;
+            r.read_exact(&mut u32b)?;
+            let ndim = u32::from_le_bytes(u32b) as usize;
+            let mut dims = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                r.read_exact(&mut u64b)?;
+                dims.push(u64::from_le_bytes(u64b) as usize);
+            }
+            let n: usize = dims.iter().product();
+            let mut data = vec![0f32; n];
+            let bytes = unsafe {
+                std::slice::from_raw_parts_mut(data.as_mut_ptr() as *mut u8, n * 4)
+            };
+            r.read_exact(bytes)?;
+            ckpt.insert(&name, Tensor::new(&dims, data));
+        }
+        Ok(ckpt)
+    }
+}
+
+/// Checkpoint file path for a zoo model.
+pub fn checkpoint_path(dir: &str, model: &str) -> std::path::PathBuf {
+    Path::new(dir).join(format!("{model}.ckpt"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zoo_param_counts_are_consistent() {
+        for cfg in ZOO {
+            let specs = cfg.param_specs();
+            assert_eq!(specs.len(), 2 + 10 * cfg.n_layers + 3, "{}", cfg.name);
+            assert_eq!(cfg.quant_linear_names().len(), 6 * cfg.n_layers);
+            assert!(cfg.n_params() > 0);
+        }
+        // micro ~ 0.2M, med ~ 3.3M: orders of magnitude sanity
+        let micro = zoo("micro").unwrap().n_params();
+        let med = zoo("med").unwrap().n_params();
+        assert!(micro > 100_000 && micro < 500_000, "{micro}");
+        assert!(med > 2_000_000 && med < 6_000_000, "{med}");
+    }
+
+    #[test]
+    fn checkpoint_roundtrip() {
+        let dir = std::env::temp_dir().join("llmdt_ckpt_test");
+        let path = dir.join("t.ckpt");
+        let mut c = Checkpoint::new();
+        c.insert("a", Tensor::from_fn(&[3, 4], |i| i as f32 * 0.5));
+        c.insert("b.c", Tensor::scalar(7.25));
+        c.save(&path).unwrap();
+        let d = Checkpoint::load(&path).unwrap();
+        assert_eq!(d.names(), c.names());
+        assert_eq!(d.get("a").unwrap(), c.get("a").unwrap());
+        assert_eq!(d.get("b.c").unwrap().data(), &[7.25]);
+        assert!(d.get("missing").is_err());
+    }
+
+    #[test]
+    fn checkpoint_rejects_garbage() {
+        let dir = std::env::temp_dir().join("llmdt_ckpt_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.ckpt");
+        std::fs::write(&path, b"not a checkpoint").unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+    }
+
+    #[test]
+    fn insert_overwrites_in_place() {
+        let mut c = Checkpoint::new();
+        c.insert("x", Tensor::scalar(1.0));
+        c.insert("x", Tensor::scalar(2.0));
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.get("x").unwrap().data(), &[2.0]);
+    }
+}

@@ -1,0 +1,470 @@
+//! Pure-Rust reference forward passes, mirroring `python/compile/model.py`
+//! op-for-op. Two jobs:
+//!
+//! 1. **Calibration**: GPTQ needs the inputs of every quantized linear and
+//!    SmoothQuant needs per-channel activation maxima; `forward_lm` with an
+//!    [`ActivationCapture`] records them without touching the XLA path.
+//! 2. **Cross-validation**: integration tests compare these logits against
+//!    the AOT `lm_fwd_fp32_*` executables to certify that the Rust view of
+//!    the model matches what actually runs on the request path.
+
+use std::collections::HashMap;
+
+use anyhow::Result;
+
+use crate::model_io::{Checkpoint, ModelConfig};
+use crate::tensor::Tensor;
+
+/// Records the input activations `[rows, K]` of each named linear.
+#[derive(Default, Debug)]
+pub struct ActivationCapture {
+    pub acts: HashMap<String, Vec<Tensor>>,
+    /// Cap on captured rows per linear (memory guard).
+    pub max_rows: usize,
+}
+
+impl ActivationCapture {
+    pub fn new(max_rows: usize) -> Self {
+        ActivationCapture { acts: HashMap::new(), max_rows }
+    }
+
+    fn push(&mut self, name: &str, x: &Tensor) {
+        let cur: usize =
+            self.acts.get(name).map(|v| v.iter().map(|t| t.rows()).sum()).unwrap_or(0);
+        if cur >= self.max_rows {
+            return;
+        }
+        self.acts.entry(name.to_string()).or_default().push(x.clone());
+    }
+
+    /// All captured rows for one linear, stacked `[M, K]`.
+    pub fn stacked(&self, name: &str) -> Option<Tensor> {
+        let parts = self.acts.get(name)?;
+        let k = parts[0].cols();
+        let m: usize = parts.iter().map(|t| t.rows()).sum();
+        let mut data = Vec::with_capacity(m * k);
+        for t in parts {
+            data.extend_from_slice(t.data());
+        }
+        Some(Tensor::new(&[m, k], data))
+    }
+}
+
+fn layernorm(x: &Tensor, g: &Tensor, b: &Tensor) -> Tensor {
+    let (rows, d) = (x.rows(), x.cols());
+    let mut out = vec![0.0f32; rows * d];
+    for i in 0..rows {
+        let row = x.row(i);
+        let mu: f32 = row.iter().sum::<f32>() / d as f32;
+        let var: f32 = row.iter().map(|&v| (v - mu) * (v - mu)).sum::<f32>() / d as f32;
+        let inv = 1.0 / (var + 1e-5).sqrt();
+        for j in 0..d {
+            out[i * d + j] = (row[j] - mu) * inv * g.data()[j] + b.data()[j];
+        }
+    }
+    Tensor::new(&[rows, d], out)
+}
+
+/// tanh-approximate GELU, matching `jax.nn.gelu(approximate=True)`.
+pub fn gelu(x: f32) -> f32 {
+    const C: f32 = 0.797_884_56; // sqrt(2/pi)
+    0.5 * x * (1.0 + (C * (x + 0.044715 * x * x * x)).tanh())
+}
+
+/// Forward through one quantized-in-spirit linear: plain matmul here; the
+/// quantized path substitutes dequantized weights in the checkpoint.
+fn linear(
+    p: &Checkpoint,
+    x: &Tensor,
+    name: &str,
+    cap: &mut Option<&mut ActivationCapture>,
+) -> Result<Tensor> {
+    if let Some(c) = cap.as_deref_mut() {
+        c.push(name, x);
+    }
+    Ok(x.matmul(p.get(name)?))
+}
+
+/// Causal self-attention for one layer over `x [S, D]` (single sequence).
+fn attention(
+    cfg: &ModelConfig,
+    p: &Checkpoint,
+    x: &Tensor,
+    layer: usize,
+    cap: &mut Option<&mut ActivationCapture>,
+) -> Result<Tensor> {
+    let (s, d) = (x.rows(), x.cols());
+    let (h, dh) = (cfg.n_heads, cfg.d_head());
+    let q = linear(p, x, &format!("l{layer}.wq"), cap)?;
+    let k = linear(p, x, &format!("l{layer}.wk"), cap)?;
+    let v = linear(p, x, &format!("l{layer}.wv"), cap)?;
+    let scale = 1.0 / (dh as f32).sqrt();
+    let mut ctx = Tensor::zeros(&[s, d]);
+    let mut att_row = vec![0.0f32; s];
+    for head in 0..h {
+        let off = head * dh;
+        for i in 0..s {
+            // scores over keys 0..=i (causal)
+            let qi = &q.row(i)[off..off + dh];
+            let mut mx = f32::NEG_INFINITY;
+            for j in 0..=i {
+                let kj = &k.row(j)[off..off + dh];
+                let mut dot = 0.0f32;
+                for t in 0..dh {
+                    dot += qi[t] * kj[t];
+                }
+                att_row[j] = dot * scale;
+                mx = mx.max(att_row[j]);
+            }
+            let mut z = 0.0f32;
+            for j in 0..=i {
+                att_row[j] = (att_row[j] - mx).exp();
+                z += att_row[j];
+            }
+            let ctx_row = ctx.row_mut(i);
+            for j in 0..=i {
+                let w = att_row[j] / z;
+                let vj = &v.row(j)[off..off + dh];
+                for t in 0..dh {
+                    ctx_row[off + t] += w * vj[t];
+                }
+            }
+        }
+    }
+    linear(p, &ctx, &format!("l{layer}.wo"), cap)
+}
+
+/// Full LM forward: `tokens [S]` -> logits `[S, V]` for one sequence.
+pub fn forward_lm(
+    cfg: &ModelConfig,
+    p: &Checkpoint,
+    tokens: &[i32],
+    mut cap: Option<&mut ActivationCapture>,
+) -> Result<Tensor> {
+    let s = tokens.len();
+    assert!(s <= cfg.seq, "sequence too long: {s} > {}", cfg.seq);
+    let d = cfg.d_model;
+    let embed = p.get("embed")?;
+    let pos = p.get("pos")?;
+    let mut x = Tensor::zeros(&[s, d]);
+    for (i, &t) in tokens.iter().enumerate() {
+        let e = embed.row(t as usize);
+        let pr = pos.row(i);
+        let row = x.row_mut(i);
+        for j in 0..d {
+            row[j] = e[j] + pr[j];
+        }
+    }
+    for l in 0..cfg.n_layers {
+        let h = layernorm(&x, p.get(&format!("l{l}.ln1_g"))?, p.get(&format!("l{l}.ln1_b"))?);
+        let a = attention(cfg, p, &h, l, &mut cap)?;
+        x = x.add(&a);
+        let h = layernorm(&x, p.get(&format!("l{l}.ln2_g"))?, p.get(&format!("l{l}.ln2_b"))?);
+        let mut h = linear(p, &h, &format!("l{l}.w1"), &mut cap)?;
+        h.map_inplace(gelu);
+        let h = linear(p, &h, &format!("l{l}.w2"), &mut cap)?;
+        x = x.add(&h);
+    }
+    let x = layernorm(&x, p.get("lnf_g")?, p.get("lnf_b")?);
+    Ok(x.matmul(p.get("head")?))
+}
+
+/// Mean next-token NLL of one sequence (`tokens [S+1]`).
+pub fn lm_nll(cfg: &ModelConfig, p: &Checkpoint, tokens: &[i32]) -> Result<f64> {
+    let s = tokens.len() - 1;
+    let logits = forward_lm(cfg, p, &tokens[..s], None)?;
+    let logp = logits.log_softmax_last();
+    let mut total = 0.0f64;
+    for i in 0..s {
+        total -= logp.at2(i, tokens[i + 1] as usize) as f64;
+    }
+    Ok(total / s as f64)
+}
+
+/// Run calibration: forward `n_seqs` sequences, capturing every quant-linear
+/// input (used by GPTQ and SmoothQuant).
+pub fn calibrate_lm(
+    cfg: &ModelConfig,
+    p: &Checkpoint,
+    seqs: &[Vec<i32>],
+    max_rows: usize,
+) -> Result<ActivationCapture> {
+    let mut cap = ActivationCapture::new(max_rows);
+    for seq in seqs {
+        forward_lm(cfg, p, seq, Some(&mut cap))?;
+    }
+    Ok(cap)
+}
+
+// ---------------------------------------------------------------------------
+// Classifier forwards (vision roles, Table 9)
+// ---------------------------------------------------------------------------
+
+/// Classifier kind mirror of `model.py` CLS_ZOO.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ClsKind {
+    Mlp,
+    Cnn,
+}
+
+/// Classifier config (image 16x16x1, 10 classes as in model.py).
+#[derive(Clone, Copy, Debug)]
+pub struct ClsConfig {
+    pub name: &'static str,
+    pub kind: ClsKind,
+    pub image: usize,
+    pub classes: usize,
+    pub hidden: usize,
+    pub channels: usize,
+    pub batch_eval: usize,
+    pub batch_train: usize,
+    pub train_steps: usize,
+}
+
+pub const CLS_ZOO: [ClsConfig; 2] = [
+    ClsConfig { name: "mlp", kind: ClsKind::Mlp, image: 16, classes: 10, hidden: 128, channels: 16, batch_eval: 64, batch_train: 64, train_steps: 400 },
+    ClsConfig { name: "cnn", kind: ClsKind::Cnn, image: 16, classes: 10, hidden: 128, channels: 16, batch_eval: 64, batch_train: 64, train_steps: 400 },
+];
+
+pub fn cls_zoo(name: &str) -> Result<ClsConfig> {
+    CLS_ZOO
+        .iter()
+        .copied()
+        .find(|c| c.name == name)
+        .ok_or_else(|| anyhow::anyhow!("unknown classifier `{name}`"))
+}
+
+impl ClsConfig {
+    pub fn quant_linear_names(&self) -> Vec<String> {
+        match self.kind {
+            ClsKind::Mlp => vec!["fc1".into(), "fc2".into(), "fc3".into()],
+            ClsKind::Cnn => vec!["conv1".into(), "conv2".into(), "fc".into()],
+        }
+    }
+
+    pub fn param_specs(&self) -> Vec<(String, Vec<usize>)> {
+        let n_in = self.image * self.image;
+        match self.kind {
+            ClsKind::Mlp => vec![
+                ("fc1".into(), vec![n_in, self.hidden]),
+                ("b1".into(), vec![self.hidden]),
+                ("fc2".into(), vec![self.hidden, self.hidden]),
+                ("b2".into(), vec![self.hidden]),
+                ("fc3".into(), vec![self.hidden, self.classes]),
+                ("b3".into(), vec![self.classes]),
+            ],
+            ClsKind::Cnn => vec![
+                ("conv1".into(), vec![9, self.channels]),
+                ("cb1".into(), vec![self.channels]),
+                ("conv2".into(), vec![9 * self.channels, self.channels]),
+                ("cb2".into(), vec![self.channels]),
+                ("fc".into(), vec![self.channels, self.classes]),
+                ("fcb".into(), vec![self.classes]),
+            ],
+        }
+    }
+}
+
+/// im2col for 3x3/pad-1 convs, matching `model.py::_im2col`:
+/// `x [B, side*side*chans] -> [B*side*side, 9*chans]`.
+fn im2col(x: &Tensor, side: usize, chans: usize) -> Tensor {
+    let b = x.rows();
+    let mut out = vec![0.0f32; b * side * side * 9 * chans];
+    let ow = 9 * chans;
+    for bi in 0..b {
+        let img = x.row(bi);
+        for y in 0..side {
+            for xx in 0..side {
+                let orow = (bi * side * side + y * side + xx) * ow;
+                for dy in 0..3usize {
+                    for dx in 0..3usize {
+                        let sy = y as isize + dy as isize - 1;
+                        let sx = xx as isize + dx as isize - 1;
+                        if sy < 0 || sx < 0 || sy >= side as isize || sx >= side as isize {
+                            continue;
+                        }
+                        let src = ((sy as usize) * side + sx as usize) * chans;
+                        let dst = orow + (dy * 3 + dx) * chans;
+                        out[dst..dst + chans]
+                            .copy_from_slice(&img[src..src + chans]);
+                    }
+                }
+            }
+        }
+    }
+    Tensor::new(&[b * side * side, ow], out)
+}
+
+fn add_bias(x: &Tensor, b: &Tensor) -> Tensor {
+    let (rows, n) = (x.rows(), x.cols());
+    let mut out = x.clone();
+    for i in 0..rows {
+        let row = out.row_mut(i);
+        for j in 0..n {
+            row[j] += b.data()[j];
+        }
+    }
+    out
+}
+
+/// Classifier forward: `x [B, image*image]` -> logits `[B, classes]`.
+pub fn forward_cls(
+    cfg: &ClsConfig,
+    p: &Checkpoint,
+    x: &Tensor,
+    mut cap: Option<&mut ActivationCapture>,
+) -> Result<Tensor> {
+    match cfg.kind {
+        ClsKind::Mlp => {
+            let mut h = add_bias(&linear(p, x, "fc1", &mut cap)?, p.get("b1")?);
+            h.map_inplace(gelu);
+            let mut h = add_bias(&linear(p, &h, "fc2", &mut cap)?, p.get("b2")?);
+            h.map_inplace(gelu);
+            Ok(add_bias(&linear(p, &h, "fc3", &mut cap)?, p.get("b3")?))
+        }
+        ClsKind::Cnn => {
+            let (b, side, c) = (x.rows(), cfg.image, cfg.channels);
+            let h = im2col(x, side, 1);
+            let mut h = add_bias(&linear(p, &h, "conv1", &mut cap)?, p.get("cb1")?);
+            h.map_inplace(gelu);
+            let h = im2col(&h.reshape(&[b, side * side * c]), side, c);
+            let mut h = add_bias(&linear(p, &h, "conv2", &mut cap)?, p.get("cb2")?);
+            h.map_inplace(gelu);
+            // global average pool over the side*side positions
+            let mut pooled = Tensor::zeros(&[b, c]);
+            for bi in 0..b {
+                for pos in 0..side * side {
+                    let row = h.row(bi * side * side + pos);
+                    let prow = pooled.row_mut(bi);
+                    for j in 0..c {
+                        prow[j] += row[j] / (side * side) as f32;
+                    }
+                }
+            }
+            Ok(add_bias(&linear(p, &pooled, "fc", &mut cap)?, p.get("fcb")?))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model_io::zoo;
+    use crate::rng::Pcg64;
+
+    fn random_ckpt(cfg: &ModelConfig, seed: u64) -> Checkpoint {
+        let mut rng = Pcg64::new(seed);
+        let mut c = Checkpoint::new();
+        for (name, shape) in cfg.param_specs() {
+            let n: usize = shape.iter().product();
+            let leaf = name.rsplit('.').next().unwrap();
+            let t = if leaf.ends_with("_g") {
+                Tensor::full(&shape, 1.0)
+            } else if leaf.ends_with("_b") {
+                Tensor::zeros(&shape)
+            } else {
+                let std = (2.0 / shape[0] as f64).sqrt();
+                Tensor::new(&shape, rng.normal_vec(n, std))
+            };
+            c.insert(&name, t);
+        }
+        c
+    }
+
+    #[test]
+    fn lm_forward_shapes_and_finite() {
+        let cfg = zoo("nano").unwrap();
+        let p = random_ckpt(&cfg, 1);
+        let tokens: Vec<i32> = (0..cfg.seq as i32).map(|i| i % cfg.vocab as i32).collect();
+        let logits = forward_lm(&cfg, &p, &tokens, None).unwrap();
+        assert_eq!(logits.shape(), &[cfg.seq, cfg.vocab]);
+        assert!(logits.data().iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn causality() {
+        // changing a future token must not affect earlier logits
+        let cfg = zoo("nano").unwrap();
+        let p = random_ckpt(&cfg, 2);
+        let mut t1: Vec<i32> = (0..16).map(|i| (i * 3) % cfg.vocab as i32).collect();
+        let l1 = forward_lm(&cfg, &p, &t1, None).unwrap();
+        t1[15] = (t1[15] + 7) % cfg.vocab as i32;
+        let l2 = forward_lm(&cfg, &p, &t1, None).unwrap();
+        for i in 0..15 {
+            for j in 0..cfg.vocab {
+                assert!((l1.at2(i, j) - l2.at2(i, j)).abs() < 1e-5, "pos {i} leaked");
+            }
+        }
+    }
+
+    #[test]
+    fn capture_collects_all_linears() {
+        let cfg = zoo("nano").unwrap();
+        let p = random_ckpt(&cfg, 3);
+        let seqs: Vec<Vec<i32>> = (0..3)
+            .map(|s| (0..16).map(|i| ((i + s * 5) % cfg.vocab) as i32).collect())
+            .collect();
+        let cap = calibrate_lm(&cfg, &p, &seqs, 4096).unwrap();
+        for name in cfg.quant_linear_names() {
+            let x = cap.stacked(&name).unwrap_or_else(|| panic!("missing {name}"));
+            assert_eq!(x.rows(), 3 * 16, "{name}");
+            let expected_k = if name.ends_with("w2") { cfg.d_ff } else { cfg.d_model };
+            assert_eq!(x.cols(), expected_k, "{name}");
+        }
+    }
+
+    #[test]
+    fn capture_respects_row_cap() {
+        let cfg = zoo("nano").unwrap();
+        let p = random_ckpt(&cfg, 4);
+        let seqs: Vec<Vec<i32>> =
+            (0..8).map(|_| (0..32).map(|i| i % cfg.vocab as i32).collect()).collect();
+        let cap = calibrate_lm(&cfg, &p, &seqs, 64).unwrap();
+        for name in cfg.quant_linear_names() {
+            let x = cap.stacked(&name).unwrap();
+            assert!(x.rows() <= 96, "{}: {} rows", name, x.rows()); // cap + one seq overshoot
+        }
+    }
+
+    #[test]
+    fn gelu_matches_reference_points() {
+        // values from jax.nn.gelu(approximate=True)
+        assert!((gelu(0.0)).abs() < 1e-7);
+        assert!((gelu(1.0) - 0.841_192).abs() < 1e-4);
+        assert!((gelu(-1.0) + 0.158_808).abs() < 1e-4);
+        assert!((gelu(3.0) - 2.996_36).abs() < 1e-3);
+    }
+
+    #[test]
+    fn cls_forward_shapes() {
+        for cfg in CLS_ZOO {
+            let mut rng = Pcg64::new(5);
+            let mut p = Checkpoint::new();
+            for (name, shape) in cfg.param_specs() {
+                let n: usize = shape.iter().product();
+                let t = if shape.len() == 1 {
+                    Tensor::zeros(&shape)
+                } else {
+                    Tensor::new(&shape, rng.normal_vec(n, (2.0 / shape[0] as f64).sqrt()))
+                };
+                p.insert(&name, t);
+            }
+            let x = Tensor::new(&[4, 256], rng.normal_vec(4 * 256, 1.0));
+            let logits = forward_cls(&cfg, &p, &x, None).unwrap();
+            assert_eq!(logits.shape(), &[4, cfg.classes]);
+            assert!(logits.data().iter().all(|v| v.is_finite()));
+        }
+    }
+
+    #[test]
+    fn im2col_center_pixel_identity() {
+        // kernel position (1,1) of the patch must be the pixel itself
+        let side = 4;
+        let x = Tensor::from_fn(&[1, side * side], |i| i as f32);
+        let pat = im2col(&x, side, 1);
+        assert_eq!(pat.shape(), &[side * side, 9]);
+        for pos in 0..side * side {
+            assert_eq!(pat.at2(pos, 4), pos as f32);
+        }
+    }
+}

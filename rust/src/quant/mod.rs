@@ -1,0 +1,399 @@
+//! Post-training quantization engine: sub-channel blocking, scale search
+//! (absmax / MSE-clip), RTN rounding, GPTQ and SmoothQuant.
+//!
+//! Weight layout everywhere: `[K, N]` = `[in, out]`, matching the L1 kernel.
+//! Sub-channel blocks tile the K (reduction) dimension per output column —
+//! exactly the paper's "sub-channel quantization with block size 128".
+
+mod gptq;
+mod smoothquant;
+
+pub use gptq::{gptq_quantize, GptqConfig};
+pub use smoothquant::{smooth_scales, SmoothQuant};
+
+use crate::formats::FormatSpec;
+use crate::tensor::Tensor;
+
+/// How scales are chosen per block (paper: "None" vs "MSE" calibration).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Calib {
+    /// absmax scaling (round-to-nearest with full-range clipping).
+    None,
+    /// weight-based MSE clipping: grid-search a clip ratio per block.
+    Mse,
+}
+
+impl Calib {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Calib::None => "None",
+            Calib::Mse => "MSE",
+        }
+    }
+}
+
+/// Sub-channel block size along K; `Channelwise` = one scale per column.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BlockSize {
+    Sub(usize),
+    Channelwise,
+}
+
+impl BlockSize {
+    pub fn resolve(&self, k: usize) -> usize {
+        match *self {
+            BlockSize::Sub(b) => {
+                assert!(k % b == 0, "block {b} does not divide K={k}");
+                b
+            }
+            BlockSize::Channelwise => k,
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            BlockSize::Sub(b) => b.to_string(),
+            BlockSize::Channelwise => "CW".into(),
+        }
+    }
+}
+
+/// Full weight-quantization configuration.
+#[derive(Clone, Debug)]
+pub struct QuantConfig {
+    pub format: FormatSpec,
+    pub block: BlockSize,
+    pub calib: Calib,
+}
+
+impl QuantConfig {
+    pub fn rtn(format: FormatSpec) -> Self {
+        QuantConfig { format, block: BlockSize::Sub(128), calib: Calib::None }
+    }
+}
+
+/// A quantized weight matrix: codes into the codebook + per-block scales.
+#[derive(Clone, Debug)]
+pub struct QuantizedWeight {
+    /// [K, N] codebook indices.
+    pub codes: Vec<i8>,
+    /// [K/block, N] scales.
+    pub scales: Tensor,
+    pub k: usize,
+    pub n: usize,
+    pub block: usize,
+}
+
+impl QuantizedWeight {
+    /// Scales expanded to one per (row, column) — the artifact input layout.
+    pub fn expanded_scales(&self) -> Tensor {
+        let nb = self.k / self.block;
+        let mut out = vec![0.0f32; self.k * self.n];
+        for bi in 0..nb {
+            for r in 0..self.block {
+                let k = bi * self.block + r;
+                out[k * self.n..(k + 1) * self.n]
+                    .copy_from_slice(self.scales.row(bi));
+            }
+        }
+        Tensor::new(&[self.k, self.n], out)
+    }
+
+    /// Dequantized (fake-quant) weights.
+    pub fn dequant(&self, spec: &FormatSpec) -> Tensor {
+        let cb: Vec<f32> = spec.codebook.iter().map(|&v| v as f32).collect();
+        let mut out = vec![0.0f32; self.k * self.n];
+        for k in 0..self.k {
+            let srow = self.scales.row(k / self.block);
+            for j in 0..self.n {
+                out[k * self.n + j] = cb[self.codes[k * self.n + j] as usize] * srow[j];
+            }
+        }
+        Tensor::new(&[self.k, self.n], out)
+    }
+}
+
+/// Scale for one block of values under the given calibration policy.
+///
+/// The codebook is max-|v|=1 normalized, so the absmax scale is simply the
+/// block's absmax; MSE searches clip ratios in (0, 1] against reconstruction
+/// error (paper's "weight-based MSE clipping").
+pub fn block_scale(spec: &FormatSpec, values: &[f32], calib: Calib) -> f32 {
+    block_scale_enc(&spec.encoder(), values, calib)
+}
+
+/// `block_scale` over a prebuilt encoder (hot path; no allocation).
+pub fn block_scale_enc(enc: &crate::formats::Encoder, values: &[f32], calib: Calib) -> f32 {
+    let absmax = values.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+    if absmax == 0.0 {
+        return 1.0; // all-zero block: any scale reconstructs exactly
+    }
+    match calib {
+        Calib::None => absmax,
+        Calib::Mse => {
+            // §Perf iteration 2: coarse-to-fine clip search (10 + 8 points)
+            // instead of a flat 40-point grid — same reconstruction quality
+            // on the paper's formats, ~2.2x faster (bench mse_sf4_1Mx4B).
+            let eval = |ratio: f32| -> f64 {
+                let s = absmax * ratio;
+                let inv = 1.0 / s;
+                let mut err = 0.0f64;
+                for &x in values {
+                    let q = enc.quantize(x * inv) * s;
+                    err += ((x - q) as f64).powi(2);
+                }
+                err
+            };
+            let mut best = (f64::INFINITY, 1.0f32);
+            for i in 0..10 {
+                let ratio = 0.35 + 0.65 * (i as f32 + 1.0) / 10.0;
+                let err = eval(ratio);
+                if err < best.0 {
+                    best = (err, ratio);
+                }
+            }
+            let (lo, hi) = ((best.1 - 0.065).max(0.05), (best.1 + 0.065).min(1.0));
+            for i in 0..8 {
+                let ratio = lo + (hi - lo) * i as f32 / 7.0;
+                let err = eval(ratio);
+                if err < best.0 {
+                    best = (err, ratio);
+                }
+            }
+            absmax * best.1
+        }
+    }
+}
+
+/// Quantize a `[K, N]` weight matrix blockwise (RTN within each block).
+pub fn quantize_weight(w: &Tensor, cfg: &QuantConfig) -> QuantizedWeight {
+    let (k, n) = (w.rows(), w.cols());
+    let block = cfg.block.resolve(k);
+    let nb = k / block;
+    let mut codes = vec![0i8; k * n];
+    let mut scales = Tensor::zeros(&[nb, n]);
+    // §Perf iteration 1: hoist the encoder (midpoint table) out of the
+    // per-element loop — the old per-value `FormatSpec::encode` allocated
+    // its midpoints on every call (28.6 -> see bench_output.txt MB/s).
+    let enc = cfg.format.encoder();
+
+    // gather per-(block, column) values column-major to compute scales
+    let mut colvals = vec![0.0f32; block];
+    for bi in 0..nb {
+        for j in 0..n {
+            for r in 0..block {
+                colvals[r] = w.at2(bi * block + r, j);
+            }
+            let s = block_scale_enc(&enc, &colvals, cfg.calib);
+            scales.set2(bi, j, s);
+            let inv = 1.0 / s;
+            for r in 0..block {
+                let kk = bi * block + r;
+                codes[kk * n + j] = enc.encode(colvals[r] * inv) as i8;
+            }
+        }
+    }
+    QuantizedWeight { codes, scales, k, n, block }
+}
+
+/// Fake-quantize activations per row (absmax), mirroring the L1 `act_quant`
+/// kernel — used by the pure-Rust calibration forward for W4A4.
+pub fn fake_quant_rows(x: &Tensor, spec: &FormatSpec) -> Tensor {
+    let (m, k) = (x.rows(), x.cols());
+    let cbmax = spec.codebook.iter().fold(0.0f64, |a, &v| a.max(v.abs()));
+    let enc = spec.encoder();
+    let mut out = vec![0.0f32; m * k];
+    for i in 0..m {
+        let row = x.row(i);
+        let absmax = row.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+        let s = if absmax > 0.0 { absmax / cbmax as f32 } else { 1.0 };
+        let inv = 1.0 / s;
+        for (j, &v) in row.iter().enumerate() {
+            out[i * k + j] = enc.quantize(v * inv) * s;
+        }
+    }
+    Tensor::new(&[m, k], out)
+}
+
+/// Reconstruction MSE of a quantized weight vs the original.
+pub fn recon_error(w: &Tensor, q: &QuantizedWeight, spec: &FormatSpec) -> f64 {
+    w.sq_err(&q.dequant(spec)) / w.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats;
+    use crate::rng::Pcg64;
+
+    fn rand_w(k: usize, n: usize, seed: u64) -> Tensor {
+        let mut rng = Pcg64::new(seed);
+        Tensor::new(&[k, n], rng.student_t_vec(k * n, 5.0, 0.02))
+    }
+
+    #[test]
+    fn quantize_roundtrip_within_block_error_bound() {
+        let w = rand_w(128, 16, 1);
+        let spec = formats::must("int4");
+        let cfg = QuantConfig {
+            format: spec.clone(),
+            block: BlockSize::Sub(32),
+            calib: Calib::None,
+        };
+        let q = quantize_weight(&w, &cfg);
+        let deq = q.dequant(&spec);
+        // absmax scaling: error <= scale * max(gap/2, 1 - max(cb)); INT4's
+        // asymmetric top (0.875) makes the positive edge the worst case.
+        for bi in 0..4 {
+            for j in 0..16 {
+                let s = q.scales.at2(bi, j);
+                for r in 0..32 {
+                    let k = bi * 32 + r;
+                    let e = (w.at2(k, j) - deq.at2(k, j)).abs();
+                    assert!(e <= s * 0.1251, "err {e} scale {s}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn idempotent() {
+        let w = rand_w(64, 8, 2);
+        let spec = formats::must("sf4");
+        let cfg = QuantConfig {
+            format: spec.clone(),
+            block: BlockSize::Sub(64),
+            calib: Calib::None,
+        };
+        let q1 = quantize_weight(&w, &cfg);
+        let d1 = q1.dequant(&spec);
+        let q2 = quantize_weight(&d1, &cfg);
+        let d2 = q2.dequant(&spec);
+        for (a, b) in d1.data().iter().zip(d2.data()) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn scale_invariance() {
+        // quantizing c*W must equal c * quantize(W) under absmax scaling
+        let w = rand_w(64, 4, 3);
+        let w2 = w.scale(7.5);
+        let spec = formats::must("e2m1");
+        let cfg = QuantConfig {
+            format: spec.clone(),
+            block: BlockSize::Sub(64),
+            calib: Calib::None,
+        };
+        let d1 = quantize_weight(&w, &cfg).dequant(&spec).scale(7.5);
+        let d2 = quantize_weight(&w2, &cfg).dequant(&spec);
+        for (a, b) in d1.data().iter().zip(d2.data()) {
+            assert!((a - b).abs() < 1e-4, "{a} {b}");
+        }
+    }
+
+    #[test]
+    fn zero_weights_survive() {
+        let mut w = rand_w(32, 4, 4);
+        for j in 0..4 {
+            w.set2(5, j, 0.0);
+        }
+        let spec = formats::must("nf4");
+        let cfg = QuantConfig {
+            format: spec.clone(),
+            block: BlockSize::Sub(32),
+            calib: Calib::Mse,
+        };
+        let deq = quantize_weight(&w, &cfg).dequant(&spec);
+        for j in 0..4 {
+            assert_eq!(deq.at2(5, j), 0.0, "zero not preserved");
+        }
+    }
+
+    #[test]
+    fn mse_never_worse_than_absmax() {
+        for fmt in ["int4", "e2m1", "sf4", "e3m0"] {
+            let w = rand_w(128, 8, 5);
+            let spec = formats::must(fmt);
+            let mk = |calib| QuantConfig {
+                format: spec.clone(),
+                block: BlockSize::Sub(128),
+                calib,
+            };
+            let e_none = recon_error(&w, &quantize_weight(&w, &mk(Calib::None)), &spec);
+            let e_mse = recon_error(&w, &quantize_weight(&w, &mk(Calib::Mse)), &spec);
+            assert!(e_mse <= e_none * 1.0001, "{fmt}: {e_mse} vs {e_none}");
+        }
+    }
+
+    #[test]
+    fn smaller_blocks_reduce_error() {
+        let w = rand_w(256, 8, 6);
+        let spec = formats::must("int4");
+        let err = |bs| {
+            let cfg = QuantConfig {
+                format: spec.clone(),
+                block: bs,
+                calib: Calib::None,
+            };
+            recon_error(&w, &quantize_weight(&w, &cfg), &spec)
+        };
+        let e16 = err(BlockSize::Sub(16));
+        let e128 = err(BlockSize::Sub(128));
+        let ecw = err(BlockSize::Channelwise);
+        assert!(e16 < e128, "{e16} {e128}");
+        assert!(e128 <= ecw * 1.0001, "{e128} {ecw}");
+    }
+
+    #[test]
+    fn expanded_scales_shape_and_content() {
+        let w = rand_w(64, 4, 7);
+        let spec = formats::must("sf4");
+        let cfg = QuantConfig {
+            format: spec,
+            block: BlockSize::Sub(16),
+            calib: Calib::None,
+        };
+        let q = quantize_weight(&w, &cfg);
+        let exp = q.expanded_scales();
+        assert_eq!(exp.shape(), &[64, 4]);
+        for k in 0..64 {
+            for j in 0..4 {
+                assert_eq!(exp.at2(k, j), q.scales.at2(k / 16, j));
+            }
+        }
+    }
+
+    #[test]
+    fn sf4_beats_int4_on_t_distributed_weights() {
+        // the paper's core mechanism, in miniature: heavy-tailed weights are
+        // reconstructed better by SF4 than INT4 at the same bit budget.
+        let w = rand_w(256, 32, 8); // t(nu=5) samples
+        let mk = |name: &str| {
+            let spec = formats::must(name);
+            let cfg = QuantConfig {
+                format: spec.clone(),
+                block: BlockSize::Sub(128),
+                calib: Calib::None,
+            };
+            recon_error(&w, &quantize_weight(&w, &cfg), &spec)
+        };
+        let e_sf4 = mk("sf4");
+        let e_int4 = mk("int4");
+        let e_e2m1 = mk("e2m1");
+        assert!(e_sf4 < e_int4, "sf4 {e_sf4} vs int4 {e_int4}");
+        assert!(e_e2m1 < e_int4, "e2m1 {e_e2m1} vs int4 {e_int4}");
+    }
+
+    #[test]
+    fn fake_quant_rows_matches_row_absmax() {
+        let x = rand_w(8, 64, 9);
+        let spec = formats::must("int4");
+        let y = fake_quant_rows(&x, &spec);
+        for i in 0..8 {
+            let am_x: f32 = x.row(i).iter().fold(0.0, |a, &v| a.max(v.abs()));
+            let am_y: f32 = y.row(i).iter().fold(0.0, |a, &v| a.max(v.abs()));
+            assert!(am_y <= am_x * 1.0001);
+        }
+    }
+}

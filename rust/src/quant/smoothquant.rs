@@ -1,0 +1,141 @@
+//! SmoothQuant (Xiao et al., ICML 2023): migrate quantization difficulty
+//! from activations to weights via per-input-channel smoothing.
+//!
+//! For a linear `y = x W` with per-channel activation absmax `a_j` and
+//! weight absmax `w_j` (max over the output dim of row j), the smoothing
+//! factor is `s_j = a_j^alpha / w_j^(1-alpha)`. The model then computes
+//! `y = (x / s) (s W)`: the artifact takes `inv_smooth = 1/s` and the
+//! quantizer sees the pre-scaled weights `s W`.
+
+use crate::tensor::Tensor;
+
+/// Result of the smoothing computation for one linear layer.
+#[derive(Clone, Debug)]
+pub struct SmoothQuant {
+    /// s_j per input channel `[K]`.
+    pub smooth: Vec<f32>,
+    /// 1/s_j, the artifact-side activation multiplier `[K]`.
+    pub inv_smooth: Vec<f32>,
+}
+
+/// Compute smoothing factors from calibration activations `x [M, K]` and
+/// weights `w [K, N]`. `alpha` = 0.5 is the paper's default.
+pub fn smooth_scales(x: &Tensor, w: &Tensor, alpha: f64) -> SmoothQuant {
+    let k = w.rows();
+    assert_eq!(x.cols(), k);
+    let mut a_max = vec![0.0f32; k];
+    for r in 0..x.rows() {
+        for (j, &v) in x.row(r).iter().enumerate() {
+            a_max[j] = a_max[j].max(v.abs());
+        }
+    }
+    let mut w_max = vec![0.0f32; k];
+    for j in 0..k {
+        w_max[j] = w.row(j).iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+    }
+    let mut smooth = vec![1.0f32; k];
+    for j in 0..k {
+        let a = (a_max[j] as f64).max(1e-8);
+        let ww = (w_max[j] as f64).max(1e-8);
+        let s = a.powf(alpha) / ww.powf(1.0 - alpha);
+        smooth[j] = s.clamp(1e-4, 1e4) as f32;
+    }
+    let inv_smooth = smooth.iter().map(|&s| 1.0 / s).collect();
+    SmoothQuant { smooth, inv_smooth }
+}
+
+impl SmoothQuant {
+    /// Weights pre-scaled by s (row-wise): the tensor handed to the
+    /// quantizer.
+    pub fn apply_to_weight(&self, w: &Tensor) -> Tensor {
+        let (k, n) = (w.rows(), w.cols());
+        assert_eq!(self.smooth.len(), k);
+        let mut out = w.clone();
+        for j in 0..k {
+            let s = self.smooth[j];
+            for v in out.row_mut(j) {
+                *v *= s;
+            }
+        }
+        assert_eq!(out.shape(), &[k, n]);
+        out
+    }
+
+    /// Identity smoothing (used when SmoothQuant is disabled).
+    pub fn identity(k: usize) -> Self {
+        SmoothQuant { smooth: vec![1.0; k], inv_smooth: vec![1.0; k] }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    fn setup(seed: u64) -> (Tensor, Tensor) {
+        let mut rng = Pcg64::new(seed);
+        let mut xd = rng.normal_vec(64 * 32, 1.0);
+        // plant activation outliers in a few channels (the SmoothQuant story)
+        for r in 0..64 {
+            xd[r * 32 + 3] *= 40.0;
+            xd[r * 32 + 17] *= 25.0;
+        }
+        let x = Tensor::new(&[64, 32], xd);
+        let w = Tensor::new(&[32, 16], rng.student_t_vec(32 * 16, 5.0, 0.02));
+        (x, w)
+    }
+
+    #[test]
+    fn float_product_is_invariant() {
+        let (x, w) = setup(1);
+        let sq = smooth_scales(&x, &w, 0.5);
+        let w2 = sq.apply_to_weight(&w);
+        // (x .* inv_s) @ (s .* W) == x @ W
+        let mut xs = x.clone();
+        for r in 0..xs.rows() {
+            let row = xs.row_mut(r);
+            for (j, v) in row.iter_mut().enumerate() {
+                *v *= sq.inv_smooth[j];
+            }
+        }
+        let y1 = x.matmul(&w);
+        let y2 = xs.matmul(&w2);
+        for (a, b) in y1.data().iter().zip(y2.data()) {
+            assert!((a - b).abs() < 1e-3 * a.abs().max(1.0), "{a} {b}");
+        }
+    }
+
+    #[test]
+    fn outlier_channels_are_tamed() {
+        let (x, w) = setup(2);
+        let sq = smooth_scales(&x, &w, 0.5);
+        // smoothed activation absmax of the outlier channel shrinks
+        let mut before = 0.0f32;
+        let mut after = 0.0f32;
+        for r in 0..x.rows() {
+            before = before.max(x.at2(r, 3).abs());
+            after = after.max((x.at2(r, 3) * sq.inv_smooth[3]).abs());
+        }
+        assert!(after < before / 3.0, "{after} vs {before}");
+    }
+
+    #[test]
+    fn alpha_zero_moves_nothing_to_weights() {
+        // alpha=0: s_j = 1 / w_max_j — weights normalized to absmax 1/ch.
+        let (x, w) = setup(3);
+        let sq = smooth_scales(&x, &w, 0.0);
+        let w2 = sq.apply_to_weight(&w);
+        for j in 0..w2.rows() {
+            let m = w2.row(j).iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+            assert!((m - 1.0).abs() < 1e-3, "row {j}: {m}");
+        }
+    }
+
+    #[test]
+    fn identity_is_noop() {
+        let (_, w) = setup(4);
+        let sq = SmoothQuant::identity(w.rows());
+        let w2 = sq.apply_to_weight(&w);
+        assert_eq!(w, w2);
+    }
+}

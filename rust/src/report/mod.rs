@@ -1,0 +1,217 @@
+//! Table and figure rendering: aligned text tables (the paper's tables),
+//! TSV emission for downstream plotting, and ASCII scatter plots (Paretos).
+
+use std::fmt::Write as _;
+use std::fs;
+use std::path::Path;
+
+/// A simple column-aligned table with a title; renders to text and TSV.
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    /// Render with aligned columns.
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "## {}", self.title);
+        let line = |cells: &[String], widths: &[usize]| {
+            let mut s = String::new();
+            for i in 0..ncol {
+                if i > 0 {
+                    s.push_str("  ");
+                }
+                let _ = write!(s, "{:width$}", cells[i], width = widths[i]);
+            }
+            s
+        };
+        let _ = writeln!(out, "{}", line(&self.headers, &widths));
+        let total: usize = widths.iter().sum::<usize>() + 2 * (ncol - 1);
+        let _ = writeln!(out, "{}", "-".repeat(total));
+        for row in &self.rows {
+            let _ = writeln!(out, "{}", line(row, &widths));
+        }
+        out
+    }
+
+    /// Write TSV next to the rendered table under `results/`.
+    pub fn save_tsv(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            fs::create_dir_all(dir)?;
+        }
+        let mut s = String::new();
+        let _ = writeln!(s, "# {}", self.title);
+        let _ = writeln!(s, "{}", self.headers.join("\t"));
+        for row in &self.rows {
+            let _ = writeln!(s, "{}", row.join("\t"));
+        }
+        fs::write(path, s)
+    }
+}
+
+/// Format a float with fixed decimals, or "-" for NaN.
+pub fn fnum(v: f64, decimals: usize) -> String {
+    if v.is_nan() {
+        "-".to_string()
+    } else {
+        format!("{v:.decimals$}")
+    }
+}
+
+/// Signed percentage with two decimals (the paper's Delta% cells).
+pub fn pct(v: f64) -> String {
+    if v.is_nan() {
+        "-".to_string()
+    } else {
+        format!("{v:+.2}")
+    }
+}
+
+/// ASCII scatter plot (for the Pareto figures): points labelled by marker
+/// characters, rendered into a `width x height` grid with axes.
+pub struct AsciiScatter {
+    pub title: String,
+    pub xlabel: String,
+    pub ylabel: String,
+    pub points: Vec<(f64, f64, char, String)>,
+}
+
+impl AsciiScatter {
+    pub fn new(title: &str, xlabel: &str, ylabel: &str) -> Self {
+        AsciiScatter {
+            title: title.into(),
+            xlabel: xlabel.into(),
+            ylabel: ylabel.into(),
+            points: Vec::new(),
+        }
+    }
+
+    pub fn point(&mut self, x: f64, y: f64, marker: char, label: &str) {
+        self.points.push((x, y, marker, label.to_string()));
+    }
+
+    pub fn render(&self, width: usize, height: usize) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "## {}", self.title);
+        if self.points.is_empty() {
+            return out;
+        }
+        let (mut xmin, mut xmax) = (f64::INFINITY, f64::NEG_INFINITY);
+        let (mut ymin, mut ymax) = (f64::INFINITY, f64::NEG_INFINITY);
+        for &(x, y, _, _) in &self.points {
+            xmin = xmin.min(x);
+            xmax = xmax.max(x);
+            ymin = ymin.min(y);
+            ymax = ymax.max(y);
+        }
+        let xpad = (xmax - xmin).max(1e-9) * 0.05;
+        let ypad = (ymax - ymin).max(1e-9) * 0.05;
+        xmin -= xpad;
+        xmax += xpad;
+        ymin -= ypad;
+        ymax += ypad;
+        let mut grid = vec![vec![' '; width]; height];
+        for &(x, y, m, _) in &self.points {
+            let cx = ((x - xmin) / (xmax - xmin) * (width - 1) as f64) as usize;
+            let cy = ((y - ymin) / (ymax - ymin) * (height - 1) as f64) as usize;
+            grid[height - 1 - cy][cx] = m;
+        }
+        for (r, rowv) in grid.iter().enumerate() {
+            let yv = ymax - (ymax - ymin) * r as f64 / (height - 1) as f64;
+            let _ = writeln!(out, "{yv:>9.2} |{}", rowv.iter().collect::<String>());
+        }
+        let _ = writeln!(out, "{:>9} +{}", "", "-".repeat(width));
+        let _ = writeln!(
+            out,
+            "{:>10} {:<.2}{}{:>.2}   ({} vs {})",
+            "",
+            xmin,
+            " ".repeat(width.saturating_sub(12)),
+            xmax,
+            self.ylabel,
+            self.xlabel
+        );
+        let _ = writeln!(out, "legend:");
+        for (_, _, m, label) in &self.points {
+            let _ = writeln!(out, "  {m} = {label}");
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("Demo", &["name", "value"]);
+        t.row(vec!["alpha".into(), "1.00".into()]);
+        t.row(vec!["b".into(), "-12.50".into()]);
+        let s = t.render();
+        assert!(s.contains("## Demo"));
+        assert!(s.contains("alpha"));
+        let lines: Vec<&str> = s.lines().collect();
+        // header + rule + 2 rows + title
+        assert_eq!(lines.len(), 5);
+    }
+
+    #[test]
+    fn tsv_roundtrip(){
+        let dir = std::env::temp_dir().join("llmdt_report_test");
+        let mut t = Table::new("T", &["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        let p = dir.join("t.tsv");
+        t.save_tsv(&p).unwrap();
+        let s = std::fs::read_to_string(&p).unwrap();
+        assert!(s.contains("a\tb"));
+        assert!(s.contains("1\t2"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_mismatch_panics() {
+        let mut t = Table::new("T", &["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn scatter_renders() {
+        let mut p = AsciiScatter::new("P", "area", "acc");
+        p.point(1.0, -1.0, 'I', "int4");
+        p.point(2.0, -0.5, 'E', "e2m1");
+        let s = p.render(40, 10);
+        assert!(s.contains('I') && s.contains('E'));
+        assert!(s.contains("legend"));
+    }
+
+    #[test]
+    fn fnum_handles_nan() {
+        assert_eq!(fnum(f64::NAN, 2), "-");
+        assert_eq!(fnum(1.2345, 2), "1.23");
+        assert_eq!(pct(-3.21001), "-3.21");
+    }
+}

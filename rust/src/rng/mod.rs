@@ -1,0 +1,262 @@
+//! Deterministic, seedable RNG + sampling distributions.
+//!
+//! PCG64 (XSL-RR) core with the distributions the repo needs: normal,
+//! Student-t, uniform, Zipf and categorical. Every experiment takes an
+//! explicit seed so tables are exactly reproducible run-to-run.
+
+/// PCG-XSL-RR 128/64 generator.
+#[derive(Clone, Debug)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128,
+}
+
+const PCG_MULT: u128 = 0x2360_ED05_1FC6_5DA4_4385_DF64_9FCC_F645;
+
+impl Pcg64 {
+    pub fn new(seed: u64) -> Self {
+        Self::with_stream(seed, 0xda3e_39cb_94b9_5bdb)
+    }
+
+    pub fn with_stream(seed: u64, stream: u64) -> Self {
+        let mut rng = Pcg64 {
+            state: 0,
+            inc: ((stream as u128) << 1) | 1,
+        };
+        rng.next_u64();
+        rng.state = rng.state.wrapping_add(seed as u128);
+        rng.next_u64();
+        rng
+    }
+
+    /// Derive an independent generator (new stream) — used to hand each
+    /// worker thread its own RNG.
+    pub fn split(&mut self) -> Pcg64 {
+        let seed = self.next_u64();
+        let stream = self.next_u64();
+        Pcg64::with_stream(seed, stream)
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let rot = (self.state >> 122) as u32;
+        let xored = ((self.state >> 64) as u64) ^ (self.state as u64);
+        xored.rotate_right(rot)
+    }
+
+    /// Uniform in [0, 1).
+    pub fn uniform(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [lo, hi).
+    pub fn range(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.uniform()
+    }
+
+    /// Uniform integer in [0, n).
+    pub fn below(&mut self, n: usize) -> usize {
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Standard normal (Box-Muller; one value per call for simplicity).
+    pub fn normal(&mut self) -> f64 {
+        loop {
+            let u1 = self.uniform();
+            if u1 <= f64::MIN_POSITIVE {
+                continue;
+            }
+            let u2 = self.uniform();
+            return (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos();
+        }
+    }
+
+    /// Student-t with `nu` degrees of freedom: t = Z / sqrt(ChiSq_nu / nu).
+    pub fn student_t(&mut self, nu: f64) -> f64 {
+        let z = self.normal();
+        let chi2 = self.gamma(nu / 2.0, 2.0);
+        z / (chi2 / nu).sqrt()
+    }
+
+    /// Gamma(shape k, scale theta) via Marsaglia-Tsang (with Johnk boost for
+    /// k < 1).
+    pub fn gamma(&mut self, k: f64, theta: f64) -> f64 {
+        if k < 1.0 {
+            // boost: Gamma(k) = Gamma(k+1) * U^(1/k)
+            let u = self.uniform().max(f64::MIN_POSITIVE);
+            return self.gamma(k + 1.0, theta) * u.powf(1.0 / k);
+        }
+        let d = k - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = self.normal();
+            let v = (1.0 + c * x).powi(3);
+            if v <= 0.0 {
+                continue;
+            }
+            let u = self.uniform();
+            if u < 1.0 - 0.0331 * x.powi(4)
+                || u.ln() < 0.5 * x * x + d * (1.0 - v + v.ln())
+            {
+                return d * v * theta;
+            }
+        }
+    }
+
+    /// Fill a vector of standard normals scaled by `std`.
+    pub fn normal_vec(&mut self, n: usize, std: f64) -> Vec<f32> {
+        (0..n).map(|_| (self.normal() * std) as f32).collect()
+    }
+
+    /// Fill a vector of Student-t samples scaled by `scale`.
+    pub fn student_t_vec(&mut self, n: usize, nu: f64, scale: f64) -> Vec<f32> {
+        (0..n).map(|_| (self.student_t(nu) * scale) as f32).collect()
+    }
+
+    /// Sample an index from unnormalized weights.
+    pub fn categorical(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        let mut u = self.uniform() * total;
+        for (i, &w) in weights.iter().enumerate() {
+            u -= w;
+            if u <= 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+
+    /// Shuffle a slice in place (Fisher-Yates).
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+}
+
+/// Precomputed Zipf-like sampler over `n` items with exponent `s`.
+pub struct Zipf {
+    cdf: Vec<f64>,
+}
+
+impl Zipf {
+    pub fn new(n: usize, s: f64) -> Self {
+        let mut cdf = Vec::with_capacity(n);
+        let mut acc = 0.0;
+        for k in 1..=n {
+            acc += 1.0 / (k as f64).powf(s);
+            cdf.push(acc);
+        }
+        for c in &mut cdf {
+            *c /= acc;
+        }
+        Zipf { cdf }
+    }
+
+    pub fn sample(&self, rng: &mut Pcg64) -> usize {
+        let u = rng.uniform();
+        match self.cdf.binary_search_by(|c| c.partial_cmp(&u).unwrap()) {
+            Ok(i) => i,
+            Err(i) => i.min(self.cdf.len() - 1),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Pcg64::new(42);
+        let mut b = Pcg64::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Pcg64::new(1);
+        let mut b = Pcg64::new(2);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn uniform_in_range() {
+        let mut rng = Pcg64::new(7);
+        for _ in 0..1000 {
+            let u = rng.uniform();
+            assert!((0.0..1.0).contains(&u));
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Pcg64::new(3);
+        let n = 50_000;
+        let xs: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.03, "var={var}");
+    }
+
+    #[test]
+    fn student_t_heavier_tails_than_normal() {
+        let mut rng = Pcg64::new(11);
+        let n = 50_000;
+        let t3: Vec<f64> = (0..n).map(|_| rng.student_t(3.0)).collect();
+        let frac_beyond_3 = t3.iter().filter(|x| x.abs() > 3.0).count() as f64 / n as f64;
+        // For N(0,1) P(|x|>3) ~ 0.0027; for t(3) it is ~ 0.029.
+        assert!(frac_beyond_3 > 0.015, "{frac_beyond_3}");
+        // t(nu) variance = nu/(nu-2) = 3 for nu=3... use nu=5: var 5/3.
+        let t5: Vec<f64> = (0..n).map(|_| rng.student_t(5.0)).collect();
+        let var = t5.iter().map(|x| x * x).sum::<f64>() / n as f64;
+        assert!((var - 5.0 / 3.0).abs() < 0.15, "var={var}");
+    }
+
+    #[test]
+    fn gamma_mean() {
+        let mut rng = Pcg64::new(5);
+        let n = 30_000;
+        for (k, theta) in [(0.5, 2.0), (2.5, 1.0), (7.0, 0.5)] {
+            let mean: f64 =
+                (0..n).map(|_| rng.gamma(k, theta)).sum::<f64>() / n as f64;
+            assert!((mean - k * theta).abs() < 0.08 * (k * theta), "{k} {theta} {mean}");
+        }
+    }
+
+    #[test]
+    fn zipf_is_monotone() {
+        let mut rng = Pcg64::new(9);
+        let z = Zipf::new(50, 1.1);
+        let mut counts = vec![0usize; 50];
+        for _ in 0..20_000 {
+            counts[z.sample(&mut rng)] += 1;
+        }
+        assert!(counts[0] > counts[10]);
+        assert!(counts[1] > counts[30]);
+    }
+
+    #[test]
+    fn split_streams_are_independent() {
+        let mut root = Pcg64::new(1);
+        let mut a = root.split();
+        let mut b = root.split();
+        let xa: Vec<u64> = (0..8).map(|_| a.next_u64()).collect();
+        let xb: Vec<u64> = (0..8).map(|_| b.next_u64()).collect();
+        assert_ne!(xa, xb);
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Pcg64::new(17);
+        let mut xs: Vec<usize> = (0..100).collect();
+        rng.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+}

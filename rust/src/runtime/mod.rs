@@ -1,0 +1,428 @@
+//! PJRT runtime: load HLO-text artifacts, compile once, execute many.
+//!
+//! Wraps the `xla` crate (PJRT C API, CPU plugin). Artifacts come from
+//! `python/compile/aot.py` as HLO *text* + a `.params.txt` manifest; this
+//! module parses the manifest, marshals typed inputs in manifest order and
+//! unpacks the tuple outputs. Weights can be pinned as device buffers
+//! (`BoundInputs`) so the serve/eval hot loop only uploads the small
+//! per-request tensors.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::tensor::Tensor;
+
+/// Global serialization of PJRT calls — see the SAFETY note on [`Engine`].
+static PJRT_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+fn pjrt_lock() -> std::sync::MutexGuard<'static, ()> {
+    PJRT_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Artifact input/output element type.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dt {
+    F32,
+    I32,
+    I8,
+}
+
+impl Dt {
+    fn parse(s: &str) -> Result<Dt> {
+        Ok(match s {
+            "f32" => Dt::F32,
+            "i32" => Dt::I32,
+            "i8" => Dt::I8,
+            _ => bail!("unknown dtype {s}"),
+        })
+    }
+}
+
+/// One input/output descriptor from the manifest.
+#[derive(Clone, Debug)]
+pub struct ParamSpec {
+    pub name: String,
+    pub dtype: Dt,
+    pub dims: Vec<usize>,
+}
+
+impl ParamSpec {
+    pub fn numel(&self) -> usize {
+        self.dims.iter().product()
+    }
+}
+
+/// Parsed `<artifact>.params.txt`.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub inputs: Vec<ParamSpec>,
+    pub outputs: Vec<ParamSpec>,
+    /// input name -> position
+    pub index: HashMap<String, usize>,
+}
+
+fn parse_manifest(name: &str, text: &str) -> Result<ArtifactMeta> {
+    let mut inputs = Vec::new();
+    let mut outputs = Vec::new();
+    let mut in_outputs = false;
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        if line == "-- outputs --" {
+            in_outputs = true;
+            continue;
+        }
+        let mut parts = line.split_whitespace();
+        let pname = parts.next().ok_or_else(|| anyhow!("bad manifest line: {line}"))?;
+        let dtype = Dt::parse(parts.next().ok_or_else(|| anyhow!("missing dtype: {line}"))?)?;
+        let dims: Vec<usize> = match parts.next() {
+            Some(d) => d
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .map(|s| s.parse())
+                .collect::<Result<_, _>>()?,
+            None => vec![], // scalar
+        };
+        let spec = ParamSpec { name: pname.to_string(), dtype, dims };
+        if in_outputs {
+            outputs.push(spec);
+        } else {
+            inputs.push(spec);
+        }
+    }
+    let index = inputs.iter().enumerate().map(|(i, s)| (s.name.clone(), i)).collect();
+    Ok(ArtifactMeta { name: name.to_string(), inputs, outputs, index })
+}
+
+// ---------------------------------------------------------------------------
+// Typed host values
+// ---------------------------------------------------------------------------
+
+/// A typed host-side value destined for (or read from) the device.
+#[derive(Clone, Debug)]
+pub enum Value {
+    F32(Tensor),
+    I32(Vec<i32>, Vec<usize>),
+    I8(Vec<i8>, Vec<usize>),
+}
+
+impl Value {
+    pub fn dims(&self) -> &[usize] {
+        match self {
+            Value::F32(t) => t.shape(),
+            Value::I32(_, d) | Value::I8(_, d) => d,
+        }
+    }
+
+    pub fn dtype(&self) -> Dt {
+        match self {
+            Value::F32(_) => Dt::F32,
+            Value::I32(..) => Dt::I32,
+            Value::I8(..) => Dt::I8,
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&Tensor> {
+        match self {
+            Value::F32(t) => Ok(t),
+            _ => bail!("value is not f32"),
+        }
+    }
+
+    pub fn scalar_f32(&self) -> Result<f32> {
+        let t = self.as_f32()?;
+        if t.len() != 1 {
+            bail!("expected scalar, got {:?}", t.shape());
+        }
+        Ok(t.data()[0])
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let (ty, dims, bytes): (xla::ElementType, &[usize], &[u8]) = match self {
+            Value::F32(t) => (
+                xla::ElementType::F32,
+                t.shape(),
+                unsafe {
+                    std::slice::from_raw_parts(t.data().as_ptr() as *const u8, t.len() * 4)
+                },
+            ),
+            Value::I32(v, d) => (
+                xla::ElementType::S32,
+                d,
+                unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) },
+            ),
+            Value::I8(v, d) => (
+                xla::ElementType::S8,
+                d,
+                unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len()) },
+            ),
+        };
+        Ok(xla::Literal::create_from_shape_and_untyped_data(ty, dims, bytes)?)
+    }
+
+    fn from_literal(lit: &xla::Literal, spec: &ParamSpec) -> Result<Value> {
+        Ok(match spec.dtype {
+            Dt::F32 => {
+                let v = lit.to_vec::<f32>()?;
+                Value::F32(Tensor::new(&spec.dims, v))
+            }
+            Dt::I32 => Value::I32(lit.to_vec::<i32>()?, spec.dims.clone()),
+            Dt::I8 => Value::I8(lit.to_vec::<i8>()?, spec.dims.clone()),
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Engine + executables
+// ---------------------------------------------------------------------------
+
+/// Process-wide PJRT client handle. Clone freely (Arc inside).
+#[derive(Clone)]
+pub struct Engine {
+    client: Arc<xla::PjRtClient>,
+    artifacts_dir: PathBuf,
+}
+
+// SAFETY: every PJRT call in this module is serialized behind [`pjrt_lock`]
+// (this xla_extension build is not safe under concurrent client use — it
+// SIGSEGVs), so cross-thread access only ever observes the wrappers' raw
+// pointers while holding the lock. XLA's CPU backend parallelizes inside a
+// single execute call via its own Eigen thread pool, so serializing calls
+// costs little.
+unsafe impl Send for Engine {}
+unsafe impl Sync for Engine {}
+unsafe impl Send for Executable {}
+unsafe impl Sync for Executable {}
+unsafe impl Send for BoundInputs {}
+unsafe impl Sync for BoundInputs {}
+
+impl Engine {
+    pub fn cpu(artifacts_dir: impl AsRef<Path>) -> Result<Engine> {
+        let _g = pjrt_lock();
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine {
+            client: Arc::new(client),
+            artifacts_dir: artifacts_dir.as_ref().to_path_buf(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn artifacts_dir(&self) -> &Path {
+        &self.artifacts_dir
+    }
+
+    pub fn artifact_exists(&self, name: &str) -> bool {
+        self.artifacts_dir.join(format!("{name}.hlo.txt")).exists()
+    }
+
+    /// Load + compile one artifact by name (e.g. `lm_fwd_small`).
+    pub fn load(&self, name: &str) -> Result<Executable> {
+        let hlo_path = self.artifacts_dir.join(format!("{name}.hlo.txt"));
+        let manifest_path = self.artifacts_dir.join(format!("{name}.params.txt"));
+        let manifest = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {}", manifest_path.display()))?;
+        let meta = parse_manifest(name, &manifest)?;
+        let proto = xla::HloModuleProto::from_text_file(
+            hlo_path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parsing {}", hlo_path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let _g = pjrt_lock();
+        let exe = self.client.compile(&comp).with_context(|| format!("compiling {name}"))?;
+        Ok(Executable { exe, meta, client: self.client.clone() })
+    }
+}
+
+/// A compiled artifact, ready to execute.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub meta: ArtifactMeta,
+    client: Arc<xla::PjRtClient>,
+}
+
+impl Executable {
+    /// Execute with host values in manifest order; returns outputs in
+    /// manifest order.
+    pub fn run(&self, inputs: &[Value]) -> Result<Vec<Value>> {
+        self.check_inputs(inputs)?;
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(|v| v.to_literal()).collect::<Result<_>>()?;
+        let _g = pjrt_lock();
+        let result = self.exe.execute::<xla::Literal>(&literals)?;
+        let mut tuple = result[0][0].to_literal_sync()?;
+        let outs = tuple.decompose_tuple()?;
+        self.unpack(outs)
+    }
+
+    /// Execute with inputs given by name (order-free convenience).
+    pub fn run_named(&self, named: &HashMap<String, Value>) -> Result<Vec<Value>> {
+        let mut inputs = Vec::with_capacity(self.meta.inputs.len());
+        for spec in &self.meta.inputs {
+            let v = named
+                .get(&spec.name)
+                .ok_or_else(|| anyhow!("{}: missing input `{}`", self.meta.name, spec.name))?;
+            inputs.push(v.clone());
+        }
+        self.run(&inputs)
+    }
+
+    /// Pre-upload a fixed set of inputs (weights) as device buffers.
+    ///
+    /// PJRT's BufferFromHostLiteral is asynchronous: the transfer may still
+    /// be reading the literal's host memory when the call returns, so every
+    /// literal is kept alive alongside its buffer for the bind's lifetime.
+    pub fn bind(&self, fixed: &HashMap<String, Value>) -> Result<BoundInputs> {
+        let _g = pjrt_lock();
+        let mut buffers: Vec<Option<xla::PjRtBuffer>> = Vec::new();
+        let mut literals: Vec<xla::Literal> = Vec::new();
+        let mut missing = Vec::new();
+        for spec in &self.meta.inputs {
+            match fixed.get(&spec.name) {
+                Some(v) => {
+                    check_one(&self.meta.name, spec, v)?;
+                    let lit = v.to_literal()?;
+                    let buf = self.client.buffer_from_host_literal(None, &lit)?;
+                    literals.push(lit);
+                    buffers.push(Some(buf));
+                }
+                None => {
+                    buffers.push(None);
+                    missing.push(spec.name.clone());
+                }
+            }
+        }
+        Ok(BoundInputs { buffers, _literals: literals, missing })
+    }
+
+    /// Execute with pre-bound buffers plus the remaining (per-request)
+    /// values by name.
+    pub fn run_bound(
+        &self,
+        bound: &BoundInputs,
+        rest: &HashMap<String, Value>,
+    ) -> Result<Vec<Value>> {
+        let _g = pjrt_lock();
+        let mut owned: Vec<xla::PjRtBuffer> = Vec::new();
+        // keep per-request literals alive until the execution has synced
+        // (async host->device transfer, see `bind`)
+        let mut owned_lits: Vec<xla::Literal> = Vec::new();
+        for (i, spec) in self.meta.inputs.iter().enumerate() {
+            if bound.buffers[i].is_none() {
+                let v = rest.get(&spec.name).ok_or_else(|| {
+                    anyhow!("missing per-request input `{}` for {}", spec.name, self.meta.name)
+                })?;
+                check_one(&self.meta.name, spec, v)?;
+                let lit = v.to_literal()?;
+                owned.push(self.client.buffer_from_host_literal(None, &lit)?);
+                owned_lits.push(lit);
+            }
+        }
+        let mut owned_iter = owned.iter();
+        let mut bufs: Vec<&xla::PjRtBuffer> = Vec::with_capacity(self.meta.inputs.len());
+        for b in &bound.buffers {
+            match b {
+                Some(buf) => bufs.push(buf),
+                None => bufs.push(owned_iter.next().expect("owned buffer count")),
+            }
+        }
+        let result = self.exe.execute_b::<&xla::PjRtBuffer>(&bufs)?;
+        let mut tuple = result[0][0].to_literal_sync()?;
+        drop(owned_lits); // transfers definitely consumed after the sync
+        let outs = tuple.decompose_tuple()?;
+        self.unpack(outs)
+    }
+
+    fn unpack(&self, outs: Vec<xla::Literal>) -> Result<Vec<Value>> {
+        if outs.len() != self.meta.outputs.len() {
+            bail!(
+                "{}: expected {} outputs, got {}",
+                self.meta.name,
+                self.meta.outputs.len(),
+                outs.len()
+            );
+        }
+        outs.iter()
+            .zip(&self.meta.outputs)
+            .map(|(lit, spec)| Value::from_literal(lit, spec))
+            .collect()
+    }
+
+    fn check_inputs(&self, inputs: &[Value]) -> Result<()> {
+        if inputs.len() != self.meta.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.meta.name,
+                self.meta.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (v, spec) in inputs.iter().zip(&self.meta.inputs) {
+            check_one(&self.meta.name, spec, v)?;
+        }
+        Ok(())
+    }
+}
+
+fn check_one(art: &str, spec: &ParamSpec, v: &Value) -> Result<()> {
+    if v.dtype() != spec.dtype || v.dims() != spec.dims.as_slice() {
+        bail!(
+            "{art}: input `{}` expected {:?}{:?}, got {:?}{:?}",
+            spec.name,
+            spec.dtype,
+            spec.dims,
+            v.dtype(),
+            v.dims()
+        );
+    }
+    Ok(())
+}
+
+/// Device-resident fixed inputs (weights) for a specific executable.
+pub struct BoundInputs {
+    buffers: Vec<Option<xla::PjRtBuffer>>,
+    /// Host literals backing the buffers (async transfer — see `bind`).
+    _literals: Vec<xla::Literal>,
+    /// Names that must be supplied per call.
+    pub missing: Vec<String>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parses_scalars_and_tensors() {
+        let text = "step f32\ntokens i32 8,33\nw f32 16,16\n-- outputs --\nloss f32\n";
+        let m = parse_manifest("t", text).unwrap();
+        assert_eq!(m.inputs.len(), 3);
+        assert_eq!(m.inputs[0].dims.len(), 0);
+        assert_eq!(m.inputs[1].dims, vec![8, 33]);
+        assert_eq!(m.inputs[1].dtype, Dt::I32);
+        assert_eq!(m.outputs.len(), 1);
+        assert_eq!(m.index["w"], 2);
+    }
+
+    #[test]
+    fn manifest_rejects_bad_dtype() {
+        assert!(parse_manifest("t", "x f16 2,2\n-- outputs --\n").is_err());
+    }
+
+    #[test]
+    fn value_shapes() {
+        let v = Value::F32(Tensor::zeros(&[2, 3]));
+        assert_eq!(v.dims(), &[2, 3]);
+        assert_eq!(v.dtype(), Dt::F32);
+        let v = Value::I8(vec![0; 6], vec![6]);
+        assert_eq!(v.dtype(), Dt::I8);
+        assert!(v.as_f32().is_err());
+    }
+}

@@ -1,0 +1,502 @@
+//! Evaluation task suite — synthetic analogues of the paper's benchmarks.
+//!
+//! * `LAMB`  — last-token completion accuracy (LAMBADA role): the most
+//!   perturbation-sensitive metric, exactly as the paper argues.
+//! * `Wiki`  — held-out perplexity (WikiText-2 role).
+//! * `Hella` / `Wino` / `PIQA` / `BoolQ` / `ARC-c` roles — multiple-choice
+//!   items scored by length-normalized option log-probability; corruptions
+//!   differ per task so difficulty and "maskedness" vary like the originals.
+//!
+//! Everything evaluates through the [`LmScorer`] trait so the same code runs
+//! against the XLA executables (request path) and the pure-Rust reference
+//! model (tests).
+
+use anyhow::Result;
+
+use crate::data::Corpus;
+use crate::rng::Pcg64;
+use crate::tensor::Tensor;
+
+/// Batched logits/NLL provider. `B`-sized batches of `S`-token sequences.
+pub trait LmScorer {
+    fn batch(&self) -> usize;
+    fn seq(&self) -> usize;
+    fn vocab(&self) -> usize;
+    /// tokens `[B*S]` -> logits `[B*S, V]`.
+    fn logits(&mut self, tokens: &[i32]) -> Result<Tensor>;
+    /// tokens `[B*(S+1)]` -> (summed next-token NLL, token count).
+    fn nll_sum(&mut self, tokens: &[i32]) -> Result<(f64, f64)> {
+        let (b, s, v) = (self.batch(), self.seq(), self.vocab());
+        let mut inputs = Vec::with_capacity(b * s);
+        for r in 0..b {
+            inputs.extend_from_slice(&tokens[r * (s + 1)..r * (s + 1) + s]);
+        }
+        let logits = self.logits(&inputs)?;
+        let logp = logits.log_softmax_last();
+        let mut total = 0.0f64;
+        for r in 0..b {
+            for i in 0..s {
+                let tgt = tokens[r * (s + 1) + i + 1] as usize;
+                total -= logp.at2(r * s + i, tgt.min(v - 1)) as f64;
+            }
+        }
+        Ok((total, (b * s) as f64))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Completion accuracy (LAMB role)
+// ---------------------------------------------------------------------------
+
+/// Fraction of windows whose final token is argmax-predicted from the prefix.
+pub fn completion_accuracy(scorer: &mut dyn LmScorer, windows: &[Vec<i32>]) -> Result<f64> {
+    let (b, s) = (scorer.batch(), scorer.seq());
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    for chunk in windows.chunks(b) {
+        let mut tokens = vec![0i32; b * s];
+        for (r, w) in chunk.iter().enumerate() {
+            assert!(w.len() >= s + 1, "window too short");
+            tokens[r * s..(r + 1) * s].copy_from_slice(&w[..s]);
+        }
+        let logits = scorer.logits(&tokens)?;
+        for (r, w) in chunk.iter().enumerate() {
+            let row = logits.row(r * s + s - 1);
+            if crate::tensor::argmax(row) == w[s] as usize {
+                correct += 1;
+            }
+            total += 1;
+        }
+    }
+    Ok(correct as f64 / total.max(1) as f64)
+}
+
+/// Held-out perplexity (Wiki role): exp(mean NLL).
+pub fn perplexity(scorer: &mut dyn LmScorer, windows: &[Vec<i32>]) -> Result<f64> {
+    let (b, s) = (scorer.batch(), scorer.seq());
+    let mut nll = 0.0f64;
+    let mut count = 0.0f64;
+    for chunk in windows.chunks(b) {
+        if chunk.len() < b {
+            break; // fixed-shape artifact: drop ragged tail
+        }
+        let mut tokens = Vec::with_capacity(b * (s + 1));
+        for w in chunk {
+            tokens.extend_from_slice(&w[..s + 1]);
+        }
+        let (tn, tc) = scorer.nll_sum(&tokens)?;
+        nll += tn;
+        count += tc;
+    }
+    Ok((nll / count.max(1.0)).exp())
+}
+
+// ---------------------------------------------------------------------------
+// Multiple-choice tasks
+// ---------------------------------------------------------------------------
+
+/// The multiple-choice task roles of the paper's zero-shot suite.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum McTask {
+    Hella, // 4-way, distractors = continuations from elsewhere
+    Wino,  // 2-way, distractor = true continuation with a local swap
+    Piqa,  // 2-way, distractor = re-sampled from the language model
+    Boolq, // 2-way, short continuation, harder cut
+    ArcC,  // 4-way, distractors include reversed + resampled
+}
+
+impl McTask {
+    pub fn label(&self) -> &'static str {
+        match self {
+            McTask::Hella => "Hella",
+            McTask::Wino => "Wino",
+            McTask::Piqa => "PIQA",
+            McTask::Boolq => "BoolQ",
+            McTask::ArcC => "ARC-c",
+        }
+    }
+
+    pub fn n_options(&self) -> usize {
+        match self {
+            McTask::Hella | McTask::ArcC => 4,
+            _ => 2,
+        }
+    }
+
+    fn option_len(&self) -> usize {
+        match self {
+            McTask::Hella => 8,
+            McTask::Wino => 4,
+            McTask::Piqa => 6,
+            McTask::Boolq => 2,
+            McTask::ArcC => 6,
+        }
+    }
+
+    pub const ALL: [McTask; 5] =
+        [McTask::Hella, McTask::Wino, McTask::Piqa, McTask::Boolq, McTask::ArcC];
+}
+
+/// One multiple-choice item.
+#[derive(Clone, Debug)]
+pub struct McItem {
+    pub context: Vec<i32>,
+    pub options: Vec<Vec<i32>>,
+    pub correct: usize,
+}
+
+/// Generate `n` items for a task from the corpus held-out stream.
+pub fn gen_mc_items(
+    corpus: &Corpus,
+    task: McTask,
+    n: usize,
+    context_len: usize,
+    seed: u64,
+) -> Vec<McItem> {
+    let mut rng = Pcg64::with_stream(seed, task as u64 + 0x40);
+    let olen = task.option_len();
+    let held = &corpus.heldout;
+    let span = context_len + olen;
+    let mut items = Vec::with_capacity(n);
+    for _ in 0..n {
+        let start = rng.below(held.len() - span - 1);
+        let context = held[start..start + context_len].to_vec();
+        let truth = held[start + context_len..start + span].to_vec();
+        let mut options = vec![truth.clone()];
+        while options.len() < task.n_options() {
+            let opt = match task {
+                McTask::Hella => {
+                    // continuation stolen from elsewhere in the corpus
+                    let s2 = rng.below(held.len() - olen - 1);
+                    held[s2..s2 + olen].to_vec()
+                }
+                McTask::Wino => {
+                    // local swap of two tokens in the true continuation
+                    let mut o = truth.clone();
+                    let i = rng.below(olen - 1);
+                    o.swap(i, i + 1);
+                    o
+                }
+                McTask::Piqa | McTask::Boolq => {
+                    // token-level corruption: resample half the positions
+                    let mut o = truth.clone();
+                    for v in o.iter_mut() {
+                        if rng.uniform() < 0.5 {
+                            *v = rng.below(corpus.vocab) as i32;
+                        }
+                    }
+                    o
+                }
+                McTask::ArcC => {
+                    if options.len() == 1 {
+                        let mut o = truth.clone();
+                        o.reverse();
+                        o
+                    } else {
+                        let s2 = rng.below(held.len() - olen - 1);
+                        held[s2..s2 + olen].to_vec()
+                    }
+                }
+            };
+            if opt != truth {
+                options.push(opt);
+            }
+        }
+        // shuffle option order, remember the truth's slot
+        let mut order: Vec<usize> = (0..options.len()).collect();
+        rng.shuffle(&mut order);
+        let correct = order.iter().position(|&i| i == 0).unwrap();
+        let options = order.into_iter().map(|i| options[i].clone()).collect();
+        items.push(McItem { context, options, correct });
+    }
+    items
+}
+
+/// Score items: an item is correct when the true option has the highest
+/// length-normalized log-probability under the model.
+pub fn mc_accuracy(scorer: &mut dyn LmScorer, items: &[McItem]) -> Result<f64> {
+    let (b, s) = (scorer.batch(), scorer.seq());
+    // flatten (item, option) pairs into fixed-size batches
+    struct Slot {
+        item: usize,
+        option: usize,
+        ctx_len: usize,
+        opt_len: usize,
+    }
+    let mut seqs: Vec<(Vec<i32>, Slot)> = Vec::new();
+    for (ii, item) in items.iter().enumerate() {
+        for (oi, opt) in item.options.iter().enumerate() {
+            let mut t = item.context.clone();
+            t.extend_from_slice(opt);
+            assert!(t.len() <= s, "item longer than artifact seq");
+            let slot = Slot {
+                item: ii,
+                option: oi,
+                ctx_len: item.context.len(),
+                opt_len: opt.len(),
+            };
+            t.resize(s, 0);
+            seqs.push((t, slot));
+        }
+    }
+    let mut scores: Vec<Vec<f64>> =
+        items.iter().map(|it| vec![f64::NEG_INFINITY; it.options.len()]).collect();
+    for chunk in seqs.chunks(b) {
+        let mut tokens = vec![0i32; b * s];
+        for (r, (t, _)) in chunk.iter().enumerate() {
+            tokens[r * s..(r + 1) * s].copy_from_slice(t);
+        }
+        let logits = scorer.logits(&tokens)?;
+        let logp = logits.log_softmax_last();
+        for (r, (t, slot)) in chunk.iter().enumerate() {
+            let mut lp = 0.0f64;
+            for i in 0..slot.opt_len {
+                let pos = slot.ctx_len + i; // token at `pos` predicted at pos-1
+                lp += logp.at2(r * s + pos - 1, t[pos] as usize) as f64;
+            }
+            scores[slot.item][slot.option] = lp / slot.opt_len as f64;
+        }
+    }
+    let mut correct = 0usize;
+    for (item, sc) in items.iter().zip(&scores) {
+        let best = sc
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap();
+        if best == item.correct {
+            correct += 1;
+        }
+    }
+    Ok(correct as f64 / items.len().max(1) as f64)
+}
+
+/// A full evaluation across the paper's task suite.
+#[derive(Clone, Debug)]
+pub struct SuiteResult {
+    pub lamb: f64,
+    pub wiki_ppl: f64,
+    pub mc: Vec<(McTask, f64)>,
+}
+
+impl SuiteResult {
+    /// All accuracy metrics (LAMB + MC tasks), in table order.
+    pub fn accuracies(&self) -> Vec<f64> {
+        let mut v = vec![self.lamb];
+        v.extend(self.mc.iter().map(|(_, a)| *a));
+        v
+    }
+
+    /// Mean relative accuracy change vs a baseline (the paper's Delta%).
+    pub fn rel_change_pct(&self, base: &SuiteResult) -> f64 {
+        let a = self.accuracies();
+        let b = base.accuracies();
+        let mut acc = 0.0f64;
+        let mut n = 0.0f64;
+        for (x, y) in a.iter().zip(&b) {
+            if *y > 0.0 {
+                acc += (x - y) / y * 100.0;
+                n += 1.0;
+            }
+        }
+        acc / n.max(1.0)
+    }
+}
+
+/// Evaluation workload sizes (scaled by `quick` for tests/benches).
+#[derive(Clone, Copy, Debug)]
+pub struct SuiteConfig {
+    pub n_completion: usize,
+    pub n_ppl_windows: usize,
+    pub n_mc_items: usize,
+    pub mc_context: usize,
+    pub seed: u64,
+}
+
+impl SuiteConfig {
+    pub fn standard() -> Self {
+        SuiteConfig { n_completion: 128, n_ppl_windows: 32, n_mc_items: 48, mc_context: 16, seed: 1234 }
+    }
+
+    pub fn quick() -> Self {
+        SuiteConfig { n_completion: 32, n_ppl_windows: 8, n_mc_items: 12, mc_context: 8, seed: 1234 }
+    }
+}
+
+/// Run the whole suite against one scorer.
+pub fn run_suite(
+    scorer: &mut dyn LmScorer,
+    corpus: &Corpus,
+    cfg: &SuiteConfig,
+) -> Result<SuiteResult> {
+    let s = scorer.seq();
+    let windows = corpus.heldout_windows(cfg.n_completion.max(cfg.n_ppl_windows), s);
+    let lamb = completion_accuracy(scorer, &windows[..cfg.n_completion.min(windows.len())])?;
+    let wiki = perplexity(scorer, &windows[..cfg.n_ppl_windows.min(windows.len())])?;
+    let mut mc = Vec::new();
+    for task in McTask::ALL {
+        let items = gen_mc_items(corpus, task, cfg.n_mc_items, cfg.mc_context, cfg.seed);
+        mc.push((task, mc_accuracy(scorer, &items)?));
+    }
+    Ok(SuiteResult { lamb, wiki_ppl: wiki, mc })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Language;
+
+    /// A scorer that knows the corpus bigram table — near-oracle.
+    struct OracleScorer {
+        b: usize,
+        s: usize,
+        v: usize,
+        bigram: Vec<f32>, // [v, v] log-probs
+    }
+
+    impl OracleScorer {
+        fn new(corpus: &Corpus, v: usize, b: usize, s: usize) -> Self {
+            let mut counts = vec![1.0f32; v * v];
+            for w in corpus.train.windows(2) {
+                counts[w[0] as usize * v + w[1] as usize] += 1.0;
+            }
+            OracleScorer { b, s, v, bigram: counts }
+        }
+    }
+
+    impl LmScorer for OracleScorer {
+        fn batch(&self) -> usize {
+            self.b
+        }
+        fn seq(&self) -> usize {
+            self.s
+        }
+        fn vocab(&self) -> usize {
+            self.v
+        }
+        fn logits(&mut self, tokens: &[i32]) -> Result<Tensor> {
+            let mut out = Tensor::zeros(&[self.b * self.s, self.v]);
+            for r in 0..self.b {
+                for i in 0..self.s {
+                    let prev = tokens[r * self.s + i] as usize;
+                    let row = out.row_mut(r * self.s + i);
+                    for j in 0..self.v {
+                        row[j] = self.bigram[prev * self.v + j].ln();
+                    }
+                }
+            }
+            Ok(out)
+        }
+    }
+
+    /// Uniform-random scorer: the chance-level baseline.
+    struct RandomScorer {
+        b: usize,
+        s: usize,
+        v: usize,
+        rng: Pcg64,
+    }
+
+    impl LmScorer for RandomScorer {
+        fn batch(&self) -> usize {
+            self.b
+        }
+        fn seq(&self) -> usize {
+            self.s
+        }
+        fn vocab(&self) -> usize {
+            self.v
+        }
+        fn logits(&mut self, _tokens: &[i32]) -> Result<Tensor> {
+            let n = self.b * self.s * self.v;
+            let data = (0..n).map(|_| self.rng.normal() as f32 * 0.01).collect();
+            Ok(Tensor::new(&[self.b * self.s, self.v], data))
+        }
+    }
+
+    fn corpus() -> Corpus {
+        let lang = Language::default_for(64, 5);
+        Corpus::build(&lang, 60_000, 20_000, 17)
+    }
+
+    #[test]
+    fn oracle_beats_random_on_completion() {
+        let c = corpus();
+        let windows = c.heldout_windows(64, 16);
+        let mut oracle = OracleScorer::new(&c, 64, 8, 16);
+        let mut random = RandomScorer { b: 8, s: 16, v: 64, rng: Pcg64::new(1) };
+        let a_o = completion_accuracy(&mut oracle, &windows).unwrap();
+        let a_r = completion_accuracy(&mut random, &windows).unwrap();
+        assert!(a_o > a_r + 0.1, "oracle {a_o} vs random {a_r}");
+        assert!(a_r < 0.2);
+    }
+
+    #[test]
+    fn perplexity_ordering() {
+        let c = corpus();
+        let windows = c.heldout_windows(32, 16);
+        let mut oracle = OracleScorer::new(&c, 64, 8, 16);
+        let mut random = RandomScorer { b: 8, s: 16, v: 64, rng: Pcg64::new(2) };
+        let p_o = perplexity(&mut oracle, &windows).unwrap();
+        let p_r = perplexity(&mut random, &windows).unwrap();
+        assert!(p_o < p_r, "oracle ppl {p_o} vs random {p_r}");
+        assert!(p_o < 64.0); // better than uniform over vocab
+        assert!((p_r - 64.0).abs() < 8.0); // random ~ uniform
+    }
+
+    #[test]
+    fn mc_tasks_oracle_above_chance() {
+        let c = corpus();
+        let mut oracle = OracleScorer::new(&c, 64, 8, 32);
+        for task in McTask::ALL {
+            let items = gen_mc_items(&c, task, 64, 12, 3);
+            let acc = mc_accuracy(&mut oracle, &items).unwrap();
+            let chance = 1.0 / task.n_options() as f64;
+            assert!(
+                acc > chance,
+                "{}: oracle {acc} should beat chance {chance}",
+                task.label()
+            );
+        }
+    }
+
+    #[test]
+    fn mc_items_shapes() {
+        let c = corpus();
+        for task in McTask::ALL {
+            let items = gen_mc_items(&c, task, 16, 10, 4);
+            assert_eq!(items.len(), 16);
+            for it in &items {
+                assert_eq!(it.context.len(), 10);
+                assert_eq!(it.options.len(), task.n_options());
+                assert!(it.correct < it.options.len());
+                let olen = it.options[0].len();
+                assert!(it.options.iter().all(|o| o.len() == olen));
+            }
+        }
+    }
+
+    #[test]
+    fn mc_item_generation_deterministic() {
+        let c = corpus();
+        let a = gen_mc_items(&c, McTask::Hella, 8, 10, 9);
+        let b = gen_mc_items(&c, McTask::Hella, 8, 10, 9);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.context, y.context);
+            assert_eq!(x.correct, y.correct);
+        }
+    }
+
+    #[test]
+    fn suite_runs_end_to_end() {
+        let c = corpus();
+        let mut oracle = OracleScorer::new(&c, 64, 8, 32);
+        let r = run_suite(&mut oracle, &c, &SuiteConfig::quick()).unwrap();
+        assert!(r.lamb > 0.0 && r.lamb <= 1.0);
+        assert!(r.wiki_ppl > 1.0);
+        assert_eq!(r.mc.len(), 5);
+        // relative change vs itself is zero
+        assert!(r.rel_change_pct(&r).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,156 @@
+//! Small dense linear algebra in f64 — Cholesky factorization and SPD
+//! solves, used by the GPTQ quantizer's inverse-Hessian updates.
+
+/// Cholesky factorization of a symmetric positive-definite matrix.
+///
+/// `a` is row-major `n x n`; returns lower-triangular `L` with `L L^T = A`.
+/// Fails (None) if the matrix is not positive definite — GPTQ handles this
+/// by increasing the damping term.
+pub fn cholesky(a: &[f64], n: usize) -> Option<Vec<f64>> {
+    assert_eq!(a.len(), n * n);
+    let mut l = vec![0.0f64; n * n];
+    for i in 0..n {
+        for j in 0..=i {
+            let mut sum = a[i * n + j];
+            for k in 0..j {
+                sum -= l[i * n + k] * l[j * n + k];
+            }
+            if i == j {
+                if sum <= 0.0 {
+                    return None;
+                }
+                l[i * n + j] = sum.sqrt();
+            } else {
+                l[i * n + j] = sum / l[j * n + j];
+            }
+        }
+    }
+    Some(l)
+}
+
+/// Solve `A x = b` given the Cholesky factor `L` of `A`.
+pub fn cholesky_solve(l: &[f64], n: usize, b: &[f64]) -> Vec<f64> {
+    // forward: L y = b
+    let mut y = vec![0.0f64; n];
+    for i in 0..n {
+        let mut sum = b[i];
+        for k in 0..i {
+            sum -= l[i * n + k] * y[k];
+        }
+        y[i] = sum / l[i * n + i];
+    }
+    // backward: L^T x = y
+    let mut x = vec![0.0f64; n];
+    for i in (0..n).rev() {
+        let mut sum = y[i];
+        for k in i + 1..n {
+            sum -= l[k * n + i] * x[k];
+        }
+        x[i] = sum / l[i * n + i];
+    }
+    x
+}
+
+/// Invert a symmetric positive-definite matrix via Cholesky.
+pub fn invert_spd(a: &[f64], n: usize) -> Option<Vec<f64>> {
+    let l = cholesky(a, n)?;
+    let mut inv = vec![0.0f64; n * n];
+    let mut e = vec![0.0f64; n];
+    for j in 0..n {
+        e[j] = 1.0;
+        let col = cholesky_solve(&l, n, &e);
+        for i in 0..n {
+            inv[i * n + j] = col[i];
+        }
+        e[j] = 0.0;
+    }
+    Some(inv)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn matmul(a: &[f64], b: &[f64], n: usize) -> Vec<f64> {
+        let mut c = vec![0.0; n * n];
+        for i in 0..n {
+            for k in 0..n {
+                for j in 0..n {
+                    c[i * n + j] += a[i * n + k] * b[k * n + j];
+                }
+            }
+        }
+        c
+    }
+
+    fn spd(n: usize, seed: u64) -> Vec<f64> {
+        // A = B B^T + n I is SPD for any B.
+        let mut state = seed.wrapping_mul(0x9E3779B97F4A7C15) | 1;
+        let mut next = move || {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            (state as f64 / u64::MAX as f64) * 2.0 - 1.0
+        };
+        let b: Vec<f64> = (0..n * n).map(|_| next()).collect();
+        let mut a = vec![0.0; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                for k in 0..n {
+                    a[i * n + j] += b[i * n + k] * b[j * n + k];
+                }
+            }
+            a[i * n + i] += n as f64;
+        }
+        a
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        for n in [1, 2, 5, 17] {
+            let a = spd(n, n as u64);
+            let l = cholesky(&a, n).expect("spd");
+            let mut lt = vec![0.0; n * n];
+            for i in 0..n {
+                for j in 0..n {
+                    lt[i * n + j] = l[j * n + i];
+                }
+            }
+            let rec = matmul(&l, &lt, n);
+            for (x, y) in rec.iter().zip(&a) {
+                assert!((x - y).abs() < 1e-8, "{x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn solve_and_invert() {
+        let n = 9;
+        let a = spd(n, 3);
+        let l = cholesky(&a, n).unwrap();
+        let b: Vec<f64> = (0..n).map(|i| (i as f64).sin()).collect();
+        let x = cholesky_solve(&l, n, &b);
+        // check A x = b
+        for i in 0..n {
+            let mut acc = 0.0;
+            for j in 0..n {
+                acc += a[i * n + j] * x[j];
+            }
+            assert!((acc - b[i]).abs() < 1e-8);
+        }
+        let inv = invert_spd(&a, n).unwrap();
+        let id = matmul(&a, &inv, n);
+        for i in 0..n {
+            for j in 0..n {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((id[i * n + j] - want).abs() < 1e-8);
+            }
+        }
+    }
+
+    #[test]
+    fn non_spd_rejected() {
+        let a = vec![1.0, 2.0, 2.0, 1.0]; // eigenvalues 3, -1
+        assert!(cholesky(&a, 2).is_none());
+    }
+}

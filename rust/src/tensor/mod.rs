@@ -1,0 +1,367 @@
+//! Dense row-major f32 tensors — the numeric substrate for the quantization
+//! engine, the pure-Rust reference model and the fitting code.
+//!
+//! Deliberately small: shapes, views, matmul, reductions. The heavy math on
+//! the request path runs inside the XLA executables; this type backs
+//! calibration, quantization and statistics, so clarity beats generality.
+//! (The offline vendor set has no ndarray; this module is the substitute.)
+
+mod linalg;
+
+pub use linalg::{cholesky, cholesky_solve, invert_spd};
+
+use std::fmt;
+
+/// A dense row-major tensor of `f32`.
+#[derive(Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl fmt::Debug for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor{:?}", self.shape)?;
+        if self.data.len() <= 8 {
+            write!(f, " {:?}", self.data)?;
+        }
+        Ok(())
+    }
+}
+
+impl Tensor {
+    pub fn new(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {shape:?} incompatible with {} elements",
+            data.len()
+        );
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        Tensor { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    pub fn full(shape: &[usize], v: f32) -> Self {
+        Tensor { shape: shape.to_vec(), data: vec![v; shape.iter().product()] }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Tensor { shape: vec![], data: vec![v] }
+    }
+
+    pub fn from_fn(shape: &[usize], mut f: impl FnMut(usize) -> f32) -> Self {
+        let n = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: (0..n).map(|i| f(i)).collect() }
+    }
+
+    // -- accessors ---------------------------------------------------------
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn ndim(&self) -> usize {
+        self.shape.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Number of rows / columns for a rank-2 tensor.
+    pub fn rows(&self) -> usize {
+        assert_eq!(self.ndim(), 2);
+        self.shape[0]
+    }
+
+    pub fn cols(&self) -> usize {
+        assert_eq!(self.ndim(), 2);
+        self.shape[1]
+    }
+
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.shape[1] + j]
+    }
+
+    pub fn set2(&mut self, i: usize, j: usize, v: f32) {
+        self.data[i * self.shape[1] + j] = v;
+    }
+
+    pub fn row(&self, i: usize) -> &[f32] {
+        let c = self.cols();
+        &self.data[i * c..(i + 1) * c]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        let c = self.cols();
+        &mut self.data[i * c..(i + 1) * c]
+    }
+
+    pub fn reshape(mut self, shape: &[usize]) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), self.data.len());
+        self.shape = shape.to_vec();
+        self
+    }
+
+    // -- elementwise -------------------------------------------------------
+
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Self {
+        Tensor { shape: self.shape.clone(), data: self.data.iter().map(|&x| f(x)).collect() }
+    }
+
+    pub fn map_inplace(&mut self, f: impl Fn(f32) -> f32) {
+        for x in &mut self.data {
+            *x = f(*x);
+        }
+    }
+
+    pub fn zip(&self, other: &Tensor, f: impl Fn(f32, f32) -> f32) -> Self {
+        assert_eq!(self.shape, other.shape);
+        let data = self.data.iter().zip(&other.data).map(|(&a, &b)| f(a, b)).collect();
+        Tensor { shape: self.shape.clone(), data }
+    }
+
+    pub fn add(&self, other: &Tensor) -> Self {
+        self.zip(other, |a, b| a + b)
+    }
+
+    pub fn sub(&self, other: &Tensor) -> Self {
+        self.zip(other, |a, b| a - b)
+    }
+
+    pub fn mul(&self, other: &Tensor) -> Self {
+        self.zip(other, |a, b| a * b)
+    }
+
+    pub fn scale(&self, s: f32) -> Self {
+        self.map(|x| x * s)
+    }
+
+    // -- reductions --------------------------------------------------------
+
+    pub fn sum(&self) -> f64 {
+        self.data.iter().map(|&x| x as f64).sum()
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.sum() / self.data.len().max(1) as f64
+    }
+
+    pub fn min(&self) -> f32 {
+        self.data.iter().copied().fold(f32::INFINITY, f32::min)
+    }
+
+    pub fn max(&self) -> f32 {
+        self.data.iter().copied().fold(f32::NEG_INFINITY, f32::max)
+    }
+
+    pub fn abs_max(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+    }
+
+    /// Population variance.
+    pub fn var(&self) -> f64 {
+        let mu = self.mean();
+        self.data.iter().map(|&x| (x as f64 - mu).powi(2)).sum::<f64>()
+            / self.data.len().max(1) as f64
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+
+    /// Sum of squared differences against `other` (reconstruction error).
+    pub fn sq_err(&self, other: &Tensor) -> f64 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(&a, &b)| ((a - b) as f64).powi(2))
+            .sum()
+    }
+
+    // -- linear algebra ----------------------------------------------------
+
+    /// `self [M,K] @ other [K,N] -> [M,N]` with a K-blocked inner loop.
+    pub fn matmul(&self, other: &Tensor) -> Tensor {
+        let (m, k) = (self.rows(), self.cols());
+        let (k2, n) = (other.rows(), other.cols());
+        assert_eq!(k, k2, "matmul shape mismatch {:?} x {:?}", self.shape, other.shape);
+        let mut out = vec![0.0f32; m * n];
+        // ikj loop order: streams `other` rows, vectorizes the j loop.
+        for i in 0..m {
+            let a_row = &self.data[i * k..(i + 1) * k];
+            let o_row = &mut out[i * n..(i + 1) * n];
+            for (kk, &a) in a_row.iter().enumerate() {
+                if a == 0.0 {
+                    continue;
+                }
+                let b_row = &other.data[kk * n..(kk + 1) * n];
+                for j in 0..n {
+                    o_row[j] += a * b_row[j];
+                }
+            }
+        }
+        Tensor::new(&[m, n], out)
+    }
+
+    /// `self [M,K] @ other^T` where `other` is `[N,K]`.
+    pub fn matmul_t(&self, other: &Tensor) -> Tensor {
+        let (m, k) = (self.rows(), self.cols());
+        let (n, k2) = (other.rows(), other.cols());
+        assert_eq!(k, k2);
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            let a_row = &self.data[i * k..(i + 1) * k];
+            for j in 0..n {
+                let b_row = &other.data[j * k..(j + 1) * k];
+                let mut acc = 0.0f32;
+                for kk in 0..k {
+                    acc += a_row[kk] * b_row[kk];
+                }
+                out[i * n + j] = acc;
+            }
+        }
+        Tensor::new(&[m, n], out)
+    }
+
+    pub fn transpose2(&self) -> Tensor {
+        let (m, n) = (self.rows(), self.cols());
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                out[j * m + i] = self.data[i * n + j];
+            }
+        }
+        Tensor::new(&[n, m], out)
+    }
+
+    /// Softmax along the last axis.
+    pub fn softmax_last(&self) -> Tensor {
+        let n = *self.shape.last().expect("softmax on scalar");
+        let mut out = self.clone();
+        for chunk in out.data.chunks_mut(n) {
+            let mx = chunk.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+            let mut z = 0.0f32;
+            for x in chunk.iter_mut() {
+                *x = (*x - mx).exp();
+                z += *x;
+            }
+            for x in chunk.iter_mut() {
+                *x /= z;
+            }
+        }
+        out
+    }
+
+    /// Log-softmax along the last axis (numerically stable).
+    pub fn log_softmax_last(&self) -> Tensor {
+        let n = *self.shape.last().expect("log_softmax on scalar");
+        let mut out = self.clone();
+        for chunk in out.data.chunks_mut(n) {
+            let mx = chunk.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+            let z: f32 = chunk.iter().map(|&x| (x - mx).exp()).sum();
+            let lz = z.ln() + mx;
+            for x in chunk.iter_mut() {
+                *x -= lz;
+            }
+        }
+        out
+    }
+}
+
+/// Argmax of a slice (first maximum wins).
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_small() {
+        let a = Tensor::new(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Tensor::new(&[2, 2], vec![1.0, 1.0, 1.0, 1.0]);
+        assert_eq!(a.matmul(&b).data(), &[3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_t_agrees() {
+        let a = Tensor::from_fn(&[3, 4], |i| i as f32 * 0.3 - 1.0);
+        let b = Tensor::from_fn(&[4, 5], |i| (i as f32).sin());
+        let c1 = a.matmul(&b);
+        let c2 = a.matmul_t(&b.transpose2());
+        for (x, y) in c1.data().iter().zip(c2.data()) {
+            assert!((x - y).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let a = Tensor::from_fn(&[3, 7], |i| i as f32);
+        assert_eq!(a.transpose2().transpose2(), a);
+    }
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let a = Tensor::from_fn(&[4, 8], |i| (i as f32 * 0.7).cos() * 5.0);
+        let s = a.softmax_last();
+        for row in 0..4 {
+            let sum: f32 = s.row(row).iter().sum();
+            assert!((sum - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn log_softmax_matches_softmax() {
+        let a = Tensor::from_fn(&[2, 5], |i| i as f32 * 0.3);
+        let s = a.softmax_last();
+        let ls = a.log_softmax_last();
+        for (p, lp) in s.data().iter().zip(ls.data()) {
+            assert!((p.ln() - lp).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn reductions() {
+        let a = Tensor::new(&[4], vec![1.0, -3.0, 2.0, 0.0]);
+        assert_eq!(a.sum(), 0.0);
+        assert_eq!(a.abs_max(), 3.0);
+        assert_eq!(a.min(), -3.0);
+        assert_eq!(a.max(), 2.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        let a = Tensor::zeros(&[2, 3]);
+        let b = Tensor::zeros(&[2, 3]);
+        a.matmul(&b); // 3 != 2
+    }
+}

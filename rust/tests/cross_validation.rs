@@ -1,0 +1,170 @@
+//! Cross-layer validation: the Rust-derived codebooks must match the
+//! Python-derived ones bit-for-bit-ish (both implement paper Algorithm 1 /
+//! Table 15 independently), and quantizer/distribution invariants hold
+//! under randomized stress (hand-rolled property tests; no proptest in the
+//! offline vendor set).
+
+use llm_datatypes::distfit;
+use llm_datatypes::formats;
+use llm_datatypes::quant::{quantize_weight, BlockSize, Calib, QuantConfig};
+use llm_datatypes::rng::Pcg64;
+use llm_datatypes::tensor::Tensor;
+
+#[test]
+fn rust_codebooks_match_python_emission() {
+    let path = "artifacts/codebooks.tsv";
+    let Ok(text) = std::fs::read_to_string(path) else {
+        eprintln!("skipping: {path} missing (run `make artifacts`)");
+        return;
+    };
+    let mut checked = 0;
+    for line in text.lines() {
+        if line.starts_with('#') || line.trim().is_empty() {
+            continue;
+        }
+        let parts: Vec<&str> = line.split('\t').collect();
+        let name = parts[0];
+        let Some(spec) = formats::get(name) else {
+            // python-only entries (e.g. int8 reference) are fine
+            continue;
+        };
+        let py_values: Vec<f64> = parts[3..].iter().map(|v| v.parse().unwrap()).collect();
+        assert_eq!(
+            py_values.len(),
+            spec.codebook.len(),
+            "{name}: value count differs (py {} vs rust {})",
+            py_values.len(),
+            spec.codebook.len()
+        );
+        for (p, r) in py_values.iter().zip(&spec.codebook) {
+            assert!(
+                (p - r).abs() < 5e-7,
+                "{name}: python {p} vs rust {r} — Algorithm 1 drift"
+            );
+        }
+        checked += 1;
+    }
+    assert!(checked >= 20, "only {checked} formats cross-checked");
+}
+
+/// Property: dequantized output is always a codebook value times the block
+/// scale, for every format, across random shapes/seeds.
+#[test]
+fn prop_dequant_lands_on_grid() {
+    let mut rng = Pcg64::new(0x9409);
+    for trial in 0..60 {
+        let fmt = {
+            let names = formats::all_names();
+            names[rng.below(names.len())]
+        };
+        let spec = formats::must(fmt);
+        let kb = 1 + rng.below(4);
+        let block = [16, 32, 64][rng.below(3)];
+        let k = kb * block;
+        let n = 1 + rng.below(24);
+        let scale_mag = 10f64.powf(rng.range(-3.0, 2.0));
+        let w = Tensor::new(&[k, n], rng.student_t_vec(k * n, 4.0, scale_mag));
+        let cfg = QuantConfig {
+            format: spec.clone(),
+            block: BlockSize::Sub(block),
+            calib: if rng.below(2) == 0 { Calib::None } else { Calib::Mse },
+        };
+        let q = quantize_weight(&w, &cfg);
+        let deq = q.dequant(&spec);
+        for kk in 0..k {
+            for j in 0..n {
+                let s = q.scales.at2(kk / block, j);
+                let v = deq.at2(kk, j);
+                let vn = v / s;
+                let nearest = spec
+                    .codebook
+                    .iter()
+                    .map(|&c| (c - vn as f64).abs())
+                    .fold(f64::INFINITY, f64::min);
+                assert!(
+                    nearest < 1e-5,
+                    "trial {trial} {fmt}: value {vn} off-grid (scale {s})"
+                );
+            }
+        }
+    }
+}
+
+/// Property: quantization error is bounded by scale x worst-case cell.
+#[test]
+fn prop_error_bound() {
+    let mut rng = Pcg64::new(0x0b0b);
+    for _ in 0..40 {
+        let names = formats::all_names();
+        let fmt = names[rng.below(names.len())];
+        let spec = formats::must(fmt);
+        // worst-case normalized error: max(mid-gap, edge clip)
+        let mids = spec.midpoints();
+        let mut worst = 0.0f64;
+        for (i, w) in spec.codebook.windows(2).enumerate() {
+            worst = worst.max((w[1] - w[0]) / 2.0 + 1e-12);
+            let _ = i;
+        }
+        worst = worst.max(1.0 - spec.codebook.last().unwrap());
+        worst = worst.max(1.0 + spec.codebook.first().unwrap());
+        let _ = mids;
+        let k = 64;
+        let w = Tensor::new(&[k, 4], rng.normal_vec(k * 4, 0.5));
+        let cfg = QuantConfig {
+            format: spec.clone(),
+            block: BlockSize::Sub(64),
+            calib: Calib::None,
+        };
+        let q = quantize_weight(&w, &cfg);
+        let deq = q.dequant(&spec);
+        for kk in 0..k {
+            for j in 0..4 {
+                let s = q.scales.at2(0, j) as f64;
+                let e = (w.at2(kk, j) - deq.at2(kk, j)).abs() as f64;
+                assert!(
+                    e <= s * worst * (1.0 + 1e-5) + 1e-12,
+                    "{fmt}: err {e} > bound {} (scale {s})",
+                    s * worst
+                );
+            }
+        }
+    }
+}
+
+/// Property: the t-fit degrees of freedom tracks the planted parameter
+/// monotonically across the paper's range.
+#[test]
+fn prop_distfit_monotone_in_nu() {
+    let mut rng = Pcg64::new(77);
+    let mut fitted = Vec::new();
+    for nu in [2.0, 4.0, 8.0, 16.0] {
+        let xs: Vec<f32> = rng.student_t_vec(12_000, nu, 1.0);
+        fitted.push(distfit::fit_student_t(&distfit::subsample(&xs, 12_000)).nu);
+    }
+    for w in fitted.windows(2) {
+        assert!(w[0] < w[1], "fit not monotone: {fitted:?}");
+    }
+}
+
+/// Property: scales never zero/negative/NaN even on adversarial blocks.
+#[test]
+fn prop_scales_always_valid() {
+    let spec = formats::must("sf4");
+    for data in [
+        vec![0.0f32; 128],                       // all-zero block
+        vec![f32::MIN_POSITIVE; 128],            // denormal-tiny
+        (0..128).map(|i| if i == 0 { 1e30 } else { 0.0 }).collect::<Vec<_>>(), // outlier
+    ] {
+        let w = Tensor::new(&[128, 1], data);
+        for calib in [Calib::None, Calib::Mse] {
+            let cfg = QuantConfig {
+                format: spec.clone(),
+                block: BlockSize::Sub(128),
+                calib,
+            };
+            let q = quantize_weight(&w, &cfg);
+            let s = q.scales.at2(0, 0);
+            assert!(s.is_finite() && s > 0.0, "bad scale {s}");
+        }
+    }
+}

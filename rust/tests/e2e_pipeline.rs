@@ -1,0 +1,89 @@
+//! End-to-end integration: train nano through the AOT step artifact, PTQ
+//! it across formats, evaluate through the XLA graphs, and check the
+//! coordinator's serve loop — the full request path in one test.
+
+use std::sync::OnceLock;
+
+use llm_datatypes::coordinator::model::{GraphKind, LmHandle};
+use llm_datatypes::coordinator::pipeline::{fp32_values, quantize_lm, PipelineConfig};
+use llm_datatypes::coordinator::serve::{run_loadgen, ServeConfig, Server};
+use llm_datatypes::coordinator::{corpus_for, trainer, Session};
+use llm_datatypes::model_io::zoo;
+use llm_datatypes::rng::Pcg64;
+use llm_datatypes::tasks::{completion_accuracy, perplexity};
+
+static SESSION: OnceLock<Option<Session>> = OnceLock::new();
+
+fn session() -> Option<&'static Session> {
+    SESSION
+        .get_or_init(|| {
+            if std::path::Path::new("artifacts/MANIFEST.txt").exists() {
+                Some(Session::open("artifacts", "/tmp/llmdt_e2e_ckpt", "/tmp/llmdt_e2e_results").unwrap())
+            } else {
+                eprintln!("skipping: artifacts missing");
+                None
+            }
+        })
+        .as_ref()
+}
+
+#[test]
+fn train_quantize_eval_serve() {
+    let Some(session) = session() else { return };
+    let cfg = zoo("nano").unwrap();
+    let corpus = corpus_for(&cfg);
+
+    // 1. train through the fused AOT step
+    let (ckpt, trace) =
+        trainer::train_lm(&session.engine, &cfg, &corpus, 50, 0x7e57, 10).unwrap();
+    let first = trace.first().unwrap().1;
+    let last = trace.last().unwrap().1;
+    assert!(last < first - 0.2, "training must reduce loss: {first} -> {last}");
+
+    // 2. fp32 eval through XLA
+    let windows = corpus.heldout_windows(32, cfg.seq);
+    let values = fp32_values(&cfg, &ckpt).unwrap();
+    let mut fp = LmHandle::bind(&session.engine, &cfg, GraphKind::Fp32, &values).unwrap();
+    let acc0 = completion_accuracy(&mut fp, &windows).unwrap();
+    let ppl0 = perplexity(&mut fp, &windows[..16]).unwrap();
+    assert!(ppl0 < cfg.vocab as f64, "trained ppl must beat uniform: {ppl0}");
+
+    // 3. PTQ + eval: 4-bit formats must stay within a sane band of fp32
+    for fmt in ["sf4", "int4"] {
+        let pc = PipelineConfig::weight_only(fmt);
+        let qm = quantize_lm(&cfg, &ckpt, &pc, &corpus).unwrap();
+        let mut h =
+            LmHandle::bind(&session.engine, &cfg, GraphKind::WeightOnly, &qm.values).unwrap();
+        let ppl = perplexity(&mut h, &windows[..16]).unwrap();
+        assert!(
+            ppl < ppl0 * 1.8 && ppl > ppl0 * 0.8,
+            "{fmt}: quantized ppl {ppl} vs fp32 {ppl0}"
+        );
+        let acc = completion_accuracy(&mut h, &windows).unwrap();
+        assert!((acc - acc0).abs() < 0.4);
+    }
+
+    // 4. W4A4 path end to end
+    let pc = PipelineConfig::w4a4("e2m1", true);
+    let qm = quantize_lm(&cfg, &ckpt, &pc, &corpus).unwrap();
+    let mut h = LmHandle::bind(&session.engine, &cfg, GraphKind::W4A4, &qm.values).unwrap();
+    let ppl_w4a4 = perplexity(&mut h, &windows[..16]).unwrap();
+    assert!(ppl_w4a4.is_finite() && ppl_w4a4 < cfg.vocab as f64 * 2.0);
+
+    // 5. serve loop: batched requests, every client answered
+    let qm = quantize_lm(&cfg, &ckpt, &PipelineConfig::weight_only("sf4"), &corpus).unwrap();
+    let handle =
+        LmHandle::bind(&session.engine, &cfg, GraphKind::WeightOnly, &qm.values).unwrap();
+    let server = Server::new(handle, ServeConfig::default());
+    let mut rng = Pcg64::new(5);
+    let prompts: Vec<Vec<i32>> = (0..16)
+        .map(|_| {
+            let start = rng.below(corpus.heldout.len() - cfg.seq);
+            corpus.heldout[start..start + cfg.seq / 2].to_vec()
+        })
+        .collect();
+    let stats = run_loadgen(server, prompts, 4, 8).unwrap();
+    assert_eq!(stats.served, 32);
+    assert!(stats.batches <= 32);
+    assert!(stats.mean_batch_fill >= 1.0);
+}

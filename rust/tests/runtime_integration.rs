@@ -1,0 +1,271 @@
+//! Integration: load the AOT artifacts through PJRT, execute them, and
+//! cross-validate the Rust reference model against the XLA graphs.
+//!
+//! Requires `make artifacts` (skips with a clear message otherwise).
+
+use std::collections::HashMap;
+
+use llm_datatypes::formats;
+use llm_datatypes::model_io::{zoo, Checkpoint};
+use llm_datatypes::nn;
+use llm_datatypes::quant::{quantize_weight, BlockSize, Calib, QuantConfig};
+use llm_datatypes::rng::Pcg64;
+use llm_datatypes::runtime::{Engine, Value};
+use llm_datatypes::tensor::Tensor;
+
+/// One shared PJRT client: concurrent TfrtCpuClient construction from
+/// multiple test threads segfaults inside xla_extension, so every test goes
+/// through this OnceLock (and the quantized sweep serializes executions).
+static ENGINE: std::sync::OnceLock<Option<Engine>> = std::sync::OnceLock::new();
+
+fn engine() -> Option<&'static Engine> {
+    ENGINE
+        .get_or_init(|| {
+            if std::path::Path::new("artifacts/MANIFEST.txt").exists() {
+                Some(Engine::cpu("artifacts").expect("PJRT CPU client"))
+            } else {
+                eprintln!("skipping: artifacts/ missing (run `make artifacts`)");
+                None
+            }
+        })
+        .as_ref()
+}
+
+fn random_ckpt(cfg: &llm_datatypes::model_io::ModelConfig, seed: u64) -> Checkpoint {
+    let mut rng = Pcg64::new(seed);
+    let mut c = Checkpoint::new();
+    for (name, shape) in cfg.param_specs() {
+        let n: usize = shape.iter().product();
+        let leaf = name.rsplit('.').next().unwrap();
+        let t = if leaf.ends_with("_g") {
+            Tensor::full(&shape, 1.0)
+        } else if leaf.ends_with("_b") {
+            Tensor::zeros(&shape)
+        } else {
+            let std = if leaf == "embed" || leaf == "pos" {
+                0.02
+            } else {
+                (2.0 / shape[0] as f64).sqrt()
+            };
+            Tensor::new(&shape, rng.normal_vec(n, std))
+        };
+        c.insert(&name, t);
+    }
+    c
+}
+
+fn fp32_inputs(
+    cfg: &llm_datatypes::model_io::ModelConfig,
+    ckpt: &Checkpoint,
+    tokens: Vec<i32>,
+    s: usize,
+) -> Vec<Value> {
+    let mut inputs = vec![Value::I32(tokens, vec![cfg.batch_eval, s])];
+    for (name, _) in cfg.param_specs() {
+        inputs.push(Value::F32(ckpt.get(&name).unwrap().clone()));
+    }
+    inputs
+}
+
+#[test]
+fn lut_matmul_bench_artifact_matches_host_math() {
+    let Some(engine) = engine() else { return };
+    let exe = engine.load("lut_matmul_bench").unwrap();
+    let (m, k, n, blk) = (256usize, 512usize, 512usize, 128usize);
+    let mut rng = Pcg64::new(1);
+    let x = Tensor::new(&[m, k], rng.normal_vec(m * k, 1.0));
+    let codes: Vec<i8> = (0..k * n).map(|_| rng.below(16) as i8).collect();
+    let scales =
+        Tensor::new(&[k / blk, n], (0..k / blk * n).map(|_| rng.range(0.5, 2.0) as f32).collect());
+    let spec = formats::must("sf4");
+    let cb = Tensor::new(&[16], spec.padded16());
+
+    let outs = exe
+        .run(&[
+            Value::F32(x.clone()),
+            Value::I8(codes.clone(), vec![k, n]),
+            Value::F32(scales.clone()),
+            Value::F32(cb.clone()),
+        ])
+        .unwrap();
+    let y = outs[0].as_f32().unwrap();
+    assert_eq!(y.shape(), &[m, n]);
+
+    // host-side dequant + matmul oracle
+    let cbv = cb.data();
+    let mut w = Tensor::zeros(&[k, n]);
+    for kk in 0..k {
+        for j in 0..n {
+            let s = scales.at2(kk / blk, j);
+            w.set2(kk, j, cbv[codes[kk * n + j] as usize] * s);
+        }
+    }
+    let want = x.matmul(&w);
+    let mut max_rel = 0.0f32;
+    for (a, b) in y.data().iter().zip(want.data()) {
+        max_rel = max_rel.max((a - b).abs() / (b.abs() + 1.0));
+    }
+    assert!(max_rel < 1e-4, "max rel err {max_rel}");
+}
+
+#[test]
+fn fp32_fwd_artifact_matches_rust_reference() {
+    let Some(engine) = engine() else { return };
+    let cfg = zoo("nano").unwrap();
+    let exe = engine.load("lm_fwd_fp32_nano").unwrap();
+    let ckpt = random_ckpt(&cfg, 42);
+    let mut rng = Pcg64::new(7);
+    let tokens: Vec<i32> =
+        (0..cfg.batch_eval * cfg.seq).map(|_| rng.below(cfg.vocab) as i32).collect();
+
+    let outs = exe.run(&fp32_inputs(&cfg, &ckpt, tokens.clone(), cfg.seq)).unwrap();
+    let logits = outs[0].as_f32().unwrap();
+    assert_eq!(logits.shape(), &[cfg.batch_eval, cfg.seq, cfg.vocab]);
+
+    // per-sequence cross-check against the pure-Rust forward
+    for b in 0..cfg.batch_eval {
+        let seq = &tokens[b * cfg.seq..(b + 1) * cfg.seq];
+        let want = nn::forward_lm(&cfg, &ckpt, seq, None).unwrap();
+        for i in 0..cfg.seq {
+            for v in 0..cfg.vocab {
+                let got = logits.data()[(b * cfg.seq + i) * cfg.vocab + v];
+                let w = want.at2(i, v);
+                assert!(
+                    (got - w).abs() < 2e-3 + 2e-3 * w.abs(),
+                    "b={b} i={i} v={v}: xla={got} rust={w}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn quantized_fwd_artifact_runs_all_formats() {
+    let Some(engine) = engine() else { return };
+    let cfg = zoo("nano").unwrap();
+    let exe = engine.load("lm_fwd_nano").unwrap();
+    let ckpt = random_ckpt(&cfg, 43);
+    let mut rng = Pcg64::new(8);
+    let tokens: Vec<i32> =
+        (0..cfg.batch_eval * cfg.seq).map(|_| rng.below(cfg.vocab) as i32).collect();
+
+    for fmt in ["sf4", "nf4", "int4", "e2m1", "e2m1_sp", "apot4"] {
+        let spec = formats::must(fmt);
+        let qcfg = QuantConfig {
+            format: spec.clone(),
+            block: BlockSize::Sub(32),
+            calib: Calib::None,
+        };
+        let mut named: HashMap<String, Value> = HashMap::new();
+        named.insert(
+            "tokens".into(),
+            Value::I32(tokens.clone(), vec![cfg.batch_eval, cfg.seq]),
+        );
+        let qnames = cfg.quant_linear_names();
+        for (name, _) in cfg.param_specs() {
+            let t = ckpt.get(&name).unwrap();
+            if qnames.contains(&name) {
+                let q = quantize_weight(t, &qcfg);
+                named.insert(format!("{name}.codes"), Value::I8(q.codes.clone(), vec![q.k, q.n]));
+                named.insert(format!("{name}.scales"), Value::F32(q.expanded_scales()));
+            } else {
+                named.insert(name.clone(), Value::F32(t.clone()));
+            }
+        }
+        named.insert("codebook".into(), Value::F32(Tensor::new(&[16], spec.padded16())));
+        let outs = exe.run_named(&named).unwrap();
+        let logits = outs[0].as_f32().unwrap();
+        assert!(logits.data().iter().all(|v| v.is_finite()), "{fmt}: non-finite logits");
+
+        // cross-check: XLA quantized fwd == Rust fwd over dequantized ckpt
+        let mut deq_ckpt = ckpt.clone();
+        for name in &qnames {
+            let q = quantize_weight(ckpt.get(name).unwrap(), &qcfg);
+            deq_ckpt.insert(name, q.dequant(&spec));
+        }
+        let seq0 = &tokens[..cfg.seq];
+        let want = nn::forward_lm(&cfg, &deq_ckpt, seq0, None).unwrap();
+        for i in 0..cfg.seq {
+            for v in 0..cfg.vocab {
+                let got = logits.data()[i * cfg.vocab + v];
+                let w = want.at2(i, v);
+                assert!(
+                    (got - w).abs() < 3e-3 + 3e-3 * w.abs(),
+                    "{fmt} i={i} v={v}: xla={got} rust={w}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn bound_inputs_reuse_device_weights() {
+    let Some(engine) = engine() else { return };
+    let cfg = zoo("nano").unwrap();
+    let exe = engine.load("lm_fwd_fp32_nano").unwrap();
+    let ckpt = random_ckpt(&cfg, 44);
+    let mut fixed: HashMap<String, Value> = HashMap::new();
+    for (name, _) in cfg.param_specs() {
+        fixed.insert(name.clone(), Value::F32(ckpt.get(&name).unwrap().clone()));
+    }
+    let bound = exe.bind(&fixed).unwrap();
+    assert_eq!(bound.missing, vec!["tokens".to_string()]);
+
+    let mut rng = Pcg64::new(9);
+    let tokens: Vec<i32> =
+        (0..cfg.batch_eval * cfg.seq).map(|_| rng.below(cfg.vocab) as i32).collect();
+    let mut rest = HashMap::new();
+    rest.insert(
+        "tokens".to_string(),
+        Value::I32(tokens.clone(), vec![cfg.batch_eval, cfg.seq]),
+    );
+    let out_bound = exe.run_bound(&bound, &rest).unwrap();
+    let out_plain = exe.run(&fp32_inputs(&cfg, &ckpt, tokens, cfg.seq)).unwrap();
+    let a = out_bound[0].as_f32().unwrap();
+    let b = out_plain[0].as_f32().unwrap();
+    for (x, y) in a.data().iter().zip(b.data()) {
+        assert!((x - y).abs() < 1e-5);
+    }
+}
+
+#[test]
+fn train_step_artifact_decreases_loss() {
+    let Some(engine) = engine() else { return };
+    let cfg = zoo("nano").unwrap();
+    let exe = engine.load("lm_train_nano").unwrap();
+    let ckpt = random_ckpt(&cfg, 45);
+    let specs = cfg.param_specs();
+
+    let mut params: Vec<Value> =
+        specs.iter().map(|(n, _)| Value::F32(ckpt.get(n).unwrap().clone())).collect();
+    let mut m: Vec<Value> =
+        specs.iter().map(|(_, s)| Value::F32(Tensor::zeros(s))).collect();
+    let mut v: Vec<Value> =
+        specs.iter().map(|(_, s)| Value::F32(Tensor::zeros(s))).collect();
+
+    let mut rng = Pcg64::new(10);
+    let tokens: Vec<i32> = (0..cfg.batch_train * (cfg.seq + 1))
+        .map(|_| rng.below(cfg.vocab) as i32)
+        .collect();
+
+    let mut losses = Vec::new();
+    for step in 0..12 {
+        let mut inputs = vec![
+            Value::F32(Tensor::scalar(step as f32)),
+            Value::I32(tokens.clone(), vec![cfg.batch_train, cfg.seq + 1]),
+        ];
+        inputs.extend(params.iter().cloned());
+        inputs.extend(m.iter().cloned());
+        inputs.extend(v.iter().cloned());
+        let outs = exe.run(&inputs).unwrap();
+        losses.push(outs[0].scalar_f32().unwrap());
+        let np = specs.len();
+        params = outs[1..1 + np].to_vec();
+        m = outs[1 + np..1 + 2 * np].to_vec();
+        v = outs[1 + 2 * np..1 + 3 * np].to_vec();
+    }
+    assert!(
+        losses[11] < losses[0] - 0.3,
+        "loss should drop on a repeated batch: {losses:?}"
+    );
+}
