@@ -1,64 +1,89 @@
-//! Serving demo: a quantized LM behind the request router + dynamic
-//! batcher, with a batch-1 vs batched throughput comparison — the
-//! memory-bound serving scenario that motivates weight-only quantization.
+//! Serving demo: the continuous-batching decode engine generating
+//! multi-token completions over a KV cache, streaming tokens per request —
+//! the memory-bound autoregressive workload that motivates the paper's
+//! weight-only 4-bit formats. Compares fp32 weights against SF4 fake-quant
+//! on sustained decode, then shows one streamed generation up close.
 //!
 //! ```sh
-//! make artifacts && cargo run --release --offline --example serve_demo
+//! cargo run --release --offline --example serve_demo
 //! ```
+//! (Runs the pure-Rust path: no AOT artifacts required. With no trained
+//! checkpoint it serves a Student-t init and says so.)
 
-use std::time::{Duration, Instant};
+use std::sync::mpsc;
+use std::time::Instant;
 
 use anyhow::Result;
-use llm_datatypes::coordinator::model::{GraphKind, LmHandle};
-use llm_datatypes::coordinator::pipeline::{quantize_lm, PipelineConfig};
-use llm_datatypes::coordinator::serve::{run_loadgen, ServeConfig, Server};
-use llm_datatypes::coordinator::{corpus_for, Session};
-use llm_datatypes::exp::ensure_model;
+use llm_datatypes::coordinator::pipeline::{fake_quant_checkpoint, PipelineConfig};
+use llm_datatypes::coordinator::{corpus_for, trainer, Session};
 use llm_datatypes::model_io::zoo;
 use llm_datatypes::rng::Pcg64;
+use llm_datatypes::serving::{
+    run_decode_loadgen, DecodeRequest, Engine, EngineConfig, SchedulerConfig, TokenEvent,
+};
 
 fn main() -> Result<()> {
     let session = Session::open("artifacts", "checkpoints", "results")?;
     let model = "micro";
-    ensure_model(&session, model)?;
     let cfg = zoo(model)?;
-    let ckpt = session.load_checkpoint(model)?;
+    let ckpt = match session.load_checkpoint(model) {
+        Ok(c) => c,
+        Err(_) => {
+            println!("(no trained checkpoint for `{model}`; using a Student-t init)");
+            trainer::init_lm_params(&cfg, 0x5eed)
+        }
+    };
     let corpus = corpus_for(&cfg);
 
-    let pc = PipelineConfig::weight_only("sf4");
-    let qm = quantize_lm(&cfg, &ckpt, &pc, &corpus)?;
-
     let mut rng = Pcg64::new(3);
-    let prompts: Vec<Vec<i32>> = (0..128)
+    let prompts: Vec<Vec<i32>> = (0..32)
         .map(|_| {
             let start = rng.below(corpus.heldout.len() - cfg.seq);
-            corpus.heldout[start..start + cfg.seq / 2].to_vec()
+            corpus.heldout[start..start + cfg.seq / 4].to_vec()
         })
         .collect();
 
-    println!("serving `{model}` quantized to SF4 (batch capacity {})", cfg.batch_eval);
-    for (label, clients, wait) in [
-        ("batch=1 (no coalescing)", 1usize, Duration::from_micros(1)),
-        ("dynamic batching, 16 clients", 16usize, Duration::from_millis(2)),
-    ] {
-        let handle =
-            LmHandle::bind(&session.engine, &cfg, GraphKind::WeightOnly, &qm.values)?;
-        let server =
-            Server::new(handle, ServeConfig { max_wait: wait, max_requests: 0 });
-        let t0 = Instant::now();
-        let total = 128;
-        let stats = run_loadgen(server, prompts.clone(), clients, total / clients)?;
-        let secs = t0.elapsed().as_secs_f64();
-        println!(
-            "{label:32} served {:>4} in {secs:5.2}s = {:6.1} req/s | batches {:>3} \
-             (fill {:.2}) | p50 {:?} p99 {:?}",
-            stats.served,
-            stats.served as f64 / secs,
-            stats.batches,
-            stats.mean_batch_fill,
-            stats.p50_latency,
-            stats.p99_latency
+    // -- sustained decode: fp32 vs SF4 fake-quant weights ------------------
+    let slots = 8usize;
+    let (clients, per_client, max_new) = (8usize, 2usize, 24usize);
+    println!("continuous batching: {slots} KV slots, {clients} streaming clients, {max_new} tokens each");
+    for format in ["fp32", "sf4"] {
+        let weights = match format {
+            "fp32" => ckpt.clone(),
+            f => fake_quant_checkpoint(&cfg, &ckpt, &PipelineConfig::weight_only(f), &corpus)?,
+        };
+        let mut engine = Engine::new(
+            cfg,
+            weights,
+            EngineConfig {
+                slots,
+                kv_capacity: 0,
+                scheduler: SchedulerConfig { max_batch: slots, ..SchedulerConfig::default() },
+            },
         );
+        let report = run_decode_loadgen(&mut engine, &prompts, clients, per_client, max_new)?;
+        println!("  {format:>5}: {report}");
+    }
+
+    // -- one generation, streamed token by token ---------------------------
+    let weights = fake_quant_checkpoint(&cfg, &ckpt, &PipelineConfig::weight_only("sf4"), &corpus)?;
+    let mut engine = Engine::new(cfg, weights, EngineConfig::default());
+    let (req, events) = DecodeRequest::new(prompts[0].clone(), 16);
+    println!("\nstreaming one SF4 generation (prompt {} tokens):", prompts[0].len());
+    let (tx, rx) = mpsc::channel();
+    tx.send(req).ok();
+    drop(tx);
+    let t0 = Instant::now();
+    engine.run(rx)?;
+    print!("  tokens:");
+    for ev in events.try_iter() {
+        match ev {
+            TokenEvent::Token { token, .. } => print!(" {token}"),
+            TokenEvent::Finished { reason, generated, .. } => {
+                println!("\n  done: {generated} tokens ({reason:?}) in {:?}", t0.elapsed());
+            }
+            TokenEvent::Rejected { reason, .. } => println!("\n  rejected: {reason}"),
+        }
     }
     Ok(())
 }

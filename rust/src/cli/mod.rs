@@ -1,11 +1,13 @@
 //! Hand-rolled CLI (clap is not in the offline vendor set).
 //!
 //! ```text
-//! repro train   [--model NAME | --all] [--force]
-//! repro table   <1|2|3|4|5|6|7|8|9|10|12|14|15> [--quick] [--model NAME]
-//! repro figure  <2|3|4|7> [--quick] [--model NAME]
-//! repro serve   [--model NAME] [--format FMT] [--clients N] [--requests N]
-//! repro all     [--quick]
+//! repro train        [--model NAME | --all] [--force]
+//! repro table        <1|2|3|4|5|6|7|8|9|10|12|14|15> [--quick] [--model NAME]
+//! repro figure       <2|3|4|7> [--quick] [--model NAME]
+//! repro serve        [--model NAME] [--format FMT] [--clients N] [--requests N]
+//! repro serve-decode [--model NAME] [--format FMT|fp32] [--clients N]
+//!                    [--requests N] [--max-new T] [--slots S]
+//! repro all          [--quick]
 //! ```
 //! Global flags: `--artifacts DIR --checkpoints DIR --results DIR`.
 
@@ -73,6 +75,10 @@ commands:
   figure  <id> [--quick] [--model NAME]        regenerate a paper figure
           ids: 2 3 4 7
   serve   [--model N] [--format F] [--clients C] [--requests R]
+          one-shot next-token scoring through the decode engine
+  serve-decode [--model N] [--format F|fp32] [--clients C] [--requests R]
+               [--max-new T] [--slots S]
+          continuous-batching multi-token generation (streaming, KV cache)
   all     [--quick]                            every table + figure
 global flags: --artifacts DIR --checkpoints DIR --results DIR
 ";
@@ -96,6 +102,7 @@ pub fn main() -> Result<()> {
         "table" => cmd_table(&session, &args),
         "figure" => cmd_figure(&session, &args),
         "serve" => cmd_serve(&session, &args),
+        "serve-decode" => cmd_serve_decode(&session, &args),
         "all" => cmd_all(&session, &args),
         other => bail!("unknown command `{other}`\n{USAGE}"),
     }
@@ -202,11 +209,54 @@ fn cmd_figure(session: &Session, args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_serve(session: &Session, args: &Args) -> Result<()> {
-    use crate::coordinator::model::{GraphKind, LmHandle};
-    use crate::coordinator::pipeline::{quantize_lm, PipelineConfig};
-    use crate::coordinator::serve::{run_loadgen, ServeConfig, Server};
+/// Trained checkpoint if available, else a deterministic Student-t init so
+/// the pure-Rust serving paths stay runnable without the AOT artifacts.
+fn load_or_init_checkpoint(
+    session: &Session,
+    cfg: &crate::model_io::ModelConfig,
+) -> crate::model_io::Checkpoint {
+    match session.load_checkpoint(cfg.name) {
+        Ok(c) => c,
+        Err(_) => {
+            eprintln!(
+                "note: no trained checkpoint for `{}` — serving a fresh Student-t init \
+                 (run `repro train --model {}` for trained weights)",
+                cfg.name, cfg.name
+            );
+            trainer::init_lm_params(cfg, 0x5eed)
+        }
+    }
+}
+
+/// Weight path for the decode engine: fp32 passthrough or fake-quant
+/// through the requested codebook.
+fn serving_checkpoint(
+    cfg: &crate::model_io::ModelConfig,
+    ckpt: &crate::model_io::Checkpoint,
+    format: &str,
+) -> Result<crate::model_io::Checkpoint> {
+    use crate::coordinator::pipeline::{fake_quant_checkpoint, PipelineConfig};
+    if format == "fp32" {
+        return Ok(ckpt.clone());
+    }
+    let corpus = corpus_for(cfg);
+    fake_quant_checkpoint(cfg, ckpt, &PipelineConfig::weight_only(format), &corpus)
+}
+
+fn serve_prompts(cfg: &crate::model_io::ModelConfig, n: usize, seed: u64) -> Vec<Vec<i32>> {
     use crate::rng::Pcg64;
+    let corpus = corpus_for(cfg);
+    let mut rng = Pcg64::new(seed);
+    (0..n)
+        .map(|_| {
+            let start = rng.below(corpus.heldout.len() - cfg.seq);
+            corpus.heldout[start..start + cfg.seq / 2].to_vec()
+        })
+        .collect()
+}
+
+fn cmd_serve(session: &Session, args: &Args) -> Result<()> {
+    use crate::coordinator::serve::{run_loadgen, ServeConfig, Server};
 
     let model = args.flag("model", "small");
     let format = args.flag("format", "sf4");
@@ -214,23 +264,13 @@ fn cmd_serve(session: &Session, args: &Args) -> Result<()> {
     let requests: usize = args.flag("requests", "64").parse()?;
 
     let cfg = zoo(&model)?;
-    let ckpt = session.load_checkpoint(&model)?;
-    let corpus = corpus_for(&cfg);
-    let pc = PipelineConfig::weight_only(&format);
-    let qm = quantize_lm(&cfg, &ckpt, &pc, &corpus)?;
-    let handle = LmHandle::bind(&session.engine, &cfg, GraphKind::WeightOnly, &qm.values)?;
-    let server = Server::new(handle, ServeConfig::default());
-
-    let mut rng = Pcg64::new(1);
-    let prompts: Vec<Vec<i32>> = (0..64)
-        .map(|_| {
-            let start = rng.below(corpus.heldout.len() - cfg.seq);
-            corpus.heldout[start..start + cfg.seq / 2].to_vec()
-        })
-        .collect();
+    let ckpt = load_or_init_checkpoint(session, &cfg);
+    let ckpt = serving_checkpoint(&cfg, &ckpt, &format)?;
+    let server = Server::new(cfg, ckpt, ServeConfig::default());
+    let prompts = serve_prompts(&cfg, 64, 1);
     let stats = run_loadgen(server, prompts, clients, requests / clients.max(1))?;
     println!(
-        "served {} requests in {} batches (mean fill {:.2}/{}) p50 {:?} p99 {:?}",
+        "served {} requests in {} steps (mean fill {:.2}/{}) p50 {:?} p99 {:?}",
         stats.served,
         stats.batches,
         stats.mean_batch_fill,
@@ -238,6 +278,43 @@ fn cmd_serve(session: &Session, args: &Args) -> Result<()> {
         stats.p50_latency,
         stats.p99_latency
     );
+    Ok(())
+}
+
+fn cmd_serve_decode(session: &Session, args: &Args) -> Result<()> {
+    use crate::serving::{run_decode_loadgen, Engine, EngineConfig, SchedulerConfig};
+
+    let model = args.flag("model", "small");
+    let format = args.flag("format", "sf4");
+    let clients: usize = args.flag("clients", "4").parse()?;
+    let requests: usize = args.flag("requests", "16").parse()?;
+    let max_new: usize = args.flag("max-new", "16").parse()?;
+    let slots: usize = args.flag("slots", "4").parse()?;
+
+    let cfg = zoo(&model)?;
+    let ckpt = load_or_init_checkpoint(session, &cfg);
+    let ckpt = serving_checkpoint(&cfg, &ckpt, &format)?;
+    let mut engine = Engine::new(
+        cfg,
+        ckpt,
+        EngineConfig {
+            slots,
+            kv_capacity: 0,
+            scheduler: SchedulerConfig { max_batch: slots, ..SchedulerConfig::default() },
+        },
+    );
+    println!(
+        "decode engine: model `{}` weights {} | {} KV slots x {} positions ({} KiB cache)",
+        cfg.name,
+        format,
+        engine.cache().slots_total(),
+        engine.cache().capacity(),
+        engine.cache().config().bytes() / 1024,
+    );
+    let prompts = serve_prompts(&cfg, 64, 2);
+    let per_client = (requests / clients.max(1)).max(1);
+    let report = run_decode_loadgen(&mut engine, &prompts, clients, per_client, max_new)?;
+    println!("{report}");
     Ok(())
 }
 

@@ -6,7 +6,8 @@
 //!   weights, implementing [`crate::tasks::LmScorer`].
 //! * [`trainer`] — drives the fused AOT train-step artifacts to train the
 //!   model zoo on synthetic corpora (the E2E path).
-//! * [`serve`] — request router + dynamic batcher over a quantized model.
+//! * [`serve`] — one-shot scoring compatibility shim over the
+//!   continuous-batching decode engine in [`crate::serving`].
 //! * [`runner`] — experiment grid scheduler over a worker pool.
 
 pub mod model;

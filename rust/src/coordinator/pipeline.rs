@@ -191,6 +191,63 @@ pub fn quantize_lm(
     })
 }
 
+/// Run the weight pipeline but keep the result as an nn-compatible
+/// [`Checkpoint`]: every quantized linear is replaced by its dequantized
+/// (fake-quant) reconstruction, all other tensors pass through. This is the
+/// serving engine's weight path — `nn::forward_lm_step` consumes the result
+/// unchanged, so the decode loop exercises exactly the codebook the
+/// `formats`/`quant` stack produced.
+pub fn fake_quant_checkpoint(
+    cfg: &ModelConfig,
+    ckpt: &Checkpoint,
+    pc: &PipelineConfig,
+    corpus: &Corpus,
+) -> Result<Checkpoint> {
+    // SmoothQuant folds an activation rescale into the weights that the
+    // eval graph undoes on the activation side; the nn reference path has
+    // no such hook, so silently applying (or dropping) it would produce a
+    // model that matches neither the fp32 nor the W4A4 artifact. Refuse.
+    anyhow::ensure!(
+        pc.smoothquant.is_none() && pc.act_format.is_none(),
+        "fake_quant_checkpoint supports weight-only configs (smoothquant/act_format must be None)"
+    );
+    let spec = formats::must(&pc.format);
+    let qnames = cfg.quant_linear_names();
+    let capture = if pc.method == QuantMethod::Gptq {
+        let windows = corpus.heldout_windows(pc.calib_seqs, cfg.seq);
+        let seqs: Vec<Vec<i32>> = windows.iter().map(|w| w[..cfg.seq].to_vec()).collect();
+        Some(nn::calibrate_lm(cfg, ckpt, &seqs, 2048)?)
+    } else {
+        None
+    };
+    let mut out = Checkpoint::new();
+    for (name, _) in cfg.param_specs() {
+        let t = ckpt.get(&name)?;
+        if !qnames.contains(&name) {
+            out.insert(&name, t.clone());
+            continue;
+        }
+        let qcfg = QuantConfig {
+            format: spec.clone(),
+            block: pc.resolved_block(t.rows()),
+            calib: pc.calib,
+        };
+        let q = match pc.method {
+            QuantMethod::Rtn => quantize_weight(t, &qcfg),
+            QuantMethod::Gptq => {
+                let x = capture
+                    .as_ref()
+                    .expect("gptq needs calibration")
+                    .stacked(&name)
+                    .ok_or_else(|| anyhow::anyhow!("no calibration acts for {name}"))?;
+                gptq_quantize(t, &x, &qcfg, &GptqConfig::default())
+            }
+        };
+        out.insert(&name, q.dequant(&spec));
+    }
+    Ok(out)
+}
+
 /// fp32 "identity pipeline": artifact inputs for the fp32 eval graphs.
 pub fn fp32_values(cfg: &ModelConfig, ckpt: &Checkpoint) -> Result<HashMap<String, Value>> {
     let mut values = HashMap::new();
@@ -272,6 +329,36 @@ mod tests {
         // GPTQ optimizes task error, not weight MSE, but on these sizes the
         // reconstruction should stay in the same ballpark.
         assert!(gptq.recon_mse < rtn.recon_mse * 10.0);
+    }
+
+    #[test]
+    fn fake_quant_checkpoint_matches_value_path() {
+        let cfg = zoo("nano").unwrap();
+        let c = ckpt(&cfg, 5);
+        let corpus = corpus_for(&cfg);
+        let pc = PipelineConfig::weight_only("sf4");
+        let fq = fake_quant_checkpoint(&cfg, &c, &pc, &corpus).unwrap();
+        // same tensor inventory as the source checkpoint
+        let names: Vec<String> = cfg.param_specs().into_iter().map(|(n, _)| n).collect();
+        for name in &names {
+            assert_eq!(fq.get(name).unwrap().shape(), c.get(name).unwrap().shape(), "{name}");
+        }
+        // quantized linears actually changed, non-quantized passed through
+        for name in cfg.quant_linear_names() {
+            assert!(fq.get(&name).unwrap() != c.get(&name).unwrap(), "{name} unquantized");
+        }
+        assert_eq!(fq.get("embed").unwrap(), c.get("embed").unwrap());
+        // reconstruction agrees with the artifact-value pipeline's MSE scale
+        let qm = quantize_lm(&cfg, &c, &pc, &corpus).unwrap();
+        let mut mse = 0.0f64;
+        let mut n = 0usize;
+        for name in cfg.quant_linear_names() {
+            let w = c.get(&name).unwrap();
+            mse += w.sq_err(fq.get(&name).unwrap()) / w.len() as f64;
+            n += 1;
+        }
+        let mse = mse / n as f64;
+        assert!((mse - qm.recon_mse).abs() < 1e-9, "{mse} vs {}", qm.recon_mse);
     }
 
     #[test]

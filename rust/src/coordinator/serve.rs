@@ -1,20 +1,30 @@
-//! Serve mode: request router + dynamic batcher over a quantized model.
+//! Serve mode — now a thin compatibility shim over the continuous-batching
+//! decode engine in [`crate::serving`].
 //!
-//! The paper's formats are motivated by serving economics (memory-bound
-//! weight-only quantization); this module is the runnable demonstration: a
-//! next-token scoring service where client threads submit prompts, a
-//! batcher coalesces them into fixed-`B` executions of the bound quantized
-//! executable, and a router fans responses back. The dynamic-batching win
-//! is measured by `perf_serve` (EXPERIMENTS.md §Perf).
+//! The original module was a fixed-`B` dynamic batcher doing one-shot
+//! next-token scoring through the bound XLA executable. The public surface
+//! ([`Request`] -> [`Response`], [`ServeConfig`], [`ServeStats`],
+//! [`run_loadgen`]) is preserved, but requests are translated into
+//! single-token [`DecodeRequest`]s on a [`serving::Engine`], which runs the
+//! pure-Rust `nn` path over an fp32 or fake-quant checkpoint
+//! (`coordinator::pipeline::fake_quant_checkpoint`). Multi-token clients
+//! should use `serving::Engine` directly (`repro serve-decode`); this shim
+//! exists so the historical scoring workload and its benchmarks keep
+//! running. Empty prompts are now rejected (the old marshaller underflowed
+//! on `prompt.len() == 0`); rejected clients see their response channel
+//! close without a [`Response`].
 
+use std::collections::HashMap;
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::coordinator::model::LmHandle;
-use crate::tensor::Tensor;
+use crate::model_io::{Checkpoint, ModelConfig};
+use crate::serving::{
+    percentile, DecodeRequest, Engine, EngineConfig, SchedulerConfig, TokenEvent,
+};
 
 /// One scoring request: a prompt (<= seq tokens); response = distribution
 /// over the next token (top-1 id + logprob here).
@@ -32,7 +42,8 @@ pub struct Response {
     pub latency: Duration,
 }
 
-/// Batching policy.
+/// Batching policy (generalized by `serving::SchedulerConfig`; kept for the
+/// scoring shim's callers).
 #[derive(Clone, Copy, Debug)]
 pub struct ServeConfig {
     /// max time the batcher waits to fill a batch
@@ -47,7 +58,8 @@ impl Default for ServeConfig {
     }
 }
 
-/// Aggregate serving statistics.
+/// Aggregate serving statistics. `batches` counts engine steps;
+/// `mean_batch_fill` is the engine's mean batch occupancy.
 #[derive(Clone, Debug, Default)]
 pub struct ServeStats {
     pub served: usize,
@@ -57,100 +69,141 @@ pub struct ServeStats {
     pub mean_batch_fill: f64,
 }
 
-/// The server: owns the handle; `run` consumes a request channel.
+/// The server: a scoring facade over the decode engine.
 pub struct Server {
-    handle: LmHandle,
+    engine: Engine,
     cfg: ServeConfig,
 }
 
 impl Server {
-    pub fn new(handle: LmHandle, cfg: ServeConfig) -> Server {
-        Server { handle, cfg }
+    /// Build from a model config + (fp32 or fake-quant) checkpoint. The
+    /// engine's batch cap mirrors the model's `batch_eval`, like the old
+    /// fixed-`B` batcher.
+    pub fn new(model_cfg: ModelConfig, ckpt: Checkpoint, cfg: ServeConfig) -> Server {
+        let batch = model_cfg.batch_eval.max(1);
+        let engine = Engine::new(
+            model_cfg,
+            ckpt,
+            EngineConfig {
+                slots: batch,
+                kv_capacity: 0,
+                scheduler: SchedulerConfig {
+                    max_batch: batch,
+                    max_wait: cfg.max_wait,
+                    ..SchedulerConfig::default()
+                },
+            },
+        );
+        Server { engine, cfg }
     }
 
     /// Serve until the channel closes (or `max_requests`); returns stats.
     pub fn run(&mut self, rx: mpsc::Receiver<Request>) -> Result<ServeStats> {
-        let b = self.handle.cfg.batch_eval;
-        let s = self.handle.cfg.seq;
-        let mut latencies: Vec<Duration> = Vec::new();
-        let mut fills: Vec<usize> = Vec::new();
-        let mut batches = 0usize;
-        let mut served = 0usize;
+        let (etx, erx) = mpsc::channel::<TokenEvent>();
+        let (dtx, drx) = mpsc::channel::<DecodeRequest>();
+        let registry: Arc<Mutex<HashMap<u64, (mpsc::Sender<Response>, Instant)>>> =
+            Arc::new(Mutex::new(HashMap::new()));
+        let max_requests = self.cfg.max_requests;
+        let engine = &mut self.engine;
+        let engine_dead = Arc::new(std::sync::atomic::AtomicBool::new(false));
 
-        'outer: loop {
-            // block for the first request of a batch
-            let first = match rx.recv() {
-                Ok(r) => r,
-                Err(_) => break,
-            };
-            let mut batch = vec![first];
-            let deadline = Instant::now() + self.cfg.max_wait;
-            while batch.len() < b {
-                let now = Instant::now();
-                if now >= deadline {
-                    break;
-                }
-                match rx.recv_timeout(deadline - now) {
-                    Ok(r) => batch.push(r),
-                    Err(mpsc::RecvTimeoutError::Timeout) => break,
-                    Err(mpsc::RecvTimeoutError::Disconnected) => {
-                        if batch.is_empty() {
-                            break 'outer;
+        std::thread::scope(|scope| -> Result<ServeStats> {
+            // forwarder: old Request -> single-token DecodeRequest. Polls so
+            // it can also exit when the engine dies mid-run (otherwise a
+            // caller holding its Request sender open would pin the scope).
+            let reg = registry.clone();
+            let dead = engine_dead.clone();
+            scope.spawn(move || {
+                let mut next = 0u64;
+                loop {
+                    let req = match rx.recv_timeout(Duration::from_millis(20)) {
+                        Ok(r) => r,
+                        Err(mpsc::RecvTimeoutError::Timeout) => {
+                            if dead.load(std::sync::atomic::Ordering::Relaxed) {
+                                break;
+                            }
+                            continue;
                         }
+                        Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                    };
+                    // reject empty prompts here: dropping the response sender
+                    // closes the client's channel, and the request does not
+                    // consume the max_requests budget (matching the old
+                    // "served" accounting)
+                    if req.prompt.is_empty() {
+                        continue;
+                    }
+                    let id = next;
+                    next += 1;
+                    reg.lock().unwrap().insert(id, (req.resp, req.submitted));
+                    let fwd = DecodeRequest {
+                        id,
+                        prompt: req.prompt,
+                        max_new_tokens: 1,
+                        eos: None,
+                        events: etx.clone(),
+                        submitted: req.submitted,
+                    };
+                    if dtx.send(fwd).is_err() {
+                        break;
+                    }
+                    if max_requests > 0 && next as usize >= max_requests {
                         break;
                     }
                 }
-            }
+                // dropping rx/dtx/etx here closes the pipeline end to end
+            });
 
-            // marshal: left-pad short prompts into fixed [B, S]
-            let mut tokens = vec![0i32; b * s];
-            let mut cue = vec![0usize; batch.len()];
-            for (r, req) in batch.iter().enumerate() {
-                let p = &req.prompt;
-                let n = p.len().min(s);
-                tokens[r * s..r * s + n].copy_from_slice(&p[p.len() - n..]);
-                cue[r] = n - 1;
-            }
-            let logits = self.handle.forward(&tokens)?;
-            let logp = log_softmax_rows(&logits);
-            for (r, req) in batch.iter().enumerate() {
-                let row = logp.row(r * s + cue[r]);
-                let best = crate::tensor::argmax(row);
-                let latency = req.submitted.elapsed();
-                latencies.push(latency);
-                let _ = req.resp.send(Response {
-                    next_token: best as i32,
-                    logprob: row[best],
-                    latency,
-                });
-            }
-            served += batch.len();
-            fills.push(batch.len());
-            batches += 1;
-            if self.cfg.max_requests > 0 && served >= self.cfg.max_requests {
-                break;
-            }
-        }
+            // collector: first streamed token -> Response
+            let reg = registry.clone();
+            let collector = scope.spawn(move || {
+                let mut latencies: Vec<Duration> = Vec::new();
+                let mut served = 0usize;
+                while let Ok(ev) = erx.recv() {
+                    match ev {
+                        TokenEvent::Token { request, token, logprob, .. } => {
+                            if let Some((resp, submitted)) = reg.lock().unwrap().remove(&request)
+                            {
+                                let latency = submitted.elapsed();
+                                latencies.push(latency);
+                                served += 1;
+                                let _ = resp.send(Response {
+                                    next_token: token,
+                                    logprob,
+                                    latency,
+                                });
+                            }
+                        }
+                        TokenEvent::Rejected { request, .. } => {
+                            // drop the response sender: the client's recv errors
+                            reg.lock().unwrap().remove(&request);
+                        }
+                        TokenEvent::Finished { .. } => {}
+                    }
+                }
+                (latencies, served)
+            });
 
-        latencies.sort();
-        let pick = |q: f64| {
-            latencies
-                .get(((latencies.len() as f64 * q) as usize).min(latencies.len().saturating_sub(1)))
-                .copied()
-                .unwrap_or_default()
-        };
-        Ok(ServeStats {
-            served,
-            batches,
-            p50_latency: pick(0.50),
-            p99_latency: pick(0.99),
-            mean_batch_fill: fills.iter().sum::<usize>() as f64 / fills.len().max(1) as f64,
+            let run_res = engine.run(drx);
+            if run_res.is_err() {
+                // unblock everything: the forwarder's poll loop sees the
+                // flag, terminal events cover in-flight work, and dropping
+                // registered response senders releases waiting clients
+                engine_dead.store(true, std::sync::atomic::Ordering::Relaxed);
+                engine.abort();
+                registry.lock().unwrap().clear();
+            }
+            let (latencies, served) = collector.join().expect("collector panicked");
+            let report = run_res?;
+            Ok(ServeStats {
+                served,
+                batches: report.steps,
+                p50_latency: percentile(&latencies, 0.50),
+                p99_latency: percentile(&latencies, 0.99),
+                mean_batch_fill: report.mean_occupancy,
+            })
         })
     }
-}
-
-fn log_softmax_rows(logits: &Tensor) -> Tensor {
-    logits.log_softmax_last()
 }
 
 /// Drive a server with `n_clients` synthetic clients issuing `per_client`
@@ -193,4 +246,87 @@ pub fn run_loadgen(
     })?;
     let st = stats.lock().unwrap().take().expect("server finished");
     st
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::trainer::init_lm_params;
+    use crate::model_io::zoo;
+
+    fn server(cfg: ServeConfig) -> Server {
+        let mc = zoo("nano").unwrap();
+        Server::new(mc, init_lm_params(&mc, 11), cfg)
+    }
+
+    fn prompts(n: usize) -> Vec<Vec<i32>> {
+        (0..n as i32).map(|s| vec![s + 1, s + 2, s + 3, s + 4]).collect()
+    }
+
+    #[test]
+    fn serves_every_client_and_reports_fill() {
+        let st = run_loadgen(server(ServeConfig::default()), prompts(8), 4, 4).unwrap();
+        assert_eq!(st.served, 16);
+        assert!(st.batches >= 1);
+        assert!(st.mean_batch_fill >= 1.0);
+        assert!(st.p50_latency <= st.p99_latency);
+    }
+
+    #[test]
+    fn max_requests_boundary_stops_exactly_there() {
+        // 6 requests offered, cap at 4: exactly 4 served, the rest see their
+        // response channels close instead of hanging
+        let st = run_loadgen(
+            server(ServeConfig { max_requests: 4, ..ServeConfig::default() }),
+            prompts(6),
+            1,
+            6,
+        )
+        .unwrap();
+        assert_eq!(st.served, 4);
+    }
+
+    #[test]
+    fn channel_close_with_no_requests_returns_empty_stats() {
+        let mut srv = server(ServeConfig::default());
+        let (tx, rx) = mpsc::channel::<Request>();
+        drop(tx);
+        let st = srv.run(rx).unwrap();
+        assert_eq!(st.served, 0);
+        assert_eq!(st.batches, 0);
+        assert_eq!(st.p50_latency, Duration::ZERO);
+        assert_eq!(st.p99_latency, Duration::ZERO);
+    }
+
+    #[test]
+    fn empty_prompt_is_rejected_without_panicking() {
+        // the old marshaller computed `cue = n - 1` and underflowed here
+        let mut srv = server(ServeConfig::default());
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (rtx, rrx) = mpsc::channel();
+        tx.send(Request { prompt: vec![], resp: rtx, submitted: Instant::now() }).unwrap();
+        let (rtx2, rrx2) = mpsc::channel();
+        tx.send(Request { prompt: vec![1, 2], resp: rtx2, submitted: Instant::now() }).unwrap();
+        drop(tx);
+        let st = srv.run(rx).unwrap();
+        assert_eq!(st.served, 1, "only the valid request is served");
+        assert!(rrx.recv().is_err(), "rejected client's channel closes");
+        assert!(rrx2.recv().is_ok());
+    }
+
+    #[test]
+    fn responses_carry_finite_logprobs_and_latency() {
+        let mc = zoo("nano").unwrap();
+        let mut srv = Server::new(mc, init_lm_params(&mc, 12), ServeConfig::default());
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (rtx, rrx) = mpsc::channel();
+        tx.send(Request { prompt: vec![3, 1, 4], resp: rtx, submitted: Instant::now() })
+            .unwrap();
+        drop(tx);
+        srv.run(rx).unwrap();
+        let resp = rrx.recv().unwrap();
+        assert!(resp.next_token >= 0 && (resp.next_token as usize) < mc.vocab);
+        assert!(resp.logprob.is_finite() && resp.logprob <= 0.0);
+        assert!(resp.latency > Duration::ZERO);
+    }
 }

@@ -15,7 +15,10 @@ use crate::tensor::Tensor;
 /// Loss trace of one training run (step, loss).
 pub type LossTrace = Vec<(usize, f32)>;
 
-fn init_lm_params(cfg: &ModelConfig, seed: u64) -> Checkpoint {
+/// Fresh LM parameters (heavy-tailed Student-t init, see comment below).
+/// Public because the serving engine, benches and CLI use it as a
+/// checkpoint-less fallback for the pure-Rust decode path.
+pub fn init_lm_params(cfg: &ModelConfig, seed: u64) -> Checkpoint {
     let mut rng = Pcg64::new(seed);
     let mut c = Checkpoint::new();
     for (name, shape) in cfg.param_specs() {

@@ -15,7 +15,8 @@
 //! * model plumbing: [`nn`] (pure-Rust reference forward), [`model_io`],
 //!   [`data`] (synthetic corpora), [`tasks`] (eval suites)
 //! * execution: [`runtime`] (PJRT), [`coordinator`] (experiment scheduler +
-//!   serve loop), [`exp`] (one module per paper table/figure), [`report`]
+//!   serve shim), [`serving`] (continuous-batching decode engine + KV
+//!   cache), [`exp`] (one module per paper table/figure), [`report`]
 //! * tooling: [`cli`], [`bench_util`]
 
 pub mod bench_util;
@@ -32,6 +33,7 @@ pub mod quant;
 pub mod report;
 pub mod rng;
 pub mod runtime;
+pub mod serving;
 pub mod special;
 pub mod tasks;
 pub mod tensor;

@@ -1,0 +1,237 @@
+//! Slot-pool KV cache: preallocated per-layer key/value storage for a fixed
+//! number of concurrent sequences.
+//!
+//! Each *slot* holds one sequence's cache — `[capacity, d_model]` per layer
+//! for K and again for V — and is handed to the incremental forward through
+//! [`SlotView`], which implements [`crate::nn::KvStore`]. Allocation is a
+//! LIFO free list; freeing a retired sequence's slot makes it immediately
+//! available to the next admitted request (continuous batching). All K/V
+//! storage is allocated once at engine start; per-step work allocates only
+//! transient [`SlotView`]s (two `n_layers`-sized slice vectors per borrow).
+
+use crate::model_io::ModelConfig;
+use crate::nn::KvStore;
+
+/// Index of one sequence's cache lane.
+pub type SlotId = usize;
+
+/// Cache geometry. `capacity` is positions per slot (≤ the model's
+/// positional window for the pure-Rust path).
+#[derive(Clone, Copy, Debug)]
+pub struct KvCacheConfig {
+    pub slots: usize,
+    pub capacity: usize,
+    pub n_layers: usize,
+    pub d_model: usize,
+}
+
+impl KvCacheConfig {
+    /// Geometry for a zoo model: one slot per concurrent sequence, capacity
+    /// equal to the positional window.
+    pub fn for_model(cfg: &ModelConfig, slots: usize) -> KvCacheConfig {
+        KvCacheConfig { slots, capacity: cfg.seq, n_layers: cfg.n_layers, d_model: cfg.d_model }
+    }
+
+    /// Total bytes of K+V storage this geometry preallocates.
+    pub fn bytes(&self) -> usize {
+        2 * self.n_layers * self.slots * self.capacity * self.d_model * std::mem::size_of::<f32>()
+    }
+}
+
+/// The pool. K and V are stored per layer as one flat `[slots * capacity *
+/// d_model]` buffer each, sliced per slot on access.
+pub struct KvCache {
+    cfg: KvCacheConfig,
+    k: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+    /// Committed positions per slot.
+    lens: Vec<usize>,
+    in_use: Vec<bool>,
+    free: Vec<SlotId>,
+}
+
+impl KvCache {
+    pub fn new(cfg: KvCacheConfig) -> KvCache {
+        assert!(cfg.slots > 0 && cfg.capacity > 0, "degenerate cache geometry {cfg:?}");
+        let lane = cfg.slots * cfg.capacity * cfg.d_model;
+        KvCache {
+            k: (0..cfg.n_layers).map(|_| vec![0.0; lane]).collect(),
+            v: (0..cfg.n_layers).map(|_| vec![0.0; lane]).collect(),
+            lens: vec![0; cfg.slots],
+            in_use: vec![false; cfg.slots],
+            free: (0..cfg.slots).rev().collect(),
+            cfg,
+        }
+    }
+
+    pub fn config(&self) -> &KvCacheConfig {
+        &self.cfg
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cfg.capacity
+    }
+
+    pub fn slots_total(&self) -> usize {
+        self.cfg.slots
+    }
+
+    pub fn slots_free(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn slots_in_use(&self) -> usize {
+        self.cfg.slots - self.free.len()
+    }
+
+    /// Fraction of slots occupied, in [0, 1].
+    pub fn occupancy(&self) -> f64 {
+        self.slots_in_use() as f64 / self.cfg.slots as f64
+    }
+
+    /// Claim a free slot with an empty cache; `None` when the pool is full.
+    pub fn allocate(&mut self) -> Option<SlotId> {
+        let slot = self.free.pop()?;
+        debug_assert!(!self.in_use[slot]);
+        self.in_use[slot] = true;
+        self.lens[slot] = 0;
+        Some(slot)
+    }
+
+    /// Return a slot to the pool. Panics on double-free (an engine bug).
+    pub fn free(&mut self, slot: SlotId) {
+        assert!(self.in_use[slot], "freeing slot {slot} that is not in use");
+        self.in_use[slot] = false;
+        self.free.push(slot);
+    }
+
+    /// Committed positions in one slot.
+    pub fn len(&self, slot: SlotId) -> usize {
+        self.lens[slot]
+    }
+
+    /// Borrow one slot's lanes as a [`KvStore`] for the incremental forward.
+    pub fn slot(&mut self, slot: SlotId) -> SlotView<'_> {
+        assert!(self.in_use[slot], "viewing slot {slot} that is not in use");
+        let lane = self.cfg.capacity * self.cfg.d_model;
+        let base = slot * lane;
+        SlotView {
+            k: self.k.iter_mut().map(|l| &mut l[base..base + lane]).collect(),
+            v: self.v.iter_mut().map(|l| &mut l[base..base + lane]).collect(),
+            len: &mut self.lens[slot],
+            capacity: self.cfg.capacity,
+        }
+    }
+}
+
+/// Mutable view of one slot's per-layer K/V lanes.
+pub struct SlotView<'a> {
+    k: Vec<&'a mut [f32]>,
+    v: Vec<&'a mut [f32]>,
+    len: &'a mut usize,
+    capacity: usize,
+}
+
+impl KvStore for SlotView<'_> {
+    fn len(&self) -> usize {
+        *self.len
+    }
+
+    fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    fn kv_mut(&mut self, layer: usize) -> (&mut [f32], &mut [f32]) {
+        (&mut *self.k[layer], &mut *self.v[layer])
+    }
+
+    fn advance(&mut self) {
+        *self.len += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> KvCache {
+        KvCache::new(KvCacheConfig { slots: 3, capacity: 4, n_layers: 2, d_model: 8 })
+    }
+
+    #[test]
+    fn allocate_free_accounting() {
+        let mut c = small();
+        assert_eq!(c.slots_free(), 3);
+        assert_eq!(c.slots_in_use(), 0);
+        let a = c.allocate().unwrap();
+        let b = c.allocate().unwrap();
+        assert_ne!(a, b);
+        assert_eq!(c.slots_free(), 1);
+        assert!((c.occupancy() - 2.0 / 3.0).abs() < 1e-12);
+        c.free(a);
+        assert_eq!(c.slots_free(), 2);
+        // freed slot is immediately reusable
+        let a2 = c.allocate().unwrap();
+        assert_eq!(a2, a);
+    }
+
+    #[test]
+    fn exhaustion_returns_none() {
+        let mut c = small();
+        let slots: Vec<_> = (0..3).map(|_| c.allocate().unwrap()).collect();
+        assert!(c.allocate().is_none());
+        c.free(slots[1]);
+        assert!(c.allocate().is_some());
+    }
+
+    #[test]
+    #[should_panic(expected = "not in use")]
+    fn double_free_panics() {
+        let mut c = small();
+        let a = c.allocate().unwrap();
+        c.free(a);
+        c.free(a);
+    }
+
+    #[test]
+    fn reallocation_resets_len() {
+        let mut c = small();
+        let a = c.allocate().unwrap();
+        {
+            let mut view = c.slot(a);
+            let (k, _) = view.kv_mut(0);
+            k[0] = 7.0;
+            view.advance();
+            view.advance();
+        }
+        assert_eq!(c.len(a), 2);
+        c.free(a);
+        let a2 = c.allocate().unwrap();
+        assert_eq!(a2, a);
+        assert_eq!(c.len(a2), 0, "reallocated slot must start empty");
+    }
+
+    #[test]
+    fn slot_views_are_disjoint() {
+        let mut c = small();
+        let a = c.allocate().unwrap();
+        let b = c.allocate().unwrap();
+        {
+            let mut view = c.slot(a);
+            let (k, v) = view.kv_mut(1);
+            k.fill(1.0);
+            v.fill(2.0);
+        }
+        let mut view = c.slot(b);
+        let (k, v) = view.kv_mut(1);
+        assert!(k.iter().all(|&x| x == 0.0));
+        assert!(v.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn bytes_accounting() {
+        let cfg = KvCacheConfig { slots: 3, capacity: 4, n_layers: 2, d_model: 8 };
+        // 2 (K+V) * 2 layers * 3 slots * 4 pos * 8 dim * 4 bytes
+        assert_eq!(cfg.bytes(), 2 * 2 * 3 * 4 * 8 * 4);
+    }
+}

@@ -1,0 +1,206 @@
+//! Serving metrics: per-step counters folded into a final report with the
+//! latency percentiles that matter for decode serving — time-to-first-token
+//! (TTFT) and inter-token latency (ITL) — plus sustained decode throughput
+//! and batch occupancy. Supersedes the old `ServeStats` aggregate, which the
+//! coordinator shim now derives from this collector.
+
+use std::fmt;
+use std::time::{Duration, Instant};
+
+/// Nearest-rank percentile of an (unsorted) duration sample; `q` in [0, 1].
+/// Empty samples report zero; a single sample is every percentile.
+pub fn percentile(samples: &[Duration], q: f64) -> Duration {
+    if samples.is_empty() {
+        return Duration::ZERO;
+    }
+    let mut s = samples.to_vec();
+    s.sort();
+    let rank = (s.len() as f64 * q.clamp(0.0, 1.0)).ceil() as usize;
+    s[rank.saturating_sub(1).min(s.len() - 1)]
+}
+
+/// Accumulates while the engine runs; snapshot with [`MetricsCollector::report`].
+#[derive(Default)]
+pub struct MetricsCollector {
+    /// Per-completed-prefill: submission -> first streamed token.
+    pub ttft: Vec<Duration>,
+    /// Per-generated-token gaps after the first.
+    pub itl: Vec<Duration>,
+    /// Active (prefill + decoding) sessions at each step.
+    pub occupancy: Vec<usize>,
+    pub steps: usize,
+    pub decode_tokens: usize,
+    pub prefill_tokens: usize,
+    pub completed: usize,
+    pub rejected: usize,
+    pub evicted: usize,
+    started: Option<Instant>,
+    wall: Duration,
+}
+
+impl MetricsCollector {
+    pub fn start(&mut self) {
+        self.started = Some(Instant::now());
+    }
+
+    pub fn finish(&mut self) {
+        if let Some(t0) = self.started.take() {
+            self.wall += t0.elapsed();
+        }
+    }
+
+    /// One engine step: how many sessions were active, and how many decode /
+    /// prefill tokens the step produced.
+    pub fn record_step(&mut self, active: usize, decoded: usize, prefilled: usize) {
+        self.steps += 1;
+        self.occupancy.push(active);
+        self.decode_tokens += decoded;
+        self.prefill_tokens += prefilled;
+    }
+
+    pub fn record_first_token(&mut self, since_submit: Duration) {
+        self.ttft.push(since_submit);
+    }
+
+    pub fn record_inter_token(&mut self, gap: Duration) {
+        self.itl.push(gap);
+    }
+
+    pub fn record_completion(&mut self) {
+        self.completed += 1;
+    }
+
+    pub fn report(&self) -> MetricsReport {
+        let wall = match self.started {
+            Some(t0) => self.wall + t0.elapsed(),
+            None => self.wall,
+        };
+        let secs = wall.as_secs_f64();
+        MetricsReport {
+            completed: self.completed,
+            rejected: self.rejected,
+            evicted: self.evicted,
+            steps: self.steps,
+            decode_tokens: self.decode_tokens,
+            prefill_tokens: self.prefill_tokens,
+            ttft_p50: percentile(&self.ttft, 0.50),
+            ttft_p99: percentile(&self.ttft, 0.99),
+            itl_p50: percentile(&self.itl, 0.50),
+            itl_p99: percentile(&self.itl, 0.99),
+            decode_tps: if secs > 0.0 { self.decode_tokens as f64 / secs } else { 0.0 },
+            mean_occupancy: self.occupancy.iter().sum::<usize>() as f64
+                / self.occupancy.len().max(1) as f64,
+            wall,
+        }
+    }
+}
+
+/// Final engine-run summary.
+#[derive(Clone, Debug)]
+pub struct MetricsReport {
+    pub completed: usize,
+    pub rejected: usize,
+    pub evicted: usize,
+    pub steps: usize,
+    pub decode_tokens: usize,
+    pub prefill_tokens: usize,
+    pub ttft_p50: Duration,
+    pub ttft_p99: Duration,
+    pub itl_p50: Duration,
+    pub itl_p99: Duration,
+    /// Sustained generated tokens per wall-clock second.
+    pub decode_tps: f64,
+    /// Mean active sessions per step.
+    pub mean_occupancy: f64,
+    pub wall: Duration,
+}
+
+impl fmt::Display for MetricsReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "completed {} (rejected {}, evicted {}) | {} steps, {} decode + {} prefill tok \
+             | {:.1} tok/s decode | ttft p50 {:?} p99 {:?} | itl p50 {:?} p99 {:?} \
+             | occupancy {:.2} | wall {:?}",
+            self.completed,
+            self.rejected,
+            self.evicted,
+            self.steps,
+            self.decode_tokens,
+            self.prefill_tokens,
+            self.decode_tps,
+            self.ttft_p50,
+            self.ttft_p99,
+            self.itl_p50,
+            self.itl_p99,
+            self.mean_occupancy,
+            self.wall,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ms(v: u64) -> Duration {
+        Duration::from_millis(v)
+    }
+
+    #[test]
+    fn percentile_empty_is_zero() {
+        assert_eq!(percentile(&[], 0.5), Duration::ZERO);
+        assert_eq!(percentile(&[], 0.99), Duration::ZERO);
+    }
+
+    #[test]
+    fn percentile_single_sample_is_every_quantile() {
+        let s = [ms(7)];
+        for q in [0.0, 0.25, 0.5, 0.99, 1.0] {
+            assert_eq!(percentile(&s, q), ms(7), "q={q}");
+        }
+    }
+
+    #[test]
+    fn percentile_even_length_nearest_rank() {
+        // nearest-rank on [1,2,3,4]: p50 -> 2nd element, p99/p100 -> 4th
+        let s = [ms(3), ms(1), ms(4), ms(2)]; // unsorted on purpose
+        assert_eq!(percentile(&s, 0.50), ms(2));
+        assert_eq!(percentile(&s, 0.75), ms(3));
+        assert_eq!(percentile(&s, 0.99), ms(4));
+        assert_eq!(percentile(&s, 1.0), ms(4));
+        assert_eq!(percentile(&s, 0.0), ms(1));
+    }
+
+    #[test]
+    fn percentile_odd_length_median_is_middle() {
+        let s = [ms(5), ms(1), ms(3)];
+        assert_eq!(percentile(&s, 0.5), ms(3));
+    }
+
+    #[test]
+    fn collector_aggregates() {
+        let mut m = MetricsCollector::default();
+        m.start();
+        std::thread::sleep(Duration::from_millis(2)); // make wall observable
+        m.record_step(2, 2, 8);
+        m.record_step(4, 4, 0);
+        m.record_first_token(ms(10));
+        m.record_inter_token(ms(2));
+        m.record_inter_token(ms(4));
+        m.record_completion();
+        m.finish();
+        let r = m.report();
+        assert_eq!(r.steps, 2);
+        assert_eq!(r.decode_tokens, 6);
+        assert_eq!(r.prefill_tokens, 8);
+        assert_eq!(r.completed, 1);
+        assert!((r.mean_occupancy - 3.0).abs() < 1e-12);
+        assert_eq!(r.ttft_p50, ms(10));
+        assert_eq!(r.itl_p99, ms(4));
+        assert!(r.wall > Duration::ZERO);
+        assert!(r.decode_tps > 0.0);
+        // report is renderable
+        assert!(format!("{r}").contains("tok/s"));
+    }
+}

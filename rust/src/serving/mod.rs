@@ -1,0 +1,624 @@
+//! Continuous-batching autoregressive decode engine over a slot-pool KV
+//! cache — the serving subsystem the paper's weight-only formats are priced
+//! for (memory-bound multi-token decode, not one-shot scoring).
+//!
+//! Architecture (vLLM-style iteration-level scheduling, sized for the
+//! pure-Rust [`crate::nn`] reference path):
+//!
+//! * [`Engine`] — owns the model (a [`ModelConfig`] + [`Checkpoint`], fp32
+//!   or fake-quant from `coordinator::pipeline::fake_quant_checkpoint`), the
+//!   [`KvCache`] slot pool, the [`Scheduler`] and the metrics. Requests can
+//!   be `submit`ted at any time; each `step` interleaves chunked prefill
+//!   with one decode token for every running sequence, retires finished
+//!   sequences, and immediately refills their freed slots from the queue.
+//! * [`DecodeRequest`] / [`TokenEvent`] — the streaming API: each request
+//!   brings its own event channel and receives every generated token as it
+//!   is produced, then a terminal `Finished` (or `Rejected`).
+//! * [`kv_cache`] / [`scheduler`] / [`session`] / [`metrics`] — the parts.
+//!
+//! The blocking [`Engine::run`] drives `submit`/`step` off an mpsc channel
+//! (the coordinator serve shim and the CLI use it); tests drive the same
+//! methods directly for deterministic interleavings.
+
+pub mod kv_cache;
+pub mod metrics;
+pub mod scheduler;
+pub mod session;
+
+pub use kv_cache::{KvCache, KvCacheConfig, SlotId};
+pub use metrics::{percentile, MetricsCollector, MetricsReport};
+pub use scheduler::{Scheduler, SchedulerConfig};
+pub use session::{DecodeSession, FinishReason, SessionState};
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::model_io::{Checkpoint, ModelConfig};
+use crate::nn;
+use crate::tensor::Tensor;
+
+/// One generation request. `id` is caller-chosen (echoed on every event);
+/// keep it unique per engine or streams will interleave confusingly.
+pub struct DecodeRequest {
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    /// Generation budget (>= 1; 0 is promoted to 1).
+    pub max_new_tokens: usize,
+    /// Optional stop token.
+    pub eos: Option<i32>,
+    /// Per-request event stream (tokens arrive as they are decoded).
+    pub events: mpsc::Sender<TokenEvent>,
+    pub submitted: Instant,
+}
+
+impl DecodeRequest {
+    /// Request + its event receiver, with a process-unique id.
+    pub fn new(prompt: Vec<i32>, max_new_tokens: usize) -> (DecodeRequest, mpsc::Receiver<TokenEvent>) {
+        static NEXT_ID: AtomicU64 = AtomicU64::new(0);
+        let (tx, rx) = mpsc::channel();
+        (
+            DecodeRequest {
+                id: NEXT_ID.fetch_add(1, Ordering::Relaxed),
+                prompt,
+                max_new_tokens,
+                eos: None,
+                events: tx,
+                submitted: Instant::now(),
+            },
+            rx,
+        )
+    }
+}
+
+/// Streamed per-request events.
+#[derive(Clone, Debug)]
+pub enum TokenEvent {
+    /// One generated token (greedy), with its log-probability.
+    Token { request: u64, index: usize, token: i32, logprob: f32 },
+    /// Terminal: the request completed with `generated` tokens total.
+    Finished { request: u64, reason: FinishReason, generated: usize },
+    /// Terminal: the request never entered the engine.
+    Rejected { request: u64, reason: String },
+}
+
+/// Engine sizing knobs.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EngineConfig {
+    /// KV slot-pool size; 0 = `scheduler.max_batch`.
+    pub slots: usize,
+    /// Cache positions per slot; 0 = the model's positional window.
+    pub kv_capacity: usize,
+    pub scheduler: SchedulerConfig,
+}
+
+/// The decode engine. See the module docs for the lifecycle.
+pub struct Engine {
+    model_cfg: ModelConfig,
+    ckpt: Checkpoint,
+    cache: KvCache,
+    sched: Scheduler,
+    active: Vec<DecodeSession>,
+    metrics: MetricsCollector,
+    prefill_chunk: usize,
+}
+
+impl Engine {
+    pub fn new(model_cfg: ModelConfig, ckpt: Checkpoint, cfg: EngineConfig) -> Engine {
+        let slots = if cfg.slots == 0 { cfg.scheduler.max_batch } else { cfg.slots };
+        let capacity = if cfg.kv_capacity == 0 {
+            model_cfg.seq
+        } else {
+            cfg.kv_capacity.min(model_cfg.seq)
+        };
+        let kcfg = KvCacheConfig {
+            slots: slots.max(1),
+            capacity,
+            n_layers: model_cfg.n_layers,
+            d_model: model_cfg.d_model,
+        };
+        Engine {
+            model_cfg,
+            ckpt,
+            cache: KvCache::new(kcfg),
+            sched: Scheduler::new(cfg.scheduler),
+            active: Vec::new(),
+            metrics: MetricsCollector::default(),
+            prefill_chunk: cfg.scheduler.prefill_chunk.max(1),
+        }
+    }
+
+    pub fn model_config(&self) -> &ModelConfig {
+        &self.model_cfg
+    }
+
+    pub fn cache(&self) -> &KvCache {
+        &self.cache
+    }
+
+    /// Positions one sequence may occupy (prompt + generated - 1).
+    pub fn window(&self) -> usize {
+        self.model_cfg.seq.min(self.cache.capacity())
+    }
+
+    /// Anything queued or running?
+    pub fn has_work(&self) -> bool {
+        !self.active.is_empty() || !self.sched.is_empty()
+    }
+
+    /// Admit a request (any time, including mid-flight). Empty prompts and
+    /// queue overflow are rejected via a terminal [`TokenEvent::Rejected`];
+    /// over-long prompts are clamped to the most recent `window()` tokens.
+    pub fn submit(&mut self, mut req: DecodeRequest) {
+        if req.prompt.is_empty() {
+            self.metrics.rejected += 1;
+            let _ = req
+                .events
+                .send(TokenEvent::Rejected { request: req.id, reason: "empty prompt".into() });
+            return;
+        }
+        let window = self.window();
+        if req.prompt.len() > window {
+            req.prompt.drain(..req.prompt.len() - window);
+        }
+        let s = DecodeSession::new(
+            req.id,
+            req.prompt,
+            req.max_new_tokens,
+            req.eos,
+            req.events,
+            req.submitted,
+        );
+        if let Err(s) = self.sched.enqueue(s) {
+            self.metrics.rejected += 1;
+            let _ = s
+                .events
+                .send(TokenEvent::Rejected { request: s.id, reason: "queue full".into() });
+        }
+    }
+
+    /// One iteration-level step: admit queued sessions into free slots, run
+    /// a prefill chunk for each prefilling session (emitting its first token
+    /// when the prompt completes), decode one token for every running
+    /// session, then retire finished sessions and free their slots.
+    pub fn step(&mut self) -> Result<()> {
+        for mut s in self.sched.admit(self.cache.slots_free(), self.active.len()) {
+            let slot = self.cache.allocate().expect("admit() checked free slots");
+            s.begin_prefill(slot);
+            self.active.push(s);
+        }
+
+        let window = self.model_cfg.seq.min(self.cache.capacity());
+        let stepped = self.active.len();
+        let mut decoded = 0usize;
+        let mut prefilled = 0usize;
+        for s in &mut self.active {
+            match s.state {
+                SessionState::Prefill => {
+                    let slot = s.slot.expect("prefilling session holds a slot");
+                    let end = (s.prefilled + self.prefill_chunk).min(s.prompt.len());
+                    let mut last = None;
+                    {
+                        let mut view = self.cache.slot(slot);
+                        for i in s.prefilled..end {
+                            last = Some(nn::forward_lm_step(
+                                &self.model_cfg,
+                                &self.ckpt,
+                                s.prompt[i],
+                                &mut view,
+                            )?);
+                        }
+                    }
+                    prefilled += end - s.prefilled;
+                    s.prefilled = end;
+                    if s.prefilled == s.prompt.len() {
+                        s.begin_decode();
+                        let logits = last.expect("prompts are non-empty");
+                        let remaining = window - self.cache.len(slot);
+                        emit_token(s, &logits, remaining, &mut self.metrics);
+                    }
+                }
+                SessionState::Decoding => {
+                    let slot = s.slot.expect("decoding session holds a slot");
+                    let token = s.last_token();
+                    let mut view = self.cache.slot(slot);
+                    let logits =
+                        nn::forward_lm_step(&self.model_cfg, &self.ckpt, token, &mut view)?;
+                    decoded += 1;
+                    let remaining = window - self.cache.len(slot);
+                    emit_token(s, &logits, remaining, &mut self.metrics);
+                }
+                _ => {}
+            }
+        }
+        if stepped > 0 {
+            self.metrics.record_step(stepped, decoded, prefilled);
+        }
+
+        // retire: free slots first so the next step's admission sees them
+        for s in &mut self.active {
+            if let SessionState::Done(reason) = s.state {
+                if let Some(slot) = s.slot.take() {
+                    self.cache.free(slot);
+                }
+                self.metrics.record_completion();
+                let _ = s.events.send(TokenEvent::Finished {
+                    request: s.id,
+                    reason,
+                    generated: s.generated.len(),
+                });
+            }
+        }
+        self.active.retain(|s| s.is_active());
+        Ok(())
+    }
+
+    /// Serve a request channel until it closes and all work drains; returns
+    /// the run's metrics. Blocks when idle; while sequences are in flight it
+    /// drains arrivals between steps, so late requests join mid-batch.
+    pub fn run(&mut self, rx: mpsc::Receiver<DecodeRequest>) -> Result<MetricsReport> {
+        self.metrics.start();
+        let mut open = true;
+        while open || self.has_work() {
+            if open {
+                if !self.has_work() {
+                    // idle: block for the next arrival, then hold the
+                    // coalescing window to let a batch form
+                    match rx.recv() {
+                        Ok(r) => {
+                            self.submit(r);
+                            let cfg = *self.sched.config();
+                            let deadline = Instant::now() + cfg.max_wait;
+                            while self.sched.queue_len() < cfg.max_batch {
+                                let now = Instant::now();
+                                if now >= deadline {
+                                    break;
+                                }
+                                match rx.recv_timeout(deadline - now) {
+                                    Ok(r) => self.submit(r),
+                                    Err(mpsc::RecvTimeoutError::Timeout) => break,
+                                    Err(mpsc::RecvTimeoutError::Disconnected) => {
+                                        open = false;
+                                        break;
+                                    }
+                                }
+                            }
+                        }
+                        Err(_) => open = false,
+                    }
+                }
+                loop {
+                    match rx.try_recv() {
+                        Ok(r) => self.submit(r),
+                        Err(mpsc::TryRecvError::Empty) => break,
+                        Err(mpsc::TryRecvError::Disconnected) => {
+                            open = false;
+                            break;
+                        }
+                    }
+                }
+            }
+            if self.has_work() {
+                self.step()?;
+            }
+        }
+        self.metrics.finish();
+        Ok(self.metrics.report())
+    }
+
+    /// Drop all queued and in-flight work (terminal events are sent, slots
+    /// freed). Used on fatal errors so clients never hang on their streams.
+    pub fn abort(&mut self) {
+        for s in self.sched.drain() {
+            self.metrics.rejected += 1;
+            let _ = s
+                .events
+                .send(TokenEvent::Rejected { request: s.id, reason: "engine aborted".into() });
+        }
+        for mut s in std::mem::take(&mut self.active) {
+            if let Some(slot) = s.slot.take() {
+                self.cache.free(slot);
+            }
+            s.evict();
+            self.metrics.evicted += 1;
+            let _ = s
+                .events
+                .send(TokenEvent::Rejected { request: s.id, reason: "engine aborted".into() });
+        }
+    }
+
+    /// Metrics snapshot (running or finished).
+    pub fn report(&self) -> MetricsReport {
+        self.metrics.report()
+    }
+}
+
+/// Greedy-pick from `logits [1, V]`, stream the token, and apply the
+/// session's stop conditions given the cache positions still writable.
+fn emit_token(
+    s: &mut DecodeSession,
+    logits: &Tensor,
+    remaining_window: usize,
+    metrics: &mut MetricsCollector,
+) {
+    let logp = logits.log_softmax_last();
+    let row = logp.row(0);
+    let token = crate::tensor::argmax(row) as i32;
+    let now = Instant::now();
+    match s.last_token_at {
+        None => {
+            metrics.record_first_token(now.duration_since(s.submitted));
+            s.first_token_at = Some(now);
+        }
+        Some(prev) => metrics.record_inter_token(now.duration_since(prev)),
+    }
+    s.last_token_at = Some(now);
+    let index = s.generated.len();
+    s.generated.push(token);
+    let sent = s.events.send(TokenEvent::Token {
+        request: s.id,
+        index,
+        token,
+        logprob: row[token as usize],
+    });
+    if sent.is_err() {
+        s.finish(FinishReason::Disconnected);
+        return;
+    }
+    if let Some(reason) = s.stop_reason(remaining_window) {
+        s.finish(reason);
+    }
+}
+
+/// Drive an engine with `n_clients` synthetic streaming clients issuing
+/// `per_client` generation requests each (prompts round-robin); returns the
+/// engine's run report. Shared by the CLI, the demo and `perf_serve`.
+pub fn run_decode_loadgen(
+    engine: &mut Engine,
+    prompts: &[Vec<i32>],
+    n_clients: usize,
+    per_client: usize,
+    max_new: usize,
+) -> Result<MetricsReport> {
+    let (tx, rx) = mpsc::channel::<DecodeRequest>();
+    let ids = AtomicU64::new(0);
+    let report = std::thread::scope(|scope| {
+        let server = scope.spawn(move || {
+            let r = engine.run(rx);
+            if r.is_err() {
+                // terminal events for everything in flight, so the client
+                // threads below always drain and the scope can join
+                engine.abort();
+            }
+            r
+        });
+        for c in 0..n_clients {
+            let tx = tx.clone();
+            let ids = &ids;
+            scope.spawn(move || {
+                for i in 0..per_client {
+                    let (etx, erx) = mpsc::channel();
+                    let prompt = prompts[(c * per_client + i) % prompts.len()].clone();
+                    let req = DecodeRequest {
+                        id: ids.fetch_add(1, Ordering::Relaxed),
+                        prompt,
+                        max_new_tokens: max_new,
+                        eos: None,
+                        events: etx,
+                        submitted: Instant::now(),
+                    };
+                    if tx.send(req).is_err() {
+                        return;
+                    }
+                    // stream this request to completion before the next one
+                    for ev in erx {
+                        if matches!(ev, TokenEvent::Finished { .. } | TokenEvent::Rejected { .. })
+                        {
+                            break;
+                        }
+                    }
+                }
+            });
+        }
+        drop(tx);
+        server.join().expect("engine thread panicked")
+    })?;
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::trainer::init_lm_params;
+    use crate::model_io::zoo;
+
+    fn engine(slots: usize) -> Engine {
+        let cfg = zoo("nano").unwrap();
+        let ckpt = init_lm_params(&cfg, 42);
+        Engine::new(
+            cfg,
+            ckpt,
+            EngineConfig {
+                slots,
+                scheduler: SchedulerConfig { max_batch: slots, ..SchedulerConfig::default() },
+                ..EngineConfig::default()
+            },
+        )
+    }
+
+    fn drain_tokens(rx: &mpsc::Receiver<TokenEvent>) -> (usize, Option<FinishReason>) {
+        let mut tokens = 0;
+        let mut finished = None;
+        while let Ok(ev) = rx.try_recv() {
+            match ev {
+                TokenEvent::Token { .. } => tokens += 1,
+                TokenEvent::Finished { reason, .. } => finished = Some(reason),
+                TokenEvent::Rejected { .. } => {}
+            }
+        }
+        (tokens, finished)
+    }
+
+    #[test]
+    fn late_request_joins_batch_mid_flight() {
+        // the continuous-batching acceptance test: B is admitted after A has
+        // already produced tokens, and both finish with exact budgets
+        let mut eng = engine(4);
+        let (req_a, rx_a) = DecodeRequest::new(vec![1, 2, 3, 4], 10);
+        let id_a = req_a.id;
+        eng.submit(req_a);
+        // step until A has decoded a few tokens (prefill step + 2 decode)
+        for _ in 0..3 {
+            eng.step().unwrap();
+        }
+        let (a_sofar, a_fin) = drain_tokens(&rx_a);
+        assert!(a_sofar >= 2, "A must be mid-generation, got {a_sofar}");
+        assert!(a_fin.is_none());
+
+        let (req_b, rx_b) = DecodeRequest::new(vec![9, 8], 3);
+        let id_b = req_b.id;
+        assert_ne!(id_a, id_b);
+        eng.submit(req_b);
+        // B joins on the next step while A keeps decoding
+        eng.step().unwrap();
+        assert_eq!(eng.cache().slots_in_use(), 2, "both sequences share the batch");
+
+        while eng.has_work() {
+            eng.step().unwrap();
+        }
+        let (a_rest, a_fin) = drain_tokens(&rx_a);
+        let (b_tokens, b_fin) = drain_tokens(&rx_b);
+        assert_eq!(a_sofar + a_rest, 10);
+        assert_eq!(a_fin, Some(FinishReason::MaxTokens));
+        assert_eq!(b_tokens, 3);
+        assert_eq!(b_fin, Some(FinishReason::MaxTokens));
+        assert_eq!(eng.cache().slots_in_use(), 0, "slots returned to the pool");
+        let report = eng.report();
+        assert_eq!(report.completed, 2);
+        assert_eq!(report.decode_tokens + report.completed, 13, "one token per request is emitted from prefill logits");
+    }
+
+    #[test]
+    fn freed_slots_refill_from_queue() {
+        // 1 slot, 3 requests: they must run strictly one after another, each
+        // picking up the slot the previous one freed
+        let mut eng = engine(1);
+        let mut rxs = Vec::new();
+        for _ in 0..3 {
+            let (req, rx) = DecodeRequest::new(vec![5, 6], 2);
+            eng.submit(req);
+            rxs.push(rx);
+        }
+        while eng.has_work() {
+            eng.step().unwrap();
+            assert!(eng.cache().slots_in_use() <= 1);
+        }
+        for rx in &rxs {
+            let (tokens, fin) = drain_tokens(rx);
+            assert_eq!(tokens, 2);
+            assert_eq!(fin, Some(FinishReason::MaxTokens));
+        }
+        assert_eq!(eng.report().completed, 3);
+    }
+
+    #[test]
+    fn empty_prompt_is_rejected_not_panicking() {
+        let mut eng = engine(2);
+        let (req, rx) = DecodeRequest::new(vec![], 4);
+        eng.submit(req);
+        assert!(!eng.has_work());
+        match rx.try_recv().unwrap() {
+            TokenEvent::Rejected { reason, .. } => assert!(reason.contains("empty")),
+            other => panic!("expected rejection, got {other:?}"),
+        }
+        assert_eq!(eng.report().rejected, 1);
+    }
+
+    #[test]
+    fn context_window_bounds_generation() {
+        // budget far beyond the window: the engine must stop at ContextFull
+        let cfg = zoo("nano").unwrap();
+        let prompt_len = 4usize;
+        let mut eng = engine(2);
+        let (req, rx) = DecodeRequest::new((0..prompt_len as i32).collect(), 10_000);
+        eng.submit(req);
+        while eng.has_work() {
+            eng.step().unwrap();
+        }
+        let (tokens, fin) = drain_tokens(&rx);
+        assert_eq!(fin, Some(FinishReason::ContextFull));
+        assert_eq!(tokens, cfg.seq - prompt_len + 1);
+    }
+
+    #[test]
+    fn eos_stops_the_stream() {
+        let mut eng = engine(2);
+        // discover the first greedy token, then use it as EOS
+        let (probe, rx) = DecodeRequest::new(vec![1, 2, 3], 1);
+        eng.submit(probe);
+        while eng.has_work() {
+            eng.step().unwrap();
+        }
+        let first = match rx.try_recv().unwrap() {
+            TokenEvent::Token { token, .. } => token,
+            other => panic!("expected token, got {other:?}"),
+        };
+        let (mut req, rx) = DecodeRequest::new(vec![1, 2, 3], 64);
+        req.eos = Some(first);
+        eng.submit(req);
+        while eng.has_work() {
+            eng.step().unwrap();
+        }
+        let (tokens, fin) = drain_tokens(&rx);
+        assert_eq!(tokens, 1);
+        assert_eq!(fin, Some(FinishReason::Eos));
+    }
+
+    #[test]
+    fn over_long_prompt_is_clamped_to_window() {
+        let cfg = zoo("nano").unwrap();
+        let mut eng = engine(2);
+        let long: Vec<i32> = (0..(cfg.seq as i32 + 10)).map(|i| i % cfg.vocab as i32).collect();
+        let (req, rx) = DecodeRequest::new(long, 1);
+        eng.submit(req);
+        while eng.has_work() {
+            eng.step().unwrap();
+        }
+        let (tokens, fin) = drain_tokens(&rx);
+        assert_eq!(tokens, 1);
+        assert!(fin.is_some());
+    }
+
+    #[test]
+    fn run_serves_a_channel_of_streaming_clients() {
+        let cfg = zoo("nano").unwrap();
+        let ckpt = init_lm_params(&cfg, 43);
+        let mut eng = Engine::new(cfg, ckpt, EngineConfig::default());
+        let prompts: Vec<Vec<i32>> = (0..4).map(|s| vec![s + 1, s + 2, s + 3]).collect();
+        let report = run_decode_loadgen(&mut eng, &prompts, 4, 2, 5).unwrap();
+        assert_eq!(report.completed, 8);
+        assert_eq!(report.rejected, 0);
+        // 5 tokens per request: 1 from prefill + 4 decode steps
+        assert_eq!(report.decode_tokens, 8 * 4);
+        assert_eq!(report.ttft_p50.is_zero(), false);
+        assert!(report.mean_occupancy >= 1.0);
+    }
+
+    #[test]
+    fn abort_clears_all_state_and_notifies() {
+        let mut eng = engine(1);
+        let (a, rx_a) = DecodeRequest::new(vec![1, 2], 50);
+        let (b, rx_b) = DecodeRequest::new(vec![3, 4], 50);
+        eng.submit(a);
+        eng.submit(b);
+        eng.step().unwrap(); // a active, b queued
+        eng.abort();
+        assert!(!eng.has_work());
+        assert_eq!(eng.cache().slots_in_use(), 0);
+        let (_, fin_a) = drain_tokens(&rx_a);
+        assert!(fin_a.is_none(), "aborted sessions end with Rejected, not Finished");
+        assert!(matches!(rx_b.try_recv(), Ok(TokenEvent::Rejected { .. })));
+    }
+}

@@ -1,0 +1,150 @@
+//! Admission queue + iteration-level scheduling policy.
+//!
+//! The scheduler owns the FIFO of sessions waiting for a KV slot and decides,
+//! each engine step, which of them join the running batch (vLLM-style
+//! continuous batching: admissions happen between *steps*, not between
+//! *requests*). Prefill/decode interleave is governed by `prefill_chunk` —
+//! how many prompt tokens one prefilling session may consume per step before
+//! yielding the step back to decoding sessions — which bounds how long a
+//! long-prompt arrival can stall in-flight streams.
+
+use std::collections::VecDeque;
+use std::time::Duration;
+
+use crate::serving::session::DecodeSession;
+
+/// Scheduling knobs, generalizing the old `ServeConfig` pair
+/// (`max_wait`/`max_requests`) to the decode engine.
+#[derive(Clone, Copy, Debug)]
+pub struct SchedulerConfig {
+    /// Cap on concurrently active (prefill + decoding) sessions; also the
+    /// natural KV slot-pool size.
+    pub max_batch: usize,
+    /// Arrival-coalescing window: when the engine is idle and a first
+    /// request arrives, wait up to this long for more before stepping.
+    pub max_wait: Duration,
+    /// Admission queue bound; 0 = unbounded. Requests beyond it are
+    /// rejected rather than queued (backpressure surface).
+    pub max_queue: usize,
+    /// Max prompt tokens one session prefills per engine step.
+    pub prefill_chunk: usize,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        SchedulerConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(2),
+            max_queue: 0,
+            prefill_chunk: 32,
+        }
+    }
+}
+
+/// FIFO admission queue + step-boundary admission policy. Rejection
+/// tallies live in the engine's `MetricsCollector` (single source of
+/// truth); the scheduler only hands overflowing sessions back.
+pub struct Scheduler {
+    cfg: SchedulerConfig,
+    queue: VecDeque<DecodeSession>,
+}
+
+impl Scheduler {
+    pub fn new(cfg: SchedulerConfig) -> Scheduler {
+        Scheduler { cfg, queue: VecDeque::new() }
+    }
+
+    pub fn config(&self) -> &SchedulerConfig {
+        &self.cfg
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Queue a session for admission; `Err` hands it back on overflow.
+    pub fn enqueue(&mut self, s: DecodeSession) -> Result<(), DecodeSession> {
+        if self.cfg.max_queue > 0 && self.queue.len() >= self.cfg.max_queue {
+            return Err(s);
+        }
+        self.queue.push_back(s);
+        Ok(())
+    }
+
+    /// Step-boundary admission: pop as many queued sessions as fit in both
+    /// the free slot pool and the batch cap, in FIFO order.
+    pub fn admit(&mut self, free_slots: usize, active: usize) -> Vec<DecodeSession> {
+        let room = self.cfg.max_batch.saturating_sub(active).min(free_slots);
+        let n = room.min(self.queue.len());
+        self.queue.drain(..n).collect()
+    }
+
+    /// Empty the queue (engine shutdown/abort path).
+    pub fn drain(&mut self) -> Vec<DecodeSession> {
+        self.queue.drain(..).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serving::TokenEvent;
+    use std::sync::mpsc;
+    use std::time::Instant;
+
+    fn session(id: u64) -> DecodeSession {
+        // the receiver is dropped; these tests never emit events
+        let (tx, _rx) = mpsc::channel::<TokenEvent>();
+        DecodeSession::new(id, vec![1, 2], 4, None, tx, Instant::now())
+    }
+
+    fn sched(max_batch: usize, max_queue: usize) -> Scheduler {
+        Scheduler::new(SchedulerConfig { max_batch, max_queue, ..SchedulerConfig::default() })
+    }
+
+    #[test]
+    fn admission_respects_slots_and_batch_cap() {
+        let mut s = sched(3, 0);
+        for id in 0..5 {
+            s.enqueue(session(id)).unwrap();
+        }
+        // batch cap 3, 1 already active, plenty of slots -> admit 2
+        let a = s.admit(10, 1);
+        assert_eq!(a.iter().map(|x| x.id).collect::<Vec<_>>(), vec![0, 1], "FIFO order");
+        assert_eq!(s.queue_len(), 3);
+        // only 1 free slot -> admit 1 even though batch has room
+        let b = s.admit(1, 0);
+        assert_eq!(b.len(), 1);
+        assert_eq!(b[0].id, 2);
+        // batch full -> admit none
+        assert!(s.admit(10, 3).is_empty());
+        assert_eq!(s.queue_len(), 2);
+    }
+
+    #[test]
+    fn bounded_queue_rejects_overflow() {
+        let mut s = sched(4, 2);
+        assert!(s.enqueue(session(0)).is_ok());
+        assert!(s.enqueue(session(1)).is_ok());
+        let back = s.enqueue(session(2));
+        assert!(back.is_err());
+        assert_eq!(back.unwrap_err().id, 2, "rejected session is handed back");
+        assert_eq!(s.queue_len(), 2);
+        // draining makes room again
+        s.admit(10, 0);
+        assert!(s.enqueue(session(3)).is_ok());
+    }
+
+    #[test]
+    fn unbounded_queue_never_rejects() {
+        let mut s = sched(2, 0);
+        for id in 0..100 {
+            assert!(s.enqueue(session(id)).is_ok());
+        }
+        assert_eq!(s.queue_len(), 100);
+    }
+}

@@ -1,0 +1,204 @@
+//! Per-request decode state machine.
+//!
+//! A request's life: `Queued` (admission queue) → `Prefill` (prompt tokens
+//! streaming into its KV slot) → `Decoding` (one generated token per engine
+//! step) → `Done(reason)`; `Evicted` is the preemption exit used when a
+//! session must give its slot back before finishing (not triggered by the
+//! current scheduler, but part of the state contract so later paged-KV /
+//! preemption PRs don't change the machine).
+
+use std::sync::mpsc;
+use std::time::Instant;
+
+use crate::serving::kv_cache::SlotId;
+use crate::serving::TokenEvent;
+
+/// Why a session stopped.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FinishReason {
+    /// Hit its `max_new_tokens` budget.
+    MaxTokens,
+    /// Generated the request's stop token.
+    Eos,
+    /// Ran out of positional/cache window before the budget.
+    ContextFull,
+    /// The client dropped its event receiver mid-stream.
+    Disconnected,
+}
+
+/// Lifecycle states. Legal moves are enforced by the transition methods.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SessionState {
+    Queued,
+    Prefill,
+    Decoding,
+    Done(FinishReason),
+    Evicted,
+}
+
+/// One in-flight generation request inside the engine.
+pub struct DecodeSession {
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    pub generated: Vec<i32>,
+    pub max_new_tokens: usize,
+    pub eos: Option<i32>,
+    pub slot: Option<SlotId>,
+    pub state: SessionState,
+    pub events: mpsc::Sender<TokenEvent>,
+    pub submitted: Instant,
+    pub first_token_at: Option<Instant>,
+    pub last_token_at: Option<Instant>,
+    /// Prompt tokens already written into the KV slot.
+    pub prefilled: usize,
+}
+
+impl DecodeSession {
+    pub fn new(
+        id: u64,
+        prompt: Vec<i32>,
+        max_new_tokens: usize,
+        eos: Option<i32>,
+        events: mpsc::Sender<TokenEvent>,
+        submitted: Instant,
+    ) -> DecodeSession {
+        assert!(!prompt.is_empty(), "sessions require a non-empty prompt");
+        DecodeSession {
+            id,
+            prompt,
+            generated: Vec::new(),
+            max_new_tokens: max_new_tokens.max(1),
+            eos,
+            slot: None,
+            state: SessionState::Queued,
+            events,
+            submitted,
+            first_token_at: None,
+            last_token_at: None,
+            prefilled: 0,
+        }
+    }
+
+    /// Still holds (or is about to hold) compute: scheduled but not finished.
+    pub fn is_active(&self) -> bool {
+        matches!(self.state, SessionState::Prefill | SessionState::Decoding)
+    }
+
+    /// The token the next decode step conditions on.
+    pub fn last_token(&self) -> i32 {
+        *self.generated.last().unwrap_or_else(|| self.prompt.last().expect("non-empty prompt"))
+    }
+
+    /// Queued → Prefill, claiming a KV slot.
+    pub fn begin_prefill(&mut self, slot: SlotId) {
+        assert_eq!(self.state, SessionState::Queued, "begin_prefill from {:?}", self.state);
+        self.slot = Some(slot);
+        self.state = SessionState::Prefill;
+    }
+
+    /// Prefill → Decoding once the whole prompt is cached.
+    pub fn begin_decode(&mut self) {
+        assert_eq!(self.state, SessionState::Prefill, "begin_decode from {:?}", self.state);
+        assert_eq!(self.prefilled, self.prompt.len(), "decode before prefill completed");
+        self.state = SessionState::Decoding;
+    }
+
+    /// Any active state → Done.
+    pub fn finish(&mut self, reason: FinishReason) {
+        assert!(self.is_active(), "finish({reason:?}) from {:?}", self.state);
+        self.state = SessionState::Done(reason);
+    }
+
+    /// Active → Evicted (slot reclaimed before completion).
+    pub fn evict(&mut self) {
+        assert!(self.is_active(), "evict from {:?}", self.state);
+        self.state = SessionState::Evicted;
+    }
+
+    /// Stop condition after appending a generated token, given the number of
+    /// cache positions still writable. Checked in priority order: EOS, token
+    /// budget, context window.
+    pub fn stop_reason(&self, remaining_window: usize) -> Option<FinishReason> {
+        let last = *self.generated.last()?;
+        if self.eos == Some(last) {
+            return Some(FinishReason::Eos);
+        }
+        if self.generated.len() >= self.max_new_tokens {
+            return Some(FinishReason::MaxTokens);
+        }
+        if remaining_window == 0 {
+            return Some(FinishReason::ContextFull);
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn session(max_new: usize, eos: Option<i32>) -> (DecodeSession, mpsc::Receiver<TokenEvent>) {
+        let (tx, rx) = mpsc::channel();
+        (DecodeSession::new(1, vec![3, 4, 5], max_new, eos, tx, Instant::now()), rx)
+    }
+
+    #[test]
+    fn lifecycle_happy_path() {
+        let (mut s, _rx) = session(4, None);
+        assert_eq!(s.state, SessionState::Queued);
+        assert!(!s.is_active());
+        assert_eq!(s.last_token(), 5);
+        s.begin_prefill(2);
+        assert!(s.is_active());
+        assert_eq!(s.slot, Some(2));
+        s.prefilled = s.prompt.len();
+        s.begin_decode();
+        s.generated.push(9);
+        assert_eq!(s.last_token(), 9);
+        s.finish(FinishReason::MaxTokens);
+        assert_eq!(s.state, SessionState::Done(FinishReason::MaxTokens));
+        assert!(!s.is_active());
+    }
+
+    #[test]
+    #[should_panic(expected = "begin_decode")]
+    fn decode_before_prefill_is_illegal() {
+        let (mut s, _rx) = session(4, None);
+        s.begin_decode();
+    }
+
+    #[test]
+    #[should_panic(expected = "decode before prefill completed")]
+    fn decode_with_partial_prefill_is_illegal() {
+        let (mut s, _rx) = session(4, None);
+        s.begin_prefill(0);
+        s.prefilled = 1; // only 1 of 3 prompt tokens cached
+        s.begin_decode();
+    }
+
+    #[test]
+    fn stop_conditions_in_priority_order() {
+        let (mut s, _rx) = session(2, Some(7));
+        assert_eq!(s.stop_reason(10), None, "no tokens yet");
+        s.generated.push(1);
+        assert_eq!(s.stop_reason(10), None);
+        s.generated.push(7); // EOS and budget hit together: EOS wins
+        assert_eq!(s.stop_reason(10), Some(FinishReason::Eos));
+        let (mut s, _rx) = session(2, None);
+        s.generated.push(1);
+        s.generated.push(2);
+        assert_eq!(s.stop_reason(10), Some(FinishReason::MaxTokens));
+        let (mut s, _rx) = session(8, None);
+        s.generated.push(1);
+        assert_eq!(s.stop_reason(0), Some(FinishReason::ContextFull));
+    }
+
+    #[test]
+    fn eviction_is_a_terminal_exit() {
+        let (mut s, _rx) = session(4, None);
+        s.begin_prefill(0);
+        s.evict();
+        assert_eq!(s.state, SessionState::Evicted);
+        assert!(!s.is_active());
+    }
+}

@@ -5,7 +5,9 @@
 use std::sync::OnceLock;
 
 use llm_datatypes::coordinator::model::{GraphKind, LmHandle};
-use llm_datatypes::coordinator::pipeline::{fp32_values, quantize_lm, PipelineConfig};
+use llm_datatypes::coordinator::pipeline::{
+    fake_quant_checkpoint, fp32_values, quantize_lm, PipelineConfig,
+};
 use llm_datatypes::coordinator::serve::{run_loadgen, ServeConfig, Server};
 use llm_datatypes::coordinator::{corpus_for, trainer, Session};
 use llm_datatypes::model_io::zoo;
@@ -70,11 +72,12 @@ fn train_quantize_eval_serve() {
     let ppl_w4a4 = perplexity(&mut h, &windows[..16]).unwrap();
     assert!(ppl_w4a4.is_finite() && ppl_w4a4 < cfg.vocab as f64 * 2.0);
 
-    // 5. serve loop: batched requests, every client answered
-    let qm = quantize_lm(&cfg, &ckpt, &PipelineConfig::weight_only("sf4"), &corpus).unwrap();
-    let handle =
-        LmHandle::bind(&session.engine, &cfg, GraphKind::WeightOnly, &qm.values).unwrap();
-    let server = Server::new(handle, ServeConfig::default());
+    // 5. serve loop: batched requests through the decode-engine shim over
+    // the same sf4 weights (fake-quant checkpoint), every client answered
+    let sf4 =
+        fake_quant_checkpoint(&cfg, &ckpt, &PipelineConfig::weight_only("sf4"), &corpus)
+            .unwrap();
+    let server = Server::new(cfg, sf4, ServeConfig::default());
     let mut rng = Pcg64::new(5);
     let prompts: Vec<Vec<i32>> = (0..16)
         .map(|_| {
