@@ -7,6 +7,7 @@
 //! repro serve        [--model NAME] [--format FMT] [--clients N] [--requests N]
 //! repro serve-decode [--model NAME] [--format FMT|fp32] [--clients N]
 //!                    [--requests N] [--max-new T] [--slots S]
+//!                    [--prefill-chunk P]
 //! repro all          [--quick]
 //! ```
 //! Global flags: `--artifacts DIR --checkpoints DIR --results DIR`.
@@ -77,8 +78,9 @@ commands:
   serve   [--model N] [--format F] [--clients C] [--requests R]
           one-shot next-token scoring through the decode engine
   serve-decode [--model N] [--format F|fp32] [--clients C] [--requests R]
-               [--max-new T] [--slots S]
-          continuous-batching multi-token generation (streaming, KV cache)
+               [--max-new T] [--slots S] [--prefill-chunk P]
+          continuous-batching multi-token generation (streaming, KV cache,
+          fused [B,d] batched decode step)
   all     [--quick]                            every table + figure
 global flags: --artifacts DIR --checkpoints DIR --results DIR
 ";
@@ -290,6 +292,7 @@ fn cmd_serve_decode(session: &Session, args: &Args) -> Result<()> {
     let requests: usize = args.flag("requests", "16").parse()?;
     let max_new: usize = args.flag("max-new", "16").parse()?;
     let slots: usize = args.flag("slots", "4").parse()?;
+    let prefill_chunk: usize = args.flag("prefill-chunk", "32").parse()?;
 
     let cfg = zoo(&model)?;
     let ckpt = load_or_init_checkpoint(session, &cfg);
@@ -300,16 +303,22 @@ fn cmd_serve_decode(session: &Session, args: &Args) -> Result<()> {
         EngineConfig {
             slots,
             kv_capacity: 0,
-            scheduler: SchedulerConfig { max_batch: slots, ..SchedulerConfig::default() },
+            scheduler: SchedulerConfig {
+                max_batch: slots,
+                prefill_chunk,
+                ..SchedulerConfig::default()
+            },
         },
     );
     println!(
-        "decode engine: model `{}` weights {} | {} KV slots x {} positions ({} KiB cache)",
+        "decode engine: model `{}` weights {} | {} KV slots x {} positions ({} KiB cache) \
+         | fused [B,d] batched step, prefill chunk {}",
         cfg.name,
         format,
         engine.cache().slots_total(),
         engine.cache().capacity(),
         engine.cache().config().bytes() / 1024,
+        prefill_chunk,
     );
     let prompts = serve_prompts(&cfg, 64, 2);
     let per_client = (requests / clients.max(1)).max(1);

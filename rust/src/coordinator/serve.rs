@@ -59,7 +59,9 @@ impl Default for ServeConfig {
 }
 
 /// Aggregate serving statistics. `batches` counts engine steps;
-/// `mean_batch_fill` is the engine's mean batch occupancy.
+/// `mean_batch_fill` is the engine's mean batch occupancy; `fused_gemms`
+/// counts the fused `[B, d]` GEMM launches the engine issued on our behalf
+/// (the scoring shim rides the same batched decode path as `serve-decode`).
 #[derive(Clone, Debug, Default)]
 pub struct ServeStats {
     pub served: usize,
@@ -67,6 +69,7 @@ pub struct ServeStats {
     pub p50_latency: Duration,
     pub p99_latency: Duration,
     pub mean_batch_fill: f64,
+    pub fused_gemms: u64,
 }
 
 /// The server: a scoring facade over the decode engine.
@@ -201,6 +204,7 @@ impl Server {
                 p50_latency: percentile(&latencies, 0.50),
                 p99_latency: percentile(&latencies, 0.99),
                 mean_batch_fill: report.mean_occupancy,
+                fused_gemms: report.fused_gemms,
             })
         })
     }
@@ -269,6 +273,7 @@ mod tests {
         assert_eq!(st.served, 16);
         assert!(st.batches >= 1);
         assert!(st.mean_batch_fill >= 1.0);
+        assert!(st.fused_gemms > 0, "scoring rides the fused batched decode path");
         assert!(st.p50_latency <= st.p99_latency);
     }
 

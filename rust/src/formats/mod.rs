@@ -477,6 +477,66 @@ mod tests {
     }
 
     #[test]
+    fn quantize_is_idempotent_everywhere() {
+        // quantize(quantize(x)) == quantize(x) exactly — codebook values are
+        // fixed points of nearest-value rounding, for both the f64 path and
+        // the hot-loop Encoder, on every registered codebook
+        use crate::rng::Pcg64;
+        let mut rng = Pcg64::new(0xf0f0);
+        for name in all_names() {
+            let s = must(name);
+            let enc = s.encoder();
+            for _ in 0..400 {
+                let x = rng.range(-1.5, 1.5);
+                let q = s.quantize(x);
+                assert_eq!(s.quantize(q), q, "{name}: f64 quantize not idempotent at {x}");
+                let xf = x as f32;
+                let qf = enc.quantize(xf);
+                assert_eq!(enc.quantize(qf), qf, "{name}: encoder not idempotent at {xf}");
+            }
+        }
+    }
+
+    #[test]
+    fn quantize_is_monotone_over_a_dense_grid() {
+        for name in all_names() {
+            let s = must(name);
+            let enc = s.encoder();
+            let mut prev = f64::NEG_INFINITY;
+            let mut prev_f = f32::NEG_INFINITY;
+            for i in 0..=4000 {
+                let x = -1.25 + 2.5 * i as f64 / 4000.0;
+                let q = s.quantize(x);
+                assert!(q >= prev, "{name}: quantize not monotone at {x}: {q} < {prev}");
+                prev = q;
+                let qf = enc.quantize(x as f32);
+                assert!(qf >= prev_f, "{name}: encoder not monotone at {x}: {qf} < {prev_f}");
+                prev_f = qf;
+            }
+            // the grid covers the whole codebook: both endpoints were hit
+            assert_eq!(prev, *s.codebook.last().unwrap(), "{name}: top code never reached");
+        }
+    }
+
+    #[test]
+    fn codebook_points_round_trip_through_their_own_index() {
+        for name in all_names() {
+            let s = must(name);
+            let enc = s.encoder();
+            for (i, &c) in s.codebook.iter().enumerate() {
+                assert_eq!(s.encode(c), i, "{name}: encode({c}) lost its index");
+                assert_eq!(s.quantize(c), c, "{name}: {c} is not a fixed point");
+                assert_eq!(enc.value(i), c as f32, "{name}: encoder value table mismatch");
+                assert_eq!(
+                    enc.quantize(c as f32),
+                    c as f32,
+                    "{name}: {c} is not an encoder fixed point"
+                );
+            }
+        }
+    }
+
+    #[test]
     fn positive_side_bias_of_lookup_formats() {
         for name in ["nf4", "sf4", "nf3", "sf3"] {
             let cb = must(name).codebook;

@@ -322,6 +322,120 @@ pub fn forward_lm_step(
     Ok(x.matmul(p.get("head")?))
 }
 
+/// GEMM launches one [`forward_lm_step_batch`] call issues: q/k/v/o/w1/w2
+/// per layer plus the head projection. Lives next to the forward so the
+/// engine's fused-GEMM metric cannot drift from the actual matmul count —
+/// update both together when the forward's linear structure changes.
+pub fn step_batch_gemms(cfg: &ModelConfig) -> u64 {
+    6 * cfg.n_layers as u64 + 1
+}
+
+/// One fused decode step for a whole batch: embed `tokens[b]` at position
+/// `kvs[b].len()`, run every linear as one `[B, d] x [d, N]` GEMM (instead
+/// of `B` separate `[1, d]` matmuls), attend each row over its *own* KV
+/// lane, append each row's per-layer K/V, and return the logits `[B, V]`
+/// (row `b` belongs to `kvs[b]`).
+///
+/// Rows may sit at different positions (ragged batches: sessions join and
+/// leave mid-flight). Because every matmul routes through the shared
+/// [`crate::tensor::gemm`] kernel — whose per-row arithmetic is independent
+/// of `B` — and the attention/layernorm loops mirror [`forward_lm_step`]
+/// exactly, row `b` of the result is **bit-identical** to calling
+/// `forward_lm_step(cfg, p, tokens[b], kvs[b])` on its own
+/// (`rust/tests/batched_decode.rs` enforces this across fp32 and fake-quant
+/// checkpoints). Either all rows commit (`advance`) or, on error, none do.
+pub fn forward_lm_step_batch(
+    cfg: &ModelConfig,
+    p: &Checkpoint,
+    tokens: &[i32],
+    kvs: &mut [&mut dyn KvStore],
+) -> Result<Tensor> {
+    let b = tokens.len();
+    anyhow::ensure!(b > 0, "empty batch");
+    anyhow::ensure!(
+        b == kvs.len(),
+        "batch mismatch: {b} tokens for {} kv stores",
+        kvs.len()
+    );
+    let d = cfg.d_model;
+    let positions: Vec<usize> = kvs.iter().map(|kv| kv.len()).collect();
+    for (row, &pos) in positions.iter().enumerate() {
+        anyhow::ensure!(pos < cfg.seq, "row {row}: position {pos} out of range for seq {}", cfg.seq);
+        anyhow::ensure!(
+            pos < kvs[row].capacity(),
+            "row {row}: kv store full at {pos}/{}",
+            kvs[row].capacity()
+        );
+    }
+    let embed = p.get("embed")?;
+    let posm = p.get("pos")?;
+    let mut x = Tensor::zeros(&[b, d]);
+    for (row, &t) in tokens.iter().enumerate() {
+        let e = embed.row(t as usize);
+        let pr = posm.row(positions[row]);
+        let xr = x.row_mut(row);
+        for j in 0..d {
+            xr[j] = e[j] + pr[j];
+        }
+    }
+    let (heads, dh) = (cfg.n_heads, cfg.d_head());
+    let scale = 1.0 / (dh as f32).sqrt();
+    let mut att_row = vec![0.0f32; positions.iter().copied().max().unwrap() + 1];
+    for l in 0..cfg.n_layers {
+        let h = layernorm(&x, p.get(&format!("l{l}.ln1_g"))?, p.get(&format!("l{l}.ln1_b"))?);
+        // fused projections: one [B, d] x [d, d] GEMM each, not B
+        let q = h.matmul(p.get(&format!("l{l}.wq"))?);
+        let kx = h.matmul(p.get(&format!("l{l}.wk"))?);
+        let vx = h.matmul(p.get(&format!("l{l}.wv"))?);
+        let mut ctx = Tensor::zeros(&[b, d]);
+        for row in 0..b {
+            let pos = positions[row];
+            let (kbuf, vbuf) = kvs[row].kv_mut(l);
+            kbuf[pos * d..(pos + 1) * d].copy_from_slice(kx.row(row));
+            vbuf[pos * d..(pos + 1) * d].copy_from_slice(vx.row(row));
+            for head in 0..heads {
+                let off = head * dh;
+                let qi = &q.row(row)[off..off + dh];
+                let mut mx = f32::NEG_INFINITY;
+                for j in 0..=pos {
+                    let kj = &kbuf[j * d + off..j * d + off + dh];
+                    let mut dot = 0.0f32;
+                    for t in 0..dh {
+                        dot += qi[t] * kj[t];
+                    }
+                    att_row[j] = dot * scale;
+                    mx = mx.max(att_row[j]);
+                }
+                let mut z = 0.0f32;
+                for j in 0..=pos {
+                    att_row[j] = (att_row[j] - mx).exp();
+                    z += att_row[j];
+                }
+                let ctx_row = ctx.row_mut(row);
+                for j in 0..=pos {
+                    let w = att_row[j] / z;
+                    let vj = &vbuf[j * d + off..j * d + off + dh];
+                    for t in 0..dh {
+                        ctx_row[off + t] += w * vj[t];
+                    }
+                }
+            }
+        }
+        let a = ctx.matmul(p.get(&format!("l{l}.wo"))?);
+        x = x.add(&a);
+        let h = layernorm(&x, p.get(&format!("l{l}.ln2_g"))?, p.get(&format!("l{l}.ln2_b"))?);
+        let mut h = h.matmul(p.get(&format!("l{l}.w1"))?);
+        h.map_inplace(gelu);
+        let h = h.matmul(p.get(&format!("l{l}.w2"))?);
+        x = x.add(&h);
+    }
+    for kv in kvs.iter_mut() {
+        kv.advance();
+    }
+    let x = layernorm(&x, p.get("lnf_g")?, p.get("lnf_b")?);
+    Ok(x.matmul(p.get("head")?))
+}
+
 /// Greedy multi-token generation over the incremental path: prefill the
 /// prompt token by token, then decode until `max_new` tokens, `eos`, or the
 /// positional window runs out. Returns only the generated tokens.
@@ -670,6 +784,73 @@ mod tests {
         kv.reset();
         let b = forward_lm_step(&cfg, &p, 5, &mut kv).unwrap();
         assert_eq!(a.data(), b.data());
+    }
+
+    #[test]
+    fn batched_step_matches_single_steps_bitwise() {
+        // ragged batch: three lanes at different positions, one fused call vs
+        // three sequential forward_lm_step calls — rows must be bit-identical
+        let cfg = zoo("nano").unwrap();
+        let p = random_ckpt(&cfg, 10);
+        let prompts: [&[i32]; 3] = [&[1, 2, 3, 4, 5], &[9, 8, 7], &[4]];
+        // sequential reference, recording every step's logits per lane
+        let mut expect: Vec<Vec<Tensor>> = Vec::new();
+        for prompt in prompts {
+            let mut kv = SeqKvCache::new(&cfg);
+            expect.push(
+                prompt
+                    .iter()
+                    .map(|&t| forward_lm_step(&cfg, &p, t, &mut kv).unwrap())
+                    .collect(),
+            );
+        }
+        // fused path: lanes advance in lockstep, dropping out as they run dry
+        let mut kvs: Vec<SeqKvCache> = (0..3).map(|_| SeqKvCache::new(&cfg)).collect();
+        for step in 0..prompts.iter().map(|pr| pr.len()).max().unwrap() {
+            let live: Vec<usize> = (0..3).filter(|&i| step < prompts[i].len()).collect();
+            let tokens: Vec<i32> = live.iter().map(|&i| prompts[i][step]).collect();
+            let mut stores: Vec<&mut dyn KvStore> = kvs
+                .iter_mut()
+                .enumerate()
+                .filter(|(i, _)| step < prompts[*i].len())
+                .map(|(_, kv)| kv as &mut dyn KvStore)
+                .collect();
+            let logits = forward_lm_step_batch(&cfg, &p, &tokens, &mut stores).unwrap();
+            assert_eq!(logits.shape(), &[live.len(), cfg.vocab]);
+            for (r, &lane) in live.iter().enumerate() {
+                assert_eq!(
+                    logits.row(r),
+                    expect[lane][step].row(0),
+                    "lane {lane} step {step}: fused row must be bit-identical"
+                );
+            }
+        }
+        for (lane, prompt) in prompts.iter().enumerate() {
+            assert_eq!(kvs[lane].len(), prompt.len(), "lane {lane} committed its positions");
+        }
+    }
+
+    #[test]
+    fn batched_step_rejects_bad_batches() {
+        let cfg = zoo("nano").unwrap();
+        let p = random_ckpt(&cfg, 11);
+        // empty batch
+        let mut none: Vec<&mut dyn KvStore> = Vec::new();
+        assert!(forward_lm_step_batch(&cfg, &p, &[], &mut none).is_err());
+        // tokens / stores length mismatch
+        let mut kv = SeqKvCache::new(&cfg);
+        let mut one: Vec<&mut dyn KvStore> = vec![&mut kv];
+        assert!(forward_lm_step_batch(&cfg, &p, &[1, 2], &mut one).is_err());
+        // a full lane poisons the whole call and commits nothing
+        let mut full = SeqKvCache::with_capacity(cfg.n_layers, cfg.d_model, 1);
+        let mut open = SeqKvCache::new(&cfg);
+        {
+            let mut pair: Vec<&mut dyn KvStore> = vec![&mut full];
+            forward_lm_step_batch(&cfg, &p, &[3], &mut pair).unwrap();
+        }
+        let mut pair: Vec<&mut dyn KvStore> = vec![&mut full, &mut open];
+        assert!(forward_lm_step_batch(&cfg, &p, &[4, 5], &mut pair).is_err());
+        assert_eq!(open.len(), 0, "no partial commits on batch failure");
     }
 
     #[test]

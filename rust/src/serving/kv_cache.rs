@@ -122,7 +122,52 @@ impl KvCache {
             capacity: self.cfg.capacity,
         }
     }
+
+    /// Borrow several *distinct* slots' lanes at once — the fused batched
+    /// decode step (`nn::forward_lm_step_batch`) needs every row's [`KvStore`]
+    /// live simultaneously. Views come back in `ids` order. The disjointness
+    /// that makes this sound is proven to the borrow checker by carving each
+    /// layer buffer into per-slot chunks and handing each chunk out at most
+    /// once; duplicate or not-in-use ids panic (engine bugs).
+    pub fn slots_mut(&mut self, ids: &[SlotId]) -> Vec<KvView<'_>> {
+        for &id in ids {
+            assert!(self.in_use[id], "viewing slot {id} that is not in use");
+        }
+        let lane = self.cfg.capacity * self.cfg.d_model;
+        let mut ks: Vec<Vec<&mut [f32]>> =
+            (0..ids.len()).map(|_| Vec::with_capacity(self.cfg.n_layers)).collect();
+        let mut vs: Vec<Vec<&mut [f32]>> =
+            (0..ids.len()).map(|_| Vec::with_capacity(self.cfg.n_layers)).collect();
+        for layer in self.k.iter_mut() {
+            let mut lanes: Vec<Option<&mut [f32]>> = layer.chunks_mut(lane).map(Some).collect();
+            for (i, &id) in ids.iter().enumerate() {
+                ks[i].push(lanes[id].take().expect("duplicate slot id in batch"));
+            }
+        }
+        for layer in self.v.iter_mut() {
+            let mut lanes: Vec<Option<&mut [f32]>> = layer.chunks_mut(lane).map(Some).collect();
+            for (i, &id) in ids.iter().enumerate() {
+                vs[i].push(lanes[id].take().expect("duplicate slot id in batch"));
+            }
+        }
+        let capacity = self.cfg.capacity;
+        let mut lens: Vec<Option<&mut usize>> = self.lens.iter_mut().map(Some).collect();
+        ks.into_iter()
+            .zip(vs)
+            .zip(ids)
+            .map(|((k, v), &id)| SlotView {
+                k,
+                v,
+                len: lens[id].take().expect("duplicate slot id in batch"),
+                capacity,
+            })
+            .collect()
+    }
 }
+
+/// The engine-facing name for one borrowed KV lane: `slots_mut` hands the
+/// fused batched step one `KvView` per row.
+pub type KvView<'a> = SlotView<'a>;
 
 /// Mutable view of one slot's per-layer K/V lanes.
 pub struct SlotView<'a> {
@@ -226,6 +271,48 @@ mod tests {
         let (k, v) = view.kv_mut(1);
         assert!(k.iter().all(|&x| x == 0.0));
         assert!(v.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn slots_mut_borrows_many_disjoint_views_at_once() {
+        let mut c = small();
+        let a = c.allocate().unwrap();
+        let b = c.allocate().unwrap();
+        {
+            // both views live at the same time, in request order
+            let mut views = c.slots_mut(&[b, a]);
+            assert_eq!(views.len(), 2);
+            let (kb, _) = views[0].kv_mut(0);
+            kb.fill(5.0);
+            views[0].advance();
+            let (ka, _) = views[1].kv_mut(0);
+            assert!(ka.iter().all(|&x| x == 0.0), "lanes are disjoint");
+            views[1].advance();
+            views[1].advance();
+        }
+        assert_eq!(c.len(b), 1);
+        assert_eq!(c.len(a), 2);
+        // single-slot view sees what the batched view wrote
+        let mut view = c.slot(b);
+        let (kb, _) = view.kv_mut(0);
+        assert!(kb.iter().all(|&x| x == 5.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate slot id")]
+    fn slots_mut_rejects_duplicates() {
+        let mut c = small();
+        let a = c.allocate().unwrap();
+        c.slots_mut(&[a, a]);
+    }
+
+    #[test]
+    #[should_panic(expected = "not in use")]
+    fn slots_mut_rejects_free_slots() {
+        let mut c = small();
+        let a = c.allocate().unwrap();
+        c.free(a);
+        c.slots_mut(&[a]);
     }
 
     #[test]

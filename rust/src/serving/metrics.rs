@@ -1,8 +1,9 @@
 //! Serving metrics: per-step counters folded into a final report with the
 //! latency percentiles that matter for decode serving — time-to-first-token
-//! (TTFT) and inter-token latency (ITL) — plus sustained decode throughput
-//! and batch occupancy. Supersedes the old `ServeStats` aggregate, which the
-//! coordinator shim now derives from this collector.
+//! (TTFT) and inter-token latency (ITL) — plus sustained decode throughput,
+//! batch occupancy, and the fused-path counters (rows per batched forward,
+//! fused GEMM launches). Supersedes the old `ServeStats` aggregate, which
+//! the coordinator shim now derives from this collector.
 
 use std::fmt;
 use std::time::{Duration, Instant};
@@ -28,6 +29,14 @@ pub struct MetricsCollector {
     pub itl: Vec<Duration>,
     /// Active (prefill + decoding) sessions at each step.
     pub occupancy: Vec<usize>,
+    /// Rows per fused batched forward (batched-step occupancy: how many
+    /// sequences each `forward_lm_step_batch` call actually carried).
+    pub fused_batch: Vec<usize>,
+    /// Fused batched forwards issued.
+    pub fused_steps: usize,
+    /// Fused `[B, d] x [d, N]` GEMM launches (one per linear per fused
+    /// forward; without fusion each would have been `B` separate GEMMs).
+    pub fused_gemms: u64,
     pub steps: usize,
     pub decode_tokens: usize,
     pub prefill_tokens: usize,
@@ -56,6 +65,14 @@ impl MetricsCollector {
         self.occupancy.push(active);
         self.decode_tokens += decoded;
         self.prefill_tokens += prefilled;
+    }
+
+    /// One fused batched forward: `rows` sequences rode the batch, costing
+    /// `gemms` fused GEMM launches (vs `rows * gemms` unfused).
+    pub fn record_fused(&mut self, rows: usize, gemms: u64) {
+        self.fused_steps += 1;
+        self.fused_gemms += gemms;
+        self.fused_batch.push(rows);
     }
 
     pub fn record_first_token(&mut self, since_submit: Duration) {
@@ -90,6 +107,10 @@ impl MetricsCollector {
             decode_tps: if secs > 0.0 { self.decode_tokens as f64 / secs } else { 0.0 },
             mean_occupancy: self.occupancy.iter().sum::<usize>() as f64
                 / self.occupancy.len().max(1) as f64,
+            fused_steps: self.fused_steps,
+            fused_gemms: self.fused_gemms,
+            mean_fused_batch: self.fused_batch.iter().sum::<usize>() as f64
+                / self.fused_batch.len().max(1) as f64,
             wall,
         }
     }
@@ -112,6 +133,12 @@ pub struct MetricsReport {
     pub decode_tps: f64,
     /// Mean active sessions per step.
     pub mean_occupancy: f64,
+    /// Fused batched forwards issued.
+    pub fused_steps: usize,
+    /// Fused GEMM launches across the run.
+    pub fused_gemms: u64,
+    /// Mean rows per fused batched forward (batched-step occupancy).
+    pub mean_fused_batch: f64,
     pub wall: Duration,
 }
 
@@ -121,7 +148,7 @@ impl fmt::Display for MetricsReport {
             f,
             "completed {} (rejected {}, evicted {}) | {} steps, {} decode + {} prefill tok \
              | {:.1} tok/s decode | ttft p50 {:?} p99 {:?} | itl p50 {:?} p99 {:?} \
-             | occupancy {:.2} | wall {:?}",
+             | occupancy {:.2} | fused {} gemms over {} calls, batch {:.2} | wall {:?}",
             self.completed,
             self.rejected,
             self.evicted,
@@ -134,6 +161,9 @@ impl fmt::Display for MetricsReport {
             self.itl_p50,
             self.itl_p99,
             self.mean_occupancy,
+            self.fused_gemms,
+            self.fused_steps,
+            self.mean_fused_batch,
             self.wall,
         )
     }
@@ -185,6 +215,8 @@ mod tests {
         std::thread::sleep(Duration::from_millis(2)); // make wall observable
         m.record_step(2, 2, 8);
         m.record_step(4, 4, 0);
+        m.record_fused(2, 13);
+        m.record_fused(4, 13);
         m.record_first_token(ms(10));
         m.record_inter_token(ms(2));
         m.record_inter_token(ms(4));
@@ -196,6 +228,9 @@ mod tests {
         assert_eq!(r.prefill_tokens, 8);
         assert_eq!(r.completed, 1);
         assert!((r.mean_occupancy - 3.0).abs() < 1e-12);
+        assert_eq!(r.fused_steps, 2);
+        assert_eq!(r.fused_gemms, 26);
+        assert!((r.mean_fused_batch - 3.0).abs() < 1e-12);
         assert_eq!(r.ttft_p50, ms(10));
         assert_eq!(r.itl_p99, ms(4));
         assert!(r.wall > Duration::ZERO);

@@ -8,9 +8,12 @@
 //! * [`Engine`] — owns the model (a [`ModelConfig`] + [`Checkpoint`], fp32
 //!   or fake-quant from `coordinator::pipeline::fake_quant_checkpoint`), the
 //!   [`KvCache`] slot pool, the [`Scheduler`] and the metrics. Requests can
-//!   be `submit`ted at any time; each `step` interleaves chunked prefill
-//!   with one decode token for every running sequence, retires finished
-//!   sequences, and immediately refills their freed slots from the queue.
+//!   be `submit`ted at any time; each `step` fuses chunked prefill and one
+//!   decode token for every running sequence into `[B, d]` batched forwards
+//!   (`nn::forward_lm_step_batch` — one GEMM per linear instead of `B`),
+//!   retires finished sequences, and immediately refills their freed slots
+//!   from the queue. `preempt` evicts a session mid-flight and resumes it
+//!   later by replaying its context into a fresh slot.
 //! * [`DecodeRequest`] / [`TokenEvent`] — the streaming API: each request
 //!   brings its own event channel and receives every generated token as it
 //!   is produced, then a terminal `Finished` (or `Rejected`).
@@ -25,7 +28,7 @@ pub mod metrics;
 pub mod scheduler;
 pub mod session;
 
-pub use kv_cache::{KvCache, KvCacheConfig, SlotId};
+pub use kv_cache::{KvCache, KvCacheConfig, KvView, SlotId, SlotView};
 pub use metrics::{percentile, MetricsCollector, MetricsReport};
 pub use scheduler::{Scheduler, SchedulerConfig};
 pub use session::{DecodeSession, FinishReason, SessionState};
@@ -38,7 +41,6 @@ use anyhow::Result;
 
 use crate::model_io::{Checkpoint, ModelConfig};
 use crate::nn;
-use crate::tensor::Tensor;
 
 /// One generation request. `id` is caller-chosen (echoed on every event);
 /// keep it unique per engine or streams will interleave confusingly.
@@ -179,10 +181,17 @@ impl Engine {
         }
     }
 
-    /// One iteration-level step: admit queued sessions into free slots, run
-    /// a prefill chunk for each prefilling session (emitting its first token
-    /// when the prompt completes), decode one token for every running
-    /// session, then retire finished sessions and free their slots.
+    /// One iteration-level step: admit queued sessions into free slots, then
+    /// drive every active session through **fused batched forwards** —
+    /// `[B, d]` rows through `nn::forward_lm_step_batch`, one GEMM per
+    /// linear per micro-step instead of `B`. The first micro-step carries
+    /// one decode row per `Decoding` session plus one prefill row per
+    /// `Prefill` session; the remaining `prefill_chunk - 1` micro-steps
+    /// carry prefill rows only, so prompt ingestion keeps its per-step chunk
+    /// budget while decode stays at one token per session per step. A
+    /// session whose context completes emits its next token from its own
+    /// batch row. Finished (or evicted) sessions are retired and their slots
+    /// freed for the next step's admission.
     pub fn step(&mut self) -> Result<()> {
         for mut s in self.sched.admit(self.cache.slots_free(), self.active.len()) {
             let slot = self.cache.allocate().expect("admit() checked free slots");
@@ -192,67 +201,118 @@ impl Engine {
 
         let window = self.model_cfg.seq.min(self.cache.capacity());
         let stepped = self.active.len();
+        let gemms_per_call = nn::step_batch_gemms(&self.model_cfg);
         let mut decoded = 0usize;
         let mut prefilled = 0usize;
-        for s in &mut self.active {
-            match s.state {
-                SessionState::Prefill => {
-                    let slot = s.slot.expect("prefilling session holds a slot");
-                    let end = (s.prefilled + self.prefill_chunk).min(s.prompt.len());
-                    let mut last = None;
-                    {
-                        let mut view = self.cache.slot(slot);
-                        for i in s.prefilled..end {
-                            last = Some(nn::forward_lm_step(
-                                &self.model_cfg,
-                                &self.ckpt,
-                                s.prompt[i],
-                                &mut view,
-                            )?);
-                        }
-                    }
-                    prefilled += end - s.prefilled;
-                    s.prefilled = end;
-                    if s.prefilled == s.prompt.len() {
-                        s.begin_decode();
-                        let logits = last.expect("prompts are non-empty");
-                        let remaining = window - self.cache.len(slot);
-                        emit_token(s, &logits, remaining, &mut self.metrics);
-                    }
+        for micro in 0..self.prefill_chunk {
+            // rows: (active index, slot, input token, is_prefill)
+            let mut rows: Vec<(usize, SlotId, i32, bool)> = Vec::new();
+            for (i, s) in self.active.iter().enumerate() {
+                match s.state {
+                    SessionState::Prefill => rows.push((
+                        i,
+                        s.slot.expect("prefilling session holds a slot"),
+                        s.context_token(s.prefilled),
+                        true,
+                    )),
+                    SessionState::Decoding if micro == 0 => rows.push((
+                        i,
+                        s.slot.expect("decoding session holds a slot"),
+                        s.last_token(),
+                        false,
+                    )),
+                    _ => {}
                 }
-                SessionState::Decoding => {
-                    let slot = s.slot.expect("decoding session holds a slot");
-                    let token = s.last_token();
-                    let mut view = self.cache.slot(slot);
-                    let logits =
-                        nn::forward_lm_step(&self.model_cfg, &self.ckpt, token, &mut view)?;
+            }
+            if rows.is_empty() {
+                break;
+            }
+            let slot_ids: Vec<SlotId> = rows.iter().map(|&(_, slot, _, _)| slot).collect();
+            let tokens: Vec<i32> = rows.iter().map(|&(_, _, t, _)| t).collect();
+            let logits = {
+                let mut views = self.cache.slots_mut(&slot_ids);
+                let mut stores: Vec<&mut dyn nn::KvStore> =
+                    views.iter_mut().map(|v| v as &mut dyn nn::KvStore).collect();
+                nn::forward_lm_step_batch(&self.model_cfg, &self.ckpt, &tokens, &mut stores)?
+            };
+            self.metrics.record_fused(rows.len(), gemms_per_call);
+            for (r, &(i, slot, _, is_prefill)) in rows.iter().enumerate() {
+                let s = &mut self.active[i];
+                if is_prefill {
+                    s.prefilled += 1;
+                    prefilled += 1;
+                    if s.prefilled < s.context_len() {
+                        continue;
+                    }
+                    s.begin_decode();
+                } else {
                     decoded += 1;
-                    let remaining = window - self.cache.len(slot);
-                    emit_token(s, &logits, remaining, &mut self.metrics);
                 }
-                _ => {}
+                let remaining = window - self.cache.len(slot);
+                emit_token(s, logits.row(r), remaining, &mut self.metrics);
             }
         }
         if stepped > 0 {
             self.metrics.record_step(stepped, decoded, prefilled);
         }
 
-        // retire: free slots first so the next step's admission sees them
+        // retire: free slots first so the next step's admission sees them.
+        // Evicted sessions must release their slot here too — skipping them
+        // (as the pre-batched engine did) leaked the slot on any eviction
+        // that wasn't routed through `abort`.
         for s in &mut self.active {
-            if let SessionState::Done(reason) = s.state {
-                if let Some(slot) = s.slot.take() {
-                    self.cache.free(slot);
+            match s.state {
+                SessionState::Done(reason) => {
+                    if let Some(slot) = s.slot.take() {
+                        self.cache.free(slot);
+                    }
+                    self.metrics.record_completion();
+                    let _ = s.events.send(TokenEvent::Finished {
+                        request: s.id,
+                        reason,
+                        generated: s.generated.len(),
+                    });
                 }
-                self.metrics.record_completion();
-                let _ = s.events.send(TokenEvent::Finished {
-                    request: s.id,
-                    reason,
-                    generated: s.generated.len(),
-                });
+                SessionState::Evicted => {
+                    if let Some(slot) = s.slot.take() {
+                        self.cache.free(slot);
+                    }
+                }
+                _ => {}
             }
         }
         self.active.retain(|s| s.is_active());
         Ok(())
+    }
+
+    /// Preempt an active session: reclaim its KV slot *now* and send it back
+    /// to the head of the admission queue. On re-admission it replays its
+    /// whole context (prompt + generated so far) into a fresh slot, so the
+    /// greedy stream resumes exactly where it stopped — the client just sees
+    /// a latency bubble. Returns `false` when `id` is not currently active.
+    /// If the bounded queue is full the stream ends with a terminal
+    /// [`TokenEvent::Finished`] carrying [`FinishReason::Preempted`]
+    /// (`Rejected` is reserved for requests that never started).
+    pub fn preempt(&mut self, id: u64) -> bool {
+        let i = match self.active.iter().position(|s| s.id == id) {
+            Some(i) => i,
+            None => return false,
+        };
+        let mut s = self.active.remove(i);
+        if let Some(slot) = s.slot.take() {
+            self.cache.free(slot);
+        }
+        s.evict();
+        self.metrics.evicted += 1;
+        s.requeue();
+        if let Err(s) = self.sched.enqueue_front(s) {
+            let _ = s.events.send(TokenEvent::Finished {
+                request: s.id,
+                reason: FinishReason::Preempted,
+                generated: s.generated.len(),
+            });
+        }
+        true
     }
 
     /// Serve a request channel until it closes and all work drains; returns
@@ -335,17 +395,23 @@ impl Engine {
     }
 }
 
-/// Greedy-pick from `logits [1, V]`, stream the token, and apply the
-/// session's stop conditions given the cache positions still writable.
+/// Greedy-pick from one session's logits row (its lane of the fused batch),
+/// stream the token, and apply the session's stop conditions given the cache
+/// positions still writable. The greedy pick argmaxes the raw logits
+/// (log-softmax is monotone, and this is exactly what the re-forwarding
+/// references in the equivalence tests do); the log-partition term is
+/// computed only for the streamed logprob, with the same arithmetic as
+/// `Tensor::log_softmax_last` and no per-token allocation.
 fn emit_token(
     s: &mut DecodeSession,
-    logits: &Tensor,
+    logits_row: &[f32],
     remaining_window: usize,
     metrics: &mut MetricsCollector,
 ) {
-    let logp = logits.log_softmax_last();
-    let row = logp.row(0);
-    let token = crate::tensor::argmax(row) as i32;
+    let token = crate::tensor::argmax(logits_row) as i32;
+    let mx = logits_row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let z: f32 = logits_row.iter().map(|&x| (x - mx).exp()).sum();
+    let lz = z.ln() + mx;
     let now = Instant::now();
     match s.last_token_at {
         None => {
@@ -361,7 +427,7 @@ fn emit_token(
         request: s.id,
         index,
         token,
-        logprob: row[token as usize],
+        logprob: logits_row[token as usize] - lz,
     });
     if sent.is_err() {
         s.finish(FinishReason::Disconnected);
@@ -604,6 +670,97 @@ mod tests {
         assert_eq!(report.decode_tokens, 8 * 4);
         assert_eq!(report.ttft_p50.is_zero(), false);
         assert!(report.mean_occupancy >= 1.0);
+    }
+
+    #[test]
+    fn fused_metrics_track_batched_forwards() {
+        let mut eng = engine(4);
+        let (a, _rx_a) = DecodeRequest::new(vec![1, 2], 3);
+        let (b, _rx_b) = DecodeRequest::new(vec![3, 4], 3);
+        eng.submit(a);
+        eng.submit(b);
+        while eng.has_work() {
+            eng.step().unwrap();
+        }
+        let cfg = zoo("nano").unwrap();
+        let report = eng.report();
+        assert!(report.fused_steps > 0);
+        assert!(
+            report.mean_fused_batch > 1.0,
+            "two co-resident sessions must share fused batches: {}",
+            report.mean_fused_batch
+        );
+        assert_eq!(
+            report.fused_gemms,
+            report.fused_steps as u64 * crate::nn::step_batch_gemms(&cfg),
+            "every fused call launches one GEMM per linear"
+        );
+    }
+
+    #[test]
+    fn preempt_frees_slot_and_requeues_at_head() {
+        let mut eng = engine(1);
+        let (a, rx_a) = DecodeRequest::new(vec![1, 2], 8);
+        let id_a = a.id;
+        let (b, _rx_b) = DecodeRequest::new(vec![3, 4], 2);
+        eng.submit(a);
+        eng.submit(b);
+        eng.step().unwrap(); // A active, B queued
+        assert_eq!(eng.cache().slots_in_use(), 1);
+        let (a_before, _) = drain_tokens(&rx_a);
+        assert!(a_before >= 1);
+
+        assert!(eng.preempt(id_a), "active session is preemptible");
+        assert!(!eng.preempt(id_a), "already evicted: nothing to preempt");
+        assert!(!eng.preempt(9999), "unknown id");
+        assert_eq!(eng.cache().slots_in_use(), 0, "eviction returns the slot");
+        assert_eq!(eng.report().evicted, 1);
+
+        // next step: A (queue head, ahead of B) re-enters the freed slot
+        eng.step().unwrap();
+        assert_eq!(eng.cache().slots_in_use(), 1);
+        while eng.has_work() {
+            eng.step().unwrap();
+        }
+        let (a_after, a_fin) = drain_tokens(&rx_a);
+        assert_eq!(a_before + a_after, 8, "budget unaffected by the eviction round trip");
+        assert_eq!(a_fin, Some(FinishReason::MaxTokens));
+        assert_eq!(eng.cache().slots_in_use(), 0);
+        assert_eq!(eng.report().completed, 2);
+    }
+
+    #[test]
+    fn preempt_with_full_queue_finishes_the_stream_cleanly() {
+        // bounded queue, no room to requeue: the partially-served client
+        // must get a terminal Finished(Preempted), never a Rejected
+        let cfg = zoo("nano").unwrap();
+        let ckpt = init_lm_params(&cfg, 44);
+        let mut eng = Engine::new(
+            cfg,
+            ckpt,
+            EngineConfig {
+                slots: 1,
+                scheduler: SchedulerConfig { max_batch: 1, max_queue: 1, ..SchedulerConfig::default() },
+                ..EngineConfig::default()
+            },
+        );
+        let (a, rx_a) = DecodeRequest::new(vec![1, 2], 8);
+        let id_a = a.id;
+        let (b, _rx_b) = DecodeRequest::new(vec![3, 4], 2);
+        eng.submit(a);
+        eng.step().unwrap(); // A active (slot held)
+        eng.submit(b); // fills the queue (max_queue 1)
+        assert!(eng.preempt(id_a));
+        assert_eq!(eng.cache().slots_in_use(), 0);
+        let (tokens, fin) = drain_tokens(&rx_a);
+        assert!(tokens >= 1, "A had streamed before the preemption");
+        assert_eq!(fin, Some(FinishReason::Preempted));
+        assert_eq!(eng.report().evicted, 1);
+        // B proceeds normally in the freed slot
+        while eng.has_work() {
+            eng.step().unwrap();
+        }
+        assert_eq!(eng.report().completed, 1);
     }
 
     #[test]

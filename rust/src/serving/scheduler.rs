@@ -75,6 +75,16 @@ impl Scheduler {
         Ok(())
     }
 
+    /// Re-queue a preempted session at the *head*: it already waited its
+    /// turn, so it outranks fresh arrivals when its slot frees up.
+    pub fn enqueue_front(&mut self, s: DecodeSession) -> Result<(), DecodeSession> {
+        if self.cfg.max_queue > 0 && self.queue.len() >= self.cfg.max_queue {
+            return Err(s);
+        }
+        self.queue.push_front(s);
+        Ok(())
+    }
+
     /// Step-boundary admission: pop as many queued sessions as fit in both
     /// the free slot pool and the batch cap, in FIFO order.
     pub fn admit(&mut self, free_slots: usize, active: usize) -> Vec<DecodeSession> {
@@ -137,6 +147,19 @@ mod tests {
         // draining makes room again
         s.admit(10, 0);
         assert!(s.enqueue(session(3)).is_ok());
+    }
+
+    #[test]
+    fn enqueue_front_outranks_fresh_arrivals() {
+        let mut s = sched(4, 2);
+        s.enqueue(session(0)).unwrap();
+        s.enqueue_front(session(1)).unwrap();
+        let a = s.admit(10, 0);
+        assert_eq!(a.iter().map(|x| x.id).collect::<Vec<_>>(), vec![1, 0]);
+        // the bound applies to the front door too
+        s.enqueue(session(2)).unwrap();
+        s.enqueue(session(3)).unwrap();
+        assert!(s.enqueue_front(session(4)).is_err());
     }
 
     #[test]

@@ -1,11 +1,12 @@
 //! Per-request decode state machine.
 //!
-//! A request's life: `Queued` (admission queue) → `Prefill` (prompt tokens
+//! A request's life: `Queued` (admission queue) → `Prefill` (context tokens
 //! streaming into its KV slot) → `Decoding` (one generated token per engine
-//! step) → `Done(reason)`; `Evicted` is the preemption exit used when a
-//! session must give its slot back before finishing (not triggered by the
-//! current scheduler, but part of the state contract so later paged-KV /
-//! preemption PRs don't change the machine).
+//! step) → `Done(reason)`. `Evicted` is the preemption exit: the session
+//! gives its slot back before finishing (`Engine::preempt`), then `requeue`
+//! returns it to `Queued` with its stream and budget intact — the next
+//! prefill replays prompt **plus** already-generated tokens, so greedy
+//! decoding resumes bit-identically in a fresh slot.
 
 use std::sync::mpsc;
 use std::time::Instant;
@@ -24,6 +25,9 @@ pub enum FinishReason {
     ContextFull,
     /// The client dropped its event receiver mid-stream.
     Disconnected,
+    /// Evicted for preemption and could not be re-queued (bounded queue
+    /// full); the stream ends after the tokens already delivered.
+    Preempted,
 }
 
 /// Lifecycle states. Legal moves are enforced by the transition methods.
@@ -89,6 +93,23 @@ impl DecodeSession {
         *self.generated.last().unwrap_or_else(|| self.prompt.last().expect("non-empty prompt"))
     }
 
+    /// Positions the KV prefill must hold before decoding: the prompt plus
+    /// anything already generated (non-empty `generated` during prefill only
+    /// happens on a preemption resume, which replays the full context into a
+    /// fresh slot).
+    pub fn context_len(&self) -> usize {
+        self.prompt.len() + self.generated.len()
+    }
+
+    /// Token at context position `i` (prompt first, then generated).
+    pub fn context_token(&self, i: usize) -> i32 {
+        if i < self.prompt.len() {
+            self.prompt[i]
+        } else {
+            self.generated[i - self.prompt.len()]
+        }
+    }
+
     /// Queued → Prefill, claiming a KV slot.
     pub fn begin_prefill(&mut self, slot: SlotId) {
         assert_eq!(self.state, SessionState::Queued, "begin_prefill from {:?}", self.state);
@@ -96,10 +117,10 @@ impl DecodeSession {
         self.state = SessionState::Prefill;
     }
 
-    /// Prefill → Decoding once the whole prompt is cached.
+    /// Prefill → Decoding once the whole context is cached.
     pub fn begin_decode(&mut self) {
         assert_eq!(self.state, SessionState::Prefill, "begin_decode from {:?}", self.state);
-        assert_eq!(self.prefilled, self.prompt.len(), "decode before prefill completed");
+        assert_eq!(self.prefilled, self.context_len(), "decode before prefill completed");
         self.state = SessionState::Decoding;
     }
 
@@ -113,6 +134,17 @@ impl DecodeSession {
     pub fn evict(&mut self) {
         assert!(self.is_active(), "evict from {:?}", self.state);
         self.state = SessionState::Evicted;
+    }
+
+    /// Evicted → Queued for re-admission. The session keeps its stream,
+    /// generated tokens and budget; the next prefill replays the whole
+    /// context ([`Self::context_token`]) into a fresh slot, after which
+    /// greedy decoding continues exactly where it left off.
+    pub fn requeue(&mut self) {
+        assert_eq!(self.state, SessionState::Evicted, "requeue from {:?}", self.state);
+        assert!(self.slot.is_none(), "requeue while still holding a slot");
+        self.prefilled = 0;
+        self.state = SessionState::Queued;
     }
 
     /// Stop condition after appending a generated token, given the number of
@@ -200,5 +232,44 @@ mod tests {
         s.evict();
         assert_eq!(s.state, SessionState::Evicted);
         assert!(!s.is_active());
+    }
+
+    #[test]
+    fn context_replays_prompt_then_generated() {
+        let (mut s, _rx) = session(8, None);
+        assert_eq!(s.context_len(), 3);
+        s.generated.push(11);
+        s.generated.push(12);
+        assert_eq!(s.context_len(), 5);
+        let ctx: Vec<i32> = (0..s.context_len()).map(|i| s.context_token(i)).collect();
+        assert_eq!(ctx, vec![3, 4, 5, 11, 12]);
+    }
+
+    #[test]
+    fn requeue_resumes_the_lifecycle_with_progress_intact() {
+        let (mut s, _rx) = session(8, None);
+        s.begin_prefill(1);
+        s.prefilled = s.prompt.len();
+        s.begin_decode();
+        s.generated.push(9);
+        // preemption: slot reclaimed, then back to the queue
+        s.slot = None;
+        s.evict();
+        s.requeue();
+        assert_eq!(s.state, SessionState::Queued);
+        assert_eq!(s.prefilled, 0);
+        assert_eq!(s.generated, vec![9], "progress survives the round trip");
+        // second admission: the replayed context includes the generated token
+        s.begin_prefill(0);
+        s.prefilled = s.context_len();
+        s.begin_decode();
+        assert_eq!(s.last_token(), 9);
+    }
+
+    #[test]
+    #[should_panic(expected = "requeue from")]
+    fn requeue_requires_evicted() {
+        let (mut s, _rx) = session(4, None);
+        s.requeue();
     }
 }

@@ -201,26 +201,13 @@ impl Tensor {
 
     // -- linear algebra ----------------------------------------------------
 
-    /// `self [M,K] @ other [K,N] -> [M,N]` with a K-blocked inner loop.
+    /// `self [M,K] @ other [K,N] -> [M,N]`; thin wrapper over [`gemm`].
     pub fn matmul(&self, other: &Tensor) -> Tensor {
         let (m, k) = (self.rows(), self.cols());
         let (k2, n) = (other.rows(), other.cols());
         assert_eq!(k, k2, "matmul shape mismatch {:?} x {:?}", self.shape, other.shape);
         let mut out = vec![0.0f32; m * n];
-        // ikj loop order: streams `other` rows, vectorizes the j loop.
-        for i in 0..m {
-            let a_row = &self.data[i * k..(i + 1) * k];
-            let o_row = &mut out[i * n..(i + 1) * n];
-            for (kk, &a) in a_row.iter().enumerate() {
-                if a == 0.0 {
-                    continue;
-                }
-                let b_row = &other.data[kk * n..(kk + 1) * n];
-                for j in 0..n {
-                    o_row[j] += a * b_row[j];
-                }
-            }
-        }
+        gemm(m, k, n, &self.data, &other.data, &mut out);
         Tensor::new(&[m, n], out)
     }
 
@@ -289,6 +276,34 @@ impl Tensor {
     }
 }
 
+/// Row-major GEMM kernel: accumulate `a [m,k] @ b [k,n]` into `out [m,n]`
+/// (caller provides a zeroed — or pre-accumulated — `out`).
+///
+/// This is the crate's one matmul inner loop: `Tensor::matmul` and the fused
+/// batched decode step (`nn::forward_lm_step_batch`) both go through it, so a
+/// `[B, d]` batch of rows is arithmetically identical, row for row, to `B`
+/// separate `[1, d]` calls. ikj loop order streams `b` rows once per `a` row
+/// and keeps the j loop a contiguous zip over slices — the shape a future
+/// SIMD pass autovectorizes.
+pub fn gemm(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], out: &mut [f32]) {
+    assert_eq!(a.len(), m * k, "gemm: lhs is not [{m}, {k}]");
+    assert_eq!(b.len(), k * n, "gemm: rhs is not [{k}, {n}]");
+    assert_eq!(out.len(), m * n, "gemm: out is not [{m}, {n}]");
+    for i in 0..m {
+        let a_row = &a[i * k..(i + 1) * k];
+        let o_row = &mut out[i * n..(i + 1) * n];
+        for (kk, &av) in a_row.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let b_row = &b[kk * n..(kk + 1) * n];
+            for (o, &bv) in o_row.iter_mut().zip(b_row) {
+                *o += av * bv;
+            }
+        }
+    }
+}
+
 /// Argmax of a slice (first maximum wins).
 pub fn argmax(xs: &[f32]) -> usize {
     let mut best = 0;
@@ -309,6 +324,28 @@ mod tests {
         let a = Tensor::new(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
         let b = Tensor::new(&[2, 2], vec![1.0, 1.0, 1.0, 1.0]);
         assert_eq!(a.matmul(&b).data(), &[3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn gemm_batched_rows_bit_identical_to_single_rows() {
+        // the fused-decode contract: one [B,K] GEMM == B separate [1,K] GEMMs
+        let a = Tensor::from_fn(&[5, 16], |i| ((i * 37 % 23) as f32 - 11.0) * 0.125);
+        let b = Tensor::from_fn(&[16, 9], |i| ((i * 11 % 19) as f32 - 9.0) * 0.25);
+        let fused = a.matmul(&b);
+        for i in 0..5 {
+            let row = Tensor::new(&[1, 16], a.row(i).to_vec());
+            let single = row.matmul(&b);
+            assert_eq!(fused.row(i), single.row(0), "row {i} differs bitwise");
+        }
+    }
+
+    #[test]
+    fn gemm_accumulates_into_out() {
+        let a = Tensor::new(&[1, 2], vec![1.0, 2.0]);
+        let b = Tensor::new(&[2, 2], vec![1.0, 0.0, 0.0, 1.0]);
+        let mut out = vec![10.0f32, 20.0];
+        gemm(1, 2, 2, a.data(), b.data(), &mut out);
+        assert_eq!(out, vec![11.0, 22.0]);
     }
 
     #[test]

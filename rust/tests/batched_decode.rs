@@ -1,0 +1,251 @@
+//! Equivalence + property harness for the fused `[B, d]` batched decode
+//! step. The contract under test: batching is a pure *scheduling* change —
+//! every logit, token, and KV lane must be bit-identical to running each
+//! sequence alone through `forward_lm_step`, across fp32 and fake-quant
+//! (SF4, E2M1 supernormal) checkpoints, for ragged batches whose rows sit at
+//! different positions and drop out mid-flight. On top of that, the engine
+//! integration tests pin down slot accounting when sessions finish
+//! mid-batch and when the preemption/eviction path reclaims and reuses
+//! slots.
+
+use std::sync::mpsc;
+
+use llm_datatypes::coordinator::pipeline::{fake_quant_checkpoint, PipelineConfig};
+use llm_datatypes::coordinator::{corpus_for, trainer};
+use llm_datatypes::model_io::{zoo, Checkpoint, ModelConfig};
+use llm_datatypes::nn::{self, KvStore, SeqKvCache};
+use llm_datatypes::rng::Pcg64;
+use llm_datatypes::serving::{
+    DecodeRequest, Engine, EngineConfig, FinishReason, SchedulerConfig, TokenEvent,
+};
+use llm_datatypes::tensor::{argmax, Tensor};
+
+fn checkpoints() -> (ModelConfig, Vec<(&'static str, Checkpoint)>) {
+    let cfg = zoo("nano").unwrap();
+    let fp32 = trainer::init_lm_params(&cfg, 0xba7c4);
+    let corpus = corpus_for(&cfg);
+    let sf4 =
+        fake_quant_checkpoint(&cfg, &fp32, &PipelineConfig::weight_only("sf4"), &corpus).unwrap();
+    let e2m1_sp =
+        fake_quant_checkpoint(&cfg, &fp32, &PipelineConfig::weight_only("e2m1_sp"), &corpus)
+            .unwrap();
+    (cfg, vec![("fp32", fp32), ("sf4", sf4), ("e2m1_sp", e2m1_sp)])
+}
+
+fn engine_for(cfg: ModelConfig, ckpt: Checkpoint, slots: usize) -> Engine {
+    Engine::new(
+        cfg,
+        ckpt,
+        EngineConfig {
+            slots,
+            kv_capacity: 0,
+            scheduler: SchedulerConfig { max_batch: slots, ..SchedulerConfig::default() },
+        },
+    )
+}
+
+fn collect(rx: &mpsc::Receiver<TokenEvent>) -> (Vec<i32>, Option<FinishReason>) {
+    let mut tokens = Vec::new();
+    let mut finished = None;
+    while let Ok(ev) = rx.try_recv() {
+        match ev {
+            TokenEvent::Token { token, index, .. } => {
+                assert_eq!(index, tokens.len(), "stream indices are contiguous");
+                tokens.push(token);
+            }
+            TokenEvent::Finished { reason, .. } => finished = Some(reason),
+            TokenEvent::Rejected { reason, .. } => panic!("unexpected rejection: {reason}"),
+        }
+    }
+    (tokens, finished)
+}
+
+/// Greedy reference: re-forward the full growing prefix every step.
+fn reference_greedy(
+    cfg: &ModelConfig,
+    ckpt: &Checkpoint,
+    prompt: &[i32],
+    max_new: usize,
+) -> Vec<i32> {
+    let mut ctxt = prompt.to_vec();
+    let mut out = Vec::new();
+    for _ in 0..max_new {
+        let logits = nn::forward_lm(cfg, ckpt, &ctxt, None).unwrap();
+        let next = argmax(logits.row(ctxt.len() - 1)) as i32;
+        out.push(next);
+        if ctxt.len() >= cfg.seq {
+            break;
+        }
+        ctxt.push(next);
+    }
+    out
+}
+
+/// The property: for random ragged prompts and every batch size 1..=8, each
+/// row of `forward_lm_step_batch` is bit-identical to the same sequence fed
+/// alone through `forward_lm_step` — on fp32 and both quantized checkpoints.
+/// Lanes run dry at different steps, so the fused batch shrinks as it goes,
+/// exercising every intermediate batch size below `b` as well.
+#[test]
+fn batched_rows_bit_identical_to_sequential_all_formats() {
+    let (cfg, ckpts) = checkpoints();
+    for (label, ckpt) in &ckpts {
+        let mut rng = Pcg64::new(0x51de);
+        for b in 1..=8usize {
+            let lens: Vec<usize> = (0..b).map(|_| 1 + rng.below(10)).collect();
+            let prompts: Vec<Vec<i32>> = lens
+                .iter()
+                .map(|&n| (0..n).map(|_| rng.below(cfg.vocab) as i32).collect())
+                .collect();
+
+            // sequential reference: per-lane logits for every position
+            let mut expect: Vec<Vec<Tensor>> = Vec::new();
+            for prompt in &prompts {
+                let mut kv = SeqKvCache::new(&cfg);
+                expect.push(
+                    prompt
+                        .iter()
+                        .map(|&t| nn::forward_lm_step(&cfg, ckpt, t, &mut kv).unwrap())
+                        .collect(),
+                );
+            }
+
+            // fused path: lockstep over lanes, dropping finished lanes
+            let mut kvs: Vec<SeqKvCache> = (0..b).map(|_| SeqKvCache::new(&cfg)).collect();
+            for step in 0..*lens.iter().max().unwrap() {
+                let live: Vec<usize> = (0..b).filter(|&i| step < lens[i]).collect();
+                let tokens: Vec<i32> = live.iter().map(|&i| prompts[i][step]).collect();
+                let mut stores: Vec<&mut dyn KvStore> = kvs
+                    .iter_mut()
+                    .enumerate()
+                    .filter(|(i, _)| step < lens[*i])
+                    .map(|(_, kv)| kv as &mut dyn KvStore)
+                    .collect();
+                let logits =
+                    nn::forward_lm_step_batch(&cfg, ckpt, &tokens, &mut stores).unwrap();
+                assert_eq!(logits.shape(), &[live.len(), cfg.vocab]);
+                for (r, &lane) in live.iter().enumerate() {
+                    assert_eq!(
+                        logits.row(r),
+                        expect[lane][step].row(0),
+                        "{label} b={b} lane={lane} step={step}: batched row diverged"
+                    );
+                }
+            }
+            for (lane, &n) in lens.iter().enumerate() {
+                assert_eq!(kvs[lane].len(), n, "{label} b={b}: lane {lane} commit count");
+            }
+        }
+    }
+}
+
+/// Engine-level equivalence on quantized weights: generation through the
+/// fused batched engine equals full-prefix re-forwarding, token for token.
+#[test]
+fn engine_generation_matches_reforward_on_quantized_weights() {
+    let (cfg, ckpts) = checkpoints();
+    let prompt: Vec<i32> = (0..5).map(|i| (i * 3 + 2) % cfg.vocab as i32).collect();
+    for (label, ckpt) in ckpts {
+        let expect = reference_greedy(&cfg, &ckpt, &prompt, 9);
+        let mut eng = engine_for(cfg, ckpt, 3);
+        let (req, rx) = DecodeRequest::new(prompt.clone(), 9);
+        eng.submit(req);
+        while eng.has_work() {
+            eng.step().unwrap();
+        }
+        let (tokens, fin) = collect(&rx);
+        assert_eq!(tokens, expect, "{label}: fused engine diverged from re-forwarding");
+        assert_eq!(fin, Some(FinishReason::MaxTokens));
+    }
+}
+
+/// A session hitting its budget mid-batch must free its KV slot and shrink
+/// the next fused batch without perturbing the surviving sessions' tokens.
+#[test]
+fn mid_batch_finish_frees_slot_without_perturbing_survivors() {
+    let cfg = zoo("nano").unwrap();
+    let ckpt = trainer::init_lm_params(&cfg, 0xf1a7);
+    let expect_long = reference_greedy(&cfg, &ckpt, &[2, 3, 4], 12);
+    let expect_short = reference_greedy(&cfg, &ckpt, &[9, 1], 2);
+    let mut eng = engine_for(cfg, ckpt, 3);
+
+    let (long, rx_long) = DecodeRequest::new(vec![2, 3, 4], 12);
+    let (short, rx_short) = DecodeRequest::new(vec![9, 1], 2);
+    eng.submit(long);
+    eng.submit(short);
+
+    let mut in_use_trace = Vec::new();
+    while eng.has_work() {
+        eng.step().unwrap();
+        in_use_trace.push(eng.cache().slots_in_use());
+    }
+    assert_eq!(in_use_trace[0], 2, "both sessions co-resident at the start");
+    assert!(
+        in_use_trace.windows(2).all(|w| w[1] <= w[0]),
+        "no arrivals: occupancy only shrinks as sessions retire: {in_use_trace:?}"
+    );
+    assert_eq!(*in_use_trace.last().unwrap(), 0, "all slots returned");
+
+    let (long_tokens, long_fin) = collect(&rx_long);
+    let (short_tokens, short_fin) = collect(&rx_short);
+    assert_eq!(short_tokens, expect_short);
+    assert_eq!(short_fin, Some(FinishReason::MaxTokens));
+    assert_eq!(
+        long_tokens, expect_long,
+        "survivor's stream must be unperturbed by the mid-batch retirement"
+    );
+    assert_eq!(long_fin, Some(FinishReason::MaxTokens));
+
+    let report = eng.report();
+    assert!(report.mean_fused_batch > 1.0, "the two sessions shared fused batches");
+    assert!(report.fused_gemms > 0);
+}
+
+/// End-to-end eviction: preempting a decoding session frees its slot for
+/// the queue, and on re-admission it replays prompt + generated into a
+/// fresh slot and finishes with exactly the stream it would have produced
+/// uninterrupted (the KV slot reuse / `reset` contract under eviction).
+#[test]
+fn eviction_reclaims_slot_and_resumes_stream_identically() {
+    let cfg = zoo("nano").unwrap();
+    let ckpt = trainer::init_lm_params(&cfg, 0xe71c);
+    let expect_a = reference_greedy(&cfg, &ckpt, &[1, 2, 3], 10);
+    let expect_b = reference_greedy(&cfg, &ckpt, &[5, 6], 6);
+    let mut eng = engine_for(cfg, ckpt, 1);
+
+    let (a, rx_a) = DecodeRequest::new(vec![1, 2, 3], 10);
+    let id_a = a.id;
+    let (b, rx_b) = DecodeRequest::new(vec![5, 6], 6);
+    eng.submit(a);
+    eng.submit(b); // one slot: B waits in the queue behind A
+    for _ in 0..4 {
+        eng.step().unwrap();
+    }
+    let (a_head, a_fin) = collect(&rx_a);
+    assert!(a_head.len() >= 2, "A must be mid-generation before the eviction");
+    assert!(a_fin.is_none());
+    assert_eq!(eng.cache().slots_in_use(), 1);
+
+    assert!(eng.preempt(id_a));
+    assert_eq!(eng.cache().slots_in_use(), 0, "evicted session returned its slot");
+    assert_eq!(eng.report().evicted, 1);
+
+    // the freed slot is immediately reusable — A re-enters at the queue head
+    eng.step().unwrap();
+    assert_eq!(eng.cache().slots_in_use(), 1);
+    while eng.has_work() {
+        eng.step().unwrap();
+    }
+    let (a_tail, a_fin) = collect(&rx_a);
+    let a_tokens: Vec<i32> = a_head.into_iter().chain(a_tail).collect();
+    assert_eq!(
+        a_tokens, expect_a,
+        "resumed stream must equal the uninterrupted greedy stream"
+    );
+    assert_eq!(a_fin, Some(FinishReason::MaxTokens));
+    let (b_tokens, b_fin) = collect(&rx_b);
+    assert_eq!(b_tokens, expect_b, "the queued session is unaffected by the eviction");
+    assert_eq!(b_fin, Some(FinishReason::MaxTokens));
+    assert_eq!(eng.cache().slots_in_use(), 0);
+    assert_eq!(eng.report().completed, 2);
+}
