@@ -18,6 +18,16 @@ fn main() {
         let s = bench(&format!("rtn_{fmt}_1Mx4B"), 24, || quantize_weight(&w, &cfg));
         report_throughput(&s, bytes);
     }
+
+    // the RTN inner call in isolation: slice-level nearest-code search
+    // (`Encoder::encode_block`) over 1M pre-normalized values — the loop
+    // the per-column hot path of `quantize_weight` amortizes its bounds
+    // checks into
+    let enc = formats::must("sf4").encoder();
+    let vals: Vec<f32> = w.data().iter().map(|&v| v * 40.0).collect(); // ~[-1, 1]
+    let mut codes = vec![0i8; vals.len()];
+    let s = bench("encode_block_sf4_1M", 48, || enc.encode_block(&vals, &mut codes));
+    report_throughput(&s, bytes);
     let spec = formats::must("sf4");
     let cfg = QuantConfig { format: spec.clone(), block: BlockSize::Sub(128), calib: Calib::Mse };
     let s = bench("mse_sf4_1Mx4B", 6, || quantize_weight(&w, &cfg));

@@ -1,34 +1,80 @@
-//! Perf: serving. Two workloads:
+//! Perf: serving. Three workloads:
 //!
 //! 1. the historical one-shot scoring loop (dynamic batching win vs batch=1,
 //!    §Perf target >= 2x throughput at 16+ concurrent clients), now running
-//!    through the decode-engine shim; and
+//!    through the decode-engine shim;
 //! 2. sustained multi-token decode through the continuous-batching engine
 //!    with the fused `[B, d]` batched step, swept over batch sizes 1/4/16
-//!    per weight format (fp32 baseline vs sf4 vs e2m1_sp supernormal) — the
-//!    memory-bound loop the paper's formats are priced for. The fused path
-//!    amortizes the per-forward fixed costs (checkpoint lookups, tensor
-//!    allocations, one attention/layernorm pass setup) across all rows of
-//!    the batch — the naive ikj kernel still reads the weights per row, so
-//!    per-call overhead, not weight streaming, is what batching currently
-//!    buys; decode tok/s must climb with batch size regardless.
+//!    per weight format (fp32 baseline vs sf4 vs e2m1_sp supernormal) on
+//!    the nano model — the batching-amortization line PR 2 established; and
+//! 3. **packed vs dense weight backends** on the `large` model, whose f32
+//!    weights (~43 MB) overflow the last-level cache, so sustained decode
+//!    is genuinely weight-stream-bound: dense fp32 and fake-quant sf4
+//!    stream the full f32 matrix per step, while the packed backend
+//!    (`packed_checkpoint` + fused `lut_gemm`) streams 4-bit codes and
+//!    expands them through the codebook LUT inside the kernel.
 //!
 //! `--smoke` runs a cut-down sweep (batch 1/4, fewer tokens, scoring loop
-//! skipped) as a CI gate: it still fails fast if fused batching regresses
-//! (batch-4 must beat batch-1 on sf4), just cheaply. Each cell is timed
-//! best-of-2 so a single scheduler hiccup cannot flip the gate.
+//! skipped) as a CI gate with two assertions: fused batch-4 sf4 decode must
+//! beat batch-1 (the PR-2 gate), and packed sf4 decode must be at least as
+//! fast as dense fp32 at batch 4 (the PR-3 gate). Each cell is timed
+//! best-of-2 so a single scheduler hiccup cannot flip a gate. Every cell
+//! lands in `BENCH_serve.json` for the perf trajectory.
 
 use std::time::{Duration, Instant};
 
-use llm_datatypes::coordinator::pipeline::{fake_quant_checkpoint, PipelineConfig};
+use llm_datatypes::bench_util::BenchJson;
+use llm_datatypes::coordinator::pipeline::{
+    fake_quant_checkpoint, packed_checkpoint, PipelineConfig,
+};
 use llm_datatypes::coordinator::serve::{run_loadgen, ServeConfig, Server};
 use llm_datatypes::coordinator::{corpus_for, trainer, Session};
-use llm_datatypes::model_io::zoo;
+use llm_datatypes::model_io::{zoo, Checkpoint, ModelConfig};
 use llm_datatypes::rng::Pcg64;
 use llm_datatypes::serving::{run_decode_loadgen, Engine, EngineConfig, SchedulerConfig};
 
+fn prompts_for(cfg: &ModelConfig, n: usize, len: usize, seed: u64) -> Vec<Vec<i32>> {
+    let corpus = corpus_for(cfg);
+    let mut rng = Pcg64::new(seed);
+    (0..n)
+        .map(|_| {
+            let start = rng.below(corpus.heldout.len() - cfg.seq);
+            corpus.heldout[start..start + len].to_vec()
+        })
+        .collect()
+}
+
+/// Best-of-2 sustained-decode tok/s for one (checkpoint, batch) cell.
+fn decode_cell(
+    cfg: ModelConfig,
+    weights: &Checkpoint,
+    prompts: &[Vec<i32>],
+    b: usize,
+    per_client: usize,
+    max_new: usize,
+) -> anyhow::Result<(f64, llm_datatypes::serving::MetricsReport)> {
+    let mut best_tps = 0.0f64;
+    let mut last = None;
+    for _ in 0..2 {
+        let mut engine = Engine::new(
+            cfg,
+            weights.clone(),
+            EngineConfig {
+                slots: b,
+                kv_capacity: 0,
+                scheduler: SchedulerConfig { max_batch: b, ..SchedulerConfig::default() },
+            },
+        );
+        let report = run_decode_loadgen(&mut engine, prompts, b, per_client, max_new)?;
+        best_tps = best_tps.max(report.decode_tps);
+        last = Some(report);
+    }
+    Ok((best_tps, last.expect("two timed runs")))
+}
+
 fn main() -> anyhow::Result<()> {
     let smoke = std::env::args().any(|a| a == "--smoke");
+    let mut json = BenchJson::new();
     let session = Session::open("artifacts", "checkpoints", "results")?;
     let cfg = zoo("nano")?;
     let ckpt = match session.load_checkpoint("nano") {
@@ -36,13 +82,7 @@ fn main() -> anyhow::Result<()> {
         Err(_) => trainer::init_lm_params(&cfg, 0x5eed),
     };
     let corpus = corpus_for(&cfg);
-    let mut rng = Pcg64::new(7);
-    let prompts: Vec<Vec<i32>> = (0..64)
-        .map(|_| {
-            let start = rng.below(corpus.heldout.len() - cfg.seq);
-            corpus.heldout[start..start + cfg.seq / 2].to_vec()
-        })
-        .collect();
+    let prompts = prompts_for(&cfg, 64, cfg.seq / 2, 7);
 
     // -- workload 1: one-shot scoring, batching win ------------------------
     if !smoke {
@@ -63,10 +103,12 @@ fn main() -> anyhow::Result<()> {
                 "bench {label:40} req/s={rps:8.1} fill={:.2} p50={:?} p99={:?}",
                 stats.mean_batch_fill, stats.p50_latency, stats.p99_latency
             );
+            json.record(label, "req_s", rps);
             results.push((label, rps));
         }
         let speedup = results[1].1 / results[0].1;
         println!("bench serve_batching_speedup                  x{speedup:.2}");
+        json.record("serve_batching_speedup", "x", speedup);
     }
 
     // -- workload 2: sustained decode tok/s per format x batch size --------
@@ -79,25 +121,8 @@ fn main() -> anyhow::Result<()> {
             f => fake_quant_checkpoint(&cfg, &ckpt, &PipelineConfig::weight_only(f), &corpus)?,
         };
         for &b in batch_sizes {
-            // best-of-2: the gate below compares timings, so shield it from
-            // one-off scheduler jitter
-            let mut best_tps = 0.0f64;
-            let mut last = None;
-            for _ in 0..2 {
-                let mut engine = Engine::new(
-                    cfg,
-                    weights.clone(),
-                    EngineConfig {
-                        slots: b,
-                        kv_capacity: 0,
-                        scheduler: SchedulerConfig { max_batch: b, ..SchedulerConfig::default() },
-                    },
-                );
-                let report = run_decode_loadgen(&mut engine, &prompts, b, per_client, max_new)?;
-                best_tps = best_tps.max(report.decode_tps);
-                last = Some(report);
-            }
-            let report = last.expect("two timed runs");
+            let (best_tps, report) =
+                decode_cell(cfg, &weights, &prompts, b, per_client, max_new)?;
             println!(
                 "bench serve_decode_{format:<8}_b{b:<2} tok/s={best_tps:8.1} itl_p50={:?} \
                  occupancy={:.2} fused_batch={:.2} fused_gemms={}",
@@ -106,10 +131,11 @@ fn main() -> anyhow::Result<()> {
                 report.mean_fused_batch,
                 report.fused_gemms,
             );
+            json.record(&format!("serve_decode_{format}_b{b}"), "tok_s", best_tps);
             sweep.push((format, b, best_tps));
         }
     }
-    // scaling lines: fused batching must amortize the weight stream
+    // scaling lines: fused batching must amortize the per-step fixed costs
     let top = *batch_sizes.last().unwrap();
     for format in ["fp32", "sf4", "e2m1_sp"] {
         let tps_at = |b: usize| {
@@ -121,9 +147,12 @@ fn main() -> anyhow::Result<()> {
         };
         let scaling = tps_at(top) / tps_at(1);
         println!("bench serve_decode_{format}_b{top}_vs_b1          x{scaling:.2}");
-        if format == "sf4" {
-            // the batching acceptance gate: fused batch-N decode must beat
-            // sequential batch-1 decode outright
+        json.record(&format!("serve_decode_{format}_b{top}_vs_b1"), "x", scaling);
+        if format == "sf4" && smoke {
+            // the batching acceptance gate (CI): fused batch-N decode must
+            // beat sequential batch-1 decode outright. Smoke-only so a full
+            // bench run on a loaded box still reaches workload 3 and the
+            // BENCH_serve.json write.
             assert!(
                 scaling > 1.0,
                 "fused batched decode regressed: sf4 batch-{top} {}x batch-1",
@@ -131,5 +160,74 @@ fn main() -> anyhow::Result<()> {
             );
         }
     }
+
+    // -- workload 3: packed vs dense weight backends (weight-stream-bound) -
+    let wcfg = zoo("large")?;
+    let wckpt = match session.load_checkpoint("large") {
+        Ok(c) => c,
+        Err(_) => trainer::init_lm_params(&wcfg, 0x5eed),
+    };
+    let wcorpus = corpus_for(&wcfg);
+    let wprompts = prompts_for(&wcfg, 16, wcfg.seq / 8, 11);
+    let (wb, wmax_new) = (4usize, if smoke { 12usize } else { 24 });
+    let mut cells: Vec<(&str, f64)> = Vec::new();
+    let backends: &[&str] = if smoke {
+        &["fp32_dense", "sf4_packed"]
+    } else {
+        &["fp32_dense", "sf4_dense", "sf4_packed", "e2m1_sp_packed"]
+    };
+    for &label in backends {
+        let weights = match label {
+            "fp32_dense" => wckpt.clone(),
+            "sf4_dense" => fake_quant_checkpoint(
+                &wcfg,
+                &wckpt,
+                &PipelineConfig::weight_only("sf4"),
+                &wcorpus,
+            )?,
+            "sf4_packed" => packed_checkpoint(
+                &wcfg,
+                &wckpt,
+                &PipelineConfig::weight_only("sf4"),
+                &wcorpus,
+            )?,
+            "e2m1_sp_packed" => packed_checkpoint(
+                &wcfg,
+                &wckpt,
+                &PipelineConfig::weight_only("e2m1_sp"),
+                &wcorpus,
+            )?,
+            other => unreachable!("unknown backend cell {other}"),
+        };
+        let (best_tps, report) = decode_cell(wcfg, &weights, &wprompts, wb, 1, wmax_new)?;
+        println!(
+            "bench serve_decode_large_{label:<14}_b{wb} tok/s={best_tps:8.1} itl_p50={:?} \
+             fused_batch={:.2}",
+            report.itl_p50, report.mean_fused_batch,
+        );
+        json.record(&format!("serve_decode_large_{label}_b{wb}"), "tok_s", best_tps);
+        cells.push((label, best_tps));
+    }
+    let tps_of = |label: &str| {
+        cells
+            .iter()
+            .find(|(l, _)| *l == label)
+            .map(|&(_, tps)| tps)
+            .expect("backend cell present")
+    };
+    let packed_win = tps_of("sf4_packed") / tps_of("fp32_dense");
+    println!("bench serve_decode_large_packed_vs_fp32_b{wb}     x{packed_win:.2}");
+    json.record("serve_decode_large_packed_vs_fp32_b4", "x", packed_win);
+    if smoke {
+        // the packed-backend acceptance gate: streaming 4-bit codes through
+        // the fused LUT GEMM must not lose to streaming dense f32 weights
+        // on a model whose weights overflow the cache
+        assert!(
+            packed_win >= 1.0,
+            "packed sf4 decode lost to dense fp32 at batch {wb}: {packed_win:.2}x"
+        );
+    }
+
+    json.write("BENCH_serve.json")?;
     Ok(())
 }

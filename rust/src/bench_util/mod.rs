@@ -101,6 +101,80 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+// ---------------------------------------------------------------------------
+// Perf-trajectory JSON (`BENCH_*.json`)
+// ---------------------------------------------------------------------------
+
+/// Accumulates named metric groups and writes them as a flat two-level JSON
+/// object — `{"bench": {"metric": value, ...}, ...}` — so every perf bench
+/// leaves a machine-readable `BENCH_*.json` next to its stdout report and
+/// future PRs can diff the trajectory. Hand-rolled (serde is not in the
+/// offline vendor set); keys must be plain identifiers-with-punctuation
+/// (no quotes/backslashes — asserted).
+#[derive(Default, Debug)]
+pub struct BenchJson {
+    entries: Vec<(String, Vec<(String, f64)>)>,
+}
+
+impl BenchJson {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add `metric = value` under `bench` (groups append in call order).
+    pub fn record(&mut self, bench: &str, metric: &str, value: f64) {
+        for key in [bench, metric] {
+            assert!(
+                !key.contains('"') && !key.contains('\\'),
+                "BenchJson keys must not need escaping: {key:?}"
+            );
+        }
+        if let Some((_, metrics)) = self.entries.iter_mut().find(|(b, _)| b == bench) {
+            metrics.push((metric.to_string(), value));
+        } else {
+            self.entries.push((bench.to_string(), vec![(metric.to_string(), value)]));
+        }
+    }
+
+    /// Render the JSON document (stable ordering, non-finite values -> null).
+    pub fn render(&self) -> String {
+        let mut s = String::from("{\n");
+        for (gi, (bench, metrics)) in self.entries.iter().enumerate() {
+            s.push_str(&format!("  {bench:?}: {{"));
+            for (mi, (metric, value)) in metrics.iter().enumerate() {
+                if mi > 0 {
+                    s.push(',');
+                }
+                if value.is_finite() {
+                    s.push_str(&format!(" {metric:?}: {value:.6}"));
+                } else {
+                    s.push_str(&format!(" {metric:?}: null"));
+                }
+            }
+            s.push_str(" }");
+            if gi + 1 < self.entries.len() {
+                s.push(',');
+            }
+            s.push('\n');
+        }
+        s.push('}');
+        s.push('\n');
+        s
+    }
+
+    /// Write to `path`, creating parent directories as needed.
+    pub fn write(&self, path: &str) -> std::io::Result<()> {
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        std::fs::write(path, self.render())?;
+        println!("bench json written to {path}");
+        Ok(())
+    }
+}
+
 /// Parse `--quick` style flags every bench target accepts.
 pub struct BenchArgs {
     pub quick: bool,
@@ -144,6 +218,21 @@ mod tests {
         let stats = bench_with_budget("one", 1, Duration::from_secs(5), &mut || 7);
         assert_eq!(stats.iters, 1);
         assert_eq!(stats.p50, stats.min);
+    }
+
+    #[test]
+    fn bench_json_renders_groups_in_order() {
+        let mut j = BenchJson::new();
+        j.record("lut_gemm", "gflops", 1.25);
+        j.record("lut_gemm", "mean_ms", 0.5);
+        j.record("dense", "gflops", f64::NAN);
+        let doc = j.render();
+        assert!(doc.starts_with('{') && doc.trim_end().ends_with('}'));
+        assert!(doc.contains("\"lut_gemm\": { \"gflops\": 1.250000, \"mean_ms\": 0.500000 }"));
+        assert!(doc.contains("\"dense\": { \"gflops\": null }"));
+        let lut = doc.find("lut_gemm").unwrap();
+        let dense = doc.find("dense").unwrap();
+        assert!(lut < dense, "insertion order preserved");
     }
 
     #[test]

@@ -5,8 +5,8 @@
 //! repro table        <1|2|3|4|5|6|7|8|9|10|12|14|15> [--quick] [--model NAME]
 //! repro figure       <2|3|4|7> [--quick] [--model NAME]
 //! repro serve        [--model NAME] [--format FMT] [--clients N] [--requests N]
-//! repro serve-decode [--model NAME] [--format FMT|fp32] [--clients N]
-//!                    [--requests N] [--max-new T] [--slots S]
+//! repro serve-decode [--model NAME] [--format FMT|fp32] [--packed]
+//!                    [--clients N] [--requests N] [--max-new T] [--slots S]
 //!                    [--prefill-chunk P]
 //! repro all          [--quick]
 //! ```
@@ -77,10 +77,11 @@ commands:
           ids: 2 3 4 7
   serve   [--model N] [--format F] [--clients C] [--requests R]
           one-shot next-token scoring through the decode engine
-  serve-decode [--model N] [--format F|fp32] [--clients C] [--requests R]
-               [--max-new T] [--slots S] [--prefill-chunk P]
+  serve-decode [--model N] [--format F|fp32] [--packed] [--clients C]
+               [--requests R] [--max-new T] [--slots S] [--prefill-chunk P]
           continuous-batching multi-token generation (streaming, KV cache,
-          fused [B,d] batched decode step)
+          fused [B,d] batched decode step; --packed serves true 4-bit
+          weights through the fused LUT dequant-GEMM)
   all     [--quick]                            every table + figure
 global flags: --artifacts DIR --checkpoints DIR --results DIR
 ";
@@ -230,19 +231,27 @@ fn load_or_init_checkpoint(
     }
 }
 
-/// Weight path for the decode engine: fp32 passthrough or fake-quant
-/// through the requested codebook.
+/// Weight path for the decode engine: fp32 passthrough, fake-quant
+/// (dequantized f32) through the requested codebook, or — with `packed` —
+/// true 4-bit packed weights decoded in-kernel by the fused LUT GEMM.
 fn serving_checkpoint(
     cfg: &crate::model_io::ModelConfig,
     ckpt: &crate::model_io::Checkpoint,
     format: &str,
+    packed: bool,
 ) -> Result<crate::model_io::Checkpoint> {
-    use crate::coordinator::pipeline::{fake_quant_checkpoint, PipelineConfig};
+    use crate::coordinator::pipeline::{fake_quant_checkpoint, packed_checkpoint, PipelineConfig};
     if format == "fp32" {
+        anyhow::ensure!(!packed, "--packed needs a 4-bit --format (fp32 weights stay dense)");
         return Ok(ckpt.clone());
     }
     let corpus = corpus_for(cfg);
-    fake_quant_checkpoint(cfg, ckpt, &PipelineConfig::weight_only(format), &corpus)
+    let pc = PipelineConfig::weight_only(format);
+    if packed {
+        packed_checkpoint(cfg, ckpt, &pc, &corpus)
+    } else {
+        fake_quant_checkpoint(cfg, ckpt, &pc, &corpus)
+    }
 }
 
 fn serve_prompts(cfg: &crate::model_io::ModelConfig, n: usize, seed: u64) -> Vec<Vec<i32>> {
@@ -267,7 +276,7 @@ fn cmd_serve(session: &Session, args: &Args) -> Result<()> {
 
     let cfg = zoo(&model)?;
     let ckpt = load_or_init_checkpoint(session, &cfg);
-    let ckpt = serving_checkpoint(&cfg, &ckpt, &format)?;
+    let ckpt = serving_checkpoint(&cfg, &ckpt, &format, false)?;
     let server = Server::new(cfg, ckpt, ServeConfig::default());
     let prompts = serve_prompts(&cfg, 64, 1);
     let stats = run_loadgen(server, prompts, clients, requests / clients.max(1))?;
@@ -288,6 +297,7 @@ fn cmd_serve_decode(session: &Session, args: &Args) -> Result<()> {
 
     let model = args.flag("model", "small");
     let format = args.flag("format", "sf4");
+    let packed = args.has("packed");
     let clients: usize = args.flag("clients", "4").parse()?;
     let requests: usize = args.flag("requests", "16").parse()?;
     let max_new: usize = args.flag("max-new", "16").parse()?;
@@ -296,7 +306,14 @@ fn cmd_serve_decode(session: &Session, args: &Args) -> Result<()> {
 
     let cfg = zoo(&model)?;
     let ckpt = load_or_init_checkpoint(session, &cfg);
-    let ckpt = serving_checkpoint(&cfg, &ckpt, &format)?;
+    let ckpt = serving_checkpoint(&cfg, &ckpt, &format, packed)?;
+    let weight_label = if packed {
+        format!("{format} packed-4bit ({} KiB codes+scales)", ckpt.packed_bytes() / 1024)
+    } else if format == "fp32" {
+        "fp32 dense".to_string()
+    } else {
+        format!("{format} fake-quant dense")
+    };
     let mut engine = Engine::new(
         cfg,
         ckpt,
@@ -314,7 +331,7 @@ fn cmd_serve_decode(session: &Session, args: &Args) -> Result<()> {
         "decode engine: model `{}` weights {} | {} KV slots x {} positions ({} KiB cache) \
          | fused [B,d] batched step, prefill chunk {}",
         cfg.name,
-        format,
+        weight_label,
         engine.cache().slots_total(),
         engine.cache().capacity(),
         engine.cache().config().bytes() / 1024,

@@ -191,28 +191,25 @@ pub fn quantize_lm(
     })
 }
 
-/// Run the weight pipeline but keep the result as an nn-compatible
-/// [`Checkpoint`]: every quantized linear is replaced by its dequantized
-/// (fake-quant) reconstruction, all other tensors pass through. This is the
-/// serving engine's weight path — `nn::forward_lm_step` consumes the result
-/// unchanged, so the decode loop exercises exactly the codebook the
-/// `formats`/`quant` stack produced.
-pub fn fake_quant_checkpoint(
+/// Weight-only quantization of every quant linear in a checkpoint: shared
+/// core of [`fake_quant_checkpoint`] and [`packed_checkpoint`]. Refuses
+/// W4A4/SmoothQuant configs — SmoothQuant folds an activation rescale into
+/// the weights that the eval graph undoes on the activation side; the nn
+/// reference path has no such hook, so silently applying (or dropping) it
+/// would produce a model that matches neither the fp32 nor the W4A4
+/// artifact.
+fn quantize_serving_linears(
     cfg: &ModelConfig,
     ckpt: &Checkpoint,
     pc: &PipelineConfig,
     corpus: &Corpus,
-) -> Result<Checkpoint> {
-    // SmoothQuant folds an activation rescale into the weights that the
-    // eval graph undoes on the activation side; the nn reference path has
-    // no such hook, so silently applying (or dropping) it would produce a
-    // model that matches neither the fp32 nor the W4A4 artifact. Refuse.
+    caller: &str,
+) -> Result<(FormatSpec, Vec<(String, crate::quant::QuantizedWeight)>)> {
     anyhow::ensure!(
         pc.smoothquant.is_none() && pc.act_format.is_none(),
-        "fake_quant_checkpoint supports weight-only configs (smoothquant/act_format must be None)"
+        "{caller} supports weight-only configs (smoothquant/act_format must be None)"
     );
     let spec = formats::must(&pc.format);
-    let qnames = cfg.quant_linear_names();
     let capture = if pc.method == QuantMethod::Gptq {
         let windows = corpus.heldout_windows(pc.calib_seqs, cfg.seq);
         let seqs: Vec<Vec<i32>> = windows.iter().map(|w| w[..cfg.seq].to_vec()).collect();
@@ -220,13 +217,9 @@ pub fn fake_quant_checkpoint(
     } else {
         None
     };
-    let mut out = Checkpoint::new();
-    for (name, _) in cfg.param_specs() {
+    let mut out = Vec::new();
+    for name in cfg.quant_linear_names() {
         let t = ckpt.get(&name)?;
-        if !qnames.contains(&name) {
-            out.insert(&name, t.clone());
-            continue;
-        }
         let qcfg = QuantConfig {
             format: spec.clone(),
             block: pc.resolved_block(t.rows()),
@@ -243,7 +236,68 @@ pub fn fake_quant_checkpoint(
                 gptq_quantize(t, &x, &qcfg, &GptqConfig::default())
             }
         };
-        out.insert(&name, q.dequant(&spec));
+        out.push((name, q));
+    }
+    Ok((spec, out))
+}
+
+/// Run the weight pipeline but keep the result as an nn-compatible
+/// [`Checkpoint`]: every quantized linear is replaced by its dequantized
+/// (fake-quant) reconstruction, all other tensors pass through. This is the
+/// dense serving weight path — `nn::forward_lm_step` consumes the result
+/// unchanged, so the decode loop exercises exactly the codebook the
+/// `formats`/`quant` stack produced.
+pub fn fake_quant_checkpoint(
+    cfg: &ModelConfig,
+    ckpt: &Checkpoint,
+    pc: &PipelineConfig,
+    corpus: &Corpus,
+) -> Result<Checkpoint> {
+    let (spec, qs) =
+        quantize_serving_linears(cfg, ckpt, pc, corpus, "fake_quant_checkpoint")?;
+    let qmap: HashMap<String, crate::quant::QuantizedWeight> = qs.into_iter().collect();
+    let mut out = Checkpoint::new();
+    for (name, _) in cfg.param_specs() {
+        match qmap.get(&name) {
+            Some(q) => out.insert(&name, q.dequant(&spec)),
+            None => out.insert(&name, ckpt.get(&name)?.clone()),
+        }
+    }
+    Ok(out)
+}
+
+/// Run the weight pipeline and keep every quantized linear at its true
+/// 4-bit footprint: codes packed two-per-byte plus per-block scales
+/// ([`crate::quant::PackedWeight`]), dispatched at forward time through the
+/// fused `quant::lut_gemm` (`nn::apply_linear`) — the serving engine
+/// decodes without ever materializing f32 weights for these linears. All
+/// other tensors pass through dense. Forward results are bit-identical to
+/// the same config's [`fake_quant_checkpoint`] (the packed path expands
+/// `lut[code] * scale` with the same f32 expression and the same blocked
+/// kernel — `rust/tests/packed_weight.rs`). Weight-only configs with a
+/// <= 16-value codebook only.
+pub fn packed_checkpoint(
+    cfg: &ModelConfig,
+    ckpt: &Checkpoint,
+    pc: &PipelineConfig,
+    corpus: &Corpus,
+) -> Result<Checkpoint> {
+    let (spec, qs) = quantize_serving_linears(cfg, ckpt, pc, corpus, "packed_checkpoint")?;
+    anyhow::ensure!(
+        spec.n_values() <= 16,
+        "packed_checkpoint: `{}` has {} codebook values (> 4-bit)",
+        spec.name,
+        spec.n_values()
+    );
+    let qmap: HashMap<String, crate::quant::QuantizedWeight> = qs.into_iter().collect();
+    let mut out = Checkpoint::new();
+    for (name, _) in cfg.param_specs() {
+        match qmap.get(&name) {
+            Some(q) => {
+                out.insert_packed(&name, crate::quant::PackedWeight::from_quantized(q, &spec))
+            }
+            None => out.insert(&name, ckpt.get(&name)?.clone()),
+        }
     }
     Ok(out)
 }
@@ -359,6 +413,39 @@ mod tests {
         }
         let mse = mse / n as f64;
         assert!((mse - qm.recon_mse).abs() < 1e-9, "{mse} vs {}", qm.recon_mse);
+    }
+
+    #[test]
+    fn packed_checkpoint_stores_linears_packed_and_rejects_wide_codebooks() {
+        use crate::model_io::LinearBackend;
+        let cfg = zoo("nano").unwrap();
+        let c = ckpt(&cfg, 6);
+        let corpus = corpus_for(&cfg);
+        let pc = PipelineConfig::weight_only("sf4");
+        let packed = packed_checkpoint(&cfg, &c, &pc, &corpus).unwrap();
+        for name in cfg.quant_linear_names() {
+            assert_eq!(packed.backend(&name), LinearBackend::Packed4, "{name}");
+            assert!(packed.get(&name).is_err(), "{name}: no dense tensor materialized");
+        }
+        assert_eq!(packed.backend("embed"), LinearBackend::Dense);
+        assert_eq!(packed.get("embed").unwrap(), c.get("embed").unwrap());
+        assert_eq!(packed.packed_names().len(), cfg.quant_linear_names().len());
+        // the packed store is a small fraction of the dense linears' bytes
+        let dense_bytes: usize =
+            cfg.quant_linear_names().iter().map(|n| c.get(n).unwrap().len() * 4).sum();
+        assert!(packed.packed_bytes() * 3 < dense_bytes, "{}", packed.packed_bytes());
+        // packed dequant reproduces the fake-quant tensors exactly
+        let fq = fake_quant_checkpoint(&cfg, &c, &pc, &corpus).unwrap();
+        for name in cfg.quant_linear_names() {
+            let pd = packed.get_packed(&name).unwrap().dequant();
+            assert_eq!(pd.data(), fq.get(&name).unwrap().data(), "{name}");
+        }
+        // int5 has 32 codebook values: cannot pack into nibbles
+        assert!(packed_checkpoint(&cfg, &c, &PipelineConfig::weight_only("int5"), &corpus)
+            .is_err());
+        // W4A4 configs are refused like the fake-quant path
+        assert!(packed_checkpoint(&cfg, &c, &PipelineConfig::w4a4("sf4", true), &corpus)
+            .is_err());
     }
 
     #[test]

@@ -143,6 +143,24 @@ impl Encoder {
         self.values[self.encode(x)]
     }
 
+    /// Encode a whole slice of normalized values into codebook indices —
+    /// the quantizer's per-column hot loop (`quant::quantize_weight`).
+    /// Equivalent to [`Encoder::encode`] per element, but the bounds checks
+    /// and the midpoint-table load are amortized across the block, so the
+    /// midpoint comparison loop vectorizes over the slice (`perf_quant`
+    /// tracks the win).
+    pub fn encode_block(&self, xs: &[f32], out: &mut [i8]) {
+        assert_eq!(xs.len(), out.len(), "encode_block: {} values for {} codes", xs.len(), out.len());
+        let mids = &self.mids[..];
+        for (o, &x) in out.iter_mut().zip(xs) {
+            let mut i = 0usize;
+            for &m in mids {
+                i += (x > m) as usize;
+            }
+            *o = i as i8;
+        }
+    }
+
     #[inline]
     pub fn value(&self, idx: usize) -> f32 {
         self.values[idx]
@@ -532,6 +550,21 @@ mod tests {
                     c as f32,
                     "{name}: {c} is not an encoder fixed point"
                 );
+            }
+        }
+    }
+
+    #[test]
+    fn encode_block_matches_scalar_encode() {
+        use crate::rng::Pcg64;
+        let mut rng = Pcg64::new(0xb10c);
+        for name in all_names() {
+            let enc = must(name).encoder();
+            let xs: Vec<f32> = (0..257).map(|_| rng.range(-1.5, 1.5) as f32).collect();
+            let mut codes = vec![0i8; xs.len()];
+            enc.encode_block(&xs, &mut codes);
+            for (&x, &c) in xs.iter().zip(&codes) {
+                assert_eq!(c as usize, enc.encode(x), "{name}: block/scalar disagree at {x}");
             }
         }
     }

@@ -12,6 +12,7 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
+use crate::quant::PackedWeight;
 use crate::tensor::Tensor;
 
 /// Decoder-only LM hyperparameters — must stay in sync with `model.py` ZOO
@@ -97,11 +98,29 @@ impl ModelConfig {
 // Checkpoints
 // ---------------------------------------------------------------------------
 
-/// Ordered named tensors (insertion order = canonical parameter order).
+/// Which executor a named linear weight runs through at serve time.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LinearBackend {
+    /// Dense f32 tensor (fp32 weights or fake-quant dequantized weights):
+    /// `Tensor::matmul` through the blocked `tensor::gemm` kernel.
+    Dense,
+    /// 4-bit packed codes + per-block scales (`quant::PackedWeight`),
+    /// consumed in place by the fused `quant::lut_gemm` — the weight never
+    /// exists as an f32 matrix.
+    Packed4,
+}
+
+/// Ordered named tensors (insertion order = canonical parameter order),
+/// plus an optional packed 4-bit store per linear. A name present in the
+/// packed store dispatches that linear to [`LinearBackend::Packed4`]
+/// (`nn::apply_linear`); everything else stays dense. Packed entries are
+/// runtime-only — `save`/`load` round-trip the dense tensors.
 #[derive(Clone, Debug, Default)]
 pub struct Checkpoint {
     names: Vec<String>,
     map: HashMap<String, Tensor>,
+    packed_names: Vec<String>,
+    packed: HashMap<String, PackedWeight>,
 }
 
 impl Checkpoint {
@@ -124,6 +143,44 @@ impl Checkpoint {
         self.map.contains_key(name)
     }
 
+    /// Store a packed 4-bit weight for `name`; from now on the forwards run
+    /// this linear through the fused LUT path.
+    pub fn insert_packed(&mut self, name: &str, w: PackedWeight) {
+        if !self.packed.contains_key(name) {
+            self.packed_names.push(name.to_string());
+        }
+        self.packed.insert(name.to_string(), w);
+    }
+
+    pub fn get_packed(&self, name: &str) -> Result<&PackedWeight> {
+        self.packed
+            .get(name)
+            .with_context(|| format!("checkpoint missing packed weight `{name}`"))
+    }
+
+    /// Backend for one named linear: packed wins when present.
+    pub fn backend(&self, name: &str) -> LinearBackend {
+        if self.packed.contains_key(name) {
+            LinearBackend::Packed4
+        } else {
+            LinearBackend::Dense
+        }
+    }
+
+    /// Names with packed weights (insertion order).
+    pub fn packed_names(&self) -> &[String] {
+        &self.packed_names
+    }
+
+    pub fn has_packed(&self) -> bool {
+        !self.packed_names.is_empty()
+    }
+
+    /// Total packed-store footprint in bytes (codes + scales + LUTs).
+    pub fn packed_bytes(&self) -> usize {
+        self.packed.values().map(|w| w.bytes()).sum()
+    }
+
     pub fn names(&self) -> &[String] {
         &self.names
     }
@@ -143,6 +200,17 @@ impl Checkpoint {
     const MAGIC: &'static [u8; 8] = b"LLMDT001";
 
     pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        // The file format holds dense tensors only. Refuse rather than
+        // silently write a checkpoint missing every packed linear — the
+        // loss would only surface as a `missing tensor` error on the first
+        // forward after a later load.
+        anyhow::ensure!(
+            !self.has_packed(),
+            "checkpoint holds {} packed weight(s) ({} ...); the binary format is dense-only \
+             — save the source fp32/fake-quant checkpoint instead",
+            self.packed_names.len(),
+            self.packed_names.first().map(String::as_str).unwrap_or("")
+        );
         let path = path.as_ref();
         if let Some(dir) = path.parent() {
             std::fs::create_dir_all(dir)?;
@@ -252,6 +320,47 @@ mod tests {
         let path = dir.join("bad.ckpt");
         std::fs::write(&path, b"not a checkpoint").unwrap();
         assert!(Checkpoint::load(&path).is_err());
+    }
+
+    #[test]
+    fn packed_entries_dispatch_and_survive_clone_but_not_save() {
+        use crate::formats;
+        use crate::quant::{quantize_weight, BlockSize, Calib, QuantConfig};
+        let spec = formats::must("sf4");
+        let w = Tensor::from_fn(&[32, 4], |i| ((i % 13) as f32 - 6.0) * 0.1);
+        let q = quantize_weight(
+            &w,
+            &QuantConfig { format: spec.clone(), block: BlockSize::Sub(32), calib: Calib::None },
+        );
+        let mut c = Checkpoint::new();
+        c.insert("dense", Tensor::scalar(1.0));
+        c.insert_packed("l0.wq", PackedWeight::from_quantized(&q, &spec));
+        assert_eq!(c.backend("l0.wq"), LinearBackend::Packed4);
+        assert_eq!(c.backend("dense"), LinearBackend::Dense);
+        assert_eq!(c.backend("missing"), LinearBackend::Dense);
+        assert!(c.has_packed());
+        assert_eq!(c.packed_names(), &["l0.wq".to_string()]);
+        assert!(c.packed_bytes() > 0);
+        assert!(c.get("l0.wq").is_err(), "packed-only weights have no dense tensor");
+        let c2 = c.clone();
+        assert_eq!(
+            c2.get_packed("l0.wq").unwrap().packed,
+            c.get_packed("l0.wq").unwrap().packed,
+            "packed store survives Clone (the engine clones checkpoints)"
+        );
+        // the binary format is dense-only: saving a packed checkpoint must
+        // refuse loudly instead of silently dropping the packed linears
+        let dir = std::env::temp_dir().join("llmdt_ckpt_packed");
+        let path = dir.join("p.ckpt");
+        let err = c.save(&path).unwrap_err();
+        assert!(err.to_string().contains("packed"), "{err}");
+        // a dense-only checkpoint still round-trips
+        let mut plain = Checkpoint::new();
+        plain.insert("dense", Tensor::scalar(1.0));
+        plain.save(&path).unwrap();
+        let d = Checkpoint::load(&path).unwrap();
+        assert!(!d.has_packed());
+        assert_eq!(d.names(), &["dense".to_string()]);
     }
 
     #[test]

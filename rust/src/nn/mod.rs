@@ -12,7 +12,7 @@ use std::collections::HashMap;
 
 use anyhow::Result;
 
-use crate::model_io::{Checkpoint, ModelConfig};
+use crate::model_io::{Checkpoint, LinearBackend, ModelConfig};
 use crate::tensor::Tensor;
 
 /// Records the input activations `[rows, K]` of each named linear.
@@ -71,8 +71,22 @@ pub fn gelu(x: f32) -> f32 {
     0.5 * x * (1.0 + (C * (x + 0.044715 * x * x * x)).tanh())
 }
 
-/// Forward through one quantized-in-spirit linear: plain matmul here; the
-/// quantized path substitutes dequantized weights in the checkpoint.
+/// One named linear through the checkpoint's backend for that weight:
+/// dense f32 matmul (fp32 or fake-quant dequantized tensors), or the fused
+/// packed-4-bit `quant::lut_gemm` that expands nibble codes through the
+/// format's 16-entry LUT inside the matmul — the serving path's ~8x
+/// weight-traffic saving. Both run the same blocked `tensor::gemm` kernel
+/// with identical K-block boundaries, so switching backend never changes
+/// the batch-row bit-identity contract of the fused decode step.
+pub fn apply_linear(p: &Checkpoint, x: &Tensor, name: &str) -> Result<Tensor> {
+    match p.backend(name) {
+        LinearBackend::Packed4 => Ok(crate::quant::lut_gemm(x, p.get_packed(name)?)),
+        LinearBackend::Dense => Ok(x.matmul(p.get(name)?)),
+    }
+}
+
+/// Forward through one quantized-in-spirit linear, recording calibration
+/// activations when asked (backend dispatch via [`apply_linear`]).
 fn linear(
     p: &Checkpoint,
     x: &Tensor,
@@ -82,7 +96,7 @@ fn linear(
     if let Some(c) = cap.as_deref_mut() {
         c.push(name, x);
     }
-    Ok(x.matmul(p.get(name)?))
+    apply_linear(p, x, name)
 }
 
 /// Causal self-attention for one layer over `x [S, D]` (single sequence).
@@ -166,7 +180,7 @@ pub fn forward_lm(
         x = x.add(&h);
     }
     let x = layernorm(&x, p.get("lnf_g")?, p.get("lnf_b")?);
-    Ok(x.matmul(p.get("head")?))
+    apply_linear(p, &x, "head")
 }
 
 // ---------------------------------------------------------------------------
@@ -247,8 +261,9 @@ impl KvStore for SeqKvCache {
 /// greedy decoding through this path is token-identical to re-forwarding the
 /// full prefix each step — the `incremental_matches_full_forward` test below
 /// certifies it. Works unchanged on fake-quant checkpoints from
-/// `coordinator::pipeline::fake_quant_checkpoint` (the quantized serving
-/// path).
+/// `coordinator::pipeline::fake_quant_checkpoint` and on packed 4-bit
+/// checkpoints from `packed_checkpoint` (every linear dispatches through
+/// [`apply_linear`]).
 pub fn forward_lm_step(
     cfg: &ModelConfig,
     p: &Checkpoint,
@@ -275,9 +290,9 @@ pub fn forward_lm_step(
     let mut att_row = vec![0.0f32; pos + 1];
     for l in 0..cfg.n_layers {
         let h = layernorm(&x, p.get(&format!("l{l}.ln1_g"))?, p.get(&format!("l{l}.ln1_b"))?);
-        let q = h.matmul(p.get(&format!("l{l}.wq"))?);
-        let kx = h.matmul(p.get(&format!("l{l}.wk"))?);
-        let vx = h.matmul(p.get(&format!("l{l}.wv"))?);
+        let q = apply_linear(p, &h, &format!("l{l}.wq"))?;
+        let kx = apply_linear(p, &h, &format!("l{l}.wk"))?;
+        let vx = apply_linear(p, &h, &format!("l{l}.wv"))?;
         let (kbuf, vbuf) = kv.kv_mut(l);
         kbuf[pos * d..(pos + 1) * d].copy_from_slice(kx.row(0));
         vbuf[pos * d..(pos + 1) * d].copy_from_slice(vx.row(0));
@@ -309,17 +324,17 @@ pub fn forward_lm_step(
                 }
             }
         }
-        let a = ctx.matmul(p.get(&format!("l{l}.wo"))?);
+        let a = apply_linear(p, &ctx, &format!("l{l}.wo"))?;
         x = x.add(&a);
         let h = layernorm(&x, p.get(&format!("l{l}.ln2_g"))?, p.get(&format!("l{l}.ln2_b"))?);
-        let mut h = h.matmul(p.get(&format!("l{l}.w1"))?);
+        let mut h = apply_linear(p, &h, &format!("l{l}.w1"))?;
         h.map_inplace(gelu);
-        let h = h.matmul(p.get(&format!("l{l}.w2"))?);
+        let h = apply_linear(p, &h, &format!("l{l}.w2"))?;
         x = x.add(&h);
     }
     kv.advance();
     let x = layernorm(&x, p.get("lnf_g")?, p.get("lnf_b")?);
-    Ok(x.matmul(p.get("head")?))
+    apply_linear(p, &x, "head")
 }
 
 /// GEMM launches one [`forward_lm_step_batch`] call issues: q/k/v/o/w1/w2
@@ -384,9 +399,10 @@ pub fn forward_lm_step_batch(
     for l in 0..cfg.n_layers {
         let h = layernorm(&x, p.get(&format!("l{l}.ln1_g"))?, p.get(&format!("l{l}.ln1_b"))?);
         // fused projections: one [B, d] x [d, d] GEMM each, not B
-        let q = h.matmul(p.get(&format!("l{l}.wq"))?);
-        let kx = h.matmul(p.get(&format!("l{l}.wk"))?);
-        let vx = h.matmul(p.get(&format!("l{l}.wv"))?);
+        // (dense or packed-LUT, per the checkpoint's backend)
+        let q = apply_linear(p, &h, &format!("l{l}.wq"))?;
+        let kx = apply_linear(p, &h, &format!("l{l}.wk"))?;
+        let vx = apply_linear(p, &h, &format!("l{l}.wv"))?;
         let mut ctx = Tensor::zeros(&[b, d]);
         for row in 0..b {
             let pos = positions[row];
@@ -421,19 +437,19 @@ pub fn forward_lm_step_batch(
                 }
             }
         }
-        let a = ctx.matmul(p.get(&format!("l{l}.wo"))?);
+        let a = apply_linear(p, &ctx, &format!("l{l}.wo"))?;
         x = x.add(&a);
         let h = layernorm(&x, p.get(&format!("l{l}.ln2_g"))?, p.get(&format!("l{l}.ln2_b"))?);
-        let mut h = h.matmul(p.get(&format!("l{l}.w1"))?);
+        let mut h = apply_linear(p, &h, &format!("l{l}.w1"))?;
         h.map_inplace(gelu);
-        let h = h.matmul(p.get(&format!("l{l}.w2"))?);
+        let h = apply_linear(p, &h, &format!("l{l}.w2"))?;
         x = x.add(&h);
     }
     for kv in kvs.iter_mut() {
         kv.advance();
     }
     let x = layernorm(&x, p.get("lnf_g")?, p.get("lnf_b")?);
-    Ok(x.matmul(p.get("head")?))
+    apply_linear(p, &x, "head")
 }
 
 /// Greedy multi-token generation over the incremental path: prefill the

@@ -113,6 +113,218 @@ impl QuantizedWeight {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Packed 4-bit weights + fused dequant-GEMM
+// ---------------------------------------------------------------------------
+
+/// A weight matrix stored at its true 4-bit footprint: two codebook indices
+/// per byte, per-block scales, and the format's 16-entry dequant LUT
+/// (`FormatSpec::padded16`). This is the serving engine's packed weight
+/// backend (QLoRA-style codebook storage): ~8x less weight traffic than the
+/// dequantized f32 tensor the fake-quant path streams on every decode step.
+#[derive(Clone, Debug)]
+pub struct PackedWeight {
+    /// `[K, ceil(N/2)]` row-major packed nibbles: column `2j` in the low
+    /// nibble and `2j+1` in the high nibble of byte `k * row_bytes + j`.
+    /// Odd `N` leaves the last high nibble zero.
+    pub packed: Vec<u8>,
+    /// `[K/block, N]` scales (same layout as [`QuantizedWeight::scales`]).
+    pub scales: Tensor,
+    /// The codebook padded to 16 f32 entries — the dequant LUT.
+    pub lut: [f32; 16],
+    pub k: usize,
+    pub n: usize,
+    pub block: usize,
+}
+
+impl PackedWeight {
+    /// Pack a [`QuantizedWeight`] produced under a <= 4-bit codebook.
+    /// Panics if the format has more than 16 values (codes must fit a
+    /// nibble — every 4-bit format in the zoo qualifies).
+    pub fn from_quantized(q: &QuantizedWeight, spec: &FormatSpec) -> PackedWeight {
+        assert!(
+            spec.n_values() <= 16,
+            "{}: {} codebook values do not fit 4-bit packing",
+            spec.name,
+            spec.n_values()
+        );
+        let padded = spec.padded16();
+        let mut lut = [0.0f32; 16];
+        lut.copy_from_slice(&padded);
+        let row_bytes = q.n.div_ceil(2);
+        let mut packed = vec![0u8; q.k * row_bytes];
+        for kk in 0..q.k {
+            let crow = &q.codes[kk * q.n..(kk + 1) * q.n];
+            let prow = &mut packed[kk * row_bytes..(kk + 1) * row_bytes];
+            for (j, &c) in crow.iter().enumerate() {
+                debug_assert!((0..16).contains(&c), "code {c} out of nibble range");
+                prow[j / 2] |= (c as u8 & 0x0f) << (4 * (j % 2));
+            }
+        }
+        PackedWeight {
+            packed,
+            scales: q.scales.clone(),
+            lut,
+            k: q.k,
+            n: q.n,
+            block: q.block,
+        }
+    }
+
+    /// Bytes per row of packed codes.
+    pub fn row_bytes(&self) -> usize {
+        self.n.div_ceil(2)
+    }
+
+    /// Total storage footprint (codes + scales), for traffic accounting.
+    pub fn bytes(&self) -> usize {
+        self.packed.len() + self.scales.len() * 4 + 16 * 4
+    }
+
+    /// Code at `(k, j)` (unpacked nibble).
+    pub fn code(&self, k: usize, j: usize) -> u8 {
+        let b = self.packed[k * self.row_bytes() + j / 2];
+        (b >> (4 * (j % 2))) & 0x0f
+    }
+
+    /// Dequantized f32 weights — bit-identical to
+    /// [`QuantizedWeight::dequant`] on the source codes (`lut[c] * scale`,
+    /// same f32 expression). Reference/fallback path; the serving engine
+    /// never materializes this.
+    pub fn dequant(&self) -> Tensor {
+        let mut out = vec![0.0f32; self.k * self.n];
+        for kk in 0..self.k {
+            let srow = self.scales.row(kk / self.block);
+            let orow = &mut out[kk * self.n..(kk + 1) * self.n];
+            for j in 0..self.n {
+                orow[j] = self.lut[self.code(kk, j) as usize] * srow[j];
+            }
+        }
+        Tensor::new(&[self.k, self.n], out)
+    }
+}
+
+/// Fused dequant-GEMM: `x [M, K] @ dequant(w) [K, N]`, expanding the packed
+/// nibbles through the 16-entry LUT on the fly. The weight stream from
+/// memory is the 4-bit codes (+ per-block scales); the f32 expansion lives
+/// only in a `[KC, N]` cache-resident tile that the blocked
+/// [`crate::tensor::gemm`] kernel consumes immediately. The 64-byte LUT
+/// stays register/L1-resident and the scale row streams sequentially, so
+/// the per-element expansion is a nibble extract, one tiny-table load and
+/// one multiply — `lut[code] * scale`, the exact f32 expression
+/// [`PackedWeight::dequant`] uses.
+///
+/// The K-block boundaries, the expansion expression and the inner kernel
+/// are exactly those of the dense path (`dequant()` then `Tensor::matmul`),
+/// so the result is bit-identical to it row for row — the packed backend
+/// inherits the batch-row bit-identity contract of `tensor::gemm`
+/// (`rust/tests/packed_weight.rs` locks both properties down).
+pub fn lut_gemm(x: &Tensor, w: &PackedWeight) -> Tensor {
+    let (m, k) = (x.rows(), x.cols());
+    assert_eq!(k, w.k, "lut_gemm: x [{m}, {k}] vs packed [{}, {}]", w.k, w.n);
+    let n = w.n;
+    let mut out = vec![0.0f32; m * n];
+    lut_gemm_into(m, k, n, x.data(), w, &mut out);
+    Tensor::new(&[m, n], out)
+}
+
+// Reusable expansion scratch: `lut_gemm_into` runs once per linear per
+// decode micro-step, and its `[KC, N]` tile would otherwise be a fresh
+// multi-hundred-KB allocation each time on the exact hot path the fused
+// kernel exists to speed up. The buffers only grow; every element the GEMM
+// reads is freshly written first, so stale contents are never observed.
+thread_local! {
+    static LUT_SCRATCH: std::cell::RefCell<(Vec<f32>, Vec<f32>)> =
+        const { std::cell::RefCell::new((Vec::new(), Vec::new())) };
+}
+
+/// Accumulating slice-level core of [`lut_gemm`] (caller provides a zeroed
+/// or pre-accumulated `out [M, N]`).
+pub fn lut_gemm_into(
+    m: usize,
+    k: usize,
+    n: usize,
+    x: &[f32],
+    w: &PackedWeight,
+    out: &mut [f32],
+) {
+    use crate::tensor::GEMM_KC;
+    assert_eq!(x.len(), m * k, "lut_gemm: x is not [{m}, {k}]");
+    assert_eq!(out.len(), m * n, "lut_gemm: out is not [{m}, {n}]");
+    assert_eq!(k, w.k, "lut_gemm: K mismatch");
+    assert_eq!(n, w.n, "lut_gemm: N mismatch");
+    if m == 0 || k == 0 || n == 0 {
+        return;
+    }
+    let row_bytes = w.row_bytes();
+    let lut = &w.lut;
+    let kc = GEMM_KC.min(k);
+    LUT_SCRATCH.with(|scratch| {
+        let mut scratch = scratch.borrow_mut();
+        let (wtile, xpanel) = &mut *scratch;
+        if wtile.len() < kc * n {
+            wtile.resize(kc * n, 0.0);
+        }
+        if xpanel.len() < m * kc {
+            xpanel.resize(m * kc, 0.0);
+        }
+        lut_gemm_blocks(m, k, n, x, w, row_bytes, lut, wtile, xpanel, out);
+    });
+}
+
+/// The K-block loop of [`lut_gemm_into`] over caller-provided scratch.
+#[allow(clippy::too_many_arguments)]
+fn lut_gemm_blocks(
+    m: usize,
+    k: usize,
+    n: usize,
+    x: &[f32],
+    w: &PackedWeight,
+    row_bytes: usize,
+    lut: &[f32; 16],
+    wtile: &mut [f32],
+    xpanel: &mut [f32],
+    out: &mut [f32],
+) {
+    use crate::tensor::{gemm_auto_threads, gemm_threaded, GEMM_KC};
+    // One threading decision from the full problem, not per K-block: a
+    // prefill-sized call threads its MAC exactly where the dense path
+    // would (the per-block m*kb*n would under-count by k/KC).
+    let threads = gemm_auto_threads(m, k, n);
+    let mut k0 = 0usize;
+    while k0 < k {
+        let kb = GEMM_KC.min(k - k0);
+        for kk in 0..kb {
+            let kabs = k0 + kk;
+            let srow = w.scales.row(kabs / w.block);
+            let prow = &w.packed[kabs * row_bytes..(kabs + 1) * row_bytes];
+            let wrow = &mut wtile[kk * n..kk * n + n];
+            for (jh, &byte) in prow.iter().enumerate() {
+                let j = 2 * jh;
+                wrow[j] = lut[(byte & 0x0f) as usize] * srow[j];
+                if j + 1 < n {
+                    wrow[j + 1] = lut[(byte >> 4) as usize] * srow[j + 1];
+                }
+            }
+        }
+        // feed the blocked kernel this K block's x columns: when the whole
+        // problem is one block (K <= KC — every d_model-sized decode
+        // linear), x already is the contiguous [m, kb] panel, so skip the
+        // copy; otherwise pack the strided columns once per block
+        let xa: &[f32] = if kb == k {
+            x
+        } else {
+            for i in 0..m {
+                xpanel[i * kb..(i + 1) * kb]
+                    .copy_from_slice(&x[i * k + k0..i * k + k0 + kb]);
+            }
+            &xpanel[..m * kb]
+        };
+        gemm_threaded(m, kb, n, xa, &wtile[..kb * n], out, threads);
+        k0 += kb;
+    }
+}
+
 /// Scale for one block of values under the given calibration policy.
 ///
 /// The codebook is max-|v|=1 normalized, so the absmax scale is simply the
@@ -179,6 +391,8 @@ pub fn quantize_weight(w: &Tensor, cfg: &QuantConfig) -> QuantizedWeight {
 
     // gather per-(block, column) values column-major to compute scales
     let mut colvals = vec![0.0f32; block];
+    let mut scaled = vec![0.0f32; block];
+    let mut col_codes = vec![0i8; block];
     for bi in 0..nb {
         for j in 0..n {
             for r in 0..block {
@@ -187,9 +401,17 @@ pub fn quantize_weight(w: &Tensor, cfg: &QuantConfig) -> QuantizedWeight {
             let s = block_scale_enc(&enc, &colvals, cfg.calib);
             scales.set2(bi, j, s);
             let inv = 1.0 / s;
+            // §Perf iteration 3: normalize + encode the whole block through
+            // the slice-level `Encoder::encode_block` instead of a per-value
+            // `encode` call — one bounds-check amortization per block, and
+            // the midpoint scan vectorizes across the slice (perf_quant
+            // rtn_* benches track this loop).
+            for (sv, &v) in scaled.iter_mut().zip(&colvals) {
+                *sv = v * inv;
+            }
+            enc.encode_block(&scaled, &mut col_codes);
             for r in 0..block {
-                let kk = bi * block + r;
-                codes[kk * n + j] = enc.encode(colvals[r] * inv) as i8;
+                codes[(bi * block + r) * n + j] = col_codes[r];
             }
         }
     }
@@ -362,6 +584,49 @@ mod tests {
                 assert_eq!(exp.at2(k, j), q.scales.at2(k / 16, j));
             }
         }
+    }
+
+    #[test]
+    fn packed_weight_roundtrips_codes_and_dequant() {
+        // odd N exercises the half-filled trailing byte per row
+        let w = rand_w(64, 7, 11);
+        let spec = formats::must("sf4");
+        let cfg = QuantConfig {
+            format: spec.clone(),
+            block: BlockSize::Sub(32),
+            calib: Calib::None,
+        };
+        let q = quantize_weight(&w, &cfg);
+        let p = PackedWeight::from_quantized(&q, &spec);
+        assert_eq!(p.packed.len(), 64 * 4, "ceil(7/2) bytes per row");
+        for kk in 0..64 {
+            for j in 0..7 {
+                assert_eq!(p.code(kk, j) as i8, q.codes[kk * 7 + j], "({kk},{j})");
+            }
+        }
+        // dequant is the same f32 expression — exactly equal, not just close
+        assert_eq!(p.dequant().data(), q.dequant(&spec).data());
+        // far below the dequantized f32 footprint even with scales aboard
+        assert!(p.bytes() * 3 < 64 * 7 * 4, "{} bytes packed", p.bytes());
+    }
+
+    #[test]
+    fn lut_gemm_matches_dequant_matmul() {
+        let w = rand_w(320, 33, 12); // K crosses the GEMM_KC=256 boundary
+        let spec = formats::must("e2m1_sp");
+        let cfg = QuantConfig {
+            format: spec.clone(),
+            block: BlockSize::Sub(64),
+            calib: Calib::None,
+        };
+        let q = quantize_weight(&w, &cfg);
+        let p = PackedWeight::from_quantized(&q, &spec);
+        let mut rng = Pcg64::new(13);
+        let x = Tensor::new(&[5, 320], rng.normal_vec(5 * 320, 1.0));
+        let fused = lut_gemm(&x, &p);
+        let dense = x.matmul(&q.dequant(&spec));
+        assert_eq!(fused.shape(), dense.shape());
+        assert_eq!(fused.data(), dense.data(), "fused path must be bit-identical");
     }
 
     #[test]

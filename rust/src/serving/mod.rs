@@ -5,8 +5,11 @@
 //! Architecture (vLLM-style iteration-level scheduling, sized for the
 //! pure-Rust [`crate::nn`] reference path):
 //!
-//! * [`Engine`] — owns the model (a [`ModelConfig`] + [`Checkpoint`], fp32
-//!   or fake-quant from `coordinator::pipeline::fake_quant_checkpoint`), the
+//! * [`Engine`] — owns the model (a [`ModelConfig`] + [`Checkpoint`]: fp32,
+//!   fake-quant dense from `coordinator::pipeline::fake_quant_checkpoint`,
+//!   or true 4-bit packed weights from `packed_checkpoint`, which the
+//!   forward decodes in-kernel through the fused `quant::lut_gemm` — ~8x
+//!   less weight traffic on the memory-bound decode path), the
 //!   [`KvCache`] slot pool, the [`Scheduler`] and the metrics. Requests can
 //!   be `submit`ted at any time; each `step` fuses chunked prefill and one
 //!   decode token for every running sequence into `[B, d]` batched forwards

@@ -211,23 +211,17 @@ impl Tensor {
         Tensor::new(&[m, n], out)
     }
 
-    /// `self [M,K] @ other^T` where `other` is `[N,K]`.
+    /// `self [M,K] @ other^T` where `other` is `[N,K]`. Routed through the
+    /// same blocked [`gemm`] kernel as [`Tensor::matmul`] (transpose once,
+    /// then multiply) — the transpose cost is O(KN) against the O(MKN)
+    /// multiply it unlocks, and both products share one fast path.
     pub fn matmul_t(&self, other: &Tensor) -> Tensor {
         let (m, k) = (self.rows(), self.cols());
         let (n, k2) = (other.rows(), other.cols());
-        assert_eq!(k, k2);
+        assert_eq!(k, k2, "matmul_t shape mismatch {:?} x {:?}", self.shape, other.shape);
+        let bt = other.transpose2();
         let mut out = vec![0.0f32; m * n];
-        for i in 0..m {
-            let a_row = &self.data[i * k..(i + 1) * k];
-            for j in 0..n {
-                let b_row = &other.data[j * k..(j + 1) * k];
-                let mut acc = 0.0f32;
-                for kk in 0..k {
-                    acc += a_row[kk] * b_row[kk];
-                }
-                out[i * n + j] = acc;
-            }
-        }
+        gemm(m, k, n, &self.data, bt.data(), &mut out);
         Tensor::new(&[m, n], out)
     }
 
@@ -276,26 +270,216 @@ impl Tensor {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Blocked GEMM kernel
+// ---------------------------------------------------------------------------
+
+/// Rows per register micro-tile.
+pub const GEMM_MR: usize = 4;
+/// Accumulator columns per register micro-tile (fits two AVX2 lanes of
+/// independent scalar chains; LLVM autovectorizes the `t` loops below).
+pub const GEMM_NR: usize = 16;
+/// K-block length: one `[KC, NR]` panel of `b` stays cache-resident while
+/// every row tile streams over it.
+pub const GEMM_KC: usize = 256;
+/// Below this many multiply-adds the thread-spawn cost dominates; stay
+/// single-threaded so decode-sized calls never pay it.
+const GEMM_PAR_FLOPS: usize = 1 << 21;
+
 /// Row-major GEMM kernel: accumulate `a [m,k] @ b [k,n]` into `out [m,n]`
 /// (caller provides a zeroed — or pre-accumulated — `out`).
 ///
-/// This is the crate's one matmul inner loop: `Tensor::matmul` and the fused
-/// batched decode step (`nn::forward_lm_step_batch`) both go through it, so a
-/// `[B, d]` batch of rows is arithmetically identical, row for row, to `B`
-/// separate `[1, d]` calls. ikj loop order streams `b` rows once per `a` row
-/// and keeps the j loop a contiguous zip over slices — the shape a future
-/// SIMD pass autovectorizes.
+/// This is the crate's one matmul inner loop: `Tensor::matmul`,
+/// `Tensor::matmul_t`, the fused batched decode step
+/// (`nn::forward_lm_step_batch`) and the packed-weight `quant::lut_gemm`
+/// all go through it. Structure: the K dimension is split into
+/// [`GEMM_KC`]-length blocks; within a block, `[GEMM_MR, GEMM_NR]` register
+/// micro-tiles hold explicit accumulator arrays and the inner loop is a
+/// contiguous multiply-add over `b` row slices that LLVM autovectorizes.
+/// Row blocks run on scoped threads once the problem passes a FLOP
+/// threshold (prefill / quantizer sizes), never for decode-sized calls.
+///
+/// **Batch-row bit-identity invariant** (the PR-2 contract
+/// `rust/tests/batched_decode.rs` enforces): every output row is an
+/// independent chain of f32 operations whose order depends only on `k`, `n`
+/// and the fixed blocking constants — never on `m`, the row index, the tile
+/// the row landed in (full or remainder) or the thread that ran it. A
+/// `[B, d]` batch of rows is therefore *bit-identical*, row for row, to `B`
+/// separate `[1, d]` calls.
+///
+/// The old kernel's `a[i][k] == 0.0` sparsity skip is gone: dense decode
+/// rows made the branch mispredict on nearly every element (measured in
+/// `perf_kernel`, see `BENCH_kernel.json`), and skipping work per-element
+/// would also break the bit-identity argument above for rows that happen to
+/// share zeros. The naive reference lives on as [`gemm_naive`].
 pub fn gemm(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], out: &mut [f32]) {
+    gemm_threaded(m, k, n, a, b, out, gemm_auto_threads(m, k, n));
+}
+
+/// [`gemm`] with an explicit row-thread count (`1` = serial). The thread
+/// count only changes how rows are chunked across scoped threads — never
+/// any row's arithmetic — so every value produces bit-identical output.
+/// `gemm` picks the count via [`gemm_auto_threads`]; `quant::lut_gemm`
+/// pins one decision from its *full* K so its per-K-block calls thread
+/// exactly when the dense path on the same problem would.
+pub fn gemm_threaded(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    b: &[f32],
+    out: &mut [f32],
+    threads: usize,
+) {
     assert_eq!(a.len(), m * k, "gemm: lhs is not [{m}, {k}]");
     assert_eq!(b.len(), k * n, "gemm: rhs is not [{k}, {n}]");
     assert_eq!(out.len(), m * n, "gemm: out is not [{m}, {n}]");
+    if m == 0 || k == 0 || n == 0 {
+        return;
+    }
+    let threads = threads.max(1).min(m.div_ceil(GEMM_MR));
+    if threads <= 1 {
+        gemm_block(m, k, n, a, b, out);
+        return;
+    }
+    // Split rows into contiguous chunks of whole GEMM_MR multiples. Each
+    // chunk runs the identical serial kernel on its own disjoint slice of
+    // `out`, so threading cannot change any row's arithmetic.
+    let tiles = m.div_ceil(GEMM_MR);
+    let tiles_per = tiles.div_ceil(threads);
+    let rows_per = tiles_per * GEMM_MR;
+    std::thread::scope(|scope| {
+        let mut rest = out;
+        let mut i0 = 0usize;
+        while i0 < m {
+            let mb = rows_per.min(m - i0);
+            let (chunk, tail) = rest.split_at_mut(mb * n);
+            rest = tail;
+            let a_chunk = &a[i0 * k..(i0 + mb) * k];
+            scope.spawn(move || gemm_block(mb, k, n, a_chunk, b, chunk));
+            i0 += mb;
+        }
+    });
+}
+
+/// Row-block thread count [`gemm`] would pick for an `[m, k] x [k, n]`
+/// problem (`1` = stay serial). Decode-sized calls always return 1.
+pub fn gemm_auto_threads(m: usize, k: usize, n: usize) -> usize {
+    if m < 2 * GEMM_MR || m.saturating_mul(k).saturating_mul(n) < GEMM_PAR_FLOPS {
+        return 1;
+    }
+    cores().min(m.div_ceil(GEMM_MR)).min(8)
+}
+
+/// Cached `available_parallelism` — the std call re-reads cgroup state on
+/// Linux on every invocation, which is too slow for a per-GEMM decision.
+fn cores() -> usize {
+    static CORES: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
+    *CORES.get_or_init(|| {
+        std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+    })
+}
+
+/// Serial blocked kernel over one row range (see [`gemm`] for the layout).
+fn gemm_block(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], out: &mut [f32]) {
+    let mut k0 = 0usize;
+    while k0 < k {
+        let kb = GEMM_KC.min(k - k0);
+        let b_block = &b[k0 * n..(k0 + kb) * n];
+        let mut i0 = 0usize;
+        while i0 < m {
+            match m - i0 {
+                1 => micro_tile::<1>(kb, k, n, k0, i0, a, b_block, out),
+                2 => micro_tile::<2>(kb, k, n, k0, i0, a, b_block, out),
+                3 => micro_tile::<3>(kb, k, n, k0, i0, a, b_block, out),
+                _ => micro_tile::<GEMM_MR>(kb, k, n, k0, i0, a, b_block, out),
+            }
+            i0 += GEMM_MR.min(m - i0);
+        }
+        k0 += kb;
+    }
+}
+
+/// One `[MB, n]` register-tiled pass over a K-block: accumulators for
+/// `GEMM_NR` columns at a time live in registers across the whole `kb`
+/// loop, then flush into `out` once per tile. Each accumulator is an
+/// independent scalar chain in `kk` order — full tiles, the column
+/// remainder and every `MB` compute the same per-(row, column) sequence.
+#[inline(always)]
+fn micro_tile<const MB: usize>(
+    kb: usize,
+    k: usize,
+    n: usize,
+    k0: usize,
+    i0: usize,
+    a: &[f32],
+    b_block: &[f32],
+    out: &mut [f32],
+) {
+    let a_rows: [&[f32]; MB] =
+        std::array::from_fn(|r| &a[(i0 + r) * k + k0..(i0 + r) * k + k0 + kb]);
+    let mut j0 = 0usize;
+    while j0 + GEMM_NR <= n {
+        let mut acc = [[0.0f32; GEMM_NR]; MB];
+        let mut boff = j0;
+        for kk in 0..kb {
+            let b_row = &b_block[boff..boff + GEMM_NR];
+            for r in 0..MB {
+                let av = a_rows[r][kk];
+                let accr = &mut acc[r];
+                for t in 0..GEMM_NR {
+                    accr[t] += av * b_row[t];
+                }
+            }
+            boff += n;
+        }
+        for r in 0..MB {
+            let o = (i0 + r) * n + j0;
+            let o_row = &mut out[o..o + GEMM_NR];
+            for t in 0..GEMM_NR {
+                o_row[t] += acc[r][t];
+            }
+        }
+        j0 += GEMM_NR;
+    }
+    if j0 < n {
+        // column remainder: same accumulator chains, narrower tile
+        let rem = n - j0;
+        let mut acc = [[0.0f32; GEMM_NR]; MB];
+        let mut boff = j0;
+        for kk in 0..kb {
+            let b_row = &b_block[boff..boff + rem];
+            for r in 0..MB {
+                let av = a_rows[r][kk];
+                let accr = &mut acc[r];
+                for t in 0..rem {
+                    accr[t] += av * b_row[t];
+                }
+            }
+            boff += n;
+        }
+        for r in 0..MB {
+            let o = (i0 + r) * n + j0;
+            let o_row = &mut out[o..o + rem];
+            for t in 0..rem {
+                o_row[t] += acc[r][t];
+            }
+        }
+    }
+}
+
+/// Naive triple-loop reference GEMM (no blocking, no skips): plain
+/// sequential accumulation per output element. Kept as the oracle the
+/// blocked kernel is property-tested against (`rust/tests/blocked_gemm.rs`)
+/// and as the before-side of the `perf_kernel` comparison.
+pub fn gemm_naive(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], out: &mut [f32]) {
+    assert_eq!(a.len(), m * k, "gemm_naive: lhs is not [{m}, {k}]");
+    assert_eq!(b.len(), k * n, "gemm_naive: rhs is not [{k}, {n}]");
+    assert_eq!(out.len(), m * n, "gemm_naive: out is not [{m}, {n}]");
     for i in 0..m {
         let a_row = &a[i * k..(i + 1) * k];
         let o_row = &mut out[i * n..(i + 1) * n];
         for (kk, &av) in a_row.iter().enumerate() {
-            if av == 0.0 {
-                continue;
-            }
             let b_row = &b[kk * n..(kk + 1) * n];
             for (o, &bv) in o_row.iter_mut().zip(b_row) {
                 *o += av * bv;
@@ -304,12 +488,20 @@ pub fn gemm(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], out: &mut [f32])
     }
 }
 
-/// Argmax of a slice (first maximum wins).
+/// Argmax of a slice (first maximum wins). NaN-tolerant: the running best
+/// is tracked as a value starting at -inf, so a NaN entry never becomes the
+/// comparison baseline and any finite entry after it still wins — the old
+/// `x > xs[best]` scan wedged at a leading NaN because every comparison
+/// against NaN is false. Input with no entry above -inf (all-NaN, empty)
+/// returns index 0. `serving::emit_token` greedy-streams through this, so a
+/// single NaN logit must not freeze the argmax at position 0.
 pub fn argmax(xs: &[f32]) -> usize {
-    let mut best = 0;
+    let mut best = 0usize;
+    let mut best_v = f32::NEG_INFINITY;
     for (i, &x) in xs.iter().enumerate() {
-        if x > xs[best] {
+        if x > best_v {
             best = i;
+            best_v = x;
         }
     }
     best
@@ -346,6 +538,54 @@ mod tests {
         let mut out = vec![10.0f32, 20.0];
         gemm(1, 2, 2, a.data(), b.data(), &mut out);
         assert_eq!(out, vec![11.0, 22.0]);
+    }
+
+    #[test]
+    fn blocked_gemm_matches_naive_on_remainder_shapes() {
+        // shapes straddling every tile boundary: MR=4 rows, NR=16 cols,
+        // KC=256 k-block (k=300 crosses it)
+        for &(m, k, n) in
+            &[(1usize, 1usize, 1usize), (3, 5, 7), (4, 16, 16), (5, 17, 18), (9, 300, 33)]
+        {
+            let a: Vec<f32> = (0..m * k).map(|i| ((i * 13 % 17) as f32 - 8.0) * 0.25).collect();
+            let b: Vec<f32> = (0..k * n).map(|i| ((i * 7 % 19) as f32 - 9.0) * 0.125).collect();
+            let mut fast = vec![0.0f32; m * n];
+            let mut naive = vec![0.0f32; m * n];
+            gemm(m, k, n, &a, &b, &mut fast);
+            gemm_naive(m, k, n, &a, &b, &mut naive);
+            for (i, (x, y)) in fast.iter().zip(&naive).enumerate() {
+                assert!(
+                    (x - y).abs() <= 1e-4 * (1.0 + y.abs()),
+                    "[{m},{k},{n}] elem {i}: {x} vs {y}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_zero_rows_in_a_do_not_skip_work() {
+        // the sparsity-skip branch is gone: zeros in `a` must still produce
+        // exact results (and identical arithmetic) rather than early-outs
+        let mut a = vec![0.0f32; 2 * 8];
+        a[3] = 2.0; // row 0 mostly zero
+        a[8] = 1.0; // row 1 leading 1
+        let b: Vec<f32> = (0..8 * 5).map(|i| i as f32 * 0.5).collect();
+        let mut fast = vec![0.0f32; 2 * 5];
+        let mut naive = vec![0.0f32; 2 * 5];
+        gemm(2, 8, 5, &a, &b, &mut fast);
+        gemm_naive(2, 8, 5, &a, &b, &mut naive);
+        assert_eq!(fast, naive);
+    }
+
+    #[test]
+    fn argmax_is_nan_tolerant() {
+        // regression: a leading NaN used to freeze `x > xs[best]` at 0
+        assert_eq!(argmax(&[f32::NAN, 1.0, 3.0, 2.0]), 2);
+        assert_eq!(argmax(&[1.0, f32::NAN, 0.5]), 0);
+        assert_eq!(argmax(&[f32::NAN, f32::NAN]), 0, "all-NaN falls back to 0");
+        assert_eq!(argmax(&[f32::NEG_INFINITY, f32::NAN, 7.0]), 2);
+        assert_eq!(argmax(&[2.0, 2.0, 1.0]), 0, "ties: first maximum wins");
+        assert_eq!(argmax(&[]), 0);
     }
 
     #[test]

@@ -1,0 +1,178 @@
+//! Property harness for the blocked/register-tiled `tensor::gemm` kernel.
+//!
+//! Two contracts:
+//!
+//! 1. **Correctness**: over a sweep of (m, k, n) shapes that straddles
+//!    every tile boundary (MR=4 row tiles, NR=16 column tiles, KC=256
+//!    K-blocks, and the threading threshold), the blocked kernel agrees
+//!    with the kept naive reference (`gemm_naive`) and with an f64
+//!    accumulation oracle, within the f32 reassociation tolerance.
+//! 2. **Batch-row bit-identity** (the PR-2 fused-decode invariant): every
+//!    output row is bit-identical to running that row alone through a
+//!    `[1, K]` call — for every m, including the threaded row-parallel
+//!    path. `rust/tests/batched_decode.rs` relies on this at the model
+//!    level; this file pins it at the kernel level.
+
+use llm_datatypes::rng::Pcg64;
+use llm_datatypes::tensor::{gemm, gemm_naive, gemm_threaded, Tensor};
+
+fn rand_mat(rng: &mut Pcg64, rows: usize, cols: usize) -> Vec<f32> {
+    (0..rows * cols).map(|_| rng.range(-1.0, 1.0) as f32).collect()
+}
+
+/// f64 accumulation oracle (sequential, most accurate of the three).
+fn gemm_f64(m: usize, k: usize, n: usize, a: &[f32], b: &[f32]) -> Vec<f64> {
+    let mut out = vec![0.0f64; m * n];
+    for i in 0..m {
+        for kk in 0..k {
+            let av = a[i * k + kk] as f64;
+            for j in 0..n {
+                out[i * n + j] += av * b[kk * n + j] as f64;
+            }
+        }
+    }
+    out
+}
+
+#[test]
+fn blocked_kernel_matches_naive_and_f64_across_shape_sweep() {
+    // remainder coverage: m hits 1..5 and non-multiples of MR=4; n hits
+    // 1..17 and non-multiples of NR=16; k crosses the KC=256 boundary
+    let ms = [1usize, 2, 3, 4, 5, 8, 13];
+    let ks = [1usize, 7, 16, 128, 257, 300];
+    let ns = [1usize, 3, 15, 16, 17, 33, 64];
+    let mut rng = Pcg64::new(0x6e33);
+    for &m in &ms {
+        for &k in &ks {
+            for &n in &ns {
+                let a = rand_mat(&mut rng, m, k);
+                let b = rand_mat(&mut rng, k, n);
+                let mut fast = vec![0.0f32; m * n];
+                let mut naive = vec![0.0f32; m * n];
+                gemm(m, k, n, &a, &b, &mut fast);
+                gemm_naive(m, k, n, &a, &b, &mut naive);
+                let oracle = gemm_f64(m, k, n, &a, &b);
+                // |values| <= 1, so absolute error scales with sqrt(k) for
+                // random signs; k * ~10eps is a safely loose deterministic
+                // bound that still catches any indexing/tiling bug outright
+                let tol = 1e-6 * (k as f32) + 1e-6;
+                for i in 0..m * n {
+                    let o = oracle[i] as f32;
+                    assert!(
+                        (fast[i] - o).abs() <= tol,
+                        "[{m},{k},{n}] elem {i}: blocked {} vs f64 {o}",
+                        fast[i]
+                    );
+                    assert!(
+                        (naive[i] - o).abs() <= tol,
+                        "[{m},{k},{n}] elem {i}: naive {} vs f64 {o}",
+                        naive[i]
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn every_row_is_bit_identical_to_its_single_row_call() {
+    // the fused-decode contract at kernel level: row r of a [m, k] GEMM is
+    // bitwise the result of the same row alone — across full tiles (m=4),
+    // remainder tiles (m=5, 7), and mixes of zero / denormal-ish values
+    let mut rng = Pcg64::new(0xb17);
+    let (k, n) = (193, 37);
+    let b = rand_mat(&mut rng, k, n);
+    for m in 1..=9usize {
+        let mut a = rand_mat(&mut rng, m, k);
+        // sprinkle exact zeros: the old kernel's sparsity skip would have
+        // made per-row work depend on content; the blocked kernel must not
+        for (i, v) in a.iter_mut().enumerate() {
+            if i % 11 == 0 {
+                *v = 0.0;
+            }
+        }
+        let mut fused = vec![0.0f32; m * n];
+        gemm(m, k, n, &a, &b, &mut fused);
+        for r in 0..m {
+            let mut single = vec![0.0f32; n];
+            gemm(1, k, n, &a[r * k..(r + 1) * k], &b, &mut single);
+            assert_eq!(
+                &fused[r * n..(r + 1) * n],
+                &single[..],
+                "m={m} row {r}: fused row differs bitwise from its [1, K] call"
+            );
+        }
+    }
+}
+
+#[test]
+fn threaded_row_parallel_path_is_bit_identical_to_serial_rows() {
+    // m * k * n above the parallel threshold (2^21): the scoped-thread
+    // row-block path must still produce rows bitwise equal to per-row calls
+    let (m, k, n) = (192, 160, 96); // 2.9M mul-adds -> threaded
+    let mut rng = Pcg64::new(0x7ead);
+    let a = rand_mat(&mut rng, m, k);
+    let b = rand_mat(&mut rng, k, n);
+    let mut fused = vec![0.0f32; m * n];
+    gemm(m, k, n, &a, &b, &mut fused);
+    for r in [0usize, 1, 63, 64, 100, 191] {
+        let mut single = vec![0.0f32; n];
+        gemm(1, k, n, &a[r * k..(r + 1) * k], &b, &mut single);
+        assert_eq!(
+            &fused[r * n..(r + 1) * n],
+            &single[..],
+            "row {r}: threaded path changed the arithmetic"
+        );
+    }
+    // and the whole result agrees with the naive reference numerically
+    let mut naive = vec![0.0f32; m * n];
+    gemm_naive(m, k, n, &a, &b, &mut naive);
+    for i in 0..m * n {
+        assert!((fused[i] - naive[i]).abs() <= 1e-4, "elem {i}");
+    }
+}
+
+#[test]
+fn every_thread_count_produces_bitwise_identical_output() {
+    // the explicit-thread-count entry (`quant::lut_gemm` pins one decision
+    // for all its K-blocks): 1, 2, 3, 5, 8 and an absurd count must all
+    // equal the serial result bitwise
+    let (m, k, n) = (37, 64, 29);
+    let mut rng = Pcg64::new(0x7c0de);
+    let a = rand_mat(&mut rng, m, k);
+    let b = rand_mat(&mut rng, k, n);
+    let mut serial = vec![0.0f32; m * n];
+    gemm_threaded(m, k, n, &a, &b, &mut serial, 1);
+    for threads in [2usize, 3, 5, 8, 1000] {
+        let mut out = vec![0.0f32; m * n];
+        gemm_threaded(m, k, n, &a, &b, &mut out, threads);
+        assert_eq!(out, serial, "threads={threads} changed the arithmetic");
+    }
+}
+
+#[test]
+fn gemm_accumulates_and_handles_degenerate_shapes() {
+    // accumulate-into-out is part of the contract (lut_gemm leans on it)
+    let a = [1.0f32, 2.0, 3.0];
+    let b = [2.0f32, 0.5, 1.0];
+    let mut out = vec![100.0f32];
+    gemm(1, 3, 1, &a, &b, &mut out);
+    assert_eq!(out, vec![100.0 + 2.0 + 1.0 + 3.0]);
+    // zero-sized dimensions are no-ops, not panics
+    let mut empty: Vec<f32> = Vec::new();
+    gemm(0, 3, 1, &[], &b, &mut empty);
+    let mut z = vec![5.0f32; 2];
+    gemm(2, 0, 1, &[], &[], &mut z);
+    assert_eq!(z, vec![5.0, 5.0], "k=0 leaves the accumulator untouched");
+}
+
+#[test]
+fn matmul_and_matmul_t_share_the_kernel() {
+    let mut rng = Pcg64::new(0x3a3a);
+    let a = Tensor::new(&[6, 50], rand_mat(&mut rng, 6, 50));
+    let b = Tensor::new(&[50, 21], rand_mat(&mut rng, 50, 21));
+    let c1 = a.matmul(&b);
+    let c2 = a.matmul_t(&b.transpose2());
+    // matmul_t transposes back internally: identical blocked arithmetic
+    assert_eq!(c1.data(), c2.data(), "matmul_t must route through the same kernel");
+}

@@ -1,0 +1,215 @@
+//! Property harness for the packed 4-bit weight backend: `PackedWeight`
+//! packing, the fused `lut_gemm`, `packed_checkpoint`, and the serving
+//! engine decoding straight from packed weights.
+//!
+//! The central property: for **every** registered <= 4-bit codebook,
+//! pack -> `lut_gemm` matches dequant -> `matmul` within 1e-6 (in fact the
+//! two paths share the expansion expression, the K-block boundaries and
+//! the blocked kernel, so they are bit-identical — asserted exactly where
+//! the contract says so). On top of that, the batch-row bit-identity
+//! invariant of `tests/batched_decode.rs` must extend to the packed
+//! backend: a `[B, d]` packed forward row equals the same sequence stepped
+//! alone.
+
+use std::sync::mpsc;
+
+use llm_datatypes::coordinator::pipeline::{
+    fake_quant_checkpoint, packed_checkpoint, PipelineConfig,
+};
+use llm_datatypes::coordinator::{corpus_for, trainer};
+use llm_datatypes::formats;
+use llm_datatypes::model_io::zoo;
+use llm_datatypes::nn::{self, KvStore, SeqKvCache};
+use llm_datatypes::quant::{
+    lut_gemm, quantize_weight, BlockSize, Calib, PackedWeight, QuantConfig,
+};
+use llm_datatypes::rng::Pcg64;
+use llm_datatypes::serving::{DecodeRequest, Engine, EngineConfig, SchedulerConfig, TokenEvent};
+use llm_datatypes::tensor::Tensor;
+
+/// Every registered codebook that fits 4-bit packing (nibble codes).
+fn packable_formats() -> Vec<&'static str> {
+    formats::all_names()
+        .into_iter()
+        .filter(|name| formats::must(name).n_values() <= 16)
+        .collect()
+}
+
+#[test]
+fn pack_lut_gemm_matches_dequant_matmul_on_every_packable_codebook() {
+    let names = packable_formats();
+    assert!(names.len() >= 20, "the zoo should be mostly 4-bit: {names:?}");
+    let mut rng = Pcg64::new(0x9acc);
+    // K crosses the KC=256 block boundary; N is odd (half-filled last byte)
+    let (k, n, block) = (320usize, 19usize, 64usize);
+    for name in names {
+        let spec = formats::must(name);
+        let w = Tensor::new(&[k, n], rng.student_t_vec(k * n, 5.0, 0.02));
+        let q = quantize_weight(
+            &w,
+            &QuantConfig { format: spec.clone(), block: BlockSize::Sub(block), calib: Calib::None },
+        );
+        let p = PackedWeight::from_quantized(&q, &spec);
+        // codes survive nibble packing exactly
+        for kk in (0..k).step_by(37) {
+            for j in 0..n {
+                assert_eq!(p.code(kk, j) as i8, q.codes[kk * n + j], "{name} ({kk},{j})");
+            }
+        }
+        let x = Tensor::new(&[3, k], rng.normal_vec(3 * k, 1.0));
+        let fused = lut_gemm(&x, &p);
+        let dense = x.matmul(&q.dequant(&spec));
+        for (i, (a, b)) in fused.data().iter().zip(dense.data()).enumerate() {
+            assert!(
+                (a - b).abs() <= 1e-6,
+                "{name} elem {i}: fused {a} vs dequant-matmul {b}"
+            );
+        }
+        // and in fact exactly: same expansion expression, same kernel
+        assert_eq!(fused.data(), dense.data(), "{name}: paths diverged bitwise");
+    }
+}
+
+#[test]
+fn five_bit_codebooks_are_rejected_by_packing() {
+    let spec = formats::must("int5");
+    let w = Tensor::from_fn(&[32, 4], |i| (i as f32 * 0.37).sin());
+    let q = quantize_weight(
+        &w,
+        &QuantConfig { format: spec.clone(), block: BlockSize::Sub(32), calib: Calib::None },
+    );
+    let result = std::panic::catch_unwind(|| PackedWeight::from_quantized(&q, &spec));
+    assert!(result.is_err(), "int5 (32 values) must not pack into nibbles");
+}
+
+#[test]
+fn packed_forward_is_bit_identical_to_fake_quant_forward() {
+    // the packed checkpoint serves the same model as the dense fake-quant
+    // checkpoint: logits equal bitwise, step by step, on both 4-bit formats
+    let cfg = zoo("nano").unwrap();
+    let fp32 = trainer::init_lm_params(&cfg, 0x9ac0);
+    let corpus = corpus_for(&cfg);
+    for format in ["sf4", "e2m1_sp"] {
+        let pc = PipelineConfig::weight_only(format);
+        let dense = fake_quant_checkpoint(&cfg, &fp32, &pc, &corpus).unwrap();
+        let packed = packed_checkpoint(&cfg, &fp32, &pc, &corpus).unwrap();
+        let tokens: Vec<i32> = (0..12).map(|i| (i * 7 + 3) % cfg.vocab as i32).collect();
+        let mut kv_d = SeqKvCache::new(&cfg);
+        let mut kv_p = SeqKvCache::new(&cfg);
+        for (i, &t) in tokens.iter().enumerate() {
+            let ld = nn::forward_lm_step(&cfg, &dense, t, &mut kv_d).unwrap();
+            let lp = nn::forward_lm_step(&cfg, &packed, t, &mut kv_p).unwrap();
+            assert_eq!(
+                ld.data(),
+                lp.data(),
+                "{format} step {i}: packed logits diverged from fake-quant"
+            );
+        }
+        // full (non-incremental) forward agrees too
+        let fd = nn::forward_lm(&cfg, &dense, &tokens, None).unwrap();
+        let fp = nn::forward_lm(&cfg, &packed, &tokens, None).unwrap();
+        assert_eq!(fd.data(), fp.data(), "{format}: full forward diverged");
+    }
+}
+
+#[test]
+fn batch_bit_identity_holds_on_the_packed_backend() {
+    // the PR-2 contract extended: fused [B, d] rows through packed weights
+    // are bit-identical to each sequence stepped alone
+    let cfg = zoo("nano").unwrap();
+    let fp32 = trainer::init_lm_params(&cfg, 0x9acded);
+    let corpus = corpus_for(&cfg);
+    let packed = packed_checkpoint(
+        &cfg,
+        &fp32,
+        &PipelineConfig::weight_only("sf4"),
+        &corpus,
+    )
+    .unwrap();
+    let mut rng = Pcg64::new(0x77);
+    for b in [1usize, 3, 5, 8] {
+        let lens: Vec<usize> = (0..b).map(|_| 1 + rng.below(8)).collect();
+        let prompts: Vec<Vec<i32>> = lens
+            .iter()
+            .map(|&n| (0..n).map(|_| rng.below(cfg.vocab) as i32).collect())
+            .collect();
+        let mut expect: Vec<Vec<Tensor>> = Vec::new();
+        for prompt in &prompts {
+            let mut kv = SeqKvCache::new(&cfg);
+            expect.push(
+                prompt
+                    .iter()
+                    .map(|&t| nn::forward_lm_step(&cfg, &packed, t, &mut kv).unwrap())
+                    .collect(),
+            );
+        }
+        let mut kvs: Vec<SeqKvCache> = (0..b).map(|_| SeqKvCache::new(&cfg)).collect();
+        for step in 0..*lens.iter().max().unwrap() {
+            let live: Vec<usize> = (0..b).filter(|&i| step < lens[i]).collect();
+            let tokens: Vec<i32> = live.iter().map(|&i| prompts[i][step]).collect();
+            let mut stores: Vec<&mut dyn KvStore> = kvs
+                .iter_mut()
+                .enumerate()
+                .filter(|(i, _)| step < lens[*i])
+                .map(|(_, kv)| kv as &mut dyn KvStore)
+                .collect();
+            let logits = nn::forward_lm_step_batch(&cfg, &packed, &tokens, &mut stores).unwrap();
+            for (r, &lane) in live.iter().enumerate() {
+                assert_eq!(
+                    logits.row(r),
+                    expect[lane][step].row(0),
+                    "packed b={b} lane={lane} step={step}: batched row diverged"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn engine_serves_packed_weights_with_identical_streams() {
+    // end to end: the continuous-batching engine decoding from packed
+    // weights streams exactly the tokens the dense fake-quant engine does
+    let cfg = zoo("nano").unwrap();
+    let fp32 = trainer::init_lm_params(&cfg, 0xe2e);
+    let corpus = corpus_for(&cfg);
+    let pc = PipelineConfig::weight_only("sf4");
+    let dense = fake_quant_checkpoint(&cfg, &fp32, &pc, &corpus).unwrap();
+    let packed = packed_checkpoint(&cfg, &fp32, &pc, &corpus).unwrap();
+    assert!(packed.has_packed());
+    let run = |ckpt| {
+        let mut eng = Engine::new(
+            cfg,
+            ckpt,
+            EngineConfig {
+                slots: 2,
+                kv_capacity: 0,
+                scheduler: SchedulerConfig { max_batch: 2, ..SchedulerConfig::default() },
+            },
+        );
+        let mut rxs: Vec<mpsc::Receiver<TokenEvent>> = Vec::new();
+        for prompt in [vec![1, 2, 3], vec![7, 8]] {
+            let (req, rx) = DecodeRequest::new(prompt, 6);
+            eng.submit(req);
+            rxs.push(rx);
+        }
+        while eng.has_work() {
+            eng.step().unwrap();
+        }
+        rxs.iter()
+            .map(|rx| {
+                let mut tokens = Vec::new();
+                while let Ok(ev) = rx.try_recv() {
+                    if let TokenEvent::Token { token, .. } = ev {
+                        tokens.push(token);
+                    }
+                }
+                tokens
+            })
+            .collect::<Vec<Vec<i32>>>()
+    };
+    let dense_streams = run(dense);
+    let packed_streams = run(packed);
+    assert_eq!(dense_streams, packed_streams, "packed engine streams diverged");
+    assert_eq!(dense_streams.len(), 2);
+    assert_eq!(dense_streams[0].len(), 6);
+}
