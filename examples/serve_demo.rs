@@ -57,17 +57,32 @@ fn main() -> Result<()> {
             weights,
             EngineConfig {
                 slots,
-                kv_capacity: 0,
                 scheduler: SchedulerConfig { max_batch: slots, ..SchedulerConfig::default() },
+                ..EngineConfig::default()
             },
         );
         let report = run_decode_loadgen(&mut engine, &prompts, clients, per_client, max_new)?;
         println!("  {format:>5}: {report}");
     }
 
+    // -- the same SF4 weights with a packed 4-bit KV cache -----------------
+    let sf4_weights =
+        fake_quant_checkpoint(&cfg, &ckpt, &PipelineConfig::weight_only("sf4"), &corpus)?;
+    let mut engine = Engine::new(
+        cfg,
+        sf4_weights.clone(),
+        EngineConfig {
+            slots,
+            kv_format: Some("sf4"),
+            scheduler: SchedulerConfig { max_batch: slots, ..SchedulerConfig::default() },
+            ..EngineConfig::default()
+        },
+    );
+    let report = run_decode_loadgen(&mut engine, &prompts, clients, per_client, max_new)?;
+    println!("  sf4 weights + sf4 packed KV ({} KiB cache): {report}", engine.cache().bytes() / 1024);
+
     // -- one generation, streamed token by token ---------------------------
-    let weights = fake_quant_checkpoint(&cfg, &ckpt, &PipelineConfig::weight_only("sf4"), &corpus)?;
-    let mut engine = Engine::new(cfg, weights, EngineConfig::default());
+    let mut engine = Engine::new(cfg, sf4_weights, EngineConfig::default());
     let (req, events) = DecodeRequest::new(prompts[0].clone(), 16);
     println!("\nstreaming one SF4 generation (prompt {} tokens):", prompts[0].len());
     let (tx, rx) = mpsc::channel();

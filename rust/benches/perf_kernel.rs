@@ -1,5 +1,5 @@
-//! Perf: matmul kernels. Three comparisons, all pure Rust (no artifacts
-//! needed):
+//! Perf: matmul + attention kernels. Five comparisons, all pure Rust (no
+//! artifacts needed):
 //!
 //! 1. the blocked/register-tiled `tensor::gemm` vs the naive ikj reference
 //!    (`gemm_naive`) vs the pre-PR-3 ikj kernel with its `a == 0.0`
@@ -9,7 +9,13 @@
 //!    through the 16-entry codebook LUT inside the matmul) vs the
 //!    dequant-then-matmul oracle it replaces — the acceptance comparison on
 //!    256x512x512;
-//! 3. optionally, the XLA `lut_matmul_bench` artifact end-to-end through
+//! 3. the persistent-pool row threading (`tensor::gemm_threaded`, PR 4) vs
+//!    the pre-PR-4 per-call `thread::scope` spawns it replaced, at prefill
+//!    shapes where the threading engages (`gemm_pool_*` vs `gemm_scope_*`);
+//! 4. the fused packed-KV attention (`tensor::lut_attend_head`, PR 4) vs
+//!    its dequantize-then-attend oracle at decode shapes, plus a
+//!    long-context cell that crosses the pool threshold;
+//! 5. optionally, the XLA `lut_matmul_bench` artifact end-to-end through
 //!    PJRT on the same problem (skipped with a note when the artifact set
 //!    is absent).
 //!
@@ -21,11 +27,14 @@ use llm_datatypes::bench_util::{bench, BenchJson, BenchStats};
 use llm_datatypes::coordinator::Session;
 use llm_datatypes::formats;
 use llm_datatypes::quant::{
-    lut_gemm, quantize_weight, BlockSize, Calib, PackedWeight, QuantConfig,
+    lut_gemm, quantize_weight, BlockSize, Calib, KvFormat, PackedWeight, QuantConfig,
 };
 use llm_datatypes::rng::Pcg64;
 use llm_datatypes::runtime::Value;
-use llm_datatypes::tensor::{gemm, gemm_naive, Tensor};
+use llm_datatypes::tensor::{
+    attend_head, gemm, gemm_auto_threads, gemm_naive, gemm_threaded, lut_attend,
+    lut_attend_head, Tensor,
+};
 
 /// The pre-PR-3 kernel, verbatim: ikj with the per-element `av == 0.0`
 /// sparsity skip. Kept here (not in the library) purely as the before-side
@@ -44,6 +53,41 @@ fn gemm_ikj_skipzero(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], out: &m
             }
         }
     }
+}
+
+/// The pre-PR-4 row threading, verbatim in spirit: spawn one scoped thread
+/// per row chunk per call, each running the serial blocked kernel
+/// (`gemm_threaded` with `threads = 1`). Kept here (not in the library)
+/// purely as the before-side of the persistent-pool measurement.
+fn gemm_scope_threaded(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    b: &[f32],
+    out: &mut [f32],
+    threads: usize,
+) {
+    const MR: usize = 4; // tensor::GEMM_MR
+    let threads = threads.max(1).min(m.div_ceil(MR));
+    if threads <= 1 {
+        gemm_threaded(m, k, n, a, b, out, 1);
+        return;
+    }
+    let tiles = m.div_ceil(MR);
+    let rows_per = tiles.div_ceil(threads) * MR;
+    std::thread::scope(|scope| {
+        let mut rest = out;
+        let mut i0 = 0usize;
+        while i0 < m {
+            let mb = rows_per.min(m - i0);
+            let (chunk, tail) = rest.split_at_mut(mb * n);
+            rest = tail;
+            let a_chunk = &a[i0 * k..(i0 + mb) * k];
+            scope.spawn(move || gemm_threaded(mb, k, n, a_chunk, b, chunk, 1));
+            i0 += mb;
+        }
+    });
 }
 
 fn gflops(flops: usize, s: &BenchStats) -> f64 {
@@ -123,7 +167,150 @@ fn main() -> anyhow::Result<()> {
     let s = bench("rust_lut_gemm_decode_4x512x512", 64, || lut_gemm(&xd, &packed));
     record(&mut json, "rust_lut_gemm_decode_4x512x512", dflops, &s);
 
-    // -- 3: XLA lut_matmul artifact (optional) -----------------------------
+    // -- 3: persistent-pool threading vs per-call thread::scope ------------
+    // prefill shapes where gemm_auto_threads engages; both sides run the
+    // identical serial kernel per chunk, so the delta is pure dispatch cost
+    for (pm, iters) in [(256usize, 48usize), (64, 128)] {
+        let t = gemm_auto_threads(pm, k, n);
+        let xa = Tensor::new(&[pm, k], rng.normal_vec(pm * k, 1.0));
+        let mut pout = vec![0.0f32; pm * n];
+        let pflops = 2 * pm * k * n;
+        let name = format!("gemm_pool_{pm}x{k}x{n}");
+        let s_pool = bench(&name, iters, || {
+            pout.iter_mut().for_each(|v| *v = 0.0);
+            gemm_threaded(pm, k, n, xa.data(), b.data(), &mut pout, t);
+        });
+        record(&mut json, &name, pflops, &s_pool);
+        let name = format!("gemm_scope_{pm}x{k}x{n}");
+        let s_scope = bench(&name, iters, || {
+            pout.iter_mut().for_each(|v| *v = 0.0);
+            gemm_scope_threaded(pm, k, n, xa.data(), b.data(), &mut pout, t);
+        });
+        record(&mut json, &name, pflops, &s_scope);
+        let win = s_scope.mean_secs() / s_pool.mean_secs();
+        println!("bench gemm_pool_vs_scope_{pm}x{k}x{n}             x{win:.2} (threads={t})");
+        json.record(&format!("gemm_pool_vs_scope_{pm}x{k}x{n}"), "speedup", win);
+    }
+
+    // -- 4: fused packed-KV attention vs dequantize-then-attend ------------
+    // decode shape: one query row attending over a cached history (the
+    // shape the serving engine issues per head per layer per step)
+    let (rows, ad, heads) = (96usize, 256usize, 8usize);
+    let dh = ad / heads;
+    let kvf = KvFormat::new(&spec, dh);
+    let mk_lane = |seed: u64| {
+        let mut r = Pcg64::new(seed);
+        let mut codes = vec![0u8; rows * kvf.codes_per_row(ad)];
+        let mut scales = vec![0.0f32; rows * kvf.scales_per_row(ad)];
+        for i in 0..rows {
+            let row = r.normal_vec(ad, 1.0);
+            kvf.encode_row(
+                &row,
+                &mut codes[i * ad / 2..(i + 1) * ad / 2],
+                &mut scales[i * (ad / dh)..(i + 1) * (ad / dh)],
+            );
+        }
+        (codes, scales)
+    };
+    let (k_codes, k_scales) = mk_lane(21);
+    let (v_codes, v_scales) = mk_lane(22);
+    let aq = rng.normal_vec(ad, 1.0);
+    let ascale = 1.0 / (dh as f32).sqrt();
+    let aflops = 4 * rows * ad; // scores + V accumulation MACs
+    let mut att = vec![0.0f32; rows];
+    let mut ctx = vec![0.0f32; ad];
+    let mut kd = vec![0.0f32; rows * ad];
+    let mut vd = vec![0.0f32; rows * ad];
+    let s_oracle = bench("dequant_then_attend_96x256", 512, || {
+        // the oracle pays the full lane expansion into f32 buffers first
+        for i in 0..rows {
+            kvf.dequant_row(
+                &k_codes[i * ad / 2..(i + 1) * ad / 2],
+                &k_scales[i * (ad / dh)..(i + 1) * (ad / dh)],
+                &mut kd[i * ad..(i + 1) * ad],
+            );
+            kvf.dequant_row(
+                &v_codes[i * ad / 2..(i + 1) * ad / 2],
+                &v_scales[i * (ad / dh)..(i + 1) * (ad / dh)],
+                &mut vd[i * ad..(i + 1) * ad],
+            );
+        }
+        ctx.iter_mut().for_each(|v| *v = 0.0);
+        for h in 0..heads {
+            let off = h * dh;
+            attend_head(
+                &aq[off..off + dh],
+                &kd,
+                &vd,
+                ad,
+                off,
+                rows,
+                ascale,
+                &mut att,
+                &mut ctx[off..off + dh],
+            );
+        }
+    });
+    record(&mut json, "dequant_then_attend_96x256", aflops, &s_oracle);
+    let klane = kvf.lane(&k_codes, &k_scales, ad);
+    let vlane = kvf.lane(&v_codes, &v_scales, ad);
+    let s_fused = bench("lut_attend_96x256", 1024, || {
+        ctx.iter_mut().for_each(|v| *v = 0.0);
+        for h in 0..heads {
+            let off = h * dh;
+            lut_attend_head(
+                &aq[off..off + dh],
+                klane,
+                vlane,
+                off,
+                rows,
+                ascale,
+                &mut att,
+                &mut ctx[off..off + dh],
+            );
+        }
+    });
+    record(&mut json, "lut_attend_96x256", aflops, &s_fused);
+    let win = s_oracle.mean_secs() / s_fused.mean_secs();
+    println!("bench lut_attend_vs_dequant_attend             x{win:.2}");
+    json.record("lut_attend_vs_dequant_attend", "speedup", win);
+
+    // long-context cell: crosses the pool threshold (2 * rows * d MACs),
+    // heads fan out across the persistent workers
+    {
+        let rows = 4608usize;
+        let kvf = KvFormat::new(&spec, dh);
+        // distinct K and V lanes: the V pass must stream its own buffer,
+        // as it does in the engine, not re-read a cache-warm K lane
+        let mk_long = |seed: u64| {
+            let mut r = Pcg64::new(seed);
+            let mut codes = vec![0u8; rows * kvf.codes_per_row(ad)];
+            let mut scales = vec![0.0f32; rows * kvf.scales_per_row(ad)];
+            for i in 0..rows {
+                let row = r.normal_vec(ad, 1.0);
+                kvf.encode_row(
+                    &row,
+                    &mut codes[i * ad / 2..(i + 1) * ad / 2],
+                    &mut scales[i * (ad / dh)..(i + 1) * (ad / dh)],
+                );
+            }
+            (codes, scales)
+        };
+        let (lk_codes, lk_scales) = mk_long(23);
+        let (lv_codes, lv_scales) = mk_long(24);
+        let klane = kvf.lane(&lk_codes, &lk_scales, ad);
+        let vlane = kvf.lane(&lv_codes, &lv_scales, ad);
+        let lflops = 4 * rows * ad;
+        let mut att = vec![0.0f32; rows];
+        let mut ctx = vec![0.0f32; ad];
+        let s = bench("lut_attend_longctx_4608x256", 128, || {
+            ctx.iter_mut().for_each(|v| *v = 0.0);
+            lut_attend(&aq, klane, vlane, heads, rows, ascale, &mut att, &mut ctx);
+        });
+        record(&mut json, "lut_attend_longctx_4608x256", lflops, &s);
+    }
+
+    // -- 5: XLA lut_matmul artifact (optional) -----------------------------
     // Any failure here — missing artifacts, a stale manifest, a bind or
     // run error — must not cost us the pure-Rust cells already measured:
     // skip with a note and still write the trajectory file.

@@ -1,4 +1,4 @@
-//! Perf: serving. Three workloads:
+//! Perf: serving. Four workloads:
 //!
 //! 1. the historical one-shot scoring loop (dynamic batching win vs batch=1,
 //!    §Perf target >= 2x throughput at 16+ concurrent clients), now running
@@ -12,14 +12,21 @@
 //!    is genuinely weight-stream-bound: dense fp32 and fake-quant sf4
 //!    stream the full f32 matrix per step, while the packed backend
 //!    (`packed_checkpoint` + fused `lut_gemm`) streams 4-bit codes and
-//!    expands them through the codebook LUT inside the kernel.
+//!    expands them through the codebook LUT inside the kernel; and
+//! 4. **packed vs fp32 KV cache** on the `med` model with packed sf4
+//!    weights (so the weight stream is already small and sustained decode
+//!    is KV-traffic-bound): fp32 lanes stream the full f32 K/V history per
+//!    step, packed lanes (`--kv-format`) stream nibble codes + per-head
+//!    scales through the fused `lut_attend` kernels. Cells record decode
+//!    tok/s, KV KiB read per forwarded token, and worker-pool utilization.
 //!
 //! `--smoke` runs a cut-down sweep (batch 1/4, fewer tokens, scoring loop
-//! skipped) as a CI gate with two assertions: fused batch-4 sf4 decode must
-//! beat batch-1 (the PR-2 gate), and packed sf4 decode must be at least as
-//! fast as dense fp32 at batch 4 (the PR-3 gate). Each cell is timed
-//! best-of-2 so a single scheduler hiccup cannot flip a gate. Every cell
-//! lands in `BENCH_serve.json` for the perf trajectory.
+//! skipped) as a CI gate with three assertions: fused batch-4 sf4 decode
+//! must beat batch-1 (the PR-2 gate), packed sf4 weights must be at least
+//! as fast as dense fp32 at batch 4 (the PR-3 gate), and sf4 packed-KV
+//! decode must be at least as fast as fp32-KV at batch 4 (the PR-4 gate).
+//! Each cell is timed best-of-2 so a single scheduler hiccup cannot flip a
+//! gate. Every cell lands in `BENCH_serve.json` for the perf trajectory.
 
 use std::time::{Duration, Instant};
 
@@ -44,7 +51,8 @@ fn prompts_for(cfg: &ModelConfig, n: usize, len: usize, seed: u64) -> Vec<Vec<i3
         .collect()
 }
 
-/// Best-of-2 sustained-decode tok/s for one (checkpoint, batch) cell.
+/// Best-of-2 sustained-decode tok/s for one (checkpoint, batch, kv-format)
+/// cell.
 fn decode_cell(
     cfg: ModelConfig,
     weights: &Checkpoint,
@@ -52,6 +60,7 @@ fn decode_cell(
     b: usize,
     per_client: usize,
     max_new: usize,
+    kv_format: Option<&'static str>,
 ) -> anyhow::Result<(f64, llm_datatypes::serving::MetricsReport)> {
     let mut best_tps = 0.0f64;
     let mut last = None;
@@ -61,8 +70,9 @@ fn decode_cell(
             weights.clone(),
             EngineConfig {
                 slots: b,
-                kv_capacity: 0,
+                kv_format,
                 scheduler: SchedulerConfig { max_batch: b, ..SchedulerConfig::default() },
+                ..EngineConfig::default()
             },
         );
         let report = run_decode_loadgen(&mut engine, prompts, b, per_client, max_new)?;
@@ -122,7 +132,7 @@ fn main() -> anyhow::Result<()> {
         };
         for &b in batch_sizes {
             let (best_tps, report) =
-                decode_cell(cfg, &weights, &prompts, b, per_client, max_new)?;
+                decode_cell(cfg, &weights, &prompts, b, per_client, max_new, None)?;
             println!(
                 "bench serve_decode_{format:<8}_b{b:<2} tok/s={best_tps:8.1} itl_p50={:?} \
                  occupancy={:.2} fused_batch={:.2} fused_gemms={}",
@@ -199,7 +209,7 @@ fn main() -> anyhow::Result<()> {
             )?,
             other => unreachable!("unknown backend cell {other}"),
         };
-        let (best_tps, report) = decode_cell(wcfg, &weights, &wprompts, wb, 1, wmax_new)?;
+        let (best_tps, report) = decode_cell(wcfg, &weights, &wprompts, wb, 1, wmax_new, None)?;
         println!(
             "bench serve_decode_large_{label:<14}_b{wb} tok/s={best_tps:8.1} itl_p50={:?} \
              fused_batch={:.2}",
@@ -225,6 +235,68 @@ fn main() -> anyhow::Result<()> {
         assert!(
             packed_win >= 1.0,
             "packed sf4 decode lost to dense fp32 at batch {wb}: {packed_win:.2}x"
+        );
+    }
+
+    // -- workload 4: packed vs fp32 KV cache (KV-traffic-bound) ------------
+    // med model + packed sf4 weights: the weight stream is already 4-bit,
+    // so sustained decode at batch >= 4 is dominated by the KV history each
+    // step re-reads — exactly the traffic --kv-format shrinks.
+    let kcfg = zoo("med")?;
+    let kckpt = match session.load_checkpoint("med") {
+        Ok(c) => c,
+        Err(_) => trainer::init_lm_params(&kcfg, 0x5eed),
+    };
+    let kcorpus = corpus_for(&kcfg);
+    let kweights =
+        packed_checkpoint(&kcfg, &kckpt, &PipelineConfig::weight_only("sf4"), &kcorpus)?;
+    let kprompts = prompts_for(&kcfg, 16, kcfg.seq / 2, 13);
+    let kv_batches: &[usize] = if smoke { &[1, 4] } else { &[1, 4, 16] };
+    let kv_formats: &[Option<&'static str>] = if smoke {
+        &[None, Some("sf4")]
+    } else {
+        &[None, Some("sf4"), Some("nf4"), Some("e2m1_sp")]
+    };
+    let kv_max_new = if smoke { 12usize } else { 24 };
+    let mut kv_cells: Vec<(&str, usize, f64)> = Vec::new();
+    for &kvf in kv_formats {
+        let label = kvf.unwrap_or("fp32");
+        for &b in kv_batches {
+            let pool_before = llm_datatypes::runtime::pool::stats();
+            let (best_tps, report) =
+                decode_cell(kcfg, &kweights, &kprompts, b, 1, kv_max_new, kvf)?;
+            let pool = llm_datatypes::runtime::pool::stats().since(&pool_before);
+            let kv_kib_tok = report.kv_bytes_per_token / 1024.0;
+            println!(
+                "bench serve_decode_kv_{label:<8}_b{b:<2} tok/s={best_tps:8.1} \
+                 kv={kv_kib_tok:.1} KiB/tok pool_util={:.2} itl_p50={:?}",
+                pool.utilization(),
+                report.itl_p50,
+            );
+            let cell = format!("serve_decode_kv_{label}_b{b}");
+            json.record(&cell, "tok_s", best_tps);
+            json.record(&cell, "kv_kib_per_tok", kv_kib_tok);
+            json.record(&cell, "pool_util", pool.utilization());
+            kv_cells.push((label, b, best_tps));
+        }
+    }
+    let kv_tps = |label: &str, b: usize| {
+        kv_cells
+            .iter()
+            .find(|&&(l, bb, _)| l == label && bb == b)
+            .map(|&(_, _, tps)| tps)
+            .expect("kv sweep covers every (format, batch) cell")
+    };
+    let kv_win = kv_tps("sf4", 4) / kv_tps("fp32", 4);
+    println!("bench serve_decode_kv_sf4_vs_fp32_b4           x{kv_win:.2}");
+    json.record("serve_decode_kv_sf4_vs_fp32_b4", "x", kv_win);
+    if smoke {
+        // the packed-KV acceptance gate: streaming 4-bit KV lanes through
+        // the fused dequant-attention must not lose to streaming fp32 lanes
+        // on a KV-traffic-bound model
+        assert!(
+            kv_win >= 1.0,
+            "packed sf4 KV decode lost to fp32 KV at batch 4: {kv_win:.2}x"
         );
     }
 

@@ -6,8 +6,8 @@
 //! repro figure       <2|3|4|7> [--quick] [--model NAME]
 //! repro serve        [--model NAME] [--format FMT] [--clients N] [--requests N]
 //! repro serve-decode [--model NAME] [--format FMT|fp32] [--packed]
-//!                    [--clients N] [--requests N] [--max-new T] [--slots S]
-//!                    [--prefill-chunk P]
+//!                    [--kv-format fp32|FMT] [--clients N] [--requests N]
+//!                    [--max-new T] [--slots S] [--prefill-chunk P]
 //! repro all          [--quick]
 //! ```
 //! Global flags: `--artifacts DIR --checkpoints DIR --results DIR`.
@@ -77,11 +77,14 @@ commands:
           ids: 2 3 4 7
   serve   [--model N] [--format F] [--clients C] [--requests R]
           one-shot next-token scoring through the decode engine
-  serve-decode [--model N] [--format F|fp32] [--packed] [--clients C]
-               [--requests R] [--max-new T] [--slots S] [--prefill-chunk P]
+  serve-decode [--model N] [--format F|fp32] [--packed] [--kv-format fp32|F]
+               [--clients C] [--requests R] [--max-new T] [--slots S]
+               [--prefill-chunk P]
           continuous-batching multi-token generation (streaming, KV cache,
           fused [B,d] batched decode step; --packed serves true 4-bit
-          weights through the fused LUT dequant-GEMM)
+          weights through the fused LUT dequant-GEMM; --kv-format stores
+          the KV cache itself in a 4-bit codebook, attended through the
+          fused dequant-attention kernels)
   all     [--quick]                            every table + figure
 global flags: --artifacts DIR --checkpoints DIR --results DIR
 ";
@@ -298,6 +301,7 @@ fn cmd_serve_decode(session: &Session, args: &Args) -> Result<()> {
     let model = args.flag("model", "small");
     let format = args.flag("format", "sf4");
     let packed = args.has("packed");
+    let kv_fmt = args.flag("kv-format", "fp32");
     let clients: usize = args.flag("clients", "4").parse()?;
     let requests: usize = args.flag("requests", "16").parse()?;
     let max_new: usize = args.flag("max-new", "16").parse()?;
@@ -314,27 +318,46 @@ fn cmd_serve_decode(session: &Session, args: &Args) -> Result<()> {
     } else {
         format!("{format} fake-quant dense")
     };
+    let kv_format = match kv_fmt.as_str() {
+        "fp32" => None,
+        name => {
+            let spec = crate::formats::get(name)
+                .ok_or_else(|| anyhow::anyhow!("unknown --kv-format `{name}`"))?;
+            anyhow::ensure!(
+                spec.n_values() <= 16,
+                "--kv-format {name} has {} codebook values (> 4-bit)",
+                spec.n_values()
+            );
+            Some(&*Box::leak(kv_fmt.clone().into_boxed_str()))
+        }
+    };
     let mut engine = Engine::new(
         cfg,
         ckpt,
         EngineConfig {
             slots,
-            kv_capacity: 0,
+            kv_format,
             scheduler: SchedulerConfig {
                 max_batch: slots,
                 prefill_chunk,
                 ..SchedulerConfig::default()
             },
+            ..EngineConfig::default()
         },
     );
+    let kv_label = match kv_format {
+        None => "fp32".to_string(),
+        Some(f) => format!("{f} packed-4bit"),
+    };
     println!(
-        "decode engine: model `{}` weights {} | {} KV slots x {} positions ({} KiB cache) \
-         | fused [B,d] batched step, prefill chunk {}",
+        "decode engine: model `{}` weights {} | {} KV slots x {} positions, {} lanes \
+         ({} KiB cache) | fused [B,d] batched step, prefill chunk {}",
         cfg.name,
         weight_label,
         engine.cache().slots_total(),
         engine.cache().capacity(),
-        engine.cache().config().bytes() / 1024,
+        kv_label,
+        engine.cache().bytes() / 1024,
         prefill_chunk,
     );
     let prompts = serve_prompts(&cfg, 64, 2);

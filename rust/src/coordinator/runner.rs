@@ -62,9 +62,10 @@ pub fn run_grid<R: Send + 'static>(
         .collect()
 }
 
-/// Default worker count: physical parallelism minus one for the PJRT queue.
+/// Default worker count: physical parallelism minus one for the PJRT queue
+/// (via the crate-wide cached helper in `runtime::pool`).
 pub fn default_workers() -> usize {
-    std::thread::available_parallelism().map(|n| n.get().saturating_sub(1).max(1)).unwrap_or(4)
+    crate::runtime::pool::parallelism().saturating_sub(1).max(1)
 }
 
 #[cfg(test)]

@@ -89,12 +89,12 @@ impl Server {
             ckpt,
             EngineConfig {
                 slots: batch,
-                kv_capacity: 0,
                 scheduler: SchedulerConfig {
                     max_batch: batch,
                     max_wait: cfg.max_wait,
                     ..SchedulerConfig::default()
                 },
+                ..EngineConfig::default()
             },
         );
         Server { engine, cfg }

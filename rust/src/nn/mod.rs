@@ -118,31 +118,20 @@ fn attention(
     for head in 0..h {
         let off = head * dh;
         for i in 0..s {
-            // scores over keys 0..=i (causal)
-            let qi = &q.row(i)[off..off + dh];
-            let mut mx = f32::NEG_INFINITY;
-            for j in 0..=i {
-                let kj = &k.row(j)[off..off + dh];
-                let mut dot = 0.0f32;
-                for t in 0..dh {
-                    dot += qi[t] * kj[t];
-                }
-                att_row[j] = dot * scale;
-                mx = mx.max(att_row[j]);
-            }
-            let mut z = 0.0f32;
-            for j in 0..=i {
-                att_row[j] = (att_row[j] - mx).exp();
-                z += att_row[j];
-            }
-            let ctx_row = ctx.row_mut(i);
-            for j in 0..=i {
-                let w = att_row[j] / z;
-                let vj = &v.row(j)[off..off + dh];
-                for t in 0..dh {
-                    ctx_row[off + t] += w * vj[t];
-                }
-            }
+            // scores over keys 0..=i (causal); shares the per-head kernel
+            // with the incremental step, so full and cached forwards stay
+            // loop-order identical
+            crate::tensor::attend_head(
+                &q.row(i)[off..off + dh],
+                k.data(),
+                v.data(),
+                d,
+                off,
+                i + 1,
+                scale,
+                &mut att_row,
+                &mut ctx.row_mut(i)[off..off + dh],
+            );
         }
     }
     linear(p, &ctx, &format!("l{layer}.wo"), cap)
@@ -187,32 +176,66 @@ pub fn forward_lm(
 // Incremental decode (KV cache)
 // ---------------------------------------------------------------------------
 
+/// One layer's borrowed K/V lanes, in whatever numeric format the store
+/// keeps them. The forwards dispatch attention on this: fp32 lanes run the
+/// dense [`crate::tensor::attend_head`] loops (bit-identical to the
+/// pre-packed-KV engine), packed lanes run the fused dequant kernels
+/// ([`crate::tensor::lut_attend`]) which expand `lut[code] * scale` inline
+/// — bit-identical to dequantizing the lanes first.
+#[derive(Clone, Copy)]
+pub enum KvLanes<'a> {
+    /// Dense lanes: `[capacity, d_model]` row-major by position, K and V.
+    F32 { k: &'a [f32], v: &'a [f32] },
+    /// Packed 4-bit lanes (nibble codes + per-block scales + LUT).
+    Packed4 { k: crate::tensor::PackedLane<'a>, v: crate::tensor::PackedLane<'a> },
+}
+
 /// Backing store for one sequence's per-layer keys/values during incremental
-/// decode. `len()` positions are committed; [`forward_lm_step`] writes the
-/// next position's K/V rows at offset `len * d_model` into the buffers
-/// returned by `kv_mut` and then calls `advance` exactly once.
+/// decode. `len()` positions are committed; [`forward_lm_step`] appends the
+/// next position's K/V rows via [`KvStore::append_kv`] (which quantizing
+/// stores encode on the way in), attends over [`KvStore::lanes`], and then
+/// calls `advance` exactly once.
 ///
-/// Implementations: [`SeqKvCache`] (one owned sequence) and the slot-pool
-/// views in `crate::serving::kv_cache` (many sequences sharing preallocated
-/// storage).
+/// Implementations: [`SeqKvCache`] (one owned sequence, fp32 or packed
+/// 4-bit) and the slot-pool views in `crate::serving::kv_cache` (many
+/// sequences sharing preallocated storage, either format).
 pub trait KvStore {
     /// Committed positions (the next token is written at this index).
     fn len(&self) -> usize;
     /// Maximum positions this store can hold.
     fn capacity(&self) -> usize;
-    /// Mutable K and V buffers for one layer, each `[capacity * d_model]`
-    /// row-major by position.
-    fn kv_mut(&mut self, layer: usize) -> (&mut [f32], &mut [f32]);
+    /// Write this position's K and V rows (length `d_model`) for `layer`
+    /// at index `len()`. Packed stores quantize here.
+    fn append_kv(&mut self, layer: usize, k_row: &[f32], v_row: &[f32]);
+    /// Borrow one layer's lanes for attention over positions `0..=len()`
+    /// (the row just appended included).
+    fn lanes(&self, layer: usize) -> KvLanes<'_>;
     /// Commit the position written at index `len()` (`len += 1`).
     fn advance(&mut self);
 }
 
-/// Owned single-sequence KV store (tests + standalone greedy decoding).
+/// Owned single-sequence KV store (tests + standalone greedy decoding):
+/// dense fp32 lanes by default, packed 4-bit lanes via
+/// [`SeqKvCache::packed`].
 pub struct SeqKvCache {
-    k: Vec<Vec<f32>>,
-    v: Vec<Vec<f32>>,
+    store: SeqStore,
     len: usize,
     capacity: usize,
+    d: usize,
+}
+
+enum SeqStore {
+    F32 {
+        k: Vec<Vec<f32>>,
+        v: Vec<Vec<f32>>,
+    },
+    Packed4 {
+        fmt: crate::quant::KvFormat,
+        k_codes: Vec<Vec<u8>>,
+        k_scales: Vec<Vec<f32>>,
+        v_codes: Vec<Vec<u8>>,
+        v_scales: Vec<Vec<f32>>,
+    },
 }
 
 impl SeqKvCache {
@@ -222,10 +245,47 @@ impl SeqKvCache {
 
     pub fn with_capacity(n_layers: usize, d_model: usize, capacity: usize) -> SeqKvCache {
         SeqKvCache {
-            k: (0..n_layers).map(|_| vec![0.0; capacity * d_model]).collect(),
-            v: (0..n_layers).map(|_| vec![0.0; capacity * d_model]).collect(),
+            store: SeqStore::F32 {
+                k: (0..n_layers).map(|_| vec![0.0; capacity * d_model]).collect(),
+                v: (0..n_layers).map(|_| vec![0.0; capacity * d_model]).collect(),
+            },
             len: 0,
             capacity,
+            d: d_model,
+        }
+    }
+
+    /// Packed 4-bit cache for a zoo model (`block = d_head`, the engine's
+    /// geometry).
+    pub fn packed(cfg: &ModelConfig, spec: &crate::formats::FormatSpec) -> SeqKvCache {
+        SeqKvCache::packed_with_capacity(
+            cfg.n_layers,
+            cfg.d_model,
+            cfg.seq,
+            crate::quant::KvFormat::for_model(spec, cfg),
+        )
+    }
+
+    pub fn packed_with_capacity(
+        n_layers: usize,
+        d_model: usize,
+        capacity: usize,
+        fmt: crate::quant::KvFormat,
+    ) -> SeqKvCache {
+        assert_eq!(d_model % fmt.block, 0, "block {} does not divide d {d_model}", fmt.block);
+        let cb = capacity * fmt.codes_per_row(d_model);
+        let sb = capacity * fmt.scales_per_row(d_model);
+        SeqKvCache {
+            store: SeqStore::Packed4 {
+                k_codes: (0..n_layers).map(|_| vec![0u8; cb]).collect(),
+                k_scales: (0..n_layers).map(|_| vec![0.0f32; sb]).collect(),
+                v_codes: (0..n_layers).map(|_| vec![0u8; cb]).collect(),
+                v_scales: (0..n_layers).map(|_| vec![0.0f32; sb]).collect(),
+                fmt,
+            },
+            len: 0,
+            capacity,
+            d: d_model,
         }
     }
 
@@ -244,12 +304,87 @@ impl KvStore for SeqKvCache {
         self.capacity
     }
 
-    fn kv_mut(&mut self, layer: usize) -> (&mut [f32], &mut [f32]) {
-        (&mut self.k[layer], &mut self.v[layer])
+    fn append_kv(&mut self, layer: usize, k_row: &[f32], v_row: &[f32]) {
+        let (pos, d) = (self.len, self.d);
+        debug_assert!(pos < self.capacity, "append past capacity");
+        assert_eq!(k_row.len(), d);
+        assert_eq!(v_row.len(), d);
+        match &mut self.store {
+            SeqStore::F32 { k, v } => {
+                k[layer][pos * d..(pos + 1) * d].copy_from_slice(k_row);
+                v[layer][pos * d..(pos + 1) * d].copy_from_slice(v_row);
+            }
+            SeqStore::Packed4 { fmt, k_codes, k_scales, v_codes, v_scales } => {
+                let (cb, sb) = (fmt.codes_per_row(d), fmt.scales_per_row(d));
+                fmt.encode_row(
+                    k_row,
+                    &mut k_codes[layer][pos * cb..(pos + 1) * cb],
+                    &mut k_scales[layer][pos * sb..(pos + 1) * sb],
+                );
+                fmt.encode_row(
+                    v_row,
+                    &mut v_codes[layer][pos * cb..(pos + 1) * cb],
+                    &mut v_scales[layer][pos * sb..(pos + 1) * sb],
+                );
+            }
+        }
+    }
+
+    fn lanes(&self, layer: usize) -> KvLanes<'_> {
+        match &self.store {
+            SeqStore::F32 { k, v } => KvLanes::F32 { k: &k[layer], v: &v[layer] },
+            SeqStore::Packed4 { fmt, k_codes, k_scales, v_codes, v_scales } => {
+                KvLanes::Packed4 {
+                    k: fmt.lane(&k_codes[layer], &k_scales[layer], self.d),
+                    v: fmt.lane(&v_codes[layer], &v_scales[layer], self.d),
+                }
+            }
+        }
     }
 
     fn advance(&mut self) {
         self.len += 1;
+    }
+}
+
+/// One row's multi-head attention over a layer's lanes, accumulated into
+/// `ctx_row` (`+=`). fp32 lanes run the dense [`crate::tensor::attend_head`]
+/// loops per head — the exact arithmetic of the pre-packed-KV engine —
+/// while packed lanes run the fused dequant kernels, bit-identical to
+/// dequantize-then-attend. `rows` is `pos + 1` (history plus the row just
+/// appended).
+#[allow(clippy::too_many_arguments)]
+fn attend_lanes(
+    lanes: KvLanes<'_>,
+    q_row: &[f32],
+    heads: usize,
+    dh: usize,
+    d: usize,
+    rows: usize,
+    scale: f32,
+    att: &mut [f32],
+    ctx_row: &mut [f32],
+) {
+    match lanes {
+        KvLanes::F32 { k, v } => {
+            for head in 0..heads {
+                let off = head * dh;
+                crate::tensor::attend_head(
+                    &q_row[off..off + dh],
+                    k,
+                    v,
+                    d,
+                    off,
+                    rows,
+                    scale,
+                    att,
+                    &mut ctx_row[off..off + dh],
+                );
+            }
+        }
+        KvLanes::Packed4 { k, v } => {
+            crate::tensor::lut_attend(q_row, k, v, heads, rows, scale, att, ctx_row);
+        }
     }
 }
 
@@ -263,7 +398,10 @@ impl KvStore for SeqKvCache {
 /// certifies it. Works unchanged on fake-quant checkpoints from
 /// `coordinator::pipeline::fake_quant_checkpoint` and on packed 4-bit
 /// checkpoints from `packed_checkpoint` (every linear dispatches through
-/// [`apply_linear`]).
+/// [`apply_linear`]), and on any KV lane format the store keeps — fp32
+/// lanes reproduce today's bits exactly, packed 4-bit lanes are
+/// bit-identical to a dequantize-then-attend oracle over the same codes
+/// (`rust/tests/quant_kv.rs`).
 pub fn forward_lm_step(
     cfg: &ModelConfig,
     p: &Checkpoint,
@@ -293,37 +431,19 @@ pub fn forward_lm_step(
         let q = apply_linear(p, &h, &format!("l{l}.wq"))?;
         let kx = apply_linear(p, &h, &format!("l{l}.wk"))?;
         let vx = apply_linear(p, &h, &format!("l{l}.wv"))?;
-        let (kbuf, vbuf) = kv.kv_mut(l);
-        kbuf[pos * d..(pos + 1) * d].copy_from_slice(kx.row(0));
-        vbuf[pos * d..(pos + 1) * d].copy_from_slice(vx.row(0));
+        kv.append_kv(l, kx.row(0), vx.row(0));
         let mut ctx = Tensor::zeros(&[1, d]);
-        for head in 0..heads {
-            let off = head * dh;
-            let qi = &q.row(0)[off..off + dh];
-            let mut mx = f32::NEG_INFINITY;
-            for j in 0..=pos {
-                let kj = &kbuf[j * d + off..j * d + off + dh];
-                let mut dot = 0.0f32;
-                for t in 0..dh {
-                    dot += qi[t] * kj[t];
-                }
-                att_row[j] = dot * scale;
-                mx = mx.max(att_row[j]);
-            }
-            let mut z = 0.0f32;
-            for j in 0..=pos {
-                att_row[j] = (att_row[j] - mx).exp();
-                z += att_row[j];
-            }
-            let ctx_row = ctx.row_mut(0);
-            for j in 0..=pos {
-                let w = att_row[j] / z;
-                let vj = &vbuf[j * d + off..j * d + off + dh];
-                for t in 0..dh {
-                    ctx_row[off + t] += w * vj[t];
-                }
-            }
-        }
+        attend_lanes(
+            kv.lanes(l),
+            q.row(0),
+            heads,
+            dh,
+            d,
+            pos + 1,
+            scale,
+            &mut att_row,
+            ctx.row_mut(0),
+        );
         let a = apply_linear(p, &ctx, &format!("l{l}.wo"))?;
         x = x.add(&a);
         let h = layernorm(&x, p.get(&format!("l{l}.ln2_g"))?, p.get(&format!("l{l}.ln2_b"))?);
@@ -406,36 +526,19 @@ pub fn forward_lm_step_batch(
         let mut ctx = Tensor::zeros(&[b, d]);
         for row in 0..b {
             let pos = positions[row];
-            let (kbuf, vbuf) = kvs[row].kv_mut(l);
-            kbuf[pos * d..(pos + 1) * d].copy_from_slice(kx.row(row));
-            vbuf[pos * d..(pos + 1) * d].copy_from_slice(vx.row(row));
-            for head in 0..heads {
-                let off = head * dh;
-                let qi = &q.row(row)[off..off + dh];
-                let mut mx = f32::NEG_INFINITY;
-                for j in 0..=pos {
-                    let kj = &kbuf[j * d + off..j * d + off + dh];
-                    let mut dot = 0.0f32;
-                    for t in 0..dh {
-                        dot += qi[t] * kj[t];
-                    }
-                    att_row[j] = dot * scale;
-                    mx = mx.max(att_row[j]);
-                }
-                let mut z = 0.0f32;
-                for j in 0..=pos {
-                    att_row[j] = (att_row[j] - mx).exp();
-                    z += att_row[j];
-                }
-                let ctx_row = ctx.row_mut(row);
-                for j in 0..=pos {
-                    let w = att_row[j] / z;
-                    let vj = &vbuf[j * d + off..j * d + off + dh];
-                    for t in 0..dh {
-                        ctx_row[off + t] += w * vj[t];
-                    }
-                }
-            }
+            let kv = &mut *kvs[row];
+            kv.append_kv(l, kx.row(row), vx.row(row));
+            attend_lanes(
+                kv.lanes(l),
+                q.row(row),
+                heads,
+                dh,
+                d,
+                pos + 1,
+                scale,
+                &mut att_row,
+                ctx.row_mut(row),
+            );
         }
         let a = apply_linear(p, &ctx, &format!("l{l}.wo"))?;
         x = x.add(&a);
@@ -878,6 +981,26 @@ mod tests {
         assert!(forward_lm_step(&cfg, &p, 2, &mut kv).is_ok());
         // capacity 2 exhausted even though cfg.seq allows more
         assert!(forward_lm_step(&cfg, &p, 3, &mut kv).is_err());
+    }
+
+    #[test]
+    fn packed_kv_cache_decodes_deterministically_and_resets() {
+        // deep equivalence lives in tests/quant_kv.rs; this pins the owned
+        // packed store's basic lifecycle (finite logits, reset reuse)
+        let cfg = zoo("nano").unwrap();
+        let p = random_ckpt(&cfg, 12);
+        let spec = crate::formats::must("sf4");
+        let mut kv = SeqKvCache::packed(&cfg, &spec);
+        let a = forward_lm_step(&cfg, &p, 5, &mut kv).unwrap();
+        assert_eq!(kv.len(), 1);
+        assert!(a.data().iter().all(|v| v.is_finite()));
+        let b = forward_lm_step(&cfg, &p, 7, &mut kv).unwrap();
+        assert_eq!(kv.len(), 2);
+        kv.reset();
+        let a2 = forward_lm_step(&cfg, &p, 5, &mut kv).unwrap();
+        assert_eq!(a.data(), a2.data(), "reset packed cache replays identically");
+        let b2 = forward_lm_step(&cfg, &p, 7, &mut kv).unwrap();
+        assert_eq!(b.data(), b2.data());
     }
 
     #[test]

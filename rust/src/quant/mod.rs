@@ -1,14 +1,18 @@
 //! Post-training quantization engine: sub-channel blocking, scale search
-//! (absmax / MSE-clip), RTN rounding, GPTQ and SmoothQuant.
+//! (absmax / MSE-clip), RTN rounding, GPTQ and SmoothQuant — plus the
+//! packed 4-bit serving codecs: [`PackedWeight`]/[`lut_gemm`] for weights
+//! and [`KvFormat`] (`packed_kv`) for KV-cache lanes.
 //!
 //! Weight layout everywhere: `[K, N]` = `[in, out]`, matching the L1 kernel.
 //! Sub-channel blocks tile the K (reduction) dimension per output column —
 //! exactly the paper's "sub-channel quantization with block size 128".
 
 mod gptq;
+mod packed_kv;
 mod smoothquant;
 
 pub use gptq::{gptq_quantize, GptqConfig};
+pub use packed_kv::KvFormat;
 pub use smoothquant::{smooth_scales, SmoothQuant};
 
 use crate::formats::FormatSpec;

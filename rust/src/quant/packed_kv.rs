@@ -1,0 +1,255 @@
+//! Packed 4-bit KV-cache lane codec — the paper's codebooks applied to the
+//! *cache*, not just the weights.
+//!
+//! Sustained decode streams every cached K/V position per layer per step;
+//! after PR 3 removed f32 weights from the packed serving path, that fp32
+//! KV traffic is the dominant stream. Cached keys/values are activations,
+//! and the paper's core claim — LLM activations follow Student's
+//! t-distributions, so SF4/NF4-style codebooks quantize them accurately —
+//! applies to them directly. [`KvFormat`] quantizes one cached position
+//! (one K or V row of `d_model` values) into nibble codes plus per-block
+//! absmax scales, mirroring the weight path's sub-channel RTN
+//! (`Encoder::encode_block` + `block_scale_enc`), at ~8x less storage and
+//! ~5x less read traffic per position (codes + scales vs f32).
+//!
+//! Lane layout (one layer of one sequence, `capacity` positions):
+//!
+//! ```text
+//! codes:  [capacity, d/2]      u8 — column 2j low nibble, 2j+1 high nibble
+//! scales: [capacity, d/block]  f32 — per-block absmax dequant scales
+//! lut:    [f32; 16]            the format's padded16() codebook (shared)
+//! ```
+//!
+//! The engine picks `block = d_head`, so every attention head covers whole
+//! scale blocks and the fused kernels (`tensor::lut_attend_head`) can hold
+//! one `lut * scale` 16-entry tile in registers per (position, head).
+//! Dequantization is `lut[code] * scale` — the exact f32 expression the
+//! fused attention computes inline, so encode → [`KvFormat::dequant_row`] →
+//! fp32 attend is the bit-identical oracle for the fused path.
+
+use crate::formats::{Encoder, FormatSpec};
+use crate::model_io::ModelConfig;
+use crate::quant::{block_scale_enc, Calib};
+use crate::tensor::{PackedLane, LANE_MAX_BLOCK};
+
+/// One KV quantization configuration: a <= 16-value codebook (as its
+/// padded16 LUT + hot-loop encoder) and the scale-block width.
+#[derive(Clone, Debug)]
+pub struct KvFormat {
+    /// Source format name (zoo codebook).
+    pub name: &'static str,
+    /// The codebook padded to 16 f32 entries — the dequant LUT.
+    pub lut: [f32; 16],
+    /// Values per scale block along `d_model` (even; divides `d_model` and
+    /// `d_head`).
+    pub block: usize,
+    enc: Encoder,
+}
+
+impl KvFormat {
+    /// Build from a format spec. Panics if the codebook exceeds 16 values
+    /// (codes must fit a nibble) or the block is odd/oversized — nibble
+    /// pairs and the attention kernels' stack tiles both need even,
+    /// bounded blocks.
+    pub fn new(spec: &FormatSpec, block: usize) -> KvFormat {
+        assert!(
+            spec.n_values() <= 16,
+            "{}: {} codebook values do not fit 4-bit KV packing",
+            spec.name,
+            spec.n_values()
+        );
+        assert!(block > 0 && block % 2 == 0, "KV scale block must be even, got {block}");
+        assert!(block <= LANE_MAX_BLOCK, "KV scale block {block} exceeds {LANE_MAX_BLOCK}");
+        let padded = spec.padded16();
+        let mut lut = [0.0f32; 16];
+        lut.copy_from_slice(&padded);
+        KvFormat { name: spec.name, lut, block, enc: spec.encoder() }
+    }
+
+    /// The engine's geometry: one scale block per attention head
+    /// (`block = d_head`), so head slices in the fused kernels are always
+    /// block-aligned.
+    pub fn for_model(spec: &FormatSpec, cfg: &ModelConfig) -> KvFormat {
+        KvFormat::new(spec, cfg.d_head())
+    }
+
+    /// Packed code bytes per cached position of `d` values.
+    pub fn codes_per_row(&self, d: usize) -> usize {
+        d / 2
+    }
+
+    /// Scale entries per cached position of `d` values.
+    pub fn scales_per_row(&self, d: usize) -> usize {
+        d / self.block
+    }
+
+    /// Storage bytes per cached position of `d` values (codes + scales),
+    /// for one of K or V.
+    pub fn row_bytes(&self, d: usize) -> usize {
+        self.codes_per_row(d) + self.scales_per_row(d) * 4
+    }
+
+    /// Quantize one K/V row: per block, an absmax scale (`block_scale_enc`
+    /// with [`Calib::None`], exactly the weight RTN policy) and nibble
+    /// codes from `Encoder::encode_block` over the normalized values.
+    pub fn encode_row(&self, row: &[f32], codes: &mut [u8], scales: &mut [f32]) {
+        let d = row.len();
+        assert!(d % 2 == 0 && d % self.block == 0, "row length {d} vs block {}", self.block);
+        assert_eq!(codes.len(), self.codes_per_row(d), "codes buffer");
+        assert_eq!(scales.len(), self.scales_per_row(d), "scales buffer");
+        let mut scaled = [0.0f32; LANE_MAX_BLOCK];
+        let mut block_codes = [0i8; LANE_MAX_BLOCK];
+        for (bi, vals) in row.chunks(self.block).enumerate() {
+            let s = block_scale_enc(&self.enc, vals, Calib::None);
+            scales[bi] = s;
+            let inv = 1.0 / s;
+            for (sv, &v) in scaled[..self.block].iter_mut().zip(vals) {
+                *sv = v * inv;
+            }
+            self.enc.encode_block(&scaled[..self.block], &mut block_codes[..self.block]);
+            let cbase = bi * self.block / 2;
+            for p in 0..self.block / 2 {
+                let lo = block_codes[2 * p] as u8 & 0x0f;
+                let hi = block_codes[2 * p + 1] as u8 & 0x0f;
+                codes[cbase + p] = lo | (hi << 4);
+            }
+        }
+    }
+
+    /// Dequantize one encoded row — `lut[code] * scale` per element, the
+    /// exact f32 expression the fused attention kernels compute inline.
+    /// This is the oracle expansion the property tests attend over.
+    pub fn dequant_row(&self, codes: &[u8], scales: &[f32], out: &mut [f32]) {
+        let d = out.len();
+        assert_eq!(codes.len(), self.codes_per_row(d), "codes buffer");
+        assert_eq!(scales.len(), self.scales_per_row(d), "scales buffer");
+        for (j, o) in out.iter_mut().enumerate() {
+            let c = (codes[j / 2] >> (4 * (j % 2))) & 0x0f;
+            *o = self.lut[c as usize] * scales[j / self.block];
+        }
+    }
+
+    /// Round-trip one row through the codec (encode then dequantize) —
+    /// convenience for oracles and quality tests.
+    pub fn fake_quant_row(&self, row: &[f32], out: &mut [f32]) {
+        let d = row.len();
+        let mut codes = vec![0u8; self.codes_per_row(d)];
+        let mut scales = vec![0.0f32; self.scales_per_row(d)];
+        self.encode_row(row, &mut codes, &mut scales);
+        self.dequant_row(&codes, &scales, out);
+    }
+
+    /// View a contiguous lane (`rows` encoded positions) as the kernel-side
+    /// [`PackedLane`].
+    pub fn lane<'a>(&'a self, codes: &'a [u8], scales: &'a [f32], d: usize) -> PackedLane<'a> {
+        PackedLane { codes, scales, lut: &self.lut, d, block: self.block }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats;
+    use crate::rng::Pcg64;
+
+    fn fmt(name: &str, block: usize) -> KvFormat {
+        KvFormat::new(&formats::must(name), block)
+    }
+
+    #[test]
+    fn row_geometry() {
+        let f = fmt("sf4", 16);
+        assert_eq!(f.codes_per_row(64), 32);
+        assert_eq!(f.scales_per_row(64), 4);
+        assert_eq!(f.row_bytes(64), 32 + 16);
+        // >= 5x less traffic than the fp32 row (64 * 4 = 256 bytes)
+        assert!(f.row_bytes(64) * 5 <= 64 * 4);
+    }
+
+    #[test]
+    fn encode_dequant_error_bounded_by_block_absmax() {
+        let mut rng = Pcg64::new(7);
+        for name in ["sf4", "nf4", "e2m1_sp", "int4"] {
+            let f = fmt(name, 16);
+            let row = rng.student_t_vec(64, 5.0, 0.5);
+            let mut deq = vec![0.0f32; 64];
+            f.fake_quant_row(&row, &mut deq);
+            for (bi, (vals, dq)) in row.chunks(16).zip(deq.chunks(16)).enumerate() {
+                let absmax = vals.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+                for (a, b) in vals.iter().zip(dq) {
+                    assert!(
+                        (a - b).abs() <= absmax * 0.26 + 1e-6,
+                        "{name} block {bi}: {a} vs {b} (absmax {absmax})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn codec_is_idempotent() {
+        // re-encoding a dequantized row reproduces it exactly (codebook
+        // points are fixed points of nearest-value rounding)
+        let mut rng = Pcg64::new(8);
+        let f = fmt("sf4", 16);
+        let row = rng.normal_vec(32, 1.0);
+        let mut once = vec![0.0f32; 32];
+        f.fake_quant_row(&row, &mut once);
+        let mut twice = vec![0.0f32; 32];
+        f.fake_quant_row(&once, &mut twice);
+        assert_eq!(once, twice);
+    }
+
+    #[test]
+    fn zero_rows_and_blocks_survive() {
+        let f = fmt("nf4", 16);
+        let mut row = vec![0.0f32; 32];
+        row[20] = 1.5; // second block non-zero, first all-zero
+        let mut deq = vec![0.0f32; 32];
+        f.fake_quant_row(&row, &mut deq);
+        for &v in &deq[..16] {
+            assert_eq!(v, 0.0, "all-zero block must reconstruct exactly");
+        }
+        assert!(deq[20] != 0.0);
+    }
+
+    #[test]
+    fn lane_view_matches_dequant_row() {
+        let mut rng = Pcg64::new(9);
+        let f = fmt("e2m1_sp", 16);
+        let (rows, d) = (5usize, 32usize);
+        let mut codes = vec![0u8; rows * f.codes_per_row(d)];
+        let mut scales = vec![0.0f32; rows * f.scales_per_row(d)];
+        let mut dense = vec![0.0f32; rows * d];
+        for r in 0..rows {
+            let row = rng.normal_vec(d, 0.7);
+            f.encode_row(
+                &row,
+                &mut codes[r * d / 2..(r + 1) * d / 2],
+                &mut scales[r * 2..(r + 1) * 2],
+            );
+            let (crow, srow) = (&codes[r * d / 2..(r + 1) * d / 2], &scales[r * 2..(r + 1) * 2]);
+            f.dequant_row(crow, srow, &mut dense[r * d..(r + 1) * d]);
+        }
+        let lane = f.lane(&codes, &scales, d);
+        for r in 0..rows {
+            for j in 0..d {
+                let c = (lane.codes[r * d / 2 + j / 2] >> (4 * (j % 2))) & 0x0f;
+                let got = lane.lut[c as usize] * lane.scales[r * 2 + j / lane.block];
+                assert_eq!(got, dense[r * d + j], "({r},{j})");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "codebook values")]
+    fn wide_codebooks_are_refused() {
+        fmt("int5", 16); // 32 values
+    }
+
+    #[test]
+    #[should_panic(expected = "must be even")]
+    fn odd_blocks_are_refused() {
+        fmt("sf4", 15);
+    }
+}

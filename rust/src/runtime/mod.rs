@@ -6,6 +6,12 @@
 //! unpacks the tuple outputs. Weights can be pinned as device buffers
 //! (`BoundInputs`) so the serve/eval hot loop only uploads the small
 //! per-request tensors.
+//!
+//! The [`pool`] submodule is unrelated to PJRT: it is the crate's persistent
+//! CPU worker pool (shared by the GEMM, LUT-GEMM and fused-attention
+//! kernels) and the home of the cached [`pool::parallelism`] helper.
+
+pub mod pool;
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};

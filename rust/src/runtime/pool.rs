@@ -1,0 +1,372 @@
+//! Persistent worker pool — the crate's one source of CPU-bound task
+//! parallelism on the serving hot path.
+//!
+//! The blocked GEMM (`tensor::gemm_threaded`), the fused packed-weight
+//! `quant::lut_gemm` (which rides it) and the fused dequant-attention
+//! kernels (`tensor::lut_attend`) all dispatch row/head chunks here instead
+//! of spawning scoped threads per call. A mid-sized prefill issues six GEMMs
+//! per layer per step; at ~10–20 µs per `std::thread::spawn`+join round trip
+//! the old per-call `thread::scope` tax was pure overhead that the pool
+//! amortizes to one condvar wake per chunk.
+//!
+//! Design:
+//!
+//! * **Lazy global.** [`global`] spawns `parallelism() - 1` workers on first
+//!   use and leaks them for the process lifetime (they idle on a condvar).
+//!   Single-core hosts get zero workers and every dispatch runs inline.
+//! * **Scoped dispatch over borrowed closures.** [`WorkerPool::scoped`]
+//!   takes non-`'static` tasks: it enqueues them (lifetime-erased), then the
+//!   *dispatching thread drains the queue too* and finally blocks on a
+//!   count-down latch until every task has finished — so the borrows can
+//!   never escape the call. This is the same contract `std::thread::scope`
+//!   gives, minus the spawn/join cost.
+//! * **Panic containment.** A panicking task poisons its latch (the
+//!   dispatcher re-panics after all tasks settle) but never kills a worker.
+//! * **Determinism.** The pool only decides *where* a task runs, never what
+//!   it computes; callers (the GEMM row chunks, attention heads) partition
+//!   work into tasks whose arithmetic is independent of placement, so pool
+//!   size cannot change any result bit.
+//!
+//! [`parallelism`] is also the crate-wide cached `available_parallelism`
+//! helper (the std call re-reads cgroup state on Linux on every invocation,
+//! too slow for a per-GEMM decision) — `tensor` and `coordinator::runner`
+//! both use it instead of private copies.
+
+use std::collections::VecDeque;
+use std::panic::AssertUnwindSafe;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock};
+
+/// Cached `std::thread::available_parallelism` (>= 1).
+pub fn parallelism() -> usize {
+    static CORES: OnceLock<usize> = OnceLock::new();
+    *CORES
+        .get_or_init(|| std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1))
+}
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Count-down latch with a poison flag for panicked tasks.
+struct Latch {
+    state: Mutex<(usize, bool)>,
+    done: Condvar,
+}
+
+impl Latch {
+    fn new(count: usize) -> Arc<Latch> {
+        Arc::new(Latch { state: Mutex::new((count, false)), done: Condvar::new() })
+    }
+
+    fn count_down(&self, panicked: bool) {
+        let mut s = lock(&self.state);
+        s.0 -= 1;
+        s.1 |= panicked;
+        if s.0 == 0 {
+            self.done.notify_all();
+        }
+    }
+
+    /// Block until every task settled; returns true if any panicked.
+    fn wait(&self) -> bool {
+        let mut s = lock(&self.state);
+        while s.0 > 0 {
+            s = self.done.wait(s).unwrap_or_else(|e| e.into_inner());
+        }
+        s.1
+    }
+}
+
+struct Task {
+    job: Job,
+    latch: Arc<Latch>,
+}
+
+impl Task {
+    fn run(self) {
+        let panicked = std::panic::catch_unwind(AssertUnwindSafe(self.job)).is_err();
+        self.latch.count_down(panicked);
+    }
+}
+
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+struct Inner {
+    queue: Mutex<VecDeque<Task>>,
+    available: Condvar,
+    dispatches: AtomicU64,
+    pool_tasks: AtomicU64,
+    caller_tasks: AtomicU64,
+}
+
+/// The pool handle. Obtain via [`global`]; sized once at first use.
+pub struct WorkerPool {
+    inner: Arc<Inner>,
+    workers: usize,
+}
+
+/// The process-wide pool, spawned lazily with `parallelism() - 1` workers
+/// (the dispatching thread is the final lane, so a full dispatch engages
+/// exactly `parallelism()` threads).
+pub fn global() -> &'static WorkerPool {
+    static POOL: OnceLock<WorkerPool> = OnceLock::new();
+    POOL.get_or_init(|| WorkerPool::start(parallelism().saturating_sub(1)))
+}
+
+impl WorkerPool {
+    fn start(workers: usize) -> WorkerPool {
+        let inner = Arc::new(Inner {
+            queue: Mutex::new(VecDeque::new()),
+            available: Condvar::new(),
+            dispatches: AtomicU64::new(0),
+            pool_tasks: AtomicU64::new(0),
+            caller_tasks: AtomicU64::new(0),
+        });
+        for i in 0..workers {
+            let inner = inner.clone();
+            std::thread::Builder::new()
+                .name(format!("llmdt-pool-{i}"))
+                .spawn(move || worker_loop(inner))
+                .expect("spawning pool worker");
+        }
+        WorkerPool { inner, workers }
+    }
+
+    /// Worker threads parked on the queue (0 on single-core hosts).
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Run `tasks` to completion, using the pool workers plus the calling
+    /// thread. Blocks until every task has finished — tasks may therefore
+    /// borrow from the caller's stack ('s), exactly like `thread::scope`
+    /// spawns. Panics (after all tasks settle) if any task panicked.
+    ///
+    /// Tasks must not block on work that only the current queue can make
+    /// progress on *without draining it* — the GEMM/attention chunks are
+    /// plain compute, and nested `scoped` calls are safe because every
+    /// dispatcher drains the shared queue before waiting.
+    pub fn scoped<'s>(&self, tasks: Vec<Box<dyn FnOnce() + Send + 's>>) {
+        let n = tasks.len();
+        if n == 0 {
+            return;
+        }
+        if n == 1 || self.workers == 0 {
+            self.inner.caller_tasks.fetch_add(n as u64, Ordering::Relaxed);
+            for t in tasks {
+                t();
+            }
+            return;
+        }
+        self.inner.dispatches.fetch_add(1, Ordering::Relaxed);
+        let latch = Latch::new(n);
+        {
+            let mut q = lock(&self.inner.queue);
+            for t in tasks {
+                // SAFETY: `scoped` does not return until `latch.wait()` has
+                // observed every task settled, so the 's borrows inside the
+                // job strictly outlive its execution even though the queue
+                // stores it lifetime-erased.
+                let job: Job = unsafe {
+                    std::mem::transmute::<Box<dyn FnOnce() + Send + 's>, Job>(t)
+                };
+                q.push_back(Task { job, latch: latch.clone() });
+            }
+        }
+        self.inner.available.notify_all();
+        // the dispatching thread is a worker too: drain the queue rather
+        // than idle-wait (it may run other dispatchers' tasks — fine, their
+        // latches account for them)
+        loop {
+            let task = lock(&self.inner.queue).pop_front();
+            match task {
+                Some(t) => {
+                    self.inner.caller_tasks.fetch_add(1, Ordering::Relaxed);
+                    t.run();
+                }
+                None => break,
+            }
+        }
+        if latch.wait() {
+            panic!("worker pool task panicked");
+        }
+    }
+
+    /// Monotonic counters snapshot (for utilization accounting).
+    pub fn stats(&self) -> PoolStats {
+        PoolStats {
+            workers: self.workers,
+            dispatches: self.inner.dispatches.load(Ordering::Relaxed),
+            pool_tasks: self.inner.pool_tasks.load(Ordering::Relaxed),
+            caller_tasks: self.inner.caller_tasks.load(Ordering::Relaxed),
+        }
+    }
+}
+
+fn worker_loop(inner: Arc<Inner>) {
+    loop {
+        let task = {
+            let mut q = lock(&inner.queue);
+            loop {
+                if let Some(t) = q.pop_front() {
+                    break t;
+                }
+                q = inner.available.wait(q).unwrap_or_else(|e| e.into_inner());
+            }
+        };
+        inner.pool_tasks.fetch_add(1, Ordering::Relaxed);
+        task.run();
+    }
+}
+
+/// Monotonic pool counters; subtract two snapshots for a per-run view.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PoolStats {
+    /// Pool worker threads (excludes dispatching callers).
+    pub workers: usize,
+    /// Multi-task `scoped` dispatches (single-task and zero-worker calls run
+    /// inline and are not counted).
+    pub dispatches: u64,
+    /// Tasks executed on pool workers.
+    pub pool_tasks: u64,
+    /// Tasks executed inline on dispatching threads.
+    pub caller_tasks: u64,
+}
+
+impl PoolStats {
+    /// Counter deltas against an earlier snapshot.
+    pub fn since(&self, earlier: &PoolStats) -> PoolStats {
+        PoolStats {
+            workers: self.workers,
+            dispatches: self.dispatches - earlier.dispatches,
+            pool_tasks: self.pool_tasks - earlier.pool_tasks,
+            caller_tasks: self.caller_tasks - earlier.caller_tasks,
+        }
+    }
+
+    /// Mean fraction of pool workers engaged per dispatch, in [0, 1]
+    /// (tasks that ran on workers over worker-slots offered). 0 when the
+    /// pool never dispatched or has no workers.
+    pub fn utilization(&self) -> f64 {
+        if self.dispatches == 0 || self.workers == 0 {
+            return 0.0;
+        }
+        let offered = self.dispatches * self.workers as u64;
+        (self.pool_tasks as f64 / offered as f64).min(1.0)
+    }
+}
+
+/// [`PoolStats`] for the global pool (spawns it on first call).
+pub fn stats() -> PoolStats {
+    global().stats()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn parallelism_is_cached_and_positive() {
+        let a = parallelism();
+        assert!(a >= 1);
+        assert_eq!(a, parallelism());
+    }
+
+    #[test]
+    fn scoped_runs_every_task_with_borrows() {
+        let mut out = vec![0usize; 16];
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = out
+            .chunks_mut(4)
+            .enumerate()
+            .map(|(i, chunk)| {
+                Box::new(move || {
+                    for (j, v) in chunk.iter_mut().enumerate() {
+                        *v = i * 10 + j;
+                    }
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        global().scoped(tasks);
+        for (i, &v) in out.iter().enumerate() {
+            assert_eq!(v, (i / 4) * 10 + i % 4);
+        }
+    }
+
+    #[test]
+    fn scoped_handles_empty_and_single() {
+        global().scoped(Vec::new());
+        let hit = AtomicUsize::new(0);
+        global().scoped(vec![Box::new(|| {
+            hit.fetch_add(1, Ordering::Relaxed);
+        }) as Box<dyn FnOnce() + Send + '_>]);
+        assert_eq!(hit.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn nested_scoped_dispatch_makes_progress() {
+        // a task that itself dispatches: dispatchers drain the shared queue,
+        // so nesting cannot deadlock even with a tiny pool
+        let total = AtomicUsize::new(0);
+        let outer: Vec<Box<dyn FnOnce() + Send + '_>> = (0..4)
+            .map(|_| {
+                Box::new(|| {
+                    let inner: Vec<Box<dyn FnOnce() + Send + '_>> = (0..4)
+                        .map(|_| {
+                            Box::new(|| {
+                                total.fetch_add(1, Ordering::Relaxed);
+                            })
+                                as Box<dyn FnOnce() + Send + '_>
+                        })
+                        .collect();
+                    global().scoped(inner);
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        global().scoped(outer);
+        assert_eq!(total.load(Ordering::Relaxed), 16);
+    }
+
+    #[test]
+    fn panicking_task_propagates_without_killing_workers() {
+        let boom = std::panic::catch_unwind(|| {
+            global().scoped(vec![
+                Box::new(|| panic!("task boom")) as Box<dyn FnOnce() + Send + '_>,
+                Box::new(|| ()) as Box<dyn FnOnce() + Send + '_>,
+            ]);
+        });
+        assert!(boom.is_err(), "dispatcher must re-panic");
+        // the pool still works afterwards
+        let hit = AtomicUsize::new(0);
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = (0..8)
+            .map(|_| {
+                Box::new(|| {
+                    hit.fetch_add(1, Ordering::Relaxed);
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        global().scoped(tasks);
+        assert_eq!(hit.load(Ordering::Relaxed), 8);
+    }
+
+    #[test]
+    fn stats_count_dispatches_and_tasks() {
+        let before = stats();
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> =
+            (0..6).map(|_| Box::new(|| ()) as Box<dyn FnOnce() + Send + '_>).collect();
+        global().scoped(tasks);
+        // deltas are lower bounds: other tests share the global pool
+        let d = stats().since(&before);
+        if global().workers() == 0 {
+            assert!(d.caller_tasks >= 6, "zero-worker pools run inline: {d:?}");
+        } else {
+            assert!(d.dispatches >= 1, "{d:?}");
+            assert!(
+                d.pool_tasks + d.caller_tasks >= 6,
+                "all six tasks accounted somewhere: {d:?}"
+            );
+            assert!(d.utilization() <= 1.0);
+        }
+    }
+}

@@ -1,16 +1,25 @@
 //! Slot-pool KV cache: preallocated per-layer key/value storage for a fixed
-//! number of concurrent sequences.
+//! number of concurrent sequences, in either of two lane formats.
 //!
-//! Each *slot* holds one sequence's cache — `[capacity, d_model]` per layer
-//! for K and again for V — and is handed to the incremental forward through
-//! [`SlotView`], which implements [`crate::nn::KvStore`]. Allocation is a
-//! LIFO free list; freeing a retired sequence's slot makes it immediately
-//! available to the next admitted request (continuous batching). All K/V
-//! storage is allocated once at engine start; per-step work allocates only
-//! transient [`SlotView`]s (two `n_layers`-sized slice vectors per borrow).
+//! Each *slot* holds one sequence's cache — per layer, `[capacity, d_model]`
+//! fp32 lanes for K and V, **or** packed 4-bit lanes (nibble codes +
+//! per-block scales, `quant::KvFormat`) at ~8x less storage — and is handed
+//! to the incremental forward through [`SlotView`], which implements
+//! [`crate::nn::KvStore`]. The format is chosen once per cache
+//! ([`KvCache::new`] vs [`KvCache::new_packed`]); the forwards dispatch on
+//! [`crate::nn::KvLanes`], so fp32 pools behave bit-identically to the
+//! pre-packed engine.
+//!
+//! Allocation is a LIFO free list; freeing a retired sequence's slot zeroes
+//! its written lanes (a reused slot must never observe a prior session's
+//! K/V — defense in depth on top of the `len = 0` reset) and makes it
+//! immediately available to the next admitted request (continuous
+//! batching). All K/V storage is allocated once at engine start; per-step
+//! work allocates only transient [`SlotView`]s.
 
 use crate::model_io::ModelConfig;
-use crate::nn::KvStore;
+use crate::nn::{KvLanes, KvStore};
+use crate::quant::KvFormat;
 
 /// Index of one sequence's cache lane.
 pub type SlotId = usize;
@@ -32,18 +41,33 @@ impl KvCacheConfig {
         KvCacheConfig { slots, capacity: cfg.seq, n_layers: cfg.n_layers, d_model: cfg.d_model }
     }
 
-    /// Total bytes of K+V storage this geometry preallocates.
+    /// Bytes of K+V storage the **fp32** lane format preallocates for this
+    /// geometry (packed caches store less — see [`KvCache::bytes`]).
     pub fn bytes(&self) -> usize {
         2 * self.n_layers * self.slots * self.capacity * self.d_model * std::mem::size_of::<f32>()
     }
 }
 
-/// The pool. K and V are stored per layer as one flat `[slots * capacity *
-/// d_model]` buffer each, sliced per slot on access.
+/// Per-layer lane storage, one flat buffer per layer sliced per slot.
+enum PoolStore {
+    F32 {
+        k: Vec<Vec<f32>>,
+        v: Vec<Vec<f32>>,
+    },
+    Packed4 {
+        fmt: KvFormat,
+        k_codes: Vec<Vec<u8>>,
+        k_scales: Vec<Vec<f32>>,
+        v_codes: Vec<Vec<u8>>,
+        v_scales: Vec<Vec<f32>>,
+    },
+}
+
+/// The pool. K and V are stored per layer as one flat buffer each (fp32
+/// values, or packed codes + scales), sliced per slot on access.
 pub struct KvCache {
     cfg: KvCacheConfig,
-    k: Vec<Vec<f32>>,
-    v: Vec<Vec<f32>>,
+    store: PoolStore,
     /// Committed positions per slot.
     lens: Vec<usize>,
     in_use: Vec<bool>,
@@ -51,12 +75,47 @@ pub struct KvCache {
 }
 
 impl KvCache {
+    /// Dense fp32 lanes (the default; bit-identical to the pre-packed-KV
+    /// engine).
     pub fn new(cfg: KvCacheConfig) -> KvCache {
         assert!(cfg.slots > 0 && cfg.capacity > 0, "degenerate cache geometry {cfg:?}");
         let lane = cfg.slots * cfg.capacity * cfg.d_model;
         KvCache {
-            k: (0..cfg.n_layers).map(|_| vec![0.0; lane]).collect(),
-            v: (0..cfg.n_layers).map(|_| vec![0.0; lane]).collect(),
+            store: PoolStore::F32 {
+                k: (0..cfg.n_layers).map(|_| vec![0.0; lane]).collect(),
+                v: (0..cfg.n_layers).map(|_| vec![0.0; lane]).collect(),
+            },
+            lens: vec![0; cfg.slots],
+            in_use: vec![false; cfg.slots],
+            free: (0..cfg.slots).rev().collect(),
+            cfg,
+        }
+    }
+
+    /// Packed 4-bit lanes: K/V rows are quantized on append
+    /// (`KvFormat::encode_row`) and dequantized inside the fused attention
+    /// kernels — ~8x less cache storage and ~5x less read traffic per
+    /// decode step than fp32 lanes.
+    pub fn new_packed(cfg: KvCacheConfig, fmt: KvFormat) -> KvCache {
+        assert!(cfg.slots > 0 && cfg.capacity > 0, "degenerate cache geometry {cfg:?}");
+        assert_eq!(
+            cfg.d_model % fmt.block,
+            0,
+            "KV block {} does not divide d_model {}",
+            fmt.block,
+            cfg.d_model
+        );
+        let positions = cfg.slots * cfg.capacity;
+        let cb = positions * fmt.codes_per_row(cfg.d_model);
+        let sb = positions * fmt.scales_per_row(cfg.d_model);
+        KvCache {
+            store: PoolStore::Packed4 {
+                k_codes: (0..cfg.n_layers).map(|_| vec![0u8; cb]).collect(),
+                k_scales: (0..cfg.n_layers).map(|_| vec![0.0f32; sb]).collect(),
+                v_codes: (0..cfg.n_layers).map(|_| vec![0u8; cb]).collect(),
+                v_scales: (0..cfg.n_layers).map(|_| vec![0.0f32; sb]).collect(),
+                fmt,
+            },
             lens: vec![0; cfg.slots],
             in_use: vec![false; cfg.slots],
             free: (0..cfg.slots).rev().collect(),
@@ -66,6 +125,29 @@ impl KvCache {
 
     pub fn config(&self) -> &KvCacheConfig {
         &self.cfg
+    }
+
+    /// The packed lane format, if this pool quantizes its cache.
+    pub fn kv_format(&self) -> Option<&KvFormat> {
+        match &self.store {
+            PoolStore::F32 { .. } => None,
+            PoolStore::Packed4 { fmt, .. } => Some(fmt),
+        }
+    }
+
+    /// Bytes one cached position occupies across K+V for **one** layer —
+    /// the unit of KV read traffic per attended position per layer.
+    pub fn position_bytes(&self) -> usize {
+        let d = self.cfg.d_model;
+        match &self.store {
+            PoolStore::F32 { .. } => 2 * d * 4,
+            PoolStore::Packed4 { fmt, .. } => 2 * fmt.row_bytes(d),
+        }
+    }
+
+    /// Actual bytes of K+V lane storage this pool holds.
+    pub fn bytes(&self) -> usize {
+        self.cfg.n_layers * self.cfg.slots * self.cfg.capacity * self.position_bytes()
     }
 
     pub fn capacity(&self) -> usize {
@@ -98,11 +180,64 @@ impl KvCache {
         Some(slot)
     }
 
-    /// Return a slot to the pool. Panics on double-free (an engine bug).
+    /// Return a slot to the pool, zeroing every lane row the retiring
+    /// session wrote (committed positions plus one — a failed batch step
+    /// can leave an appended-but-uncommitted row). Reused slots therefore
+    /// never observe a prior session's K/V even through a raw-lane bug.
+    /// Panics on double-free (an engine bug).
     pub fn free(&mut self, slot: SlotId) {
         assert!(self.in_use[slot], "freeing slot {slot} that is not in use");
+        self.clear_slot(slot);
         self.in_use[slot] = false;
         self.free.push(slot);
+    }
+
+    /// Zero one slot's written rows in every layer's K and V lanes.
+    fn clear_slot(&mut self, slot: SlotId) {
+        let rows = (self.lens[slot] + 1).min(self.cfg.capacity);
+        let d = self.cfg.d_model;
+        match &mut self.store {
+            PoolStore::F32 { k, v } => {
+                let lane = self.cfg.capacity * d;
+                for layer in k.iter_mut().chain(v.iter_mut()) {
+                    layer[slot * lane..slot * lane + rows * d].fill(0.0);
+                }
+            }
+            PoolStore::Packed4 { fmt, k_codes, k_scales, v_codes, v_scales } => {
+                let (cr, sr) = (fmt.codes_per_row(d), fmt.scales_per_row(d));
+                let (clane, slane) = (self.cfg.capacity * cr, self.cfg.capacity * sr);
+                for layer in k_codes.iter_mut().chain(v_codes.iter_mut()) {
+                    layer[slot * clane..slot * clane + rows * cr].fill(0);
+                }
+                for layer in k_scales.iter_mut().chain(v_scales.iter_mut()) {
+                    layer[slot * slane..slot * slane + rows * sr].fill(0.0);
+                }
+            }
+        }
+    }
+
+    /// True when every byte of this slot's K/V lanes is zero — the
+    /// invariant [`KvCache::free`] establishes (regression surface for the
+    /// reused-slot isolation tests).
+    pub fn slot_is_zeroed(&self, slot: SlotId) -> bool {
+        let d = self.cfg.d_model;
+        match &self.store {
+            PoolStore::F32 { k, v } => {
+                let lane = self.cfg.capacity * d;
+                k.iter().chain(v.iter()).all(|layer| {
+                    layer[slot * lane..(slot + 1) * lane].iter().all(|&x| x == 0.0)
+                })
+            }
+            PoolStore::Packed4 { fmt, k_codes, k_scales, v_codes, v_scales } => {
+                let clane = self.cfg.capacity * fmt.codes_per_row(d);
+                let slane = self.cfg.capacity * fmt.scales_per_row(d);
+                k_codes.iter().chain(v_codes.iter()).all(|layer| {
+                    layer[slot * clane..(slot + 1) * clane].iter().all(|&x| x == 0)
+                }) && k_scales.iter().chain(v_scales.iter()).all(|layer| {
+                    layer[slot * slane..(slot + 1) * slane].iter().all(|&x| x == 0.0)
+                })
+            }
+        }
     }
 
     /// Committed positions in one slot.
@@ -113,14 +248,7 @@ impl KvCache {
     /// Borrow one slot's lanes as a [`KvStore`] for the incremental forward.
     pub fn slot(&mut self, slot: SlotId) -> SlotView<'_> {
         assert!(self.in_use[slot], "viewing slot {slot} that is not in use");
-        let lane = self.cfg.capacity * self.cfg.d_model;
-        let base = slot * lane;
-        SlotView {
-            k: self.k.iter_mut().map(|l| &mut l[base..base + lane]).collect(),
-            v: self.v.iter_mut().map(|l| &mut l[base..base + lane]).collect(),
-            len: &mut self.lens[slot],
-            capacity: self.cfg.capacity,
-        }
+        self.slots_mut(&[slot]).pop().expect("one view for one id")
     }
 
     /// Borrow several *distinct* slots' lanes at once — the fused batched
@@ -133,48 +261,91 @@ impl KvCache {
         for &id in ids {
             assert!(self.in_use[id], "viewing slot {id} that is not in use");
         }
-        let lane = self.cfg.capacity * self.cfg.d_model;
-        let mut ks: Vec<Vec<&mut [f32]>> =
-            (0..ids.len()).map(|_| Vec::with_capacity(self.cfg.n_layers)).collect();
-        let mut vs: Vec<Vec<&mut [f32]>> =
-            (0..ids.len()).map(|_| Vec::with_capacity(self.cfg.n_layers)).collect();
-        for layer in self.k.iter_mut() {
-            let mut lanes: Vec<Option<&mut [f32]>> = layer.chunks_mut(lane).map(Some).collect();
-            for (i, &id) in ids.iter().enumerate() {
-                ks[i].push(lanes[id].take().expect("duplicate slot id in batch"));
+        let (cfg, d) = (self.cfg, self.cfg.d_model);
+        let views: Vec<ViewLanes<'_>> = match &mut self.store {
+            PoolStore::F32 { k, v } => {
+                let lane = cfg.capacity * d;
+                let ks = carve(k, lane, ids);
+                let vs = carve(v, lane, ids);
+                ks.into_iter()
+                    .zip(vs)
+                    .map(|(k, v)| ViewLanes::F32 { k, v })
+                    .collect()
             }
-        }
-        for layer in self.v.iter_mut() {
-            let mut lanes: Vec<Option<&mut [f32]>> = layer.chunks_mut(lane).map(Some).collect();
-            for (i, &id) in ids.iter().enumerate() {
-                vs[i].push(lanes[id].take().expect("duplicate slot id in batch"));
+            PoolStore::Packed4 { fmt, k_codes, k_scales, v_codes, v_scales } => {
+                let clane = cfg.capacity * fmt.codes_per_row(d);
+                let slane = cfg.capacity * fmt.scales_per_row(d);
+                let kc = carve(k_codes, clane, ids);
+                let ks = carve(k_scales, slane, ids);
+                let vc = carve(v_codes, clane, ids);
+                let vs = carve(v_scales, slane, ids);
+                let fmt: &KvFormat = fmt;
+                kc.into_iter()
+                    .zip(ks)
+                    .zip(vc.into_iter().zip(vs))
+                    .map(|((k_codes, k_scales), (v_codes, v_scales))| ViewLanes::Packed4 {
+                        fmt,
+                        k_codes,
+                        k_scales,
+                        v_codes,
+                        v_scales,
+                    })
+                    .collect()
             }
-        }
-        let capacity = self.cfg.capacity;
+        };
         let mut lens: Vec<Option<&mut usize>> = self.lens.iter_mut().map(Some).collect();
-        ks.into_iter()
-            .zip(vs)
-            .zip(ids)
-            .map(|((k, v), &id)| SlotView {
-                k,
-                v,
+        ids.iter()
+            .zip(views)
+            .map(|(&id, lanes)| SlotView {
+                lanes,
                 len: lens[id].take().expect("duplicate slot id in batch"),
-                capacity,
+                capacity: cfg.capacity,
+                d,
             })
             .collect()
     }
+}
+
+/// Split each layer's flat buffer into per-slot chunks of `lane` elements
+/// and hand out the chunk for every requested id exactly once (duplicate
+/// ids panic) — the borrow-checker-visible disjointness proof behind
+/// [`KvCache::slots_mut`], shared by both lane formats.
+fn carve<'a, T>(layers: &'a mut [Vec<T>], lane: usize, ids: &[SlotId]) -> Vec<Vec<&'a mut [T]>> {
+    let mut out: Vec<Vec<&'a mut [T]>> =
+        (0..ids.len()).map(|_| Vec::with_capacity(layers.len())).collect();
+    for layer in layers.iter_mut() {
+        let mut lanes: Vec<Option<&mut [T]>> = layer.chunks_mut(lane).map(Some).collect();
+        for (i, &id) in ids.iter().enumerate() {
+            out[i].push(lanes[id].take().expect("duplicate slot id in batch"));
+        }
+    }
+    out
 }
 
 /// The engine-facing name for one borrowed KV lane: `slots_mut` hands the
 /// fused batched step one `KvView` per row.
 pub type KvView<'a> = SlotView<'a>;
 
-/// Mutable view of one slot's per-layer K/V lanes.
+enum ViewLanes<'a> {
+    F32 {
+        k: Vec<&'a mut [f32]>,
+        v: Vec<&'a mut [f32]>,
+    },
+    Packed4 {
+        fmt: &'a KvFormat,
+        k_codes: Vec<&'a mut [u8]>,
+        k_scales: Vec<&'a mut [f32]>,
+        v_codes: Vec<&'a mut [u8]>,
+        v_scales: Vec<&'a mut [f32]>,
+    },
+}
+
+/// Mutable view of one slot's per-layer K/V lanes (either format).
 pub struct SlotView<'a> {
-    k: Vec<&'a mut [f32]>,
-    v: Vec<&'a mut [f32]>,
+    lanes: ViewLanes<'a>,
     len: &'a mut usize,
     capacity: usize,
+    d: usize,
 }
 
 impl KvStore for SlotView<'_> {
@@ -186,8 +357,42 @@ impl KvStore for SlotView<'_> {
         self.capacity
     }
 
-    fn kv_mut(&mut self, layer: usize) -> (&mut [f32], &mut [f32]) {
-        (&mut *self.k[layer], &mut *self.v[layer])
+    fn append_kv(&mut self, layer: usize, k_row: &[f32], v_row: &[f32]) {
+        let (pos, d) = (*self.len, self.d);
+        debug_assert!(pos < self.capacity, "append past capacity");
+        assert_eq!(k_row.len(), d);
+        assert_eq!(v_row.len(), d);
+        match &mut self.lanes {
+            ViewLanes::F32 { k, v } => {
+                k[layer][pos * d..(pos + 1) * d].copy_from_slice(k_row);
+                v[layer][pos * d..(pos + 1) * d].copy_from_slice(v_row);
+            }
+            ViewLanes::Packed4 { fmt, k_codes, k_scales, v_codes, v_scales } => {
+                let (cb, sb) = (fmt.codes_per_row(d), fmt.scales_per_row(d));
+                fmt.encode_row(
+                    k_row,
+                    &mut k_codes[layer][pos * cb..(pos + 1) * cb],
+                    &mut k_scales[layer][pos * sb..(pos + 1) * sb],
+                );
+                fmt.encode_row(
+                    v_row,
+                    &mut v_codes[layer][pos * cb..(pos + 1) * cb],
+                    &mut v_scales[layer][pos * sb..(pos + 1) * sb],
+                );
+            }
+        }
+    }
+
+    fn lanes(&self, layer: usize) -> KvLanes<'_> {
+        match &self.lanes {
+            ViewLanes::F32 { k, v } => KvLanes::F32 { k: &*k[layer], v: &*v[layer] },
+            ViewLanes::Packed4 { fmt, k_codes, k_scales, v_codes, v_scales } => {
+                KvLanes::Packed4 {
+                    k: fmt.lane(&*k_codes[layer], &*k_scales[layer], self.d),
+                    v: fmt.lane(&*v_codes[layer], &*v_scales[layer], self.d),
+                }
+            }
+        }
     }
 
     fn advance(&mut self) {
@@ -198,9 +403,33 @@ impl KvStore for SlotView<'_> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::formats;
+
+    fn geometry() -> KvCacheConfig {
+        KvCacheConfig { slots: 3, capacity: 4, n_layers: 2, d_model: 8 }
+    }
 
     fn small() -> KvCache {
-        KvCache::new(KvCacheConfig { slots: 3, capacity: 4, n_layers: 2, d_model: 8 })
+        KvCache::new(geometry())
+    }
+
+    fn small_packed() -> KvCache {
+        KvCache::new_packed(geometry(), KvFormat::new(&formats::must("sf4"), 4))
+    }
+
+    fn k_lane(view: &SlotView<'_>, layer: usize) -> Vec<f32> {
+        match view.lanes(layer) {
+            KvLanes::F32 { k, .. } => k.to_vec(),
+            KvLanes::Packed4 { k, .. } => {
+                let rows = k.codes.len() / (k.d / 2);
+                let mut out = vec![0.0f32; rows * k.d];
+                for (j, o) in out.iter_mut().enumerate() {
+                    let c = (k.codes[j / 2] >> (4 * (j % 2))) & 0x0f;
+                    *o = k.lut[c as usize] * k.scales[j / k.block];
+                }
+                out
+            }
+        }
     }
 
     #[test]
@@ -244,9 +473,9 @@ mod tests {
         let a = c.allocate().unwrap();
         {
             let mut view = c.slot(a);
-            let (k, _) = view.kv_mut(0);
-            k[0] = 7.0;
+            view.append_kv(0, &[7.0; 8], &[1.0; 8]);
             view.advance();
+            view.append_kv(0, &[2.0; 8], &[3.0; 8]);
             view.advance();
         }
         assert_eq!(c.len(a), 2);
@@ -257,20 +486,64 @@ mod tests {
     }
 
     #[test]
-    fn slot_views_are_disjoint() {
-        let mut c = small();
+    fn slot_views_are_disjoint_in_both_formats() {
+        for mut c in [small(), small_packed()] {
+            let a = c.allocate().unwrap();
+            let b = c.allocate().unwrap();
+            {
+                let mut view = c.slot(a);
+                view.append_kv(1, &[1.0; 8], &[2.0; 8]);
+                view.advance();
+            }
+            let view = c.slot(b);
+            assert!(k_lane(&view, 1).iter().all(|&x| x == 0.0), "lanes are disjoint");
+        }
+    }
+
+    #[test]
+    fn freed_slot_lanes_are_zeroed_in_both_formats() {
+        // the reused-slot isolation invariant: retiring a session scrubs
+        // every K/V row it wrote, fp32 and packed alike
+        for (label, mut c) in [("fp32", small()), ("packed", small_packed())] {
+            let a = c.allocate().unwrap();
+            {
+                let mut view = c.slot(a);
+                for step in 0..3 {
+                    let row = [0.5 + step as f32; 8];
+                    view.append_kv(0, &row, &row);
+                    view.append_kv(1, &row, &row);
+                    view.advance();
+                }
+            }
+            assert!(!c.slot_is_zeroed(a), "{label}: lanes hold live data before free");
+            c.free(a);
+            assert!(c.slot_is_zeroed(a), "{label}: free() must scrub the lanes");
+            // the next tenant starts from an all-zero slot
+            let a2 = c.allocate().unwrap();
+            assert_eq!(a2, a);
+            let view = c.slot(a2);
+            assert!(
+                k_lane(&view, 0).iter().all(|&x| x == 0.0),
+                "{label}: reused slot observed a prior session's K/V"
+            );
+        }
+    }
+
+    #[test]
+    fn packed_append_round_trips_through_lanes() {
+        let mut c = small_packed();
         let a = c.allocate().unwrap();
-        let b = c.allocate().unwrap();
+        let row: Vec<f32> = (0..8).map(|i| (i as f32 - 3.5) * 0.25).collect();
         {
             let mut view = c.slot(a);
-            let (k, v) = view.kv_mut(1);
-            k.fill(1.0);
-            v.fill(2.0);
+            view.append_kv(0, &row, &row);
+            view.advance();
         }
-        let mut view = c.slot(b);
-        let (k, v) = view.kv_mut(1);
-        assert!(k.iter().all(|&x| x == 0.0));
-        assert!(v.iter().all(|&x| x == 0.0));
+        let fmt = c.kv_format().unwrap().clone();
+        let mut expect = vec![0.0f32; 8];
+        fmt.fake_quant_row(&row, &mut expect);
+        let view = c.slot(a);
+        assert_eq!(&k_lane(&view, 0)[..8], &expect[..], "lane dequant == codec round trip");
     }
 
     #[test]
@@ -282,20 +555,20 @@ mod tests {
             // both views live at the same time, in request order
             let mut views = c.slots_mut(&[b, a]);
             assert_eq!(views.len(), 2);
-            let (kb, _) = views[0].kv_mut(0);
-            kb.fill(5.0);
+            views[0].append_kv(0, &[5.0; 8], &[0.0; 8]);
             views[0].advance();
-            let (ka, _) = views[1].kv_mut(0);
-            assert!(ka.iter().all(|&x| x == 0.0), "lanes are disjoint");
+            match views[1].lanes(0) {
+                KvLanes::F32 { k, .. } => assert!(k.iter().all(|&x| x == 0.0), "disjoint"),
+                _ => unreachable!("fp32 pool"),
+            }
             views[1].advance();
             views[1].advance();
         }
         assert_eq!(c.len(b), 1);
         assert_eq!(c.len(a), 2);
         // single-slot view sees what the batched view wrote
-        let mut view = c.slot(b);
-        let (kb, _) = view.kv_mut(0);
-        assert!(kb.iter().all(|&x| x == 5.0));
+        let view = c.slot(b);
+        assert!(k_lane(&view, 0)[..8].iter().all(|&x| x == 5.0));
     }
 
     #[test]
@@ -316,9 +589,19 @@ mod tests {
     }
 
     #[test]
-    fn bytes_accounting() {
-        let cfg = KvCacheConfig { slots: 3, capacity: 4, n_layers: 2, d_model: 8 };
+    fn bytes_accounting_per_format() {
+        let cfg = geometry();
         // 2 (K+V) * 2 layers * 3 slots * 4 pos * 8 dim * 4 bytes
         assert_eq!(cfg.bytes(), 2 * 2 * 3 * 4 * 8 * 4);
+        let dense = small();
+        assert_eq!(dense.bytes(), cfg.bytes());
+        assert_eq!(dense.position_bytes(), 2 * 8 * 4);
+        assert!(dense.kv_format().is_none());
+        let packed = small_packed();
+        // per position per layer: 2 * (8/2 codes + 2 scales * 4 bytes)
+        assert_eq!(packed.position_bytes(), 2 * (4 + 8));
+        assert_eq!(packed.bytes(), 2 * 3 * 4 * packed.position_bytes());
+        assert!(packed.bytes() < dense.bytes());
+        assert_eq!(packed.kv_format().unwrap().name, "sf4");
     }
 }

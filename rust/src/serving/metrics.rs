@@ -37,6 +37,10 @@ pub struct MetricsCollector {
     /// Fused `[B, d] x [d, N]` GEMM launches (one per linear per fused
     /// forward; without fusion each would have been `B` separate GEMMs).
     pub fused_gemms: u64,
+    /// KV-cache bytes attention read across the run: per forwarded row,
+    /// `attended positions x layers x position_bytes` (K+V) — ~8x smaller
+    /// per position under packed 4-bit lanes than fp32.
+    pub kv_bytes_read: u64,
     pub steps: usize,
     pub decode_tokens: usize,
     pub prefill_tokens: usize,
@@ -75,6 +79,11 @@ impl MetricsCollector {
         self.fused_batch.push(rows);
     }
 
+    /// KV lane bytes one forwarded row's attention read.
+    pub fn record_kv_read(&mut self, bytes: u64) {
+        self.kv_bytes_read += bytes;
+    }
+
     pub fn record_first_token(&mut self, since_submit: Duration) {
         self.ttft.push(since_submit);
     }
@@ -111,6 +120,9 @@ impl MetricsCollector {
             fused_gemms: self.fused_gemms,
             mean_fused_batch: self.fused_batch.iter().sum::<usize>() as f64
                 / self.fused_batch.len().max(1) as f64,
+            kv_bytes_read: self.kv_bytes_read,
+            kv_bytes_per_token: self.kv_bytes_read as f64
+                / (self.decode_tokens + self.prefill_tokens).max(1) as f64,
             wall,
         }
     }
@@ -139,6 +151,11 @@ pub struct MetricsReport {
     pub fused_gemms: u64,
     /// Mean rows per fused batched forward (batched-step occupancy).
     pub mean_fused_batch: f64,
+    /// Total KV lane bytes attention read across the run.
+    pub kv_bytes_read: u64,
+    /// KV bytes read per forwarded token (decode + prefill) — the traffic
+    /// figure the packed KV backend exists to shrink.
+    pub kv_bytes_per_token: f64,
     pub wall: Duration,
 }
 
@@ -148,7 +165,8 @@ impl fmt::Display for MetricsReport {
             f,
             "completed {} (rejected {}, evicted {}) | {} steps, {} decode + {} prefill tok \
              | {:.1} tok/s decode | ttft p50 {:?} p99 {:?} | itl p50 {:?} p99 {:?} \
-             | occupancy {:.2} | fused {} gemms over {} calls, batch {:.2} | wall {:?}",
+             | occupancy {:.2} | fused {} gemms over {} calls, batch {:.2} \
+             | kv {:.1} KiB/tok | wall {:?}",
             self.completed,
             self.rejected,
             self.evicted,
@@ -164,6 +182,7 @@ impl fmt::Display for MetricsReport {
             self.fused_gemms,
             self.fused_steps,
             self.mean_fused_batch,
+            self.kv_bytes_per_token / 1024.0,
             self.wall,
         )
     }
@@ -217,6 +236,8 @@ mod tests {
         m.record_step(4, 4, 0);
         m.record_fused(2, 13);
         m.record_fused(4, 13);
+        m.record_kv_read(4096);
+        m.record_kv_read(2048);
         m.record_first_token(ms(10));
         m.record_inter_token(ms(2));
         m.record_inter_token(ms(4));
@@ -230,6 +251,9 @@ mod tests {
         assert!((r.mean_occupancy - 3.0).abs() < 1e-12);
         assert_eq!(r.fused_steps, 2);
         assert_eq!(r.fused_gemms, 26);
+        assert_eq!(r.kv_bytes_read, 6144);
+        // 14 forwarded tokens (6 decode + 8 prefill)
+        assert!((r.kv_bytes_per_token - 6144.0 / 14.0).abs() < 1e-9);
         assert!((r.mean_fused_batch - 3.0).abs() < 1e-12);
         assert_eq!(r.ttft_p50, ms(10));
         assert_eq!(r.itl_p99, ms(4));

@@ -282,9 +282,11 @@ pub const GEMM_NR: usize = 16;
 /// K-block length: one `[KC, NR]` panel of `b` stays cache-resident while
 /// every row tile streams over it.
 pub const GEMM_KC: usize = 256;
-/// Below this many multiply-adds the thread-spawn cost dominates; stay
-/// single-threaded so decode-sized calls never pay it.
-const GEMM_PAR_FLOPS: usize = 1 << 21;
+/// Below this many multiply-adds the pool-dispatch cost dominates; stay
+/// single-threaded so decode-sized calls never pay it. Shared with the
+/// fused attention kernels ([`lut_attend`]), whose per-call work is gated
+/// by the same constant.
+pub(crate) const GEMM_PAR_FLOPS: usize = 1 << 21;
 
 /// Row-major GEMM kernel: accumulate `a [m,k] @ b [k,n]` into `out [m,n]`
 /// (caller provides a zeroed — or pre-accumulated — `out`).
@@ -296,8 +298,9 @@ const GEMM_PAR_FLOPS: usize = 1 << 21;
 /// [`GEMM_KC`]-length blocks; within a block, `[GEMM_MR, GEMM_NR]` register
 /// micro-tiles hold explicit accumulator arrays and the inner loop is a
 /// contiguous multiply-add over `b` row slices that LLVM autovectorizes.
-/// Row blocks run on scoped threads once the problem passes a FLOP
-/// threshold (prefill / quantizer sizes), never for decode-sized calls.
+/// Row blocks run on the persistent `runtime::pool` workers once the
+/// problem passes a FLOP threshold (prefill / quantizer sizes), never for
+/// decode-sized calls.
 ///
 /// **Batch-row bit-identity invariant** (the PR-2 contract
 /// `rust/tests/batched_decode.rs` enforces): every output row is an
@@ -317,11 +320,18 @@ pub fn gemm(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], out: &mut [f32])
 }
 
 /// [`gemm`] with an explicit row-thread count (`1` = serial). The thread
-/// count only changes how rows are chunked across scoped threads — never
-/// any row's arithmetic — so every value produces bit-identical output.
+/// count only changes how rows are chunked across pool tasks — never any
+/// row's arithmetic — so every value produces bit-identical output.
 /// `gemm` picks the count via [`gemm_auto_threads`]; `quant::lut_gemm`
 /// pins one decision from its *full* K so its per-K-block calls thread
 /// exactly when the dense path on the same problem would.
+///
+/// Parallel chunks run on the persistent [`crate::runtime::pool`] worker
+/// pool (PR 4) instead of per-call `std::thread::scope` spawns: a mid-sized
+/// prefill issues six GEMMs per layer per step, and the old spawn/join
+/// round trip per chunk was pure overhead the pool amortizes to a condvar
+/// wake (`perf_kernel` records pool vs scope under `gemm_pool_*` /
+/// `gemm_scope_*`).
 pub fn gemm_threaded(
     m: usize,
     k: usize,
@@ -348,18 +358,18 @@ pub fn gemm_threaded(
     let tiles = m.div_ceil(GEMM_MR);
     let tiles_per = tiles.div_ceil(threads);
     let rows_per = tiles_per * GEMM_MR;
-    std::thread::scope(|scope| {
-        let mut rest = out;
-        let mut i0 = 0usize;
-        while i0 < m {
-            let mb = rows_per.min(m - i0);
-            let (chunk, tail) = rest.split_at_mut(mb * n);
-            rest = tail;
-            let a_chunk = &a[i0 * k..(i0 + mb) * k];
-            scope.spawn(move || gemm_block(mb, k, n, a_chunk, b, chunk));
-            i0 += mb;
-        }
-    });
+    let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(threads);
+    let mut rest = out;
+    let mut i0 = 0usize;
+    while i0 < m {
+        let mb = rows_per.min(m - i0);
+        let (chunk, tail) = rest.split_at_mut(mb * n);
+        rest = tail;
+        let a_chunk = &a[i0 * k..(i0 + mb) * k];
+        tasks.push(Box::new(move || gemm_block(mb, k, n, a_chunk, b, chunk)));
+        i0 += mb;
+    }
+    crate::runtime::pool::global().scoped(tasks);
 }
 
 /// Row-block thread count [`gemm`] would pick for an `[m, k] x [k, n]`
@@ -368,16 +378,7 @@ pub fn gemm_auto_threads(m: usize, k: usize, n: usize) -> usize {
     if m < 2 * GEMM_MR || m.saturating_mul(k).saturating_mul(n) < GEMM_PAR_FLOPS {
         return 1;
     }
-    cores().min(m.div_ceil(GEMM_MR)).min(8)
-}
-
-/// Cached `available_parallelism` — the std call re-reads cgroup state on
-/// Linux on every invocation, which is too slow for a per-GEMM decision.
-fn cores() -> usize {
-    static CORES: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
-    *CORES.get_or_init(|| {
-        std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
-    })
+    crate::runtime::pool::parallelism().min(m.div_ceil(GEMM_MR)).min(8)
 }
 
 /// Serial blocked kernel over one row range (see [`gemm`] for the layout).
@@ -505,6 +506,229 @@ pub fn argmax(xs: &[f32]) -> usize {
         }
     }
     best
+}
+
+// ---------------------------------------------------------------------------
+// Attention kernels (fp32 + fused packed-KV dequant)
+// ---------------------------------------------------------------------------
+
+/// Immutable view of one packed 4-bit KV lane: `rows` cached positions of
+/// `d` values each, stored as two nibble codes per byte plus per-block
+/// scales and the format's 16-entry dequant LUT. Built by
+/// `quant::KvFormat` encoders (`nn::SeqKvCache` / the serving slot pool);
+/// consumed by [`lut_attend_head`]. Element `(r, j)` dequantizes as
+/// `lut[code(r, j)] * scales[r][j / block]` — the exact f32 expression of
+/// the dequantize-then-attend oracle.
+#[derive(Clone, Copy, Debug)]
+pub struct PackedLane<'a> {
+    /// `[rows, d/2]` packed nibbles: column `2j` in the low nibble and
+    /// `2j+1` in the high nibble of byte `(r, j)`.
+    pub codes: &'a [u8],
+    /// `[rows, d/block]` per-block dequant scales.
+    pub scales: &'a [f32],
+    /// The codebook padded to 16 f32 entries.
+    pub lut: &'a [f32; 16],
+    /// Values per cached position.
+    pub d: usize,
+    /// Values per scale block (divides `d` and the attention head width).
+    pub block: usize,
+}
+
+/// One attention head over fp32 K/V lanes: scores `q · K[j]` for
+/// `j < rows`, softmax, then accumulates the V rows into `ctx_head`
+/// (`+=`). `kbuf`/`vbuf` are position-major `[.., d]` lanes and `off` is
+/// the head's column offset. This is the exact loop structure (and
+/// therefore the exact f32 arithmetic) of the pre-PR-4 inline attention in
+/// `nn::forward_lm_step`, hoisted here so the single-sequence step, the
+/// fused batched step, the full forward and the benches all share one body.
+pub fn attend_head(
+    q_head: &[f32],
+    kbuf: &[f32],
+    vbuf: &[f32],
+    d: usize,
+    off: usize,
+    rows: usize,
+    scale: f32,
+    att: &mut [f32],
+    ctx_head: &mut [f32],
+) {
+    let dh = q_head.len();
+    debug_assert!(att.len() >= rows, "attention scratch too small");
+    debug_assert_eq!(ctx_head.len(), dh);
+    let mut mx = f32::NEG_INFINITY;
+    for j in 0..rows {
+        let kj = &kbuf[j * d + off..j * d + off + dh];
+        let mut dot = 0.0f32;
+        for t in 0..dh {
+            dot += q_head[t] * kj[t];
+        }
+        att[j] = dot * scale;
+        mx = mx.max(att[j]);
+    }
+    let mut z = 0.0f32;
+    for j in 0..rows {
+        att[j] = (att[j] - mx).exp();
+        z += att[j];
+    }
+    for j in 0..rows {
+        let w = att[j] / z;
+        let vj = &vbuf[j * d + off..j * d + off + dh];
+        for t in 0..dh {
+            ctx_head[t] += w * vj[t];
+        }
+    }
+}
+
+/// One attention head over **packed 4-bit** K/V lanes, dequantizing inside
+/// the kernel: the lane stream from memory is nibble codes + per-block
+/// scales (~5x less KV traffic than fp32 lanes), and the f32 expansion
+/// lives only in a 16-entry `lut * scale` register tile per (position,
+/// block) — the same cache-resident LUT-expansion trick as
+/// `quant::lut_gemm`, shrunk to attention's row granularity.
+///
+/// Loop structure mirrors [`attend_head`] exactly, and each element
+/// expands as `lut[code] * scale` — the same f32 product the
+/// dequantize-then-attend oracle stores — so the fused path is
+/// **bit-identical** to dequantizing the lanes and calling `attend_head`
+/// (`rust/tests/quant_kv.rs` locks this down per step).
+///
+/// `off` must be block-aligned and the head width a multiple of `block`
+/// (the engine picks `block = d_head`, which satisfies both).
+pub fn lut_attend_head(
+    q_head: &[f32],
+    k: PackedLane<'_>,
+    v: PackedLane<'_>,
+    off: usize,
+    rows: usize,
+    scale: f32,
+    att: &mut [f32],
+    ctx_head: &mut [f32],
+) {
+    let dh = q_head.len();
+    debug_assert!(att.len() >= rows, "attention scratch too small");
+    debug_assert_eq!(ctx_head.len(), dh);
+    debug_assert_eq!(off % k.block, 0, "head offset must be block-aligned");
+    debug_assert_eq!(dh % k.block, 0, "head width must be whole blocks");
+    let mut mx = f32::NEG_INFINITY;
+    for j in 0..rows {
+        let mut dot = 0.0f32;
+        lane_row_blocks(&k, j, off, dh, |t0, slut, codes| {
+            for (t, &c) in codes.iter().enumerate() {
+                dot += q_head[t0 + t] * slut[c as usize];
+            }
+        });
+        att[j] = dot * scale;
+        mx = mx.max(att[j]);
+    }
+    let mut z = 0.0f32;
+    for j in 0..rows {
+        att[j] = (att[j] - mx).exp();
+        z += att[j];
+    }
+    for j in 0..rows {
+        let w = att[j] / z;
+        lane_row_blocks(&v, j, off, dh, |t0, slut, codes| {
+            for (t, &c) in codes.iter().enumerate() {
+                ctx_head[t0 + t] += w * slut[c as usize];
+            }
+        });
+    }
+}
+
+/// Max values per scale block the stack-resident decode buffers support
+/// (every zoo `d_head` is far below this).
+pub const LANE_MAX_BLOCK: usize = 256;
+
+/// Walk one packed row's blocks inside `[off, off + dh)`: for each block,
+/// build the scaled 16-entry LUT tile (`slut[c] = lut[c] * scale`, the
+/// oracle's exact product) and the unpacked nibble codes, then hand both to
+/// `f(head-relative offset, slut, codes)`.
+#[inline]
+fn lane_row_blocks(
+    lane: &PackedLane<'_>,
+    row: usize,
+    off: usize,
+    dh: usize,
+    mut f: impl FnMut(usize, &[f32; 16], &[u8]),
+) {
+    let block = lane.block;
+    assert!(block <= LANE_MAX_BLOCK, "block {block} exceeds LANE_MAX_BLOCK");
+    let row_bytes = lane.d / 2;
+    let codes_row = &lane.codes[row * row_bytes..(row + 1) * row_bytes];
+    let scales_row = &lane.scales[row * (lane.d / block)..(row + 1) * (lane.d / block)];
+    let mut slut = [0.0f32; 16];
+    let mut codes = [0u8; LANE_MAX_BLOCK];
+    let mut t = 0usize;
+    while t < dh {
+        let col0 = off + t;
+        let s = scales_row[col0 / block];
+        for (o, &l) in slut.iter_mut().zip(lane.lut) {
+            *o = l * s;
+        }
+        // off and block are even (asserted by the encoders), so a block
+        // always covers whole bytes
+        for (p, &byte) in codes_row[col0 / 2..(col0 + block) / 2].iter().enumerate() {
+            codes[2 * p] = byte & 0x0f;
+            codes[2 * p + 1] = byte >> 4;
+        }
+        f(t, &slut, &codes[..block]);
+        t += block;
+    }
+}
+
+/// All-heads fused packed-KV attention for one query row: dispatches each
+/// head through [`lut_attend_head`], splitting heads across the persistent
+/// `runtime::pool` once the problem passes the same FLOP threshold as the
+/// GEMM (decode-sized calls always stay serial). Heads write disjoint
+/// `ctx_row` chunks and each head's arithmetic is an independent chain, so
+/// the pool path is bit-identical to the serial one.
+#[allow(clippy::too_many_arguments)]
+pub fn lut_attend(
+    q_row: &[f32],
+    k: PackedLane<'_>,
+    v: PackedLane<'_>,
+    n_heads: usize,
+    rows: usize,
+    scale: f32,
+    att: &mut [f32],
+    ctx_row: &mut [f32],
+) {
+    let dh = q_row.len() / n_heads;
+    debug_assert_eq!(q_row.len(), n_heads * dh);
+    debug_assert_eq!(ctx_row.len(), q_row.len());
+    // scores + V accumulation are each one MAC per (position, value)
+    let work = 2 * rows * q_row.len();
+    if n_heads > 1 && work >= GEMM_PAR_FLOPS {
+        // one scratch allocation for the whole call; each head gets its
+        // own disjoint rows-sized score chunk (the caller's `att` buffer
+        // is single-head-sized, so the parallel path cannot share it)
+        let mut att_all = vec![0.0f32; n_heads * rows];
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = ctx_row
+            .chunks_mut(dh)
+            .zip(att_all.chunks_mut(rows))
+            .enumerate()
+            .map(|(h, (ctx_head, att_head))| {
+                let q_head = &q_row[h * dh..(h + 1) * dh];
+                Box::new(move || {
+                    lut_attend_head(q_head, k, v, h * dh, rows, scale, att_head, ctx_head);
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        crate::runtime::pool::global().scoped(tasks);
+    } else {
+        for h in 0..n_heads {
+            lut_attend_head(
+                &q_row[h * dh..(h + 1) * dh],
+                k,
+                v,
+                h * dh,
+                rows,
+                scale,
+                att,
+                &mut ctx_row[h * dh..(h + 1) * dh],
+            );
+        }
+    }
 }
 
 #[cfg(test)]
@@ -640,5 +864,104 @@ mod tests {
         let a = Tensor::zeros(&[2, 3]);
         let b = Tensor::zeros(&[2, 3]);
         a.matmul(&b); // 3 != 2
+    }
+
+    /// Hand-built packed lane + its f32 dequantization (`lut[c] * scale`,
+    /// the oracle expansion) over a deterministic code/scale pattern.
+    fn hand_lane(
+        rows: usize,
+        d: usize,
+        block: usize,
+        seed: u32,
+    ) -> (Vec<u8>, Vec<f32>, [f32; 16], Vec<f32>) {
+        let lut: [f32; 16] =
+            std::array::from_fn(|i| (i as f32 - 7.5) / 7.5 * if i % 3 == 0 { 0.5 } else { 1.0 });
+        let mut codes = vec![0u8; rows * d / 2];
+        let mut scales = vec![0.0f32; rows * d / block];
+        for (i, s) in scales.iter_mut().enumerate() {
+            *s = 0.25 + ((i as u32 * 37 + seed) % 11) as f32 * 0.125;
+        }
+        let mut dense = vec![0.0f32; rows * d];
+        for r in 0..rows {
+            for j in 0..d {
+                let c = ((r * d + j) as u32 * 13 + seed) % 16;
+                codes[r * d / 2 + j / 2] |= (c as u8) << (4 * (j % 2));
+                dense[r * d + j] = lut[c as usize] * scales[r * (d / block) + j / block];
+            }
+        }
+        (codes, scales, lut, dense)
+    }
+
+    #[test]
+    fn lut_attend_head_bit_identical_to_dequant_then_attend() {
+        let (rows, d, block) = (13usize, 32usize, 16usize);
+        let (k_codes, k_scales, lut, k_dense) = hand_lane(rows, d, block, 1);
+        let (v_codes, v_scales, _, v_dense) = hand_lane(rows, d, block, 2);
+        let q: Vec<f32> = (0..d).map(|i| ((i * 7 % 13) as f32 - 6.0) * 0.1).collect();
+        let scale = 0.25f32;
+        for (heads, dh) in [(2usize, 16usize), (1, 32)] {
+            let mut att_a = vec![0.0f32; rows];
+            let mut att_b = vec![0.0f32; rows];
+            let mut ctx_fused = vec![0.0f32; d];
+            let mut ctx_oracle = vec![0.0f32; d];
+            for h in 0..heads {
+                let off = h * dh;
+                let k = PackedLane { codes: &k_codes, scales: &k_scales, lut: &lut, d, block };
+                let v = PackedLane { codes: &v_codes, scales: &v_scales, lut: &lut, d, block };
+                lut_attend_head(
+                    &q[off..off + dh],
+                    k,
+                    v,
+                    off,
+                    rows,
+                    scale,
+                    &mut att_a,
+                    &mut ctx_fused[off..off + dh],
+                );
+                attend_head(
+                    &q[off..off + dh],
+                    &k_dense,
+                    &v_dense,
+                    d,
+                    off,
+                    rows,
+                    scale,
+                    &mut att_b,
+                    &mut ctx_oracle[off..off + dh],
+                );
+            }
+            assert_eq!(ctx_fused, ctx_oracle, "heads={heads}: fused attention diverged");
+        }
+    }
+
+    #[test]
+    fn lut_attend_pooled_heads_match_serial() {
+        // rows * d large enough to cross the pool threshold (2 * rows * d
+        // >= GEMM_PAR_FLOPS): the parallel per-head path must be bitwise
+        // the serial one
+        let (rows, d, block, heads) = (4200usize, 256usize, 64usize, 4usize);
+        let (k_codes, k_scales, lut, _) = hand_lane(rows, d, block, 3);
+        let (v_codes, v_scales, _, _) = hand_lane(rows, d, block, 4);
+        let q: Vec<f32> = (0..d).map(|i| ((i * 11 % 17) as f32 - 8.0) * 0.05).collect();
+        let k = PackedLane { codes: &k_codes, scales: &k_scales, lut: &lut, d, block };
+        let v = PackedLane { codes: &v_codes, scales: &v_scales, lut: &lut, d, block };
+        let mut att = vec![0.0f32; rows];
+        let mut ctx_par = vec![0.0f32; d];
+        lut_attend(&q, k, v, heads, rows, 0.125, &mut att, &mut ctx_par);
+        let mut ctx_ser = vec![0.0f32; d];
+        let dh = d / heads;
+        for h in 0..heads {
+            lut_attend_head(
+                &q[h * dh..(h + 1) * dh],
+                k,
+                v,
+                h * dh,
+                rows,
+                0.125,
+                &mut att,
+                &mut ctx_ser[h * dh..(h + 1) * dh],
+            );
+        }
+        assert_eq!(ctx_par, ctx_ser, "pool placement must not change attention bits");
     }
 }

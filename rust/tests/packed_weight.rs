@@ -182,8 +182,8 @@ fn engine_serves_packed_weights_with_identical_streams() {
             ckpt,
             EngineConfig {
                 slots: 2,
-                kv_capacity: 0,
                 scheduler: SchedulerConfig { max_batch: 2, ..SchedulerConfig::default() },
+                ..EngineConfig::default()
             },
         );
         let mut rxs: Vec<mpsc::Receiver<TokenEvent>> = Vec::new();

@@ -22,8 +22,8 @@ fn engine_for(cfg: ModelConfig, ckpt: Checkpoint, slots: usize) -> Engine {
         ckpt,
         EngineConfig {
             slots,
-            kv_capacity: 0,
             scheduler: SchedulerConfig { max_batch: slots, ..SchedulerConfig::default() },
+            ..EngineConfig::default()
         },
     )
 }
