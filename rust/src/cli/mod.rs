@@ -8,6 +8,7 @@
 //! repro serve-decode [--model NAME] [--format FMT|fp32] [--packed]
 //!                    [--kv-format fp32|FMT] [--clients N] [--requests N]
 //!                    [--max-new T] [--slots S] [--prefill-chunk P]
+//!                    [--page-size P] [--kv-pages N]
 //! repro all          [--quick]
 //! ```
 //! Global flags: `--artifacts DIR --checkpoints DIR --results DIR`.
@@ -79,12 +80,15 @@ commands:
           one-shot next-token scoring through the decode engine
   serve-decode [--model N] [--format F|fp32] [--packed] [--kv-format fp32|F]
                [--clients C] [--requests R] [--max-new T] [--slots S]
-               [--prefill-chunk P]
-          continuous-batching multi-token generation (streaming, KV cache,
-          fused [B,d] batched decode step; --packed serves true 4-bit
-          weights through the fused LUT dequant-GEMM; --kv-format stores
-          the KV cache itself in a 4-bit codebook, attended through the
-          fused dequant-attention kernels)
+               [--prefill-chunk P] [--page-size P] [--kv-pages N]
+          continuous-batching multi-token generation (streaming, paged KV
+          cache with block tables, fused [B,d] batched decode step;
+          --packed serves true 4-bit weights through the fused LUT
+          dequant-GEMM; --kv-format stores the KV cache itself in a 4-bit
+          codebook, attended through the fused dequant-attention kernels;
+          --page-size sets positions per KV page and --kv-pages bounds the
+          page pool — 0 = worst case — so long-context mixes admit against
+          pages available, not per-slot reservations)
   all     [--quick]                            every table + figure
 global flags: --artifacts DIR --checkpoints DIR --results DIR
 ";
@@ -307,6 +311,8 @@ fn cmd_serve_decode(session: &Session, args: &Args) -> Result<()> {
     let max_new: usize = args.flag("max-new", "16").parse()?;
     let slots: usize = args.flag("slots", "4").parse()?;
     let prefill_chunk: usize = args.flag("prefill-chunk", "32").parse()?;
+    let page_size: usize = args.flag("page-size", "16").parse()?;
+    let kv_pages: usize = args.flag("kv-pages", "0").parse()?;
 
     let cfg = zoo(&model)?;
     let ckpt = load_or_init_checkpoint(session, &cfg);
@@ -331,12 +337,14 @@ fn cmd_serve_decode(session: &Session, args: &Args) -> Result<()> {
             Some(&*Box::leak(kv_fmt.clone().into_boxed_str()))
         }
     };
-    let mut engine = Engine::new(
+    let mut engine = Engine::try_new(
         cfg,
         ckpt,
         EngineConfig {
             slots,
             kv_format,
+            page_size,
+            kv_pages,
             scheduler: SchedulerConfig {
                 max_batch: slots,
                 prefill_chunk,
@@ -344,18 +352,20 @@ fn cmd_serve_decode(session: &Session, args: &Args) -> Result<()> {
             },
             ..EngineConfig::default()
         },
-    );
+    )?;
     let kv_label = match kv_format {
         None => "fp32".to_string(),
         Some(f) => format!("{f} packed-4bit"),
     };
     println!(
-        "decode engine: model `{}` weights {} | {} KV slots x {} positions, {} lanes \
-         ({} KiB cache) | fused [B,d] batched step, prefill chunk {}",
+        "decode engine: model `{}` weights {} | paged KV: {} sequences over {} pages x {} \
+         positions (block tables, {} lanes, {} KiB pool) | fused [B,d] batched step, \
+         prefill chunk {}",
         cfg.name,
         weight_label,
         engine.cache().slots_total(),
-        engine.cache().capacity(),
+        engine.cache().pages_total(),
+        engine.cache().page_size(),
         kv_label,
         engine.cache().bytes() / 1024,
         prefill_chunk,

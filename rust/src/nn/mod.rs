@@ -176,18 +176,37 @@ pub fn forward_lm(
 // Incremental decode (KV cache)
 // ---------------------------------------------------------------------------
 
-/// One layer's borrowed K/V lanes, in whatever numeric format the store
-/// keeps them. The forwards dispatch attention on this: fp32 lanes run the
-/// dense [`crate::tensor::attend_head`] loops (bit-identical to the
-/// pre-packed-KV engine), packed lanes run the fused dequant kernels
-/// ([`crate::tensor::lut_attend`]) which expand `lut[code] * scale` inline
-/// — bit-identical to dequantizing the lanes first.
-#[derive(Clone, Copy)]
+/// One layer's borrowed K/V lanes, in whatever numeric format *and
+/// layout* the store keeps them. The forwards dispatch attention on this:
+/// fp32 lanes run the dense [`crate::tensor::attend_head`] loops
+/// (bit-identical to the pre-packed-KV engine), packed lanes run the fused
+/// dequant kernels ([`crate::tensor::lut_attend`]) which expand
+/// `lut[code] * scale` inline — bit-identical to dequantizing the lanes
+/// first. The `Paged*` variants carry a *block table* — position `j` lives
+/// at row `j % page_rows` of page `j / page_rows` — and run the
+/// page-walking kernels, which visit positions in the identical order (and
+/// bits) as the contiguous ones.
+#[derive(Clone)]
 pub enum KvLanes<'a> {
     /// Dense lanes: `[capacity, d_model]` row-major by position, K and V.
     F32 { k: &'a [f32], v: &'a [f32] },
     /// Packed 4-bit lanes (nibble codes + per-block scales + LUT).
     Packed4 { k: crate::tensor::PackedLane<'a>, v: crate::tensor::PackedLane<'a> },
+    /// Dense lanes split across fixed-size pages: entry `p` holds
+    /// `[page_rows, d_model]` values (the last page may be partial).
+    PagedF32 { k: Vec<&'a [f32]>, v: Vec<&'a [f32]>, page_rows: usize },
+    /// Packed 4-bit lanes split across fixed-size pages (per page:
+    /// `[page_rows, d/2]` codes + `[page_rows, d/block]` scales).
+    PagedPacked4 {
+        k_codes: Vec<&'a [u8]>,
+        k_scales: Vec<&'a [f32]>,
+        v_codes: Vec<&'a [u8]>,
+        v_scales: Vec<&'a [f32]>,
+        lut: &'a [f32; 16],
+        d: usize,
+        block: usize,
+        page_rows: usize,
+    },
 }
 
 /// Backing store for one sequence's per-layer keys/values during incremental
@@ -235,6 +254,23 @@ enum SeqStore {
         k_scales: Vec<Vec<f32>>,
         v_codes: Vec<Vec<u8>>,
         v_scales: Vec<Vec<f32>>,
+    },
+    /// Paged fp32: `[layer][page]` buffers of `page_rows * d` values,
+    /// allocated on demand as the sequence grows — the owned-sequence
+    /// mirror of the serving engine's paged slot pool.
+    PagedF32 {
+        page_rows: usize,
+        k: Vec<Vec<Vec<f32>>>,
+        v: Vec<Vec<Vec<f32>>>,
+    },
+    /// Paged packed 4-bit: per layer, per page, codes + scales buffers.
+    PagedPacked4 {
+        fmt: crate::quant::KvFormat,
+        page_rows: usize,
+        k_codes: Vec<Vec<Vec<u8>>>,
+        k_scales: Vec<Vec<Vec<f32>>>,
+        v_codes: Vec<Vec<Vec<u8>>>,
+        v_scales: Vec<Vec<Vec<f32>>>,
     },
 }
 
@@ -289,9 +325,69 @@ impl SeqKvCache {
         }
     }
 
+    /// Paged fp32 cache for a zoo model: positions live in on-demand
+    /// `page_rows`-position pages instead of one contiguous lane. Lanes
+    /// come back as [`KvLanes::PagedF32`], driving the page-walking
+    /// attention kernels — bit-identical to the contiguous store.
+    pub fn paged(cfg: &ModelConfig, page_rows: usize) -> SeqKvCache {
+        SeqKvCache::paged_with_capacity(cfg.n_layers, cfg.d_model, cfg.seq, page_rows)
+    }
+
+    pub fn paged_with_capacity(
+        n_layers: usize,
+        d_model: usize,
+        capacity: usize,
+        page_rows: usize,
+    ) -> SeqKvCache {
+        assert!(page_rows > 0, "degenerate page size");
+        SeqKvCache {
+            store: SeqStore::PagedF32 {
+                page_rows,
+                k: (0..n_layers).map(|_| Vec::new()).collect(),
+                v: (0..n_layers).map(|_| Vec::new()).collect(),
+            },
+            len: 0,
+            capacity,
+            d: d_model,
+        }
+    }
+
+    /// Paged packed 4-bit cache (`block = d_head`): page-granular code and
+    /// scale storage, attended through the paged fused dequant kernels.
+    pub fn paged_packed(
+        cfg: &ModelConfig,
+        spec: &crate::formats::FormatSpec,
+        page_rows: usize,
+    ) -> SeqKvCache {
+        let fmt = crate::quant::KvFormat::for_model(spec, cfg);
+        assert!(page_rows > 0, "degenerate page size");
+        assert_eq!(cfg.d_model % fmt.block, 0, "block {} does not divide d {}", fmt.block, cfg.d_model);
+        SeqKvCache {
+            store: SeqStore::PagedPacked4 {
+                fmt,
+                page_rows,
+                k_codes: (0..cfg.n_layers).map(|_| Vec::new()).collect(),
+                k_scales: (0..cfg.n_layers).map(|_| Vec::new()).collect(),
+                v_codes: (0..cfg.n_layers).map(|_| Vec::new()).collect(),
+                v_scales: (0..cfg.n_layers).map(|_| Vec::new()).collect(),
+            },
+            len: 0,
+            capacity: cfg.seq,
+            d: cfg.d_model,
+        }
+    }
+
     /// Forget all committed positions (buffers are overwritten on reuse).
     pub fn reset(&mut self) {
         self.len = 0;
+    }
+}
+
+/// Grow a per-layer page list so `page` exists, zero-filled at `elems`
+/// elements per page.
+fn ensure_page<T: Clone + Default>(pages: &mut Vec<Vec<T>>, page: usize, elems: usize) {
+    while pages.len() <= page {
+        pages.push(vec![T::default(); elems]);
     }
 }
 
@@ -327,6 +423,31 @@ impl KvStore for SeqKvCache {
                     &mut v_scales[layer][pos * sb..(pos + 1) * sb],
                 );
             }
+            SeqStore::PagedF32 { page_rows, k, v } => {
+                let (page, r) = (pos / *page_rows, pos % *page_rows);
+                ensure_page(&mut k[layer], page, *page_rows * d);
+                ensure_page(&mut v[layer], page, *page_rows * d);
+                k[layer][page][r * d..(r + 1) * d].copy_from_slice(k_row);
+                v[layer][page][r * d..(r + 1) * d].copy_from_slice(v_row);
+            }
+            SeqStore::PagedPacked4 { fmt, page_rows, k_codes, k_scales, v_codes, v_scales } => {
+                let (cb, sb) = (fmt.codes_per_row(d), fmt.scales_per_row(d));
+                let (page, r) = (pos / *page_rows, pos % *page_rows);
+                ensure_page(&mut k_codes[layer], page, *page_rows * cb);
+                ensure_page(&mut k_scales[layer], page, *page_rows * sb);
+                ensure_page(&mut v_codes[layer], page, *page_rows * cb);
+                ensure_page(&mut v_scales[layer], page, *page_rows * sb);
+                fmt.encode_row(
+                    k_row,
+                    &mut k_codes[layer][page][r * cb..(r + 1) * cb],
+                    &mut k_scales[layer][page][r * sb..(r + 1) * sb],
+                );
+                fmt.encode_row(
+                    v_row,
+                    &mut v_codes[layer][page][r * cb..(r + 1) * cb],
+                    &mut v_scales[layer][page][r * sb..(r + 1) * sb],
+                );
+            }
         }
     }
 
@@ -337,6 +458,23 @@ impl KvStore for SeqKvCache {
                 KvLanes::Packed4 {
                     k: fmt.lane(&k_codes[layer], &k_scales[layer], self.d),
                     v: fmt.lane(&v_codes[layer], &v_scales[layer], self.d),
+                }
+            }
+            SeqStore::PagedF32 { page_rows, k, v } => KvLanes::PagedF32 {
+                k: k[layer].iter().map(|p| p.as_slice()).collect(),
+                v: v[layer].iter().map(|p| p.as_slice()).collect(),
+                page_rows: *page_rows,
+            },
+            SeqStore::PagedPacked4 { fmt, page_rows, k_codes, k_scales, v_codes, v_scales } => {
+                KvLanes::PagedPacked4 {
+                    k_codes: k_codes[layer].iter().map(|p| p.as_slice()).collect(),
+                    k_scales: k_scales[layer].iter().map(|p| p.as_slice()).collect(),
+                    v_codes: v_codes[layer].iter().map(|p| p.as_slice()).collect(),
+                    v_scales: v_scales[layer].iter().map(|p| p.as_slice()).collect(),
+                    lut: &fmt.lut,
+                    d: self.d,
+                    block: fmt.block,
+                    page_rows: *page_rows,
                 }
             }
         }
@@ -384,6 +522,51 @@ fn attend_lanes(
         }
         KvLanes::Packed4 { k, v } => {
             crate::tensor::lut_attend(q_row, k, v, heads, rows, scale, att, ctx_row);
+        }
+        KvLanes::PagedF32 { k, v, page_rows } => {
+            for head in 0..heads {
+                let off = head * dh;
+                crate::tensor::attend_head_paged(
+                    &q_row[off..off + dh],
+                    &k,
+                    &v,
+                    page_rows,
+                    d,
+                    off,
+                    rows,
+                    scale,
+                    att,
+                    &mut ctx_row[off..off + dh],
+                );
+            }
+        }
+        KvLanes::PagedPacked4 {
+            k_codes,
+            k_scales,
+            v_codes,
+            v_scales,
+            lut,
+            d: lane_d,
+            block,
+            page_rows,
+        } => {
+            let k = crate::tensor::PagedPackedLane {
+                pages_codes: &k_codes,
+                pages_scales: &k_scales,
+                lut,
+                d: lane_d,
+                block,
+                page_rows,
+            };
+            let v = crate::tensor::PagedPackedLane {
+                pages_codes: &v_codes,
+                pages_scales: &v_scales,
+                lut,
+                d: lane_d,
+                block,
+                page_rows,
+            };
+            crate::tensor::lut_attend_paged(q_row, k, v, heads, rows, scale, att, ctx_row);
         }
     }
 }
@@ -1001,6 +1184,32 @@ mod tests {
         assert_eq!(a.data(), a2.data(), "reset packed cache replays identically");
         let b2 = forward_lm_step(&cfg, &p, 7, &mut kv).unwrap();
         assert_eq!(b.data(), b2.data());
+    }
+
+    #[test]
+    fn paged_seq_cache_is_bit_identical_to_contiguous() {
+        // page boundaries (page_rows 4, 16 steps) must never change a bit:
+        // the paged store drives the page-walking kernels over the same
+        // values the contiguous store attends in one run
+        let cfg = zoo("nano").unwrap();
+        let p = random_ckpt(&cfg, 13);
+        let tokens: Vec<i32> = (0..16).map(|i| (i * 11 + 2) % cfg.vocab as i32).collect();
+        let mut flat = SeqKvCache::new(&cfg);
+        let mut paged = SeqKvCache::paged(&cfg, 4);
+        for (i, &t) in tokens.iter().enumerate() {
+            let a = forward_lm_step(&cfg, &p, t, &mut flat).unwrap();
+            let b = forward_lm_step(&cfg, &p, t, &mut paged).unwrap();
+            assert_eq!(a.data(), b.data(), "step {i}: fp32 paging changed bits");
+        }
+        // packed lanes: paged codes/scales attend identically to contiguous
+        let spec = crate::formats::must("sf4");
+        let mut flat = SeqKvCache::packed(&cfg, &spec);
+        let mut paged = SeqKvCache::paged_packed(&cfg, &spec, 4);
+        for (i, &t) in tokens.iter().enumerate() {
+            let a = forward_lm_step(&cfg, &p, t, &mut flat).unwrap();
+            let b = forward_lm_step(&cfg, &p, t, &mut paged).unwrap();
+            assert_eq!(a.data(), b.data(), "step {i}: packed paging changed bits");
+        }
     }
 
     #[test]

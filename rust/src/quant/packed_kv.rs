@@ -89,6 +89,23 @@ impl KvFormat {
         self.codes_per_row(d) + self.scales_per_row(d) * 4
     }
 
+    /// Packed code bytes one `page_rows`-position page holds — the
+    /// page-granular storage unit of the paged KV cache (one K or V page
+    /// of one layer).
+    pub fn codes_per_page(&self, d: usize, page_rows: usize) -> usize {
+        page_rows * self.codes_per_row(d)
+    }
+
+    /// Scale entries one `page_rows`-position page holds.
+    pub fn scales_per_page(&self, d: usize, page_rows: usize) -> usize {
+        page_rows * self.scales_per_row(d)
+    }
+
+    /// Storage bytes one page holds (codes + scales), for one of K or V.
+    pub fn page_bytes(&self, d: usize, page_rows: usize) -> usize {
+        page_rows * self.row_bytes(d)
+    }
+
     /// Quantize one K/V row: per block, an absmax scale (`block_scale_enc`
     /// with [`Calib::None`], exactly the weight RTN policy) and nibble
     /// codes from `Encoder::encode_block` over the normalized values.
@@ -164,6 +181,17 @@ mod tests {
         assert_eq!(f.row_bytes(64), 32 + 16);
         // >= 5x less traffic than the fp32 row (64 * 4 = 256 bytes)
         assert!(f.row_bytes(64) * 5 <= 64 * 4);
+    }
+
+    #[test]
+    fn page_geometry_scales_row_geometry() {
+        // a page is page_rows rows, exactly — the paged cache's storage
+        // accounting hangs off these
+        let f = fmt("sf4", 16);
+        assert_eq!(f.codes_per_page(64, 16), 16 * 32);
+        assert_eq!(f.scales_per_page(64, 16), 16 * 4);
+        assert_eq!(f.page_bytes(64, 16), 16 * f.row_bytes(64));
+        assert_eq!(f.page_bytes(64, 1), f.row_bytes(64));
     }
 
     #[test]

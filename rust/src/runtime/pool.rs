@@ -351,6 +351,61 @@ mod tests {
     }
 
     #[test]
+    fn repeated_panic_rounds_never_poison_the_pool() {
+        // the containment contract, exercised repeatedly: a panicking task
+        // (even several per dispatch) re-panics at the dispatcher but must
+        // leave every worker alive, and the very next dispatch — in the
+        // same round — must run all its tasks to completion
+        for round in 0..3 {
+            let boom = std::panic::catch_unwind(|| {
+                global().scoped(vec![
+                    Box::new(|| panic!("round {round} boom a")) as Box<dyn FnOnce() + Send + '_>,
+                    Box::new(|| panic!("round {round} boom b")) as Box<dyn FnOnce() + Send + '_>,
+                    Box::new(|| ()) as Box<dyn FnOnce() + Send + '_>,
+                ]);
+            });
+            assert!(boom.is_err(), "round {round}: dispatcher must re-panic");
+            let hit = AtomicUsize::new(0);
+            let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = (0..5)
+                .map(|_| {
+                    Box::new(|| {
+                        hit.fetch_add(1, Ordering::Relaxed);
+                    }) as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect();
+            global().scoped(tasks);
+            assert_eq!(hit.load(Ordering::Relaxed), 5, "round {round}: pool still dispatches");
+        }
+    }
+
+    #[test]
+    fn stats_since_subtracts_every_counter() {
+        let earlier =
+            PoolStats { workers: 4, dispatches: 10, pool_tasks: 30, caller_tasks: 12 };
+        let later = PoolStats { workers: 4, dispatches: 13, pool_tasks: 45, caller_tasks: 20 };
+        let d = later.since(&earlier);
+        assert_eq!(d.workers, 4);
+        assert_eq!(d.dispatches, 3);
+        assert_eq!(d.pool_tasks, 15);
+        assert_eq!(d.caller_tasks, 8);
+    }
+
+    #[test]
+    fn utilization_bounds_and_degenerate_cases() {
+        // no dispatches or no workers -> 0, never NaN/inf
+        let idle = PoolStats { workers: 4, dispatches: 0, pool_tasks: 0, caller_tasks: 9 };
+        assert_eq!(idle.utilization(), 0.0);
+        let solo = PoolStats { workers: 0, dispatches: 7, pool_tasks: 0, caller_tasks: 7 };
+        assert_eq!(solo.utilization(), 0.0);
+        // half the offered worker slots ran pool tasks
+        let half = PoolStats { workers: 4, dispatches: 2, pool_tasks: 4, caller_tasks: 2 };
+        assert!((half.utilization() - 0.5).abs() < 1e-12);
+        // over-subscribed dispatches cap at 1.0
+        let hot = PoolStats { workers: 2, dispatches: 1, pool_tasks: 9, caller_tasks: 0 };
+        assert_eq!(hot.utilization(), 1.0);
+    }
+
+    #[test]
     fn stats_count_dispatches_and_tasks() {
         let before = stats();
         let tasks: Vec<Box<dyn FnOnce() + Send + '_>> =

@@ -1,54 +1,145 @@
-//! Slot-pool KV cache: preallocated per-layer key/value storage for a fixed
-//! number of concurrent sequences, in either of two lane formats.
+//! Paged slot-pool KV cache: a global pool of fixed-size *pages* plus a
+//! per-sequence *block table*, in either of two lane formats.
 //!
-//! Each *slot* holds one sequence's cache — per layer, `[capacity, d_model]`
-//! fp32 lanes for K and V, **or** packed 4-bit lanes (nibble codes +
-//! per-block scales, `quant::KvFormat`) at ~8x less storage — and is handed
-//! to the incremental forward through [`SlotView`], which implements
-//! [`crate::nn::KvStore`]. The format is chosen once per cache
-//! ([`KvCache::new`] vs [`KvCache::new_packed`]); the forwards dispatch on
-//! [`crate::nn::KvLanes`], so fp32 pools behave bit-identically to the
-//! pre-packed engine.
+//! The pre-PR-5 cache reserved one worst-case contiguous lane
+//! (`capacity × d_model` per layer) per concurrent sequence, so admission
+//! capacity was `slots × capacity` positions even when every live sequence
+//! held a fraction of that. Now storage is `pages × page_size` positions of
+//! K and V per layer — fp32 values, **or** packed 4-bit codes + per-block
+//! scales (`quant::KvFormat`, page-granular) — and each sequence owns only
+//! the pages its committed positions actually cover, listed in its block
+//! table. Position `j` of a sequence lives at row `j % page_size` of page
+//! `table[j / page_size]`. Pages are claimed on demand as sequences grow
+//! (one `try_reserve` ahead of each append) and returned — zeroed — when
+//! the sequence retires or is preempted, so many long-context sequences
+//! admit against the same physical pool.
 //!
-//! Allocation is a LIFO free list; freeing a retired sequence's slot zeroes
-//! its written lanes (a reused slot must never observe a prior session's
-//! K/V — defense in depth on top of the `len = 0` reset) and makes it
-//! immediately available to the next admitted request (continuous
-//! batching). All K/V storage is allocated once at engine start; per-step
-//! work allocates only transient [`SlotView`]s.
+//! Views ([`SlotView`], via [`KvCache::slots_mut`]) implement
+//! [`crate::nn::KvStore`] and hand the forwards a *block table* of page
+//! slices ([`crate::nn::KvLanes::PagedF32`] / `PagedPacked4`); the
+//! page-walking attention kernels visit positions in exactly the
+//! contiguous order, so paging changes where rows live, never any bit of
+//! the result (`rust/tests/paged_kv.rs`).
+//!
+//! Allocation is LIFO at both granularities (slots = block tables, pages).
+//! Freed pages are zeroed before returning to the pool (a reused page must
+//! never leak a prior session's K/V). All storage is allocated once at
+//! engine start; per-step work allocates only transient views.
 
 use crate::model_io::ModelConfig;
 use crate::nn::{KvLanes, KvStore};
 use crate::quant::KvFormat;
 
-/// Index of one sequence's cache lane.
+use anyhow::Result;
+
+/// Index of one sequence's block table.
 pub type SlotId = usize;
 
-/// Cache geometry. `capacity` is positions per slot (≤ the model's
-/// positional window for the pure-Rust path).
+/// Index of one page in the pool.
+pub type PageId = usize;
+
+/// Default positions per page: small enough that a short sequence wastes
+/// at most 15 positions of tail fragmentation, large enough that block
+/// tables and page-walk overhead stay negligible (vLLM's default block).
+pub const DEFAULT_PAGE_SIZE: usize = 16;
+
+/// Cache geometry. `capacity` is the most positions one sequence may hold
+/// (≤ the model's positional window for the pure-Rust path); `pages ×
+/// page_size` is the pool — the *physical* admission capacity, which the
+/// paged layout lets sit well below the worst case `slots × capacity`.
 #[derive(Clone, Copy, Debug)]
 pub struct KvCacheConfig {
     pub slots: usize,
     pub capacity: usize,
     pub n_layers: usize,
     pub d_model: usize,
+    pub page_size: usize,
+    pub pages: usize,
 }
 
 impl KvCacheConfig {
-    /// Geometry for a zoo model: one slot per concurrent sequence, capacity
-    /// equal to the positional window.
+    /// Overflow-checked constructor: absurd geometries (the old
+    /// `max_seq × slots` unchecked multiplication could wrap) error
+    /// instead of wrapping into a tiny allocation.
+    pub fn try_new(
+        slots: usize,
+        capacity: usize,
+        n_layers: usize,
+        d_model: usize,
+        page_size: usize,
+        pages: usize,
+    ) -> Result<KvCacheConfig> {
+        anyhow::ensure!(
+            slots > 0 && capacity > 0 && n_layers > 0 && d_model > 0,
+            "degenerate cache geometry: slots {slots}, capacity {capacity}, \
+             layers {n_layers}, d_model {d_model}"
+        );
+        anyhow::ensure!(page_size > 0 && pages > 0, "degenerate page pool: {pages} x {page_size}");
+        let cfg = KvCacheConfig { slots, capacity, n_layers, d_model, page_size, pages };
+        anyhow::ensure!(
+            slots.checked_mul(capacity).is_some() && cfg.checked_bytes().is_some(),
+            "KV cache geometry overflows usize: {cfg:?}"
+        );
+        Ok(cfg)
+    }
+
+    /// Geometry for a zoo model: worst-case pool (every slot can hold a
+    /// full positional window), default page size — the same admission
+    /// capacity as the old contiguous layout, in pages.
     pub fn for_model(cfg: &ModelConfig, slots: usize) -> KvCacheConfig {
-        KvCacheConfig { slots, capacity: cfg.seq, n_layers: cfg.n_layers, d_model: cfg.d_model }
+        let slots = slots.max(1);
+        let page_size = DEFAULT_PAGE_SIZE.min(cfg.seq.max(1));
+        KvCacheConfig {
+            slots,
+            capacity: cfg.seq,
+            n_layers: cfg.n_layers,
+            d_model: cfg.d_model,
+            page_size,
+            pages: slots * cfg.seq.div_ceil(page_size),
+        }
+    }
+
+    /// Positions the page pool physically holds.
+    pub fn pool_positions(&self) -> usize {
+        self.pages * self.page_size
+    }
+
+    /// Pages a sequence of `positions` committed positions occupies.
+    pub fn pages_for(&self, positions: usize) -> usize {
+        positions.div_ceil(self.page_size)
+    }
+
+    /// Pages one full-capacity sequence occupies (the worst case a single
+    /// admission can grow to).
+    pub fn seq_pages(&self) -> usize {
+        self.capacity.div_ceil(self.page_size)
+    }
+
+    /// Bytes one cached position occupies across K+V for one layer in
+    /// **fp32** lanes — the single source the byte accounting derives from
+    /// (packed caches scale this down; see [`KvCache::position_bytes`]).
+    pub fn position_bytes_f32(&self) -> usize {
+        2 * self.d_model * std::mem::size_of::<f32>()
+    }
+
+    fn checked_bytes(&self) -> Option<usize> {
+        self.pages
+            .checked_mul(self.page_size)?
+            .checked_mul(self.n_layers)?
+            .checked_mul(2usize.checked_mul(self.d_model)?.checked_mul(4)?)
     }
 
     /// Bytes of K+V storage the **fp32** lane format preallocates for this
-    /// geometry (packed caches store less — see [`KvCache::bytes`]).
+    /// geometry — derived from [`Self::position_bytes_f32`], not a second
+    /// copy of the formula.
     pub fn bytes(&self) -> usize {
-        2 * self.n_layers * self.slots * self.capacity * self.d_model * std::mem::size_of::<f32>()
+        self.n_layers * self.pool_positions() * self.position_bytes_f32()
     }
 }
 
-/// Per-layer lane storage, one flat buffer per layer sliced per slot.
+/// Per-layer lane storage: one flat buffer per layer, sliced into
+/// page-sized chunks on access (page `p` holds rows
+/// `p * page_size .. (p + 1) * page_size`).
 enum PoolStore {
     F32 {
         k: Vec<Vec<f32>>,
@@ -63,41 +154,46 @@ enum PoolStore {
     },
 }
 
-/// The pool. K and V are stored per layer as one flat buffer each (fp32
-/// values, or packed codes + scales), sliced per slot on access.
+/// The paged pool. See the module docs for the layout.
 pub struct KvCache {
     cfg: KvCacheConfig,
     store: PoolStore,
+    /// Per-slot block table: the pages holding this sequence, in position
+    /// order. Empty for free slots.
+    tables: Vec<Vec<PageId>>,
     /// Committed positions per slot.
     lens: Vec<usize>,
     in_use: Vec<bool>,
-    free: Vec<SlotId>,
+    free_slots: Vec<SlotId>,
+    free_pages: Vec<PageId>,
 }
 
 impl KvCache {
-    /// Dense fp32 lanes (the default; bit-identical to the pre-packed-KV
-    /// engine).
+    /// Dense fp32 lanes (the default; bit-identical results to the
+    /// contiguous engine).
     pub fn new(cfg: KvCacheConfig) -> KvCache {
-        assert!(cfg.slots > 0 && cfg.capacity > 0, "degenerate cache geometry {cfg:?}");
-        let lane = cfg.slots * cfg.capacity * cfg.d_model;
+        Self::assert_geometry(&cfg);
+        let lane = cfg.pool_positions() * cfg.d_model;
         KvCache {
             store: PoolStore::F32 {
                 k: (0..cfg.n_layers).map(|_| vec![0.0; lane]).collect(),
                 v: (0..cfg.n_layers).map(|_| vec![0.0; lane]).collect(),
             },
+            tables: vec![Vec::new(); cfg.slots],
             lens: vec![0; cfg.slots],
             in_use: vec![false; cfg.slots],
-            free: (0..cfg.slots).rev().collect(),
+            free_slots: (0..cfg.slots).rev().collect(),
+            free_pages: (0..cfg.pages).rev().collect(),
             cfg,
         }
     }
 
     /// Packed 4-bit lanes: K/V rows are quantized on append
-    /// (`KvFormat::encode_row`) and dequantized inside the fused attention
-    /// kernels — ~8x less cache storage and ~5x less read traffic per
-    /// decode step than fp32 lanes.
+    /// (`KvFormat::encode_row`) into page-granular code/scale storage and
+    /// dequantized inside the fused attention kernels — ~8x less cache
+    /// storage and ~5x less read traffic per decode step than fp32 lanes.
     pub fn new_packed(cfg: KvCacheConfig, fmt: KvFormat) -> KvCache {
-        assert!(cfg.slots > 0 && cfg.capacity > 0, "degenerate cache geometry {cfg:?}");
+        Self::assert_geometry(&cfg);
         assert_eq!(
             cfg.d_model % fmt.block,
             0,
@@ -105,7 +201,7 @@ impl KvCache {
             fmt.block,
             cfg.d_model
         );
-        let positions = cfg.slots * cfg.capacity;
+        let positions = cfg.pool_positions();
         let cb = positions * fmt.codes_per_row(cfg.d_model);
         let sb = positions * fmt.scales_per_row(cfg.d_model);
         KvCache {
@@ -116,11 +212,32 @@ impl KvCache {
                 v_scales: (0..cfg.n_layers).map(|_| vec![0.0f32; sb]).collect(),
                 fmt,
             },
+            tables: vec![Vec::new(); cfg.slots],
             lens: vec![0; cfg.slots],
             in_use: vec![false; cfg.slots],
-            free: (0..cfg.slots).rev().collect(),
+            free_slots: (0..cfg.slots).rev().collect(),
+            free_pages: (0..cfg.pages).rev().collect(),
             cfg,
         }
+    }
+
+    fn assert_geometry(cfg: &KvCacheConfig) {
+        assert!(
+            cfg.slots > 0 && cfg.capacity > 0 && cfg.page_size > 0 && cfg.pages > 0,
+            "degenerate cache geometry {cfg:?}"
+        );
+        assert!(
+            KvCacheConfig::try_new(
+                cfg.slots,
+                cfg.capacity,
+                cfg.n_layers,
+                cfg.d_model,
+                cfg.page_size,
+                cfg.pages
+            )
+            .is_ok(),
+            "cache geometry overflows {cfg:?}"
+        );
     }
 
     pub fn config(&self) -> &KvCacheConfig {
@@ -138,20 +255,48 @@ impl KvCache {
     /// Bytes one cached position occupies across K+V for **one** layer —
     /// the unit of KV read traffic per attended position per layer.
     pub fn position_bytes(&self) -> usize {
-        let d = self.cfg.d_model;
         match &self.store {
-            PoolStore::F32 { .. } => 2 * d * 4,
-            PoolStore::Packed4 { fmt, .. } => 2 * fmt.row_bytes(d),
+            PoolStore::F32 { .. } => self.cfg.position_bytes_f32(),
+            PoolStore::Packed4 { fmt, .. } => 2 * fmt.row_bytes(self.cfg.d_model),
         }
     }
 
-    /// Actual bytes of K+V lane storage this pool holds.
+    /// Actual bytes of K+V lane storage this pool holds — derived from
+    /// [`Self::position_bytes`] over the pool's positions, one formula for
+    /// both lane formats.
     pub fn bytes(&self) -> usize {
-        self.cfg.n_layers * self.cfg.slots * self.cfg.capacity * self.position_bytes()
+        self.cfg.n_layers * self.cfg.pool_positions() * self.position_bytes()
     }
 
+    /// Most positions one sequence may hold.
     pub fn capacity(&self) -> usize {
         self.cfg.capacity
+    }
+
+    pub fn page_size(&self) -> usize {
+        self.cfg.page_size
+    }
+
+    pub fn pages_total(&self) -> usize {
+        self.cfg.pages
+    }
+
+    pub fn pages_free(&self) -> usize {
+        self.free_pages.len()
+    }
+
+    pub fn pages_in_use(&self) -> usize {
+        self.cfg.pages - self.free_pages.len()
+    }
+
+    /// Pages a sequence of `positions` occupies (delegates to the config).
+    pub fn pages_for(&self, positions: usize) -> usize {
+        self.cfg.pages_for(positions)
+    }
+
+    /// Pages one slot's block table currently holds.
+    pub fn pages_held(&self, slot: SlotId) -> usize {
+        self.tables[slot].len()
     }
 
     pub fn slots_total(&self) -> usize {
@@ -159,85 +304,109 @@ impl KvCache {
     }
 
     pub fn slots_free(&self) -> usize {
-        self.free.len()
+        self.free_slots.len()
     }
 
     pub fn slots_in_use(&self) -> usize {
-        self.cfg.slots - self.free.len()
+        self.cfg.slots - self.free_slots.len()
     }
 
-    /// Fraction of slots occupied, in [0, 1].
+    /// Fraction of block-table slots occupied, in [0, 1].
     pub fn occupancy(&self) -> f64 {
         self.slots_in_use() as f64 / self.cfg.slots as f64
     }
 
-    /// Claim a free slot with an empty cache; `None` when the pool is full.
+    /// Tail waste of the current allocation, in [0, 1]: the fraction of
+    /// held page positions no committed row occupies. 0 when nothing is
+    /// held. High fragmentation means the page size is too coarse for the
+    /// live sequence lengths.
+    pub fn page_fragmentation(&self) -> f64 {
+        let held = self.pages_in_use() * self.cfg.page_size;
+        if held == 0 {
+            return 0.0;
+        }
+        let live: usize = (0..self.cfg.slots).filter(|&s| self.in_use[s]).map(|s| self.lens[s]).sum();
+        1.0 - live as f64 / held as f64
+    }
+
+    /// Claim a free slot (an empty block table); `None` when every table
+    /// is taken. Claims **no pages** — they arrive on demand as the
+    /// sequence appends.
     pub fn allocate(&mut self) -> Option<SlotId> {
-        let slot = self.free.pop()?;
+        let slot = self.free_slots.pop()?;
         debug_assert!(!self.in_use[slot]);
+        debug_assert!(self.tables[slot].is_empty(), "free slot kept pages");
         self.in_use[slot] = true;
         self.lens[slot] = 0;
         Some(slot)
     }
 
-    /// Return a slot to the pool, zeroing every lane row the retiring
-    /// session wrote (committed positions plus one — a failed batch step
-    /// can leave an appended-but-uncommitted row). Reused slots therefore
-    /// never observe a prior session's K/V even through a raw-lane bug.
-    /// Panics on double-free (an engine bug).
+    /// Return a slot to the pool: every page in its block table is zeroed
+    /// (a reused page must never observe a prior session's K/V — including
+    /// an appended-but-uncommitted row from a failed batch step) and
+    /// returned to the free list. Panics on double-free (an engine bug).
     pub fn free(&mut self, slot: SlotId) {
         assert!(self.in_use[slot], "freeing slot {slot} that is not in use");
-        self.clear_slot(slot);
+        let pages = std::mem::take(&mut self.tables[slot]);
+        for &page in &pages {
+            self.clear_page(page);
+        }
+        self.free_pages.extend(pages);
+        self.lens[slot] = 0;
         self.in_use[slot] = false;
-        self.free.push(slot);
+        self.free_slots.push(slot);
     }
 
-    /// Zero one slot's written rows in every layer's K and V lanes.
-    fn clear_slot(&mut self, slot: SlotId) {
-        let rows = (self.lens[slot] + 1).min(self.cfg.capacity);
+    /// Zero one page in every layer's K and V lanes.
+    fn clear_page(&mut self, page: PageId) {
         let d = self.cfg.d_model;
         match &mut self.store {
             PoolStore::F32 { k, v } => {
-                let lane = self.cfg.capacity * d;
+                let lane = self.cfg.page_size * d;
                 for layer in k.iter_mut().chain(v.iter_mut()) {
-                    layer[slot * lane..slot * lane + rows * d].fill(0.0);
+                    layer[page * lane..(page + 1) * lane].fill(0.0);
                 }
             }
             PoolStore::Packed4 { fmt, k_codes, k_scales, v_codes, v_scales } => {
-                let (cr, sr) = (fmt.codes_per_row(d), fmt.scales_per_row(d));
-                let (clane, slane) = (self.cfg.capacity * cr, self.cfg.capacity * sr);
+                let clane = fmt.codes_per_page(d, self.cfg.page_size);
+                let slane = fmt.scales_per_page(d, self.cfg.page_size);
                 for layer in k_codes.iter_mut().chain(v_codes.iter_mut()) {
-                    layer[slot * clane..slot * clane + rows * cr].fill(0);
+                    layer[page * clane..(page + 1) * clane].fill(0);
                 }
                 for layer in k_scales.iter_mut().chain(v_scales.iter_mut()) {
-                    layer[slot * slane..slot * slane + rows * sr].fill(0.0);
+                    layer[page * slane..(page + 1) * slane].fill(0.0);
                 }
             }
         }
     }
 
-    /// True when every byte of this slot's K/V lanes is zero — the
-    /// invariant [`KvCache::free`] establishes (regression surface for the
-    /// reused-slot isolation tests).
-    pub fn slot_is_zeroed(&self, slot: SlotId) -> bool {
+    /// True when every byte of one page's K/V storage is zero.
+    pub fn page_is_zeroed(&self, page: PageId) -> bool {
         let d = self.cfg.d_model;
         match &self.store {
             PoolStore::F32 { k, v } => {
-                let lane = self.cfg.capacity * d;
+                let lane = self.cfg.page_size * d;
                 k.iter().chain(v.iter()).all(|layer| {
-                    layer[slot * lane..(slot + 1) * lane].iter().all(|&x| x == 0.0)
+                    layer[page * lane..(page + 1) * lane].iter().all(|&x| x == 0.0)
                 })
             }
             PoolStore::Packed4 { fmt, k_codes, k_scales, v_codes, v_scales } => {
-                let clane = self.cfg.capacity * fmt.codes_per_row(d);
-                let slane = self.cfg.capacity * fmt.scales_per_row(d);
+                let clane = fmt.codes_per_page(d, self.cfg.page_size);
+                let slane = fmt.scales_per_page(d, self.cfg.page_size);
                 k_codes.iter().chain(v_codes.iter()).all(|layer| {
-                    layer[slot * clane..(slot + 1) * clane].iter().all(|&x| x == 0)
+                    layer[page * clane..(page + 1) * clane].iter().all(|&x| x == 0)
                 }) && k_scales.iter().chain(v_scales.iter()).all(|layer| {
-                    layer[slot * slane..(slot + 1) * slane].iter().all(|&x| x == 0.0)
+                    layer[page * slane..(page + 1) * slane].iter().all(|&x| x == 0.0)
                 })
             }
         }
+    }
+
+    /// True when every free-list page is fully zeroed — the invariant
+    /// [`KvCache::free`] establishes (regression surface for the
+    /// reused-page isolation tests).
+    pub fn free_pages_are_zeroed(&self) -> bool {
+        self.free_pages.iter().all(|&p| self.page_is_zeroed(p))
     }
 
     /// Committed positions in one slot.
@@ -245,40 +414,73 @@ impl KvCache {
         self.lens[slot]
     }
 
-    /// Borrow one slot's lanes as a [`KvStore`] for the incremental forward.
+    /// True when this slot's next append needs a page its block table does
+    /// not yet hold — the engine's per-step page-pressure accounting.
+    pub fn next_append_needs_page(&self, slot: SlotId) -> bool {
+        self.lens[slot] < self.cfg.capacity
+            && self.lens[slot] >= self.tables[slot].len() * self.cfg.page_size
+    }
+
+    /// Grow one slot's block table (from the free list) until it covers
+    /// `positions` committed positions (clamped to `capacity`). Returns
+    /// `false` — leaving any pages already claimed in place — when the
+    /// pool runs dry; the engine resolves that by preempting a victim.
+    pub fn try_reserve(&mut self, slot: SlotId, positions: usize) -> bool {
+        assert!(self.in_use[slot], "reserving for slot {slot} that is not in use");
+        let target = self.cfg.pages_for(positions.min(self.cfg.capacity));
+        while self.tables[slot].len() < target {
+            match self.free_pages.pop() {
+                Some(page) => self.tables[slot].push(page),
+                None => return false,
+            }
+        }
+        true
+    }
+
+    /// Borrow one slot's lanes as a [`KvStore`] for the incremental
+    /// forward (reserves room for one append, like [`Self::slots_mut`]).
     pub fn slot(&mut self, slot: SlotId) -> SlotView<'_> {
         assert!(self.in_use[slot], "viewing slot {slot} that is not in use");
         self.slots_mut(&[slot]).pop().expect("one view for one id")
     }
 
     /// Borrow several *distinct* slots' lanes at once — the fused batched
-    /// decode step (`nn::forward_lm_step_batch`) needs every row's [`KvStore`]
-    /// live simultaneously. Views come back in `ids` order. The disjointness
-    /// that makes this sound is proven to the borrow checker by carving each
-    /// layer buffer into per-slot chunks and handing each chunk out at most
-    /// once; duplicate or not-in-use ids panic (engine bugs).
+    /// decode step (`nn::forward_lm_step_batch`) needs every row's
+    /// [`KvStore`] live simultaneously. Views come back in `ids` order,
+    /// each with one appendable position reserved (the engine's
+    /// page-pressure guard ran first, so reservation cannot fail short of
+    /// an accounting bug). The disjointness that makes the simultaneous
+    /// `&mut` borrows sound is proven to the borrow checker by carving
+    /// each layer buffer into page chunks and handing each page out at
+    /// most once — block tables never share pages, so neither do views;
+    /// duplicate or not-in-use ids panic (engine bugs).
     pub fn slots_mut(&mut self, ids: &[SlotId]) -> Vec<KvView<'_>> {
         for &id in ids {
             assert!(self.in_use[id], "viewing slot {id} that is not in use");
+            assert!(
+                self.try_reserve(id, self.lens[id] + 1),
+                "page pool exhausted reserving for slot {id} (engine accounting bug)"
+            );
         }
-        let (cfg, d) = (self.cfg, self.cfg.d_model);
+        let cfg = self.cfg;
+        let d = cfg.d_model;
+        let tables: Vec<Vec<PageId>> = ids.iter().map(|&id| self.tables[id].clone()).collect();
+        let limits: Vec<usize> =
+            tables.iter().map(|t| (t.len() * cfg.page_size).min(cfg.capacity)).collect();
         let views: Vec<ViewLanes<'_>> = match &mut self.store {
             PoolStore::F32 { k, v } => {
-                let lane = cfg.capacity * d;
-                let ks = carve(k, lane, ids);
-                let vs = carve(v, lane, ids);
-                ks.into_iter()
-                    .zip(vs)
-                    .map(|(k, v)| ViewLanes::F32 { k, v })
-                    .collect()
+                let lane = cfg.page_size * d;
+                let ks = carve_pages(k, lane, &tables);
+                let vs = carve_pages(v, lane, &tables);
+                ks.into_iter().zip(vs).map(|(k, v)| ViewLanes::F32 { k, v }).collect()
             }
             PoolStore::Packed4 { fmt, k_codes, k_scales, v_codes, v_scales } => {
-                let clane = cfg.capacity * fmt.codes_per_row(d);
-                let slane = cfg.capacity * fmt.scales_per_row(d);
-                let kc = carve(k_codes, clane, ids);
-                let ks = carve(k_scales, slane, ids);
-                let vc = carve(v_codes, clane, ids);
-                let vs = carve(v_scales, slane, ids);
+                let clane = fmt.codes_per_page(d, cfg.page_size);
+                let slane = fmt.scales_per_page(d, cfg.page_size);
+                let kc = carve_pages(k_codes, clane, &tables);
+                let ks = carve_pages(k_scales, slane, &tables);
+                let vc = carve_pages(v_codes, clane, &tables);
+                let vs = carve_pages(v_scales, slane, &tables);
                 let fmt: &KvFormat = fmt;
                 kc.into_iter()
                     .zip(ks)
@@ -296,27 +498,43 @@ impl KvCache {
         let mut lens: Vec<Option<&mut usize>> = self.lens.iter_mut().map(Some).collect();
         ids.iter()
             .zip(views)
-            .map(|(&id, lanes)| SlotView {
+            .zip(limits)
+            .map(|((&id, lanes), limit)| SlotView {
                 lanes,
                 len: lens[id].take().expect("duplicate slot id in batch"),
-                capacity: cfg.capacity,
+                limit,
+                page_rows: cfg.page_size,
                 d,
             })
             .collect()
     }
 }
 
-/// Split each layer's flat buffer into per-slot chunks of `lane` elements
-/// and hand out the chunk for every requested id exactly once (duplicate
-/// ids panic) — the borrow-checker-visible disjointness proof behind
-/// [`KvCache::slots_mut`], shared by both lane formats.
-fn carve<'a, T>(layers: &'a mut [Vec<T>], lane: usize, ids: &[SlotId]) -> Vec<Vec<&'a mut [T]>> {
-    let mut out: Vec<Vec<&'a mut [T]>> =
-        (0..ids.len()).map(|_| Vec::with_capacity(layers.len())).collect();
+/// Split each layer's flat pool buffer into page chunks and hand out every
+/// page a requested block table names exactly once (`out[i][layer][p]` is
+/// the `p`-th page of table `i`) — the borrow-checker-visible disjointness
+/// proof behind [`KvCache::slots_mut`], shared by both lane formats. A
+/// page named twice (duplicate slot id in the batch, or a corrupt block
+/// table) panics.
+#[allow(clippy::type_complexity)]
+fn carve_pages<'a, T>(
+    layers: &'a mut [Vec<T>],
+    page_elems: usize,
+    tables: &[Vec<PageId>],
+) -> Vec<Vec<Vec<&'a mut [T]>>> {
+    let mut out: Vec<Vec<Vec<&'a mut [T]>>> =
+        (0..tables.len()).map(|_| Vec::with_capacity(layers.len())).collect();
     for layer in layers.iter_mut() {
-        let mut lanes: Vec<Option<&mut [T]>> = layer.chunks_mut(lane).map(Some).collect();
-        for (i, &id) in ids.iter().enumerate() {
-            out[i].push(lanes[id].take().expect("duplicate slot id in batch"));
+        let mut pages: Vec<Option<&mut [T]>> = layer.chunks_mut(page_elems).map(Some).collect();
+        for (i, table) in tables.iter().enumerate() {
+            out[i].push(
+                table
+                    .iter()
+                    .map(|&p| {
+                        pages[p].take().expect("duplicate slot id in batch (page handed out twice)")
+                    })
+                    .collect(),
+            );
         }
     }
     out
@@ -326,25 +544,34 @@ fn carve<'a, T>(layers: &'a mut [Vec<T>], lane: usize, ids: &[SlotId]) -> Vec<Ve
 /// fused batched step one `KvView` per row.
 pub type KvView<'a> = SlotView<'a>;
 
+/// Borrowed page slices, `[layer][page-in-table-order]`.
 enum ViewLanes<'a> {
     F32 {
-        k: Vec<&'a mut [f32]>,
-        v: Vec<&'a mut [f32]>,
+        k: Vec<Vec<&'a mut [f32]>>,
+        v: Vec<Vec<&'a mut [f32]>>,
     },
     Packed4 {
         fmt: &'a KvFormat,
-        k_codes: Vec<&'a mut [u8]>,
-        k_scales: Vec<&'a mut [f32]>,
-        v_codes: Vec<&'a mut [u8]>,
-        v_scales: Vec<&'a mut [f32]>,
+        k_codes: Vec<Vec<&'a mut [u8]>>,
+        k_scales: Vec<Vec<&'a mut [f32]>>,
+        v_codes: Vec<Vec<&'a mut [u8]>>,
+        v_scales: Vec<Vec<&'a mut [f32]>>,
     },
 }
 
-/// Mutable view of one slot's per-layer K/V lanes (either format).
+/// Mutable page-walking view of one slot's per-layer K/V lanes (either
+/// format). `capacity()` reflects the positions the reserved block table
+/// covers, so the forwards' overflow checks see the true headroom.
+///
+/// `lanes()` builds a fresh page-pointer list per call (the mutable page
+/// slices appends need cannot alias a cached immutable copy): a handful
+/// of pointer-sized elements, bounded by pages-per-sequence and dwarfed
+/// by the tensors each forward step allocates per linear.
 pub struct SlotView<'a> {
     lanes: ViewLanes<'a>,
     len: &'a mut usize,
-    capacity: usize,
+    limit: usize,
+    page_rows: usize,
     d: usize,
 }
 
@@ -354,30 +581,31 @@ impl KvStore for SlotView<'_> {
     }
 
     fn capacity(&self) -> usize {
-        self.capacity
+        self.limit
     }
 
     fn append_kv(&mut self, layer: usize, k_row: &[f32], v_row: &[f32]) {
         let (pos, d) = (*self.len, self.d);
-        debug_assert!(pos < self.capacity, "append past capacity");
+        debug_assert!(pos < self.limit, "append past reserved pages");
         assert_eq!(k_row.len(), d);
         assert_eq!(v_row.len(), d);
+        let (page, r) = (pos / self.page_rows, pos % self.page_rows);
         match &mut self.lanes {
             ViewLanes::F32 { k, v } => {
-                k[layer][pos * d..(pos + 1) * d].copy_from_slice(k_row);
-                v[layer][pos * d..(pos + 1) * d].copy_from_slice(v_row);
+                k[layer][page][r * d..(r + 1) * d].copy_from_slice(k_row);
+                v[layer][page][r * d..(r + 1) * d].copy_from_slice(v_row);
             }
             ViewLanes::Packed4 { fmt, k_codes, k_scales, v_codes, v_scales } => {
                 let (cb, sb) = (fmt.codes_per_row(d), fmt.scales_per_row(d));
                 fmt.encode_row(
                     k_row,
-                    &mut k_codes[layer][pos * cb..(pos + 1) * cb],
-                    &mut k_scales[layer][pos * sb..(pos + 1) * sb],
+                    &mut k_codes[layer][page][r * cb..(r + 1) * cb],
+                    &mut k_scales[layer][page][r * sb..(r + 1) * sb],
                 );
                 fmt.encode_row(
                     v_row,
-                    &mut v_codes[layer][pos * cb..(pos + 1) * cb],
-                    &mut v_scales[layer][pos * sb..(pos + 1) * sb],
+                    &mut v_codes[layer][page][r * cb..(r + 1) * cb],
+                    &mut v_scales[layer][page][r * sb..(r + 1) * sb],
                 );
             }
         }
@@ -385,11 +613,21 @@ impl KvStore for SlotView<'_> {
 
     fn lanes(&self, layer: usize) -> KvLanes<'_> {
         match &self.lanes {
-            ViewLanes::F32 { k, v } => KvLanes::F32 { k: &*k[layer], v: &*v[layer] },
+            ViewLanes::F32 { k, v } => KvLanes::PagedF32 {
+                k: k[layer].iter().map(|p| &**p).collect(),
+                v: v[layer].iter().map(|p| &**p).collect(),
+                page_rows: self.page_rows,
+            },
             ViewLanes::Packed4 { fmt, k_codes, k_scales, v_codes, v_scales } => {
-                KvLanes::Packed4 {
-                    k: fmt.lane(&*k_codes[layer], &*k_scales[layer], self.d),
-                    v: fmt.lane(&*v_codes[layer], &*v_scales[layer], self.d),
+                KvLanes::PagedPacked4 {
+                    k_codes: k_codes[layer].iter().map(|p| &**p).collect(),
+                    k_scales: k_scales[layer].iter().map(|p| &**p).collect(),
+                    v_codes: v_codes[layer].iter().map(|p| &**p).collect(),
+                    v_scales: v_scales[layer].iter().map(|p| &**p).collect(),
+                    lut: &fmt.lut,
+                    d: self.d,
+                    block: fmt.block,
+                    page_rows: self.page_rows,
                 }
             }
         }
@@ -405,8 +643,11 @@ mod tests {
     use super::*;
     use crate::formats;
 
+    /// 3 block tables over a 4-page pool of 2 positions each: worst case
+    /// would need 6 pages (3 slots x capacity 4), so the pool is
+    /// deliberately oversubscribed — the layout the paged cache exists for.
     fn geometry() -> KvCacheConfig {
-        KvCacheConfig { slots: 3, capacity: 4, n_layers: 2, d_model: 8 }
+        KvCacheConfig { slots: 3, capacity: 4, n_layers: 2, d_model: 8, page_size: 2, pages: 4 }
     }
 
     fn small() -> KvCache {
@@ -417,45 +658,112 @@ mod tests {
         KvCache::new_packed(geometry(), KvFormat::new(&formats::must("sf4"), 4))
     }
 
-    fn k_lane(view: &SlotView<'_>, layer: usize) -> Vec<f32> {
+    /// Dequantized (or raw) first `rows * d` values of one view's K lane.
+    fn k_lane(view: &SlotView<'_>, layer: usize, rows: usize) -> Vec<f32> {
+        let mut out = Vec::new();
         match view.lanes(layer) {
-            KvLanes::F32 { k, .. } => k.to_vec(),
-            KvLanes::Packed4 { k, .. } => {
-                let rows = k.codes.len() / (k.d / 2);
-                let mut out = vec![0.0f32; rows * k.d];
-                for (j, o) in out.iter_mut().enumerate() {
-                    let c = (k.codes[j / 2] >> (4 * (j % 2))) & 0x0f;
-                    *o = k.lut[c as usize] * k.scales[j / k.block];
+            KvLanes::PagedF32 { k, page_rows, .. } => {
+                let mut j = 0;
+                'walk: for page in k {
+                    for r in 0..page_rows {
+                        if j == rows {
+                            break 'walk;
+                        }
+                        out.extend_from_slice(&page[r * view.d..(r + 1) * view.d]);
+                        j += 1;
+                    }
                 }
-                out
             }
+            KvLanes::PagedPacked4 { k_codes, k_scales, lut, d, block, page_rows, .. } => {
+                let mut j = 0;
+                'walk: for (codes, scales) in k_codes.iter().zip(&k_scales) {
+                    for r in 0..page_rows {
+                        if j == rows {
+                            break 'walk;
+                        }
+                        for col in 0..d {
+                            let byte = codes[r * d / 2 + col / 2];
+                            let c = (byte >> (4 * (col % 2))) & 0x0f;
+                            out.push(lut[c as usize] * scales[r * (d / block) + col / block]);
+                        }
+                        j += 1;
+                    }
+                }
+            }
+            _ => unreachable!("slot views return paged lanes"),
         }
+        assert_eq!(out.len(), rows * view.d, "short block table");
+        out
     }
 
     #[test]
-    fn allocate_free_accounting() {
+    fn allocate_free_accounting_slots_and_pages() {
         let mut c = small();
         assert_eq!(c.slots_free(), 3);
-        assert_eq!(c.slots_in_use(), 0);
+        assert_eq!(c.pages_free(), 4);
+        assert_eq!(c.pages_in_use(), 0);
         let a = c.allocate().unwrap();
         let b = c.allocate().unwrap();
         assert_ne!(a, b);
         assert_eq!(c.slots_free(), 1);
+        // allocation claims no pages until rows are appended
+        assert_eq!(c.pages_free(), 4);
         assert!((c.occupancy() - 2.0 / 3.0).abs() < 1e-12);
+        {
+            let mut view = c.slot(a); // reserves page 1 of slot a
+            view.append_kv(0, &[1.0; 8], &[2.0; 8]);
+            view.advance();
+        }
+        assert_eq!(c.pages_in_use(), 1);
+        assert_eq!(c.pages_held(a), 1);
+        assert_eq!(c.pages_held(b), 0);
         c.free(a);
         assert_eq!(c.slots_free(), 2);
-        // freed slot is immediately reusable
+        assert_eq!(c.pages_free(), 4, "freed slot returns its pages");
         let a2 = c.allocate().unwrap();
-        assert_eq!(a2, a);
+        assert_eq!(a2, a, "freed slot is immediately reusable");
+        assert_eq!(c.len(a2), 0);
     }
 
     #[test]
-    fn exhaustion_returns_none() {
+    fn pages_grow_on_demand_across_boundaries() {
         let mut c = small();
-        let slots: Vec<_> = (0..3).map(|_| c.allocate().unwrap()).collect();
-        assert!(c.allocate().is_none());
-        c.free(slots[1]);
-        assert!(c.allocate().is_some());
+        let a = c.allocate().unwrap();
+        assert!(c.next_append_needs_page(a), "first append needs the first page");
+        for pos in 0..4 {
+            let mut view = c.slot(a);
+            view.append_kv(0, &[pos as f32 + 1.0; 8], &[0.5; 8]);
+            view.append_kv(1, &[pos as f32 + 1.0; 8], &[0.5; 8]);
+            view.advance();
+            // 2-position pages: positions 0-1 on page one, 2-3 on page two
+            assert_eq!(c.pages_held(a), pos / 2 + 1, "pos {pos}");
+        }
+        assert_eq!(c.len(a), 4);
+        assert!(!c.next_append_needs_page(a), "at capacity: no further page wanted");
+        // all four committed rows survive the page walk, in order
+        let view = c.slot(a);
+        let lane = k_lane(&view, 0, 4);
+        for pos in 0..4 {
+            assert!(
+                lane[pos * 8..(pos + 1) * 8].iter().all(|&x| x == pos as f32 + 1.0),
+                "pos {pos} landed on the wrong page row"
+            );
+        }
+    }
+
+    #[test]
+    fn pool_exhaustion_fails_reserve_not_panics() {
+        let mut c = small();
+        let a = c.allocate().unwrap();
+        let b = c.allocate().unwrap();
+        assert!(c.try_reserve(a, 4), "two pages for a");
+        assert!(c.try_reserve(b, 4), "the other two for b");
+        assert_eq!(c.pages_free(), 0);
+        let x = c.allocate().unwrap();
+        assert!(!c.try_reserve(x, 1), "pool dry: reservation reports failure");
+        assert_eq!(c.pages_held(x), 0);
+        c.free(a);
+        assert!(c.try_reserve(x, 1), "freed pages are claimable again");
     }
 
     #[test]
@@ -468,24 +776,6 @@ mod tests {
     }
 
     #[test]
-    fn reallocation_resets_len() {
-        let mut c = small();
-        let a = c.allocate().unwrap();
-        {
-            let mut view = c.slot(a);
-            view.append_kv(0, &[7.0; 8], &[1.0; 8]);
-            view.advance();
-            view.append_kv(0, &[2.0; 8], &[3.0; 8]);
-            view.advance();
-        }
-        assert_eq!(c.len(a), 2);
-        c.free(a);
-        let a2 = c.allocate().unwrap();
-        assert_eq!(a2, a);
-        assert_eq!(c.len(a2), 0, "reallocated slot must start empty");
-    }
-
-    #[test]
     fn slot_views_are_disjoint_in_both_formats() {
         for mut c in [small(), small_packed()] {
             let a = c.allocate().unwrap();
@@ -495,42 +785,51 @@ mod tests {
                 view.append_kv(1, &[1.0; 8], &[2.0; 8]);
                 view.advance();
             }
-            let view = c.slot(b);
-            assert!(k_lane(&view, 1).iter().all(|&x| x == 0.0), "lanes are disjoint");
+            {
+                let mut view = c.slot(b);
+                view.append_kv(1, &[9.0; 8], &[9.0; 8]);
+                view.advance();
+            }
+            // distinct pages: b's write never lands in a's lane
+            let view = c.slot(a);
+            assert!(k_lane(&view, 1, 1).iter().all(|&x| x == 1.0), "pages are disjoint");
         }
     }
 
     #[test]
-    fn freed_slot_lanes_are_zeroed_in_both_formats() {
-        // the reused-slot isolation invariant: retiring a session scrubs
-        // every K/V row it wrote, fp32 and packed alike
+    fn freed_pages_are_zeroed_in_both_formats() {
+        // the reused-page isolation invariant: retiring a session scrubs
+        // every page it held, fp32 and packed alike
         for (label, mut c) in [("fp32", small()), ("packed", small_packed())] {
             let a = c.allocate().unwrap();
-            {
+            for step in 0..3 {
                 let mut view = c.slot(a);
-                for step in 0..3 {
-                    let row = [0.5 + step as f32; 8];
-                    view.append_kv(0, &row, &row);
-                    view.append_kv(1, &row, &row);
-                    view.advance();
-                }
+                let row = [0.5 + step as f32; 8];
+                view.append_kv(0, &row, &row);
+                view.append_kv(1, &row, &row);
+                view.advance();
             }
-            assert!(!c.slot_is_zeroed(a), "{label}: lanes hold live data before free");
+            assert_eq!(c.pages_held(a), 2, "{label}");
             c.free(a);
-            assert!(c.slot_is_zeroed(a), "{label}: free() must scrub the lanes");
-            // the next tenant starts from an all-zero slot
+            assert_eq!(c.pages_in_use(), 0, "{label}: free() returns the pages");
+            assert!(c.free_pages_are_zeroed(), "{label}: free() must scrub the pages");
+            // the next tenant starts from all-zero pages
             let a2 = c.allocate().unwrap();
-            assert_eq!(a2, a);
+            {
+                // commit one (zero) position so the walk below has a row
+                let mut view = c.slot(a2);
+                view.advance();
+            }
             let view = c.slot(a2);
             assert!(
-                k_lane(&view, 0).iter().all(|&x| x == 0.0),
-                "{label}: reused slot observed a prior session's K/V"
+                k_lane(&view, 0, 1).iter().all(|&x| x == 0.0),
+                "{label}: reused page observed a prior session's K/V"
             );
         }
     }
 
     #[test]
-    fn packed_append_round_trips_through_lanes() {
+    fn packed_append_round_trips_through_paged_lanes() {
         let mut c = small_packed();
         let a = c.allocate().unwrap();
         let row: Vec<f32> = (0..8).map(|i| (i as f32 - 3.5) * 0.25).collect();
@@ -543,7 +842,7 @@ mod tests {
         let mut expect = vec![0.0f32; 8];
         fmt.fake_quant_row(&row, &mut expect);
         let view = c.slot(a);
-        assert_eq!(&k_lane(&view, 0)[..8], &expect[..], "lane dequant == codec round trip");
+        assert_eq!(k_lane(&view, 0, 1), expect, "page dequant == codec round trip");
     }
 
     #[test]
@@ -558,17 +857,18 @@ mod tests {
             views[0].append_kv(0, &[5.0; 8], &[0.0; 8]);
             views[0].advance();
             match views[1].lanes(0) {
-                KvLanes::F32 { k, .. } => assert!(k.iter().all(|&x| x == 0.0), "disjoint"),
+                KvLanes::PagedF32 { k, .. } => {
+                    assert!(k.iter().all(|p| p.iter().all(|&x| x == 0.0)), "disjoint")
+                }
                 _ => unreachable!("fp32 pool"),
             }
             views[1].advance();
-            views[1].advance();
         }
         assert_eq!(c.len(b), 1);
-        assert_eq!(c.len(a), 2);
+        assert_eq!(c.len(a), 1);
         // single-slot view sees what the batched view wrote
         let view = c.slot(b);
-        assert!(k_lane(&view, 0)[..8].iter().all(|&x| x == 5.0));
+        assert!(k_lane(&view, 0, 1).iter().all(|&x| x == 5.0));
     }
 
     #[test]
@@ -576,6 +876,8 @@ mod tests {
     fn slots_mut_rejects_duplicates() {
         let mut c = small();
         let a = c.allocate().unwrap();
+        // give the table a page so the duplicate is visible to the carver
+        assert!(c.try_reserve(a, 1));
         c.slots_mut(&[a, a]);
     }
 
@@ -589,19 +891,81 @@ mod tests {
     }
 
     #[test]
+    fn view_capacity_tracks_reserved_pages() {
+        let mut c = small();
+        let a = c.allocate().unwrap();
+        {
+            let view = c.slot(a); // one page reserved for the first append
+            assert_eq!(view.capacity(), 2);
+            assert_eq!(view.len(), 0);
+        }
+        assert!(c.try_reserve(a, 4));
+        let view = c.slot(a);
+        assert_eq!(view.capacity(), 4, "capped at the sequence capacity");
+    }
+
+    #[test]
+    fn fragmentation_counts_tail_waste() {
+        let mut c = small();
+        assert_eq!(c.page_fragmentation(), 0.0, "empty pool: no waste");
+        let a = c.allocate().unwrap();
+        {
+            let mut view = c.slot(a);
+            view.append_kv(0, &[1.0; 8], &[1.0; 8]);
+            view.advance();
+        }
+        // 1 live position on one 2-position page
+        assert!((c.page_fragmentation() - 0.5).abs() < 1e-12);
+        {
+            let mut view = c.slot(a);
+            view.append_kv(0, &[1.0; 8], &[1.0; 8]);
+            view.advance();
+        }
+        assert_eq!(c.page_fragmentation(), 0.0, "full page: no waste");
+    }
+
+    #[test]
     fn bytes_accounting_per_format() {
         let cfg = geometry();
-        // 2 (K+V) * 2 layers * 3 slots * 4 pos * 8 dim * 4 bytes
-        assert_eq!(cfg.bytes(), 2 * 2 * 3 * 4 * 8 * 4);
+        // 2 (K+V) * 2 layers * (4 pages * 2 pos) * 8 dim * 4 bytes
+        assert_eq!(cfg.bytes(), 2 * 2 * (4 * 2) * 8 * 4);
+        assert_eq!(cfg.position_bytes_f32(), 2 * 8 * 4);
         let dense = small();
         assert_eq!(dense.bytes(), cfg.bytes());
-        assert_eq!(dense.position_bytes(), 2 * 8 * 4);
+        assert_eq!(dense.position_bytes(), cfg.position_bytes_f32());
         assert!(dense.kv_format().is_none());
         let packed = small_packed();
         // per position per layer: 2 * (8/2 codes + 2 scales * 4 bytes)
         assert_eq!(packed.position_bytes(), 2 * (4 + 8));
-        assert_eq!(packed.bytes(), 2 * 3 * 4 * packed.position_bytes());
+        assert_eq!(packed.bytes(), 2 * (4 * 2) * packed.position_bytes());
         assert!(packed.bytes() < dense.bytes());
         assert_eq!(packed.kv_format().unwrap().name, "sf4");
+        // the paged pool is genuinely smaller than the worst case
+        assert!(cfg.pool_positions() < cfg.slots * cfg.capacity);
+    }
+
+    #[test]
+    fn checked_constructor_rejects_absurd_geometries() {
+        // the old unchecked `2 * layers * slots * seq * d * 4` wrapped here
+        let huge = usize::MAX / 2;
+        assert!(KvCacheConfig::try_new(huge, huge, 2, 8, 16, huge).is_err());
+        assert!(KvCacheConfig::try_new(4, 1 << 40, 8, 1 << 20, 16, 1 << 40).is_err());
+        assert!(KvCacheConfig::try_new(0, 4, 2, 8, 2, 4).is_err(), "degenerate slots");
+        assert!(KvCacheConfig::try_new(3, 4, 2, 8, 0, 4).is_err(), "degenerate page");
+        let ok = KvCacheConfig::try_new(3, 4, 2, 8, 2, 4).unwrap();
+        assert_eq!(ok.bytes(), geometry().bytes());
+        assert_eq!(ok.pages_for(0), 0);
+        assert_eq!(ok.pages_for(1), 1);
+        assert_eq!(ok.pages_for(3), 2);
+        assert_eq!(ok.seq_pages(), 2);
+    }
+
+    #[test]
+    fn for_model_defaults_to_worst_case_pool() {
+        let m = crate::model_io::zoo("nano").unwrap();
+        let cfg = KvCacheConfig::for_model(&m, 3);
+        assert_eq!(cfg.page_size, DEFAULT_PAGE_SIZE.min(m.seq));
+        assert_eq!(cfg.pool_positions(), 3 * m.seq.div_ceil(cfg.page_size) * cfg.page_size);
+        assert!(cfg.pool_positions() >= 3 * m.seq, "worst case admits every slot full");
     }
 }

@@ -41,6 +41,15 @@ pub struct MetricsCollector {
     /// `attended positions x layers x position_bytes` (K+V) — ~8x smaller
     /// per position under packed 4-bit lanes than fp32.
     pub kv_bytes_read: u64,
+    /// Sessions evicted by the page-pressure guard (pool ran dry
+    /// mid-step), a subset of `evicted`.
+    pub page_preemptions: usize,
+    /// Latest KV page-pool gauges (sampled once per engine step).
+    pages_in_use: usize,
+    pages_free: usize,
+    /// Running mean of tail fragmentation across sampled steps.
+    frag_sum: f64,
+    frag_samples: usize,
     pub steps: usize,
     pub decode_tokens: usize,
     pub prefill_tokens: usize,
@@ -84,6 +93,15 @@ impl MetricsCollector {
         self.kv_bytes_read += bytes;
     }
 
+    /// One per-step sample of the KV page pool: pages held / free and the
+    /// tail fragmentation of the held pages.
+    pub fn record_pages(&mut self, in_use: usize, free: usize, fragmentation: f64) {
+        self.pages_in_use = in_use;
+        self.pages_free = free;
+        self.frag_sum += fragmentation;
+        self.frag_samples += 1;
+    }
+
     pub fn record_first_token(&mut self, since_submit: Duration) {
         self.ttft.push(since_submit);
     }
@@ -116,6 +134,11 @@ impl MetricsCollector {
             decode_tps: if secs > 0.0 { self.decode_tokens as f64 / secs } else { 0.0 },
             mean_occupancy: self.occupancy.iter().sum::<usize>() as f64
                 / self.occupancy.len().max(1) as f64,
+            peak_occupancy: self.occupancy.iter().copied().max().unwrap_or(0),
+            pages_in_use: self.pages_in_use,
+            pages_free: self.pages_free,
+            page_fragmentation: self.frag_sum / self.frag_samples.max(1) as f64,
+            page_preemptions: self.page_preemptions,
             fused_steps: self.fused_steps,
             fused_gemms: self.fused_gemms,
             mean_fused_batch: self.fused_batch.iter().sum::<usize>() as f64
@@ -145,6 +168,19 @@ pub struct MetricsReport {
     pub decode_tps: f64,
     /// Mean active sessions per step.
     pub mean_occupancy: f64,
+    /// Most sessions concurrently active at any step — the paged
+    /// engine's admission headline (a page pool admits sequence mixes
+    /// whose summed worst case exceeds its positions).
+    pub peak_occupancy: usize,
+    /// KV pages held at the last sampled step.
+    pub pages_in_use: usize,
+    /// KV pages free at the last sampled step.
+    pub pages_free: usize,
+    /// Mean tail fragmentation of held pages across the run, in [0, 1]
+    /// (positions allocated but not holding a committed row).
+    pub page_fragmentation: f64,
+    /// Sessions evicted because the page pool ran dry mid-step.
+    pub page_preemptions: usize,
     /// Fused batched forwards issued.
     pub fused_steps: usize,
     /// Fused GEMM launches across the run.
@@ -165,8 +201,9 @@ impl fmt::Display for MetricsReport {
             f,
             "completed {} (rejected {}, evicted {}) | {} steps, {} decode + {} prefill tok \
              | {:.1} tok/s decode | ttft p50 {:?} p99 {:?} | itl p50 {:?} p99 {:?} \
-             | occupancy {:.2} | fused {} gemms over {} calls, batch {:.2} \
-             | kv {:.1} KiB/tok | wall {:?}",
+             | occupancy {:.2} (peak {}) | fused {} gemms over {} calls, batch {:.2} \
+             | kv {:.1} KiB/tok | pages {} used / {} free, frag {:.2}, {} page-evictions \
+             | wall {:?}",
             self.completed,
             self.rejected,
             self.evicted,
@@ -179,10 +216,15 @@ impl fmt::Display for MetricsReport {
             self.itl_p50,
             self.itl_p99,
             self.mean_occupancy,
+            self.peak_occupancy,
             self.fused_gemms,
             self.fused_steps,
             self.mean_fused_batch,
             self.kv_bytes_per_token / 1024.0,
+            self.pages_in_use,
+            self.pages_free,
+            self.page_fragmentation,
+            self.page_preemptions,
             self.wall,
         )
     }
@@ -238,6 +280,8 @@ mod tests {
         m.record_fused(4, 13);
         m.record_kv_read(4096);
         m.record_kv_read(2048);
+        m.record_pages(3, 5, 0.5);
+        m.record_pages(2, 6, 0.25);
         m.record_first_token(ms(10));
         m.record_inter_token(ms(2));
         m.record_inter_token(ms(4));
@@ -255,6 +299,12 @@ mod tests {
         // 14 forwarded tokens (6 decode + 8 prefill)
         assert!((r.kv_bytes_per_token - 6144.0 / 14.0).abs() < 1e-9);
         assert!((r.mean_fused_batch - 3.0).abs() < 1e-12);
+        assert_eq!(r.peak_occupancy, 4);
+        // page gauges: latest sample wins, fragmentation is the mean
+        assert_eq!(r.pages_in_use, 2);
+        assert_eq!(r.pages_free, 6);
+        assert!((r.page_fragmentation - 0.375).abs() < 1e-12);
+        assert_eq!(r.page_preemptions, 0);
         assert_eq!(r.ttft_p50, ms(10));
         assert_eq!(r.itl_p99, ms(4));
         assert!(r.wall > Duration::ZERO);

@@ -1,25 +1,30 @@
-//! Continuous-batching autoregressive decode engine over a slot-pool KV
+//! Continuous-batching autoregressive decode engine over a **paged** KV
 //! cache — the serving subsystem the paper's weight-only formats are priced
 //! for (memory-bound multi-token decode, not one-shot scoring).
 //!
-//! Architecture (vLLM-style iteration-level scheduling, sized for the
-//! pure-Rust [`crate::nn`] reference path):
+//! Architecture (vLLM-style iteration-level scheduling + block-table
+//! paging, sized for the pure-Rust [`crate::nn`] reference path):
 //!
 //! * [`Engine`] — owns the model (a [`ModelConfig`] + [`Checkpoint`]: fp32,
 //!   fake-quant dense from `coordinator::pipeline::fake_quant_checkpoint`,
 //!   or true 4-bit packed weights from `packed_checkpoint`, which the
 //!   forward decodes in-kernel through the fused `quant::lut_gemm` — ~8x
-//!   less weight traffic on the memory-bound decode path), the
-//!   [`KvCache`] slot pool (fp32 lanes, or packed 4-bit lanes via
+//!   less weight traffic on the memory-bound decode path), the paged
+//!   [`KvCache`] (a global pool of fixed-size pages + per-sequence block
+//!   tables; fp32 lanes, or packed 4-bit lanes via
 //!   [`EngineConfig::kv_format`] — the paper's codebooks applied to the
 //!   cache itself, attended through the fused `tensor::lut_attend`
 //!   kernels), the [`Scheduler`] and the metrics. Requests can
 //!   be `submit`ted at any time; each `step` fuses chunked prefill and one
 //!   decode token for every running sequence into `[B, d]` batched forwards
 //!   (`nn::forward_lm_step_batch` — one GEMM per linear instead of `B`),
-//!   retires finished sequences, and immediately refills their freed slots
-//!   from the queue. `preempt` evicts a session mid-flight and resumes it
-//!   later by replaying its context into a fresh slot.
+//!   retires finished sequences, and immediately refills their freed
+//!   pages from the queue. Admission is pages-available accounting (no
+//!   worst-case per-slot reservation), growth claims pages on demand, and
+//!   pool exhaustion preempts the longest-context victim
+//!   ([`Engine::preemption_victim`]). `preempt` evicts a session
+//!   mid-flight and resumes it later by replaying its context into fresh
+//!   pages.
 //! * [`DecodeRequest`] / [`TokenEvent`] — the streaming API: each request
 //!   brings its own event channel and receives every generated token as it
 //!   is produced, then a terminal `Finished` (or `Rejected`).
@@ -34,7 +39,7 @@ pub mod metrics;
 pub mod scheduler;
 pub mod session;
 
-pub use kv_cache::{KvCache, KvCacheConfig, KvView, SlotId, SlotView};
+pub use kv_cache::{KvCache, KvCacheConfig, KvView, PageId, SlotId, SlotView, DEFAULT_PAGE_SIZE};
 pub use metrics::{percentile, MetricsCollector, MetricsReport};
 pub use scheduler::{Scheduler, SchedulerConfig};
 pub use session::{DecodeSession, FinishReason, SessionState};
@@ -95,9 +100,9 @@ pub enum TokenEvent {
 /// Engine sizing knobs.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct EngineConfig {
-    /// KV slot-pool size; 0 = `scheduler.max_batch`.
+    /// Concurrent-sequence cap (block tables); 0 = `scheduler.max_batch`.
     pub slots: usize,
-    /// Cache positions per slot; 0 = the model's positional window.
+    /// Max cache positions per sequence; 0 = the model's positional window.
     pub kv_capacity: usize,
     /// KV lane format: `None` (or `"fp32"`) keeps dense f32 lanes —
     /// bit-identical to the pre-packed engine — while a <= 4-bit codebook
@@ -106,6 +111,15 @@ pub struct EngineConfig {
     /// dequant kernels: ~8x less KV storage and ~5x less read traffic per
     /// decoded token.
     pub kv_format: Option<&'static str>,
+    /// Positions per KV page; 0 = [`kv_cache::DEFAULT_PAGE_SIZE`].
+    /// Sequences claim pages on demand as they grow, so admission is
+    /// bounded by *pages available*, not by worst-case per-slot lanes.
+    pub page_size: usize,
+    /// KV page-pool size; 0 = the worst case (`slots` full positional
+    /// windows — the old contiguous layout's footprint). Set lower to
+    /// oversubscribe: more long-context sequences admit against the same
+    /// memory, with page-pressure preemption as the safety valve.
+    pub kv_pages: usize,
     pub scheduler: SchedulerConfig,
 }
 
@@ -122,18 +136,37 @@ pub struct Engine {
 
 impl Engine {
     pub fn new(model_cfg: ModelConfig, ckpt: Checkpoint, cfg: EngineConfig) -> Engine {
-        let slots = if cfg.slots == 0 { cfg.scheduler.max_batch } else { cfg.slots };
+        Engine::try_new(model_cfg, ckpt, cfg).expect("KV cache geometry overflows")
+    }
+
+    /// [`Engine::new`], but an absurd KV geometry (a `kv_pages` ×
+    /// `page_size` × model product that overflows `usize`) surfaces as an
+    /// error instead of a panic — the CLI reports it to the user.
+    pub fn try_new(model_cfg: ModelConfig, ckpt: Checkpoint, cfg: EngineConfig) -> Result<Engine> {
+        let slots = (if cfg.slots == 0 { cfg.scheduler.max_batch } else { cfg.slots }).max(1);
         let capacity = if cfg.kv_capacity == 0 {
             model_cfg.seq
         } else {
             cfg.kv_capacity.min(model_cfg.seq)
         };
-        let kcfg = KvCacheConfig {
-            slots: slots.max(1),
-            capacity,
-            n_layers: model_cfg.n_layers,
-            d_model: model_cfg.d_model,
+        let page_size = if cfg.page_size == 0 {
+            kv_cache::DEFAULT_PAGE_SIZE.min(capacity)
+        } else {
+            cfg.page_size.min(capacity)
         };
+        let pages = if cfg.kv_pages == 0 {
+            slots * capacity.div_ceil(page_size)
+        } else {
+            cfg.kv_pages
+        };
+        let kcfg = KvCacheConfig::try_new(
+            slots,
+            capacity,
+            model_cfg.n_layers,
+            model_cfg.d_model,
+            page_size,
+            pages,
+        )?;
         let cache = match cfg.kv_format {
             None | Some("fp32") => KvCache::new(kcfg),
             Some(name) => KvCache::new_packed(
@@ -141,7 +174,7 @@ impl Engine {
                 crate::quant::KvFormat::for_model(&crate::formats::must(name), &model_cfg),
             ),
         };
-        Engine {
+        Ok(Engine {
             model_cfg,
             ckpt,
             cache,
@@ -149,7 +182,7 @@ impl Engine {
             active: Vec::new(),
             metrics: MetricsCollector::default(),
             prefill_chunk: cfg.scheduler.prefill_chunk.max(1),
-        }
+        })
     }
 
     pub fn model_config(&self) -> &ModelConfig {
@@ -160,9 +193,16 @@ impl Engine {
         &self.cache
     }
 
-    /// Positions one sequence may occupy (prompt + generated - 1).
+    /// Positions one sequence may occupy (prompt + generated - 1). Clamped
+    /// by the page pool as well as the positional window: a sequence can
+    /// never outgrow the pool even when it holds every page, so the
+    /// page-pressure guard always has either a victim to evict or a
+    /// sequence that has already hit `ContextFull`.
     pub fn window(&self) -> usize {
-        self.model_cfg.seq.min(self.cache.capacity())
+        self.model_cfg
+            .seq
+            .min(self.cache.capacity())
+            .min(self.cache.config().pool_positions())
     }
 
     /// Anything queued or running?
@@ -201,30 +241,57 @@ impl Engine {
         }
     }
 
-    /// One iteration-level step: admit queued sessions into free slots, then
-    /// drive every active session through **fused batched forwards** —
-    /// `[B, d]` rows through `nn::forward_lm_step_batch`, one GEMM per
-    /// linear per micro-step instead of `B`. The first micro-step carries
-    /// one decode row per `Decoding` session plus one prefill row per
-    /// `Prefill` session; the remaining `prefill_chunk - 1` micro-steps
+    /// One iteration-level step: admit queued sessions against the page
+    /// pool, then drive every active session through **fused batched
+    /// forwards** — `[B, d]` rows through `nn::forward_lm_step_batch`, one
+    /// GEMM per linear per micro-step instead of `B`. The first micro-step
+    /// carries one decode row per `Decoding` session plus one prefill row
+    /// per `Prefill` session; the remaining `prefill_chunk - 1` micro-steps
     /// carry prefill rows only, so prompt ingestion keeps its per-step chunk
     /// budget while decode stays at one token per session per step. A
     /// session whose context completes emits its next token from its own
-    /// batch row. Finished (or evicted) sessions are retired and their slots
-    /// freed for the next step's admission.
+    /// batch row. Finished (or evicted) sessions are retired and their
+    /// pages freed for the next step's admission.
+    ///
+    /// Admission is *pages-available* accounting: a queued session joins
+    /// when a block table is free and the pool holds enough free pages for
+    /// its replayed context plus one generated row — not a worst-case
+    /// `capacity`-position reservation — so sequence mixes whose summed
+    /// window exceeds the pool's positions run concurrently. Sessions
+    /// claim further pages on demand as they decode; if the pool runs dry
+    /// mid-step, the page-pressure guard preempts the longest-context
+    /// victim (see [`Engine::preemption_victim`]) until the step fits.
     pub fn step(&mut self) -> Result<()> {
-        for mut s in self.sched.admit(self.cache.slots_free(), self.active.len()) {
-            let slot = self.cache.allocate().expect("admit() checked free slots");
-            s.begin_prefill(slot);
-            self.active.push(s);
+        let window = self.window();
+        {
+            let page_size = self.cache.page_size();
+            let mut budget = self.cache.pages_free();
+            let admitted =
+                self.sched.admit_within(self.cache.slots_free(), self.active.len(), |s| {
+                    // pages for the replayed context plus the first decode
+                    // row (a plan, not a reservation: growth beyond it is
+                    // handled by on-demand claims + the pressure guard)
+                    let need = (s.context_len() + 1).min(window).div_ceil(page_size);
+                    if need <= budget {
+                        budget -= need;
+                        true
+                    } else {
+                        false
+                    }
+                });
+            for mut s in admitted {
+                let slot = self.cache.allocate().expect("admit_within checked free slots");
+                s.begin_prefill(slot);
+                self.active.push(s);
+            }
         }
 
-        let window = self.model_cfg.seq.min(self.cache.capacity());
         let stepped = self.active.len();
         let gemms_per_call = nn::step_batch_gemms(&self.model_cfg);
         let mut decoded = 0usize;
         let mut prefilled = 0usize;
         for micro in 0..self.prefill_chunk {
+            self.resolve_page_pressure(micro);
             // rows: (active index, slot, input token, is_prefill)
             let mut rows: Vec<(usize, SlotId, i32, bool)> = Vec::new();
             for (i, s) in self.active.iter().enumerate() {
@@ -308,14 +375,88 @@ impl Engine {
             }
         }
         self.active.retain(|s| s.is_active());
+        self.metrics.record_pages(
+            self.cache.pages_in_use(),
+            self.cache.pages_free(),
+            self.cache.page_fragmentation(),
+        );
         Ok(())
     }
 
-    /// Preempt an active session: reclaim its KV slot *now* and send it back
-    /// to the head of the admission queue. On re-admission it replays its
-    /// whole context (prompt + generated so far) into a fresh slot, so the
-    /// greedy stream resumes exactly where it stopped — the client just sees
-    /// a latency bubble. Returns `false` when `id` is not currently active.
+    /// Make sure every row about to step in micro-step `micro` has a page
+    /// to append into. Under shortfall it first reclaims pages held by
+    /// sessions that already finished earlier in this step (they are
+    /// normally retired only at step end — eviction must never cost a
+    /// runnable session a replay while free-able pages exist), then
+    /// preempts victims until the step fits. Each round either fits
+    /// (return), reclaims a finished session's slot, or evicts one active
+    /// session, so the loop terminates; evicting every stepping session
+    /// leaves nothing to append and also fits.
+    fn resolve_page_pressure(&mut self, micro: usize) {
+        loop {
+            let mut need = 0usize;
+            for s in &self.active {
+                let stepping = match s.state {
+                    SessionState::Prefill => true,
+                    SessionState::Decoding => micro == 0,
+                    _ => false,
+                };
+                if stepping
+                    && self
+                        .cache
+                        .next_append_needs_page(s.slot.expect("active session holds a slot"))
+                {
+                    need += 1;
+                }
+            }
+            if need <= self.cache.pages_free() {
+                return;
+            }
+            // reclaim before evicting: the end-of-step retire loop
+            // tolerates already-taken slots, so freeing early is safe
+            let mut reclaimed = false;
+            for s in &mut self.active {
+                if !s.is_active() {
+                    if let Some(slot) = s.slot.take() {
+                        self.cache.free(slot);
+                        reclaimed = true;
+                    }
+                }
+            }
+            if reclaimed {
+                continue;
+            }
+            let victim =
+                self.preemption_victim().expect("page pressure implies a runnable session");
+            self.preempt(victim);
+            self.metrics.page_preemptions += 1;
+        }
+    }
+
+    /// The page-pressure eviction policy: the runnable (prefill/decoding)
+    /// session holding the **most KV pages** — the longest context. It
+    /// frees the most pages per eviction, and preferring it over
+    /// short-context sessions minimizes evictions per reclaimed page (its
+    /// replay cost is paid at most once either way). Ties break toward the
+    /// most committed positions, then the most recently admitted. `None`
+    /// when nothing runnable is active.
+    pub fn preemption_victim(&self) -> Option<u64> {
+        self.active
+            .iter()
+            .filter(|s| s.is_active())
+            .max_by_key(|s| {
+                let slot = s.slot.expect("active session holds a slot");
+                (self.cache.pages_held(slot), self.cache.len(slot))
+            })
+            .map(|s| s.id)
+    }
+
+    /// Preempt an active session: reclaim its KV pages and block table
+    /// *now* and send it back to the head of the admission queue. On
+    /// re-admission it replays its whole context (prompt + generated so
+    /// far) into freshly claimed pages, so the greedy stream resumes
+    /// exactly where it stopped — the client just sees a latency bubble.
+    /// Returns `false` when `id` is not currently active.
     /// If the bounded queue is full the stream ends with a terminal
     /// [`TokenEvent::Finished`] carrying [`FinishReason::Preempted`]
     /// (`Rejected` is reserved for requests that never started).
@@ -749,10 +890,10 @@ mod tests {
         let (tokens, fin) = drain_tokens(&rx);
         assert_eq!(tokens, 6);
         assert_eq!(fin, Some(FinishReason::MaxTokens));
-        // retiring scrubbed the slot: no prior session's K/V lingers
-        for slot in 0..packed.cache().slots_total() {
-            assert!(packed.cache().slot_is_zeroed(slot), "slot {slot} kept KV after retire");
-        }
+        // retiring released and scrubbed the pages: no prior session's
+        // K/V lingers anywhere in the pool
+        assert_eq!(packed.cache().pages_in_use(), 0, "retired session kept pages");
+        assert!(packed.cache().free_pages_are_zeroed(), "freed pages kept KV after retire");
         // same workload over fp32 lanes: identical token accounting, far
         // more KV bytes streamed
         let mut dense = mk(None);
@@ -771,6 +912,55 @@ mod tests {
             rd.kv_bytes_read
         );
         assert!(rd.kv_bytes_per_token > rp.kv_bytes_per_token);
+    }
+
+    #[test]
+    fn absurd_kv_geometry_errors_instead_of_panicking() {
+        // the overflow-checked constructor surfaces through try_new (the
+        // CLI's path), so --kv-pages nonsense reports instead of wrapping
+        let cfg = zoo("nano").unwrap();
+        let ckpt = init_lm_params(&cfg, 47);
+        let res = Engine::try_new(
+            cfg,
+            ckpt,
+            EngineConfig { kv_pages: usize::MAX / 8, ..EngineConfig::default() },
+        );
+        assert!(res.is_err(), "overflowing page pool must be rejected");
+    }
+
+    #[test]
+    fn page_accounting_grows_and_releases_with_the_stream() {
+        // nano window 32, 4-position pages: a 5-token prompt + decode
+        // claims pages on demand and returns every one at retire
+        let cfg = zoo("nano").unwrap();
+        let ckpt = init_lm_params(&cfg, 46);
+        let mut eng = Engine::new(
+            cfg,
+            ckpt,
+            EngineConfig {
+                slots: 2,
+                page_size: 4,
+                scheduler: SchedulerConfig { max_batch: 2, ..SchedulerConfig::default() },
+                ..EngineConfig::default()
+            },
+        );
+        assert_eq!(eng.cache().page_size(), 4);
+        assert_eq!(eng.cache().pages_total(), 2 * 8, "worst-case pool by default");
+        let (req, _rx) = DecodeRequest::new(vec![1, 2, 3, 4, 5], 4);
+        eng.submit(req);
+        eng.step().unwrap();
+        // 5 prefilled + 1 reserved for the next decode row -> 2 pages
+        assert_eq!(eng.cache().pages_in_use(), 2);
+        let report = eng.report();
+        assert_eq!(report.pages_in_use, 2);
+        assert_eq!(report.pages_free, 14);
+        assert!(report.page_fragmentation > 0.0, "5 live rows on 8 held positions");
+        while eng.has_work() {
+            eng.step().unwrap();
+        }
+        assert_eq!(eng.cache().pages_in_use(), 0, "retire returns the pages");
+        assert_eq!(eng.report().pages_in_use, 0);
+        assert_eq!(eng.report().page_preemptions, 0, "worst-case pool never pressures");
     }
 
     #[test]

@@ -88,9 +88,35 @@ impl Scheduler {
     /// Step-boundary admission: pop as many queued sessions as fit in both
     /// the free slot pool and the batch cap, in FIFO order.
     pub fn admit(&mut self, free_slots: usize, active: usize) -> Vec<DecodeSession> {
+        self.admit_within(free_slots, active, |_| true)
+    }
+
+    /// [`Self::admit`] with a caller-supplied resource check: sessions pop
+    /// in FIFO order while `fits(head)` holds, and admission stops at the
+    /// first head that does not fit (no skip-ahead — a long-context
+    /// arrival is never starved by shorter ones behind it). The paged
+    /// engine uses this to admit against a *pages-available* budget
+    /// (enough free KV pages for the session's replayed context) instead
+    /// of reserving worst-case positions per slot.
+    pub fn admit_within(
+        &mut self,
+        free_slots: usize,
+        active: usize,
+        mut fits: impl FnMut(&DecodeSession) -> bool,
+    ) -> Vec<DecodeSession> {
         let room = self.cfg.max_batch.saturating_sub(active).min(free_slots);
-        let n = room.min(self.queue.len());
-        self.queue.drain(..n).collect()
+        let mut out = Vec::new();
+        while out.len() < room {
+            let head_fits = match self.queue.front() {
+                Some(head) => fits(head),
+                None => false,
+            };
+            if !head_fits {
+                break;
+            }
+            out.push(self.queue.pop_front().expect("checked head exists"));
+        }
+        out
     }
 
     /// Empty the queue (engine shutdown/abort path).
@@ -160,6 +186,32 @@ mod tests {
         s.enqueue(session(2)).unwrap();
         s.enqueue(session(3)).unwrap();
         assert!(s.enqueue_front(session(4)).is_err());
+    }
+
+    #[test]
+    fn admit_within_stops_at_first_unfitting_head() {
+        let mut s = sched(4, 0);
+        for id in 0..4 {
+            s.enqueue(session(id)).unwrap();
+        }
+        // a page-budget-style predicate: admit two, then run dry — the
+        // third head blocks admission even though the fourth would fit
+        let mut budget = 2;
+        let a = s.admit_within(10, 0, |sess| {
+            if sess.id == 2 {
+                return false;
+            }
+            if budget == 0 {
+                return false;
+            }
+            budget -= 1;
+            true
+        });
+        assert_eq!(a.iter().map(|x| x.id).collect::<Vec<_>>(), vec![0, 1]);
+        assert_eq!(s.queue_len(), 2, "FIFO order preserved, no skip-ahead");
+        // once the head fits again, admission resumes from it
+        let b = s.admit_within(10, 0, |_| true);
+        assert_eq!(b.iter().map(|x| x.id).collect::<Vec<_>>(), vec![2, 3]);
     }
 
     #[test]

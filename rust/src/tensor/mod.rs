@@ -541,6 +541,11 @@ pub struct PackedLane<'a> {
 /// therefore the exact f32 arithmetic) of the pre-PR-4 inline attention in
 /// `nn::forward_lm_step`, hoisted here so the single-sequence step, the
 /// fused batched step, the full forward and the benches all share one body.
+///
+/// Since PR 5 the body lives in [`attend_head_paged`]: a contiguous lane
+/// is the degenerate one-page block table, so the contiguous and paged
+/// entry points share every loop (and therefore every bit).
+#[allow(clippy::too_many_arguments)]
 pub fn attend_head(
     q_head: &[f32],
     kbuf: &[f32],
@@ -552,29 +557,111 @@ pub fn attend_head(
     att: &mut [f32],
     ctx_head: &mut [f32],
 ) {
+    attend_head_paged(q_head, &[kbuf], &[vbuf], rows.max(1), d, off, rows, scale, att, ctx_head);
+}
+
+/// [`attend_head`] over a *block table*: K/V arrive as a sequence of
+/// fixed-size page slices (`page_rows` positions of `d` values each; the
+/// last page may be partially filled) instead of one contiguous lane —
+/// the layout of the paged KV cache (`serving::kv_cache`).
+///
+/// **Bit-identity:** position `j` lives at row `j % page_rows` of page
+/// `j / page_rows`, and the kernel walks pages in table order, so every
+/// position is visited in exactly the same order — and with exactly the
+/// same score/softmax/accumulate arithmetic — as the contiguous kernel
+/// over the same values. Paging changes where rows live, never what is
+/// computed (`rust/tests/paged_kv.rs` locks this down end to end).
+#[allow(clippy::too_many_arguments)]
+pub fn attend_head_paged(
+    q_head: &[f32],
+    k_pages: &[&[f32]],
+    v_pages: &[&[f32]],
+    page_rows: usize,
+    d: usize,
+    off: usize,
+    rows: usize,
+    scale: f32,
+    att: &mut [f32],
+    ctx_head: &mut [f32],
+) {
     let dh = q_head.len();
     debug_assert!(att.len() >= rows, "attention scratch too small");
     debug_assert_eq!(ctx_head.len(), dh);
+    assert!(
+        k_pages.len() * page_rows >= rows && v_pages.len() * page_rows >= rows,
+        "block table holds {} K / {} V pages x {page_rows} rows, attending {rows}",
+        k_pages.len(),
+        v_pages.len(),
+    );
     let mut mx = f32::NEG_INFINITY;
-    for j in 0..rows {
-        let kj = &kbuf[j * d + off..j * d + off + dh];
-        let mut dot = 0.0f32;
-        for t in 0..dh {
-            dot += q_head[t] * kj[t];
+    let mut j = 0usize;
+    'score: for page in k_pages {
+        for r in 0..page_rows {
+            if j == rows {
+                break 'score;
+            }
+            let kj = &page[r * d + off..r * d + off + dh];
+            let mut dot = 0.0f32;
+            for t in 0..dh {
+                dot += q_head[t] * kj[t];
+            }
+            att[j] = dot * scale;
+            mx = mx.max(att[j]);
+            j += 1;
         }
-        att[j] = dot * scale;
-        mx = mx.max(att[j]);
     }
     let mut z = 0.0f32;
-    for j in 0..rows {
-        att[j] = (att[j] - mx).exp();
-        z += att[j];
+    for a in att.iter_mut().take(rows) {
+        *a = (*a - mx).exp();
+        z += *a;
     }
-    for j in 0..rows {
-        let w = att[j] / z;
-        let vj = &vbuf[j * d + off..j * d + off + dh];
-        for t in 0..dh {
-            ctx_head[t] += w * vj[t];
+    let mut j = 0usize;
+    'accum: for page in v_pages {
+        for r in 0..page_rows {
+            if j == rows {
+                break 'accum;
+            }
+            let w = att[j] / z;
+            let vj = &page[r * d + off..r * d + off + dh];
+            for t in 0..dh {
+                ctx_head[t] += w * vj[t];
+            }
+            j += 1;
+        }
+    }
+}
+
+/// A packed 4-bit KV lane split across a block table of fixed-size pages:
+/// page `p` holds positions `p * page_rows ..` as its own codes/scales
+/// slices with the [`PackedLane`] row layout. The paged attention kernels
+/// ([`lut_attend_head_paged`] / [`lut_attend_paged`]) walk this exactly
+/// like [`attend_head_paged`] walks fp32 pages; a contiguous lane is the
+/// one-page special case.
+#[derive(Clone, Copy, Debug)]
+pub struct PagedPackedLane<'a> {
+    /// Per page: `[page_rows, d/2]` packed nibbles (see [`PackedLane::codes`]).
+    pub pages_codes: &'a [&'a [u8]],
+    /// Per page: `[page_rows, d/block]` dequant scales.
+    pub pages_scales: &'a [&'a [f32]],
+    /// The codebook padded to 16 f32 entries (shared by every page).
+    pub lut: &'a [f32; 16],
+    /// Values per cached position.
+    pub d: usize,
+    /// Values per scale block.
+    pub block: usize,
+    /// Positions per page (the last page may be partially filled).
+    pub page_rows: usize,
+}
+
+impl<'a> PagedPackedLane<'a> {
+    /// One page viewed as a contiguous [`PackedLane`].
+    fn page(&self, p: usize) -> PackedLane<'a> {
+        PackedLane {
+            codes: self.pages_codes[p],
+            scales: self.pages_scales[p],
+            lut: self.lut,
+            d: self.d,
+            block: self.block,
         }
     }
 }
@@ -593,11 +680,50 @@ pub fn attend_head(
 /// (`rust/tests/quant_kv.rs` locks this down per step).
 ///
 /// `off` must be block-aligned and the head width a multiple of `block`
-/// (the engine picks `block = d_head`, which satisfies both).
+/// (the engine picks `block = d_head`, which satisfies both). The body
+/// lives in [`lut_attend_head_paged`]; a contiguous lane is the one-page
+/// block table.
+#[allow(clippy::too_many_arguments)]
 pub fn lut_attend_head(
     q_head: &[f32],
     k: PackedLane<'_>,
     v: PackedLane<'_>,
+    off: usize,
+    rows: usize,
+    scale: f32,
+    att: &mut [f32],
+    ctx_head: &mut [f32],
+) {
+    let (kc, ks, vc, vs) = ([k.codes], [k.scales], [v.codes], [v.scales]);
+    let kp = PagedPackedLane {
+        pages_codes: &kc,
+        pages_scales: &ks,
+        lut: k.lut,
+        d: k.d,
+        block: k.block,
+        page_rows: rows.max(1),
+    };
+    let vp = PagedPackedLane {
+        pages_codes: &vc,
+        pages_scales: &vs,
+        lut: v.lut,
+        d: v.d,
+        block: v.block,
+        page_rows: rows.max(1),
+    };
+    lut_attend_head_paged(q_head, kp, vp, off, rows, scale, att, ctx_head);
+}
+
+/// [`lut_attend_head`] over a block table of packed pages — the fused
+/// dequant-attention kernel of the paged KV cache. Position `j` is row
+/// `j % page_rows` of page `j / page_rows`; pages are walked in table
+/// order, so the per-position arithmetic (and therefore every bit) is
+/// identical to the contiguous kernel over the same codes.
+#[allow(clippy::too_many_arguments)]
+pub fn lut_attend_head_paged(
+    q_head: &[f32],
+    k: PagedPackedLane<'_>,
+    v: PagedPackedLane<'_>,
     off: usize,
     rows: usize,
     scale: f32,
@@ -609,29 +735,51 @@ pub fn lut_attend_head(
     debug_assert_eq!(ctx_head.len(), dh);
     debug_assert_eq!(off % k.block, 0, "head offset must be block-aligned");
     debug_assert_eq!(dh % k.block, 0, "head width must be whole blocks");
+    assert!(
+        k.pages_codes.len() * k.page_rows >= rows && v.pages_codes.len() * v.page_rows >= rows,
+        "block table holds {} K / {} V pages, attending {rows} rows",
+        k.pages_codes.len(),
+        v.pages_codes.len(),
+    );
     let mut mx = f32::NEG_INFINITY;
-    for j in 0..rows {
-        let mut dot = 0.0f32;
-        lane_row_blocks(&k, j, off, dh, |t0, slut, codes| {
-            for (t, &c) in codes.iter().enumerate() {
-                dot += q_head[t0 + t] * slut[c as usize];
+    let mut j = 0usize;
+    'score: for p in 0..k.pages_codes.len() {
+        let lane = k.page(p);
+        for r in 0..k.page_rows {
+            if j == rows {
+                break 'score;
             }
-        });
-        att[j] = dot * scale;
-        mx = mx.max(att[j]);
+            let mut dot = 0.0f32;
+            lane_row_blocks(&lane, r, off, dh, |t0, slut, codes| {
+                for (t, &c) in codes.iter().enumerate() {
+                    dot += q_head[t0 + t] * slut[c as usize];
+                }
+            });
+            att[j] = dot * scale;
+            mx = mx.max(att[j]);
+            j += 1;
+        }
     }
     let mut z = 0.0f32;
-    for j in 0..rows {
-        att[j] = (att[j] - mx).exp();
-        z += att[j];
+    for a in att.iter_mut().take(rows) {
+        *a = (*a - mx).exp();
+        z += *a;
     }
-    for j in 0..rows {
-        let w = att[j] / z;
-        lane_row_blocks(&v, j, off, dh, |t0, slut, codes| {
-            for (t, &c) in codes.iter().enumerate() {
-                ctx_head[t0 + t] += w * slut[c as usize];
+    let mut j = 0usize;
+    'accum: for p in 0..v.pages_codes.len() {
+        let lane = v.page(p);
+        for r in 0..v.page_rows {
+            if j == rows {
+                break 'accum;
             }
-        });
+            let w = att[j] / z;
+            lane_row_blocks(&lane, r, off, dh, |t0, slut, codes| {
+                for (t, &c) in codes.iter().enumerate() {
+                    ctx_head[t0 + t] += w * slut[c as usize];
+                }
+            });
+            j += 1;
+        }
     }
 }
 
@@ -681,12 +829,48 @@ fn lane_row_blocks(
 /// `runtime::pool` once the problem passes the same FLOP threshold as the
 /// GEMM (decode-sized calls always stay serial). Heads write disjoint
 /// `ctx_row` chunks and each head's arithmetic is an independent chain, so
-/// the pool path is bit-identical to the serial one.
+/// the pool path is bit-identical to the serial one. The body lives in
+/// [`lut_attend_paged`]; a contiguous lane is the one-page block table.
 #[allow(clippy::too_many_arguments)]
 pub fn lut_attend(
     q_row: &[f32],
     k: PackedLane<'_>,
     v: PackedLane<'_>,
+    n_heads: usize,
+    rows: usize,
+    scale: f32,
+    att: &mut [f32],
+    ctx_row: &mut [f32],
+) {
+    let (kc, ks, vc, vs) = ([k.codes], [k.scales], [v.codes], [v.scales]);
+    let kp = PagedPackedLane {
+        pages_codes: &kc,
+        pages_scales: &ks,
+        lut: k.lut,
+        d: k.d,
+        block: k.block,
+        page_rows: rows.max(1),
+    };
+    let vp = PagedPackedLane {
+        pages_codes: &vc,
+        pages_scales: &vs,
+        lut: v.lut,
+        d: v.d,
+        block: v.block,
+        page_rows: rows.max(1),
+    };
+    lut_attend_paged(q_row, kp, vp, n_heads, rows, scale, att, ctx_row);
+}
+
+/// All-heads [`lut_attend_head_paged`] with the same pool fan-out policy
+/// as [`lut_attend`]: long-context calls split heads across the persistent
+/// worker pool (disjoint `ctx_row` chunks, placement-independent
+/// arithmetic), decode-sized calls stay serial.
+#[allow(clippy::too_many_arguments)]
+pub fn lut_attend_paged(
+    q_row: &[f32],
+    k: PagedPackedLane<'_>,
+    v: PagedPackedLane<'_>,
     n_heads: usize,
     rows: usize,
     scale: f32,
@@ -710,14 +894,14 @@ pub fn lut_attend(
             .map(|(h, (ctx_head, att_head))| {
                 let q_head = &q_row[h * dh..(h + 1) * dh];
                 Box::new(move || {
-                    lut_attend_head(q_head, k, v, h * dh, rows, scale, att_head, ctx_head);
+                    lut_attend_head_paged(q_head, k, v, h * dh, rows, scale, att_head, ctx_head);
                 }) as Box<dyn FnOnce() + Send + '_>
             })
             .collect();
         crate::runtime::pool::global().scoped(tasks);
     } else {
         for h in 0..n_heads {
-            lut_attend_head(
+            lut_attend_head_paged(
                 &q_row[h * dh..(h + 1) * dh],
                 k,
                 v,
@@ -931,6 +1115,114 @@ mod tests {
                 );
             }
             assert_eq!(ctx_fused, ctx_oracle, "heads={heads}: fused attention diverged");
+        }
+    }
+
+    #[test]
+    fn attend_head_paged_bit_identical_to_contiguous() {
+        // split one contiguous lane into 4-row pages (ragged tail) and
+        // attend: every (rows, head) cell must match the contiguous kernel
+        // bitwise — paging moves rows, it must not change arithmetic
+        let (d, page_rows) = (32usize, 4usize);
+        let max_rows = 13usize; // 4 pages, last one partial
+        let kbuf: Vec<f32> =
+            (0..max_rows * d).map(|i| ((i * 19 % 31) as f32 - 15.0) * 0.06).collect();
+        let vbuf: Vec<f32> =
+            (0..max_rows * d).map(|i| ((i * 23 % 29) as f32 - 14.0) * 0.04).collect();
+        let q: Vec<f32> = (0..d).map(|i| ((i * 7 % 13) as f32 - 6.0) * 0.1).collect();
+        let pages = max_rows.div_ceil(page_rows);
+        // pad the paged copy so every page is full-size storage
+        let mut k_padded = kbuf.clone();
+        let mut v_padded = vbuf.clone();
+        k_padded.resize(pages * page_rows * d, 0.0);
+        v_padded.resize(pages * page_rows * d, 0.0);
+        let k_pages: Vec<&[f32]> = k_padded.chunks(page_rows * d).collect();
+        let v_pages: Vec<&[f32]> = v_padded.chunks(page_rows * d).collect();
+        for rows in [1usize, 3, 4, 5, 8, 13] {
+            for (heads, dh) in [(2usize, 16usize), (1, 32)] {
+                let mut att_a = vec![0.0f32; rows];
+                let mut att_b = vec![0.0f32; rows];
+                let mut ctx_paged = vec![0.0f32; d];
+                let mut ctx_flat = vec![0.0f32; d];
+                for h in 0..heads {
+                    let off = h * dh;
+                    attend_head_paged(
+                        &q[off..off + dh],
+                        &k_pages,
+                        &v_pages,
+                        page_rows,
+                        d,
+                        off,
+                        rows,
+                        0.25,
+                        &mut att_a,
+                        &mut ctx_paged[off..off + dh],
+                    );
+                    attend_head(
+                        &q[off..off + dh],
+                        &kbuf,
+                        &vbuf,
+                        d,
+                        off,
+                        rows,
+                        0.25,
+                        &mut att_b,
+                        &mut ctx_flat[off..off + dh],
+                    );
+                }
+                assert_eq!(ctx_paged, ctx_flat, "rows={rows} heads={heads}: paging changed bits");
+            }
+        }
+    }
+
+    #[test]
+    fn lut_attend_head_paged_bit_identical_to_contiguous() {
+        let (d, block, page_rows) = (32usize, 16usize, 4usize);
+        let max_rows = 11usize; // 3 pages, last one partial
+        let (k_codes, k_scales, lut, _) = hand_lane(max_rows, d, block, 5);
+        let (v_codes, v_scales, _, _) = hand_lane(max_rows, d, block, 6);
+        let q: Vec<f32> = (0..d).map(|i| ((i * 11 % 17) as f32 - 8.0) * 0.07).collect();
+        // paged copies, padded to whole pages
+        let pages = max_rows.div_ceil(page_rows);
+        let (crow, srow) = (d / 2, d / block);
+        let mut kc = k_codes.clone();
+        let mut ks = k_scales.clone();
+        let mut vc = v_codes.clone();
+        let mut vs = v_scales.clone();
+        kc.resize(pages * page_rows * crow, 0);
+        ks.resize(pages * page_rows * srow, 0.0);
+        vc.resize(pages * page_rows * crow, 0);
+        vs.resize(pages * page_rows * srow, 0.0);
+        let kc_pages: Vec<&[u8]> = kc.chunks(page_rows * crow).collect();
+        let ks_pages: Vec<&[f32]> = ks.chunks(page_rows * srow).collect();
+        let vc_pages: Vec<&[u8]> = vc.chunks(page_rows * crow).collect();
+        let vs_pages: Vec<&[f32]> = vs.chunks(page_rows * srow).collect();
+        for rows in [1usize, 4, 7, 11] {
+            let mut att_a = vec![0.0f32; rows];
+            let mut att_b = vec![0.0f32; rows];
+            let mut ctx_paged = vec![0.0f32; d];
+            let mut ctx_flat = vec![0.0f32; d];
+            let kp = PagedPackedLane {
+                pages_codes: &kc_pages,
+                pages_scales: &ks_pages,
+                lut: &lut,
+                d,
+                block,
+                page_rows,
+            };
+            let vp = PagedPackedLane {
+                pages_codes: &vc_pages,
+                pages_scales: &vs_pages,
+                lut: &lut,
+                d,
+                block,
+                page_rows,
+            };
+            lut_attend_paged(&q, kp, vp, 2, rows, 0.2, &mut att_a, &mut ctx_paged);
+            let k = PackedLane { codes: &k_codes, scales: &k_scales, lut: &lut, d, block };
+            let v = PackedLane { codes: &v_codes, scales: &v_scales, lut: &lut, d, block };
+            lut_attend(&q, k, v, 2, rows, 0.2, &mut att_b, &mut ctx_flat);
+            assert_eq!(ctx_paged, ctx_flat, "rows={rows}: packed paging changed bits");
         }
     }
 

@@ -1,0 +1,331 @@
+//! Property + admission harness for the paged KV cache (block-table
+//! layout).
+//!
+//! The contract under test: paging changes **where** cached K/V rows live
+//! (fixed-size pages claimed on demand, named by a per-sequence block
+//! table) but never **what** attention computes. Paged decode must be
+//! bit-identical — tokens *and* logprobs — to the contiguous-slot layout
+//! per step, for every batch size 1–8, on fp32 and every packed KV format,
+//! through a mid-decode preempt → requeue → replay cycle. On top of the
+//! bit-level contract, admission tests pin the capacity win the layout
+//! exists for: a sequence mix whose summed worst-case context exceeds the
+//! pool's positions runs concurrently, where worst-case contiguous
+//! reservation (one window-sized page per slot) cannot, and page pressure
+//! evicts the longest-context victim.
+//!
+//! The contiguous reference is the same engine with `page_size =
+//! capacity` and one page per slot — byte-for-byte the pre-paging layout
+//! (one contiguous lane per sequence) — so both sides of every comparison
+//! run through the production code path.
+
+use std::sync::mpsc;
+
+use llm_datatypes::coordinator::trainer;
+use llm_datatypes::model_io::{zoo, Checkpoint, ModelConfig};
+use llm_datatypes::nn::{self, SeqKvCache};
+use llm_datatypes::serving::{
+    DecodeRequest, Engine, EngineConfig, FinishReason, SchedulerConfig, TokenEvent,
+};
+
+/// KV formats the paged layout is certified on, `None` = fp32 lanes.
+const KV_FORMATS: [Option<&str>; 4] = [None, Some("sf4"), Some("nf4"), Some("e2m1_sp")];
+
+fn engine(
+    cfg: ModelConfig,
+    ckpt: Checkpoint,
+    slots: usize,
+    kv_format: Option<&'static str>,
+    page_size: usize,
+    kv_pages: usize,
+) -> Engine {
+    Engine::new(
+        cfg,
+        ckpt,
+        EngineConfig {
+            slots,
+            kv_format,
+            page_size,
+            kv_pages,
+            scheduler: SchedulerConfig { max_batch: slots, ..SchedulerConfig::default() },
+            ..EngineConfig::default()
+        },
+    )
+}
+
+/// Drain one request's stream: its `(token, logprob-bits)` trace and the
+/// terminal reason. Logprobs compare as raw bits — "bit-identical" means
+/// the whole emitted stream, not just the argmax winners.
+fn collect(rx: &mpsc::Receiver<TokenEvent>) -> (Vec<(i32, u32)>, Option<FinishReason>) {
+    let mut trace = Vec::new();
+    let mut finished = None;
+    while let Ok(ev) = rx.try_recv() {
+        match ev {
+            TokenEvent::Token { token, logprob, .. } => trace.push((token, logprob.to_bits())),
+            TokenEvent::Finished { reason, .. } => finished = Some(reason),
+            TokenEvent::Rejected { reason, .. } => panic!("unexpected rejection: {reason}"),
+        }
+    }
+    (trace, finished)
+}
+
+/// Deterministic varied-length prompt for lane `i`.
+fn prompt(cfg: &ModelConfig, i: usize) -> Vec<i32> {
+    (0..2 + (i * 3) % 5).map(|t| ((t * 7 + i * 11 + 1) % cfg.vocab) as i32).collect()
+}
+
+/// Run `b` requests to completion on `eng`, returning each lane's trace.
+fn run_batch(eng: &mut Engine, cfg: &ModelConfig, b: usize, max_new: usize) -> Vec<Vec<(i32, u32)>> {
+    let mut rxs = Vec::new();
+    for i in 0..b {
+        let (req, rx) = DecodeRequest::new(prompt(cfg, i), max_new);
+        eng.submit(req);
+        rxs.push(rx);
+    }
+    while eng.has_work() {
+        eng.step().unwrap();
+    }
+    rxs.iter()
+        .map(|rx| {
+            let (trace, fin) = collect(rx);
+            assert_eq!(fin, Some(FinishReason::MaxTokens));
+            trace
+        })
+        .collect()
+}
+
+/// The headline property: for batches 1–8 on every KV format, the paged
+/// engine (8-position pages, block tables) streams bit-identically to the
+/// contiguous-slot engine (one window-sized page per sequence).
+#[test]
+fn paged_engine_bit_identical_to_contiguous_slots_b1_to_8() {
+    let cfg = zoo("nano").unwrap();
+    let ckpt = trainer::init_lm_params(&cfg, 0x9a9e);
+    for kv in KV_FORMATS {
+        for b in 1..=8usize {
+            let mut contiguous = engine(cfg, ckpt.clone(), b, kv, cfg.seq, b);
+            let mut paged = engine(cfg, ckpt.clone(), b, kv, 8, 0);
+            assert_eq!(contiguous.cache().pages_total(), b, "one lane-sized page per slot");
+            assert_eq!(paged.cache().page_size(), 8);
+            let expect = run_batch(&mut contiguous, &cfg, b, 4);
+            let got = run_batch(&mut paged, &cfg, b, 4);
+            for (lane, (e, g)) in expect.iter().zip(&got).enumerate() {
+                assert_eq!(e.len(), 4, "kv={kv:?} b={b} lane {lane}: budget");
+                assert_eq!(
+                    e, g,
+                    "kv={kv:?} b={b} lane {lane}: paged stream diverged from contiguous"
+                );
+            }
+        }
+    }
+}
+
+/// Page boundaries inside one sequence: the paged owned store (SeqKvCache)
+/// is step-for-step bit-identical to the contiguous one across a whole
+/// window of positions, fp32 and packed.
+#[test]
+fn paged_seq_store_crosses_boundaries_bit_identically() {
+    let cfg = zoo("nano").unwrap();
+    let ckpt = trainer::init_lm_params(&cfg, 0x9a9f);
+    let tokens: Vec<i32> = (0..cfg.seq).map(|i| ((i * 5 + 3) % cfg.vocab) as i32).collect();
+    // fp32: page sizes that divide, straddle and exceed the sequence
+    for page_rows in [1usize, 4, 7, 16, 64] {
+        let mut flat = SeqKvCache::new(&cfg);
+        let mut paged = SeqKvCache::paged(&cfg, page_rows);
+        for (i, &t) in tokens.iter().enumerate() {
+            let a = nn::forward_lm_step(&cfg, &ckpt, t, &mut flat).unwrap();
+            let b = nn::forward_lm_step(&cfg, &ckpt, t, &mut paged).unwrap();
+            assert_eq!(a.data(), b.data(), "page_rows={page_rows} step {i}");
+        }
+    }
+    for name in ["sf4", "nf4", "e2m1_sp"] {
+        let spec = llm_datatypes::formats::must(name);
+        let mut flat = SeqKvCache::packed(&cfg, &spec);
+        let mut paged = SeqKvCache::paged_packed(&cfg, &spec, 8);
+        for (i, &t) in tokens.iter().take(20).enumerate() {
+            let a = nn::forward_lm_step(&cfg, &ckpt, t, &mut flat).unwrap();
+            let b = nn::forward_lm_step(&cfg, &ckpt, t, &mut paged).unwrap();
+            assert_eq!(a.data(), b.data(), "{name} step {i}");
+        }
+    }
+}
+
+/// Mid-decode preempt → requeue → replay on the paged engine must land on
+/// the same stream the contiguous engine produces uninterrupted: eviction
+/// frees pages (not lanes), replay re-claims fresh pages, and the greedy
+/// stream is oblivious to all of it.
+#[test]
+fn paged_preempt_requeue_replay_matches_uninterrupted_contiguous() {
+    let cfg = zoo("nano").unwrap();
+    let ckpt = trainer::init_lm_params(&cfg, 0x9aa0);
+    for kv in [None, Some("sf4")] {
+        let p = vec![2i32, 5, 7];
+        // contiguous, uninterrupted reference
+        let mut reference = engine(cfg, ckpt.clone(), 1, kv, cfg.seq, 1);
+        let (req, rx) = DecodeRequest::new(p.clone(), 10);
+        reference.submit(req);
+        while reference.has_work() {
+            reference.step().unwrap();
+        }
+        let (expect, _) = collect(&rx);
+        assert_eq!(expect.len(), 10);
+
+        // paged, preempted mid-decode
+        let mut eng = engine(cfg, ckpt.clone(), 1, kv, 4, 0);
+        let (req, rx) = DecodeRequest::new(p, 10);
+        let id = req.id;
+        eng.submit(req);
+        for _ in 0..4 {
+            eng.step().unwrap();
+        }
+        let (head, fin) = collect(&rx);
+        assert!(head.len() >= 2 && fin.is_none(), "kv={kv:?}: mid-generation before eviction");
+        assert!(eng.cache().pages_in_use() > 0);
+        assert!(eng.preempt(id));
+        assert_eq!(eng.cache().pages_in_use(), 0, "kv={kv:?}: eviction frees the pages");
+        assert!(eng.cache().free_pages_are_zeroed(), "kv={kv:?}: freed pages scrubbed");
+        while eng.has_work() {
+            eng.step().unwrap();
+        }
+        let (tail, fin) = collect(&rx);
+        let resumed: Vec<(i32, u32)> = head.into_iter().chain(tail).collect();
+        assert_eq!(resumed, expect, "kv={kv:?}: replay diverged from the uninterrupted stream");
+        assert_eq!(fin, Some(FinishReason::MaxTokens));
+    }
+}
+
+/// The admission win: 4 sequences whose summed worst-case context (4
+/// windows = 128 positions) exceeds the pool (8 pages x 8 = 64 positions)
+/// all run concurrently under paging, while worst-case contiguous
+/// reservation on the same budget caps at 2 resident.
+#[test]
+fn paged_admission_exceeds_contiguous_worst_case_capacity() {
+    let cfg = zoo("nano").unwrap();
+    let ckpt = trainer::init_lm_params(&cfg, 0x9aa1);
+    let mk_reqs = |eng: &mut Engine| {
+        (0..4)
+            .map(|i| {
+                let (req, rx) =
+                    DecodeRequest::new((0..6).map(|t| ((t + i) % 7 + 1) as i32).collect(), 3);
+                eng.submit(req);
+                rx
+            })
+            .collect::<Vec<_>>()
+    };
+
+    // paged: 64-position pool, block tables — everything admits at once
+    let mut paged = engine(cfg, ckpt.clone(), 4, None, 8, 8);
+    assert!(
+        4 * paged.window() > paged.cache().config().pool_positions(),
+        "the mix's summed max-context must exceed the physical pool"
+    );
+    let rxs = mk_reqs(&mut paged);
+    paged.step().unwrap();
+    assert_eq!(
+        paged.cache().slots_in_use(),
+        4,
+        "paged admission keeps the whole mix resident"
+    );
+    while paged.has_work() {
+        paged.step().unwrap();
+    }
+    for rx in &rxs {
+        let (trace, fin) = collect(rx);
+        assert_eq!(trace.len(), 3);
+        assert_eq!(fin, Some(FinishReason::MaxTokens));
+    }
+    let report = paged.report();
+    assert_eq!(report.peak_occupancy, 4);
+    assert_eq!(report.completed, 4);
+    assert_eq!(report.page_preemptions, 0, "short contexts: no pressure on this mix");
+
+    // contiguous worst-case reservation on the same 64 positions: the
+    // pool is two window-sized lanes, so only two sequences ever coexist
+    let mut contiguous = engine(cfg, ckpt, 4, None, cfg.seq, 2);
+    let rxs = mk_reqs(&mut contiguous);
+    let mut peak = 0usize;
+    while contiguous.has_work() {
+        contiguous.step().unwrap();
+        peak = peak.max(contiguous.cache().slots_in_use());
+    }
+    for rx in &rxs {
+        let (trace, _) = collect(rx);
+        assert_eq!(trace.len(), 3);
+    }
+    assert_eq!(peak, 2, "worst-case reservation caps residency at the lane count");
+}
+
+/// Satellite: the page-pressure eviction policy picks the longest-context
+/// (most pages held) runnable victim, not an arbitrary one.
+#[test]
+fn preemption_victim_is_the_longest_context_session() {
+    let cfg = zoo("nano").unwrap();
+    let ckpt = trainer::init_lm_params(&cfg, 0x9aa2);
+    // ample pool: no actual pressure, we only interrogate the policy
+    let mut eng = engine(cfg, ckpt, 3, None, 4, 0);
+    assert!(eng.preemption_victim().is_none(), "no active sessions yet");
+    let lens = [4usize, 12, 8];
+    let mut ids = Vec::new();
+    let mut rxs = Vec::new();
+    for (i, &n) in lens.iter().enumerate() {
+        let (req, rx) =
+            DecodeRequest::new((0..n).map(|t| ((t * 3 + i) % 9 + 1) as i32).collect(), 8);
+        ids.push(req.id);
+        eng.submit(req);
+        rxs.push(rx);
+    }
+    eng.step().unwrap(); // prefills everything (chunk 32 >= 12) into pages
+    let held: Vec<usize> =
+        (0..3).map(|s| eng.cache().pages_held(s)).collect();
+    assert!(held.iter().sum::<usize>() >= 3 + 1 + 2, "4-position pages over 4/12/8 contexts");
+    assert_eq!(
+        eng.preemption_victim(),
+        Some(ids[1]),
+        "the 12-token context holds the most pages and must be the victim"
+    );
+    // preempting it frees the most pages in one eviction
+    let before = eng.cache().pages_free();
+    assert!(eng.preempt(ids[1]));
+    let freed = eng.cache().pages_free() - before;
+    assert!(freed >= 3, "longest context returned {freed} pages");
+}
+
+/// Pressure end-to-end: admission plans only for the replayed context, so
+/// decode *growth* can outrun a small pool mid-flight. Two short-prompt,
+/// long-budget sessions on a 16-position pool must trip the page-pressure
+/// guard (both fit at admission, their summed growth does not), evict the
+/// longest, and still complete both exact budgets via requeue + replay
+/// (the window clamp guarantees a lone sequence always fits).
+#[test]
+fn page_pressure_evicts_and_every_stream_still_completes() {
+    let cfg = zoo("nano").unwrap();
+    let ckpt = trainer::init_lm_params(&cfg, 0x9aa3);
+    // 4 pages x 4 positions = 16-position pool, window clamps to 16
+    let mut eng = engine(cfg, ckpt, 2, None, 4, 4);
+    assert_eq!(eng.window(), 16, "window is pool-clamped");
+    // contexts grow to 11 and 12 positions (3 pages each) — 6 pages of
+    // demand against 4 physical
+    let rxs: Vec<_> = [2usize, 3]
+        .iter()
+        .enumerate()
+        .map(|(i, &n)| {
+            let (req, rx) =
+                DecodeRequest::new((0..n).map(|t| ((t * 5 + i) % 11 + 1) as i32).collect(), 10);
+            eng.submit(req);
+            rx
+        })
+        .collect();
+    while eng.has_work() {
+        eng.step().unwrap();
+    }
+    for (i, rx) in rxs.iter().enumerate() {
+        let (trace, fin) = collect(rx);
+        assert_eq!(trace.len(), 10, "lane {i} finished its budget despite pressure");
+        assert_eq!(fin, Some(FinishReason::MaxTokens), "lane {i}");
+    }
+    let report = eng.report();
+    assert_eq!(report.completed, 2);
+    assert!(report.page_preemptions >= 1, "the guard must have fired");
+    assert!(report.evicted >= 1);
+    assert_eq!(eng.cache().pages_in_use(), 0, "pool fully drained");
+    assert!(eng.cache().free_pages_are_zeroed());
+}

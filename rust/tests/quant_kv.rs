@@ -255,9 +255,10 @@ fn packed_kv_eviction_resumes_stream_identically() {
     let (head, fin) = collect(&rx);
     assert!(head.len() >= 2 && fin.is_none(), "mid-generation before the eviction");
     assert!(eng.preempt(id));
+    assert_eq!(eng.cache().pages_in_use(), 0, "evicted session must release its pages");
     assert!(
-        eng.cache().slot_is_zeroed(0),
-        "evicted session's packed lanes must be scrubbed"
+        eng.cache().free_pages_are_zeroed(),
+        "evicted session's packed pages must be scrubbed"
     );
     while eng.has_work() {
         eng.step().unwrap();
