@@ -341,6 +341,34 @@ fn main() -> anyhow::Result<()> {
         Err(e) => println!("note: XLA lut_matmul cell skipped ({e:#})"),
     }
 
+    // -- 6: traced kernel cell (observability artifact) --------------------
+    // a short tracing-enabled pass over the three instrumented kernels so
+    // every bench run also leaves a Perfetto-loadable kernel timeline
+    // (per-kernel spans + pool dispatch/task spans) next to
+    // BENCH_kernel.json
+    {
+        use llm_datatypes::obs::{export, trace};
+        trace::reset();
+        trace::set_enabled(true);
+        let t = gemm_auto_threads(m, k, n);
+        for _ in 0..4 {
+            out.iter_mut().for_each(|v| *v = 0.0);
+            gemm_threaded(m, k, n, x.data(), b.data(), &mut out, t);
+            lut_gemm(&x, &packed);
+            ctx.iter_mut().for_each(|v| *v = 0.0);
+            lut_attend(&aq, klane, vlane, heads, rows, ascale, &mut att, &mut ctx);
+        }
+        trace::set_enabled(false);
+        let snap = trace::snapshot_and_drain();
+        std::fs::write("BENCH_kernel.trace.json", export::chrome_trace_json(&snap))?;
+        println!(
+            "bench kernel_traced                      events={} dropped={}",
+            snap.records.len(),
+            snap.dropped,
+        );
+        json.record("kernel_traced", "trace_events", snap.records.len() as f64);
+    }
+
     json.write("BENCH_kernel.json")?;
     Ok(())
 }

@@ -397,6 +397,45 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
+    // -- workload 6: traced cell (observability artifacts) -----------------
+    // one tracing-enabled decode run so every bench run also leaves a
+    // Perfetto-loadable span timeline and a Prometheus metrics snapshot
+    // next to BENCH_serve.json. The cell's tok/s is recorded (not gated):
+    // tracing costs one relaxed atomic load when off, and when on the
+    // bounded per-thread rings drop-oldest rather than grow.
+    {
+        use llm_datatypes::obs::{export, trace};
+        let mut engine = Engine::new(
+            cfg,
+            ckpt.clone(),
+            EngineConfig {
+                slots: 4,
+                page_size,
+                scheduler: SchedulerConfig { max_batch: 4, ..SchedulerConfig::default() },
+                ..EngineConfig::default()
+            },
+        );
+        trace::reset();
+        trace::set_enabled(true);
+        let report =
+            run_decode_loadgen(&mut engine, &prompts, 4, 1, if smoke { 8 } else { 16 })?;
+        trace::set_enabled(false);
+        let snap = trace::snapshot_and_drain();
+        std::fs::write("BENCH_serve.trace.json", export::chrome_trace_json(&snap))?;
+        std::fs::write(
+            "BENCH_serve.metrics.prom",
+            export::prometheus_text(&engine.metrics_registry()),
+        )?;
+        println!(
+            "bench serve_decode_traced_b4             tok/s={:8.1} events={} dropped={}",
+            report.decode_tps,
+            snap.records.len(),
+            snap.dropped,
+        );
+        json.record("serve_decode_traced_b4", "tok_s", report.decode_tps);
+        json.record("serve_decode_traced_b4", "trace_events", snap.records.len() as f64);
+    }
+
     json.write("BENCH_serve.json")?;
     Ok(())
 }

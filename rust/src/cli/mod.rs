@@ -9,6 +9,7 @@
 //!                    [--kv-format fp32|FMT] [--clients N] [--requests N]
 //!                    [--max-new T] [--slots S] [--prefill-chunk P]
 //!                    [--page-size P] [--kv-pages N]
+//!                    [--trace-out FILE] [--metrics-out FILE]
 //! repro all          [--quick]
 //! ```
 //! Global flags: `--artifacts DIR --checkpoints DIR --results DIR`.
@@ -81,6 +82,7 @@ commands:
   serve-decode [--model N] [--format F|fp32] [--packed] [--kv-format fp32|F]
                [--clients C] [--requests R] [--max-new T] [--slots S]
                [--prefill-chunk P] [--page-size P] [--kv-pages N]
+               [--trace-out FILE] [--metrics-out FILE]
           continuous-batching multi-token generation (streaming, paged KV
           cache with block tables, fused [B,d] batched decode step;
           --packed serves true 4-bit weights through the fused LUT
@@ -88,7 +90,10 @@ commands:
           codebook, attended through the fused dequant-attention kernels;
           --page-size sets positions per KV page and --kv-pages bounds the
           page pool — 0 = worst case — so long-context mixes admit against
-          pages available, not per-slot reservations)
+          pages available, not per-slot reservations; --trace-out records
+          the run's span timeline and writes Chrome trace-event JSON —
+          load it in Perfetto/chrome://tracing — and --metrics-out writes
+          the engine's metrics registry as Prometheus text)
   all     [--quick]                            every table + figure
 global flags: --artifacts DIR --checkpoints DIR --results DIR
 ";
@@ -313,6 +318,16 @@ fn cmd_serve_decode(session: &Session, args: &Args) -> Result<()> {
     let prefill_chunk: usize = args.flag("prefill-chunk", "32").parse()?;
     let page_size: usize = args.flag("page-size", "16").parse()?;
     let kv_pages: usize = args.flag("kv-pages", "0").parse()?;
+    // a bare `--trace-out` (no value) falls back to the default filename
+    let out_path = |name: &str, default: &str| -> Option<String> {
+        if !args.has(name) {
+            return None;
+        }
+        let v = args.flag(name, default);
+        Some(if v == "true" { default.to_string() } else { v })
+    };
+    let trace_out = out_path("trace-out", "trace.json");
+    let metrics_out = out_path("metrics-out", "metrics.prom");
 
     let cfg = zoo(&model)?;
     let ckpt = load_or_init_checkpoint(session, &cfg);
@@ -372,8 +387,31 @@ fn cmd_serve_decode(session: &Session, args: &Args) -> Result<()> {
     );
     let prompts = serve_prompts(&cfg, 64, 2);
     let per_client = (requests / clients.max(1)).max(1);
+    if trace_out.is_some() {
+        crate::obs::trace::reset();
+        crate::obs::trace::set_enabled(true);
+    }
     let report = run_decode_loadgen(&mut engine, &prompts, clients, per_client, max_new)?;
+    if trace_out.is_some() {
+        crate::obs::trace::set_enabled(false);
+    }
     println!("{report}");
+    if let Some(path) = &trace_out {
+        let snap = crate::obs::trace::snapshot_and_drain();
+        std::fs::write(path, crate::obs::export::chrome_trace_json(&snap))
+            .with_context(|| format!("writing Chrome trace to {path}"))?;
+        println!(
+            "trace: {} events ({} dropped) -> {path} (open in Perfetto or chrome://tracing)",
+            snap.records.len(),
+            snap.dropped
+        );
+    }
+    if let Some(path) = &metrics_out {
+        let text = crate::obs::export::prometheus_text(&engine.metrics_registry());
+        std::fs::write(path, text)
+            .with_context(|| format!("writing Prometheus metrics to {path}"))?;
+        println!("metrics: Prometheus text -> {path}");
+    }
     Ok(())
 }
 

@@ -22,8 +22,9 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use crate::model_io::{Checkpoint, ModelConfig};
+use crate::obs::clock;
 use crate::serving::{
-    percentile, DecodeRequest, Engine, EngineConfig, SchedulerConfig, TokenEvent,
+    percentile_sorted, DecodeRequest, Engine, EngineConfig, SchedulerConfig, TokenEvent,
 };
 
 /// One scoring request: a prompt (<= seq tokens); response = distribution
@@ -167,7 +168,8 @@ impl Server {
                         TokenEvent::Token { request, token, logprob, .. } => {
                             if let Some((resp, submitted)) = reg.lock().unwrap().remove(&request)
                             {
-                                let latency = submitted.elapsed();
+                                let latency =
+                                    clock::now().saturating_duration_since(submitted);
                                 latencies.push(latency);
                                 served += 1;
                                 let _ = resp.send(Response {
@@ -196,13 +198,15 @@ impl Server {
                 engine.abort();
                 registry.lock().unwrap().clear();
             }
-            let (latencies, served) = collector.join().expect("collector panicked");
+            let (mut latencies, served) = collector.join().expect("collector panicked");
             let report = run_res?;
+            // sort once, take every percentile from the sorted slice
+            latencies.sort_unstable();
             Ok(ServeStats {
                 served,
                 batches: report.steps,
-                p50_latency: percentile(&latencies, 0.50),
-                p99_latency: percentile(&latencies, 0.99),
+                p50_latency: percentile_sorted(&latencies, 0.50),
+                p99_latency: percentile_sorted(&latencies, 0.99),
                 mean_batch_fill: report.mean_occupancy,
                 fused_gemms: report.fused_gemms,
             })
@@ -235,7 +239,7 @@ pub fn run_loadgen(
                     let (rtx, rrx) = mpsc::channel();
                     let prompt = prompts[(c * per_client + i) % prompts.len()].clone();
                     if tx
-                        .send(Request { prompt, resp: rtx, submitted: Instant::now() })
+                        .send(Request { prompt, resp: rtx, submitted: clock::now() })
                         .is_err()
                     {
                         return;
@@ -309,9 +313,9 @@ mod tests {
         let mut srv = server(ServeConfig::default());
         let (tx, rx) = mpsc::channel::<Request>();
         let (rtx, rrx) = mpsc::channel();
-        tx.send(Request { prompt: vec![], resp: rtx, submitted: Instant::now() }).unwrap();
+        tx.send(Request { prompt: vec![], resp: rtx, submitted: clock::now() }).unwrap();
         let (rtx2, rrx2) = mpsc::channel();
-        tx.send(Request { prompt: vec![1, 2], resp: rtx2, submitted: Instant::now() }).unwrap();
+        tx.send(Request { prompt: vec![1, 2], resp: rtx2, submitted: clock::now() }).unwrap();
         drop(tx);
         let st = srv.run(rx).unwrap();
         assert_eq!(st.served, 1, "only the valid request is served");
@@ -325,7 +329,7 @@ mod tests {
         let mut srv = Server::new(mc, init_lm_params(&mc, 12), ServeConfig::default());
         let (tx, rx) = mpsc::channel::<Request>();
         let (rtx, rrx) = mpsc::channel();
-        tx.send(Request { prompt: vec![3, 1, 4], resp: rtx, submitted: Instant::now() })
+        tx.send(Request { prompt: vec![3, 1, 4], resp: rtx, submitted: clock::now() })
             .unwrap();
         drop(tx);
         srv.run(rx).unwrap();

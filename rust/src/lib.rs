@@ -17,7 +17,8 @@
 //! * execution: [`runtime`] (PJRT), [`coordinator`] (experiment scheduler +
 //!   serve shim), [`serving`] (continuous-batching decode engine + KV
 //!   cache), [`exp`] (one module per paper table/figure), [`report`]
-//! * tooling: [`cli`], [`bench_util`]
+//! * tooling: [`cli`], [`bench_util`], [`obs`] (tracing + metrics:
+//!   span timelines, histogram registry, Chrome-trace/Prometheus export)
 
 pub mod bench_util;
 pub mod cli;
@@ -29,6 +30,7 @@ pub mod formats;
 pub mod hw;
 pub mod model_io;
 pub mod nn;
+pub mod obs;
 pub mod quant;
 pub mod report;
 pub mod rng;

@@ -1,0 +1,125 @@
+//! The engine's single monotonic time source, with test injection.
+//!
+//! Production call sites use [`now`] wherever they previously called
+//! `Instant::now()`. By default that *is* `Instant::now()`; a test can
+//! switch its own thread onto a fake clock ([`fake`]) that only moves when
+//! [`advance`] is called, making TTFT/ITL metrics and span timelines exact.
+//!
+//! The fake clock is thread-local on purpose: parallel tests in one binary
+//! cannot perturb each other, and the engine paths a deterministic test
+//! drives (`Engine::submit` / `Engine::step`) run on the caller's thread.
+//!
+//! Timestamps for trace records are microseconds since a process-wide
+//! [`epoch`] (first observed instant), so every thread's spans share one
+//! timeline.
+
+use std::cell::Cell;
+use std::sync::OnceLock;
+use std::time::{Duration, Instant};
+
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+
+thread_local! {
+    static FAKE_OFFSET: Cell<Option<Duration>> = const { Cell::new(None) };
+}
+
+/// Process-wide reference instant; first call pins it. All trace
+/// timestamps are measured from here.
+pub fn epoch() -> Instant {
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Monotonic "now": the fake clock's position when this thread has one
+/// ([`fake`]), otherwise `Instant::now()`.
+pub fn now() -> Instant {
+    match FAKE_OFFSET.with(Cell::get) {
+        Some(offset) => epoch() + offset,
+        None => Instant::now(),
+    }
+}
+
+/// Microseconds from [`epoch`] to [`now`] — the trace timestamp unit.
+pub fn now_micros() -> u64 {
+    micros_since_epoch(now())
+}
+
+/// Microseconds from [`epoch`] to `t` (zero for pre-epoch instants).
+pub fn micros_since_epoch(t: Instant) -> u64 {
+    t.saturating_duration_since(epoch()).as_micros() as u64
+}
+
+/// True while this thread is on the fake clock.
+pub fn is_fake() -> bool {
+    FAKE_OFFSET.with(Cell::get).is_some()
+}
+
+/// Advance this thread's fake clock. Panics if [`fake`] is not active —
+/// advancing real time is always a bug.
+pub fn advance(d: Duration) {
+    FAKE_OFFSET.with(|f| {
+        let cur = f.get().expect("clock::advance without an active fake clock");
+        f.set(Some(cur + d));
+    });
+}
+
+/// Put this thread on a fake clock starting at [`epoch`]; time then moves
+/// only via [`advance`]. Dropping the guard returns the thread to real
+/// time.
+pub fn fake() -> FakeClockGuard {
+    epoch(); // pin the reference before anything is measured against it
+    FAKE_OFFSET.with(|f| f.set(Some(Duration::ZERO)));
+    FakeClockGuard { _priv: () }
+}
+
+/// RAII handle for a thread's fake clock (see [`fake`]).
+pub struct FakeClockGuard {
+    _priv: (),
+}
+
+impl Drop for FakeClockGuard {
+    fn drop(&mut self) {
+        FAKE_OFFSET.with(|f| f.set(None));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn real_clock_is_monotonic_and_post_epoch() {
+        let a = now();
+        let b = now();
+        assert!(b >= a);
+        assert!(micros_since_epoch(b) >= micros_since_epoch(a));
+    }
+
+    #[test]
+    fn fake_clock_moves_only_on_advance() {
+        let _guard = fake();
+        assert!(is_fake());
+        let t0 = now();
+        assert_eq!(now(), t0, "fake time is frozen between advances");
+        advance(Duration::from_millis(5));
+        assert_eq!(now().duration_since(t0), Duration::from_millis(5));
+        advance(Duration::from_micros(250));
+        assert_eq!(now().duration_since(t0), Duration::from_micros(5250));
+    }
+
+    #[test]
+    fn fake_clock_guard_restores_real_time() {
+        {
+            let _guard = fake();
+            advance(Duration::from_secs(3600));
+        }
+        assert!(!is_fake());
+        // back on real time: an hour has not actually passed
+        assert!(now().saturating_duration_since(epoch()) < Duration::from_secs(3600));
+    }
+
+    #[test]
+    #[should_panic(expected = "without an active fake clock")]
+    fn advance_without_fake_panics() {
+        advance(Duration::from_millis(1));
+    }
+}

@@ -1,0 +1,413 @@
+//! Exporters: Chrome trace-event JSON and Prometheus text exposition.
+//!
+//! [`chrome_trace_json`] renders a [`TraceSnapshot`] in the Chrome
+//! trace-event format (the JSON-object flavour: `{"traceEvents": […]}`),
+//! loadable in Perfetto or `chrome://tracing`. All events live in one
+//! process (`pid` 1); each trace track becomes a `tid` with a
+//! `thread_name` metadata record, so worker threads and decode sessions
+//! each get their own named row. Spans are complete (`ph:"X"`) events with
+//! microsecond `ts`/`dur`, emitted in sorted timestamp order; markers are
+//! thread-scoped instant (`ph:"i"`) events.
+//!
+//! [`prometheus_text`] renders a [`Registry`] in the Prometheus text
+//! exposition format (version 0.0.4): `# HELP`/`# TYPE` headers, plain
+//! counter/gauge samples, and histograms as cumulative `_bucket{le="…"}`
+//! series plus `_sum`/`_count`.
+//!
+//! [`validate_json`] is a dependency-free structural JSON check used by
+//! the golden-shape tests (the repo vendors no JSON parser).
+
+use std::fmt::Write as _;
+
+use crate::obs::metrics::{Metric, Registry};
+use crate::obs::trace::{EventKind, TraceSnapshot};
+
+/// Render `v` as a JSON-safe number literal (no NaN/inf, no exponent).
+fn fmt_num(v: f64) -> String {
+    if !v.is_finite() {
+        return "0".to_string();
+    }
+    if v == v.trunc() && v.abs() < 9e15 {
+        return format!("{}", v as i64);
+    }
+    format!("{v}")
+}
+
+/// Escape `s` for a JSON string literal (quotes, backslashes, control).
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn args_json(args: &[(&'static str, f64)]) -> String {
+    let mut out = String::from("{");
+    for (i, (k, v)) in args.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        let _ = write!(out, "\"{}\":{}", esc(k), fmt_num(*v));
+    }
+    out.push('}');
+    out
+}
+
+/// Render a drained trace as Chrome trace-event JSON (see module docs).
+pub fn chrome_trace_json(snap: &TraceSnapshot) -> String {
+    let mut out = String::from("{\"displayTimeUnit\":\"ms\",\"traceEvents\":[\n");
+    let mut first = true;
+    let mut push = |out: &mut String, first: &mut bool, ev: String| {
+        if !*first {
+            out.push_str(",\n");
+        }
+        *first = false;
+        out.push_str(&ev);
+    };
+
+    push(
+        &mut out,
+        &mut first,
+        "{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":1,\"args\":{\"name\":\"llm-datatypes\"}}"
+            .to_string(),
+    );
+    let mut tracks = snap.tracks.clone();
+    tracks.sort_by_key(|(id, _)| *id);
+    for (id, name) in &tracks {
+        push(
+            &mut out,
+            &mut first,
+            format!(
+                "{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":1,\"tid\":{id},\
+                 \"args\":{{\"name\":\"{}\"}}}}",
+                esc(name)
+            ),
+        );
+    }
+
+    let mut records: Vec<_> = snap.records.iter().collect();
+    records.sort_by_key(|r| (r.ts_us, r.track, r.dur_us));
+    for r in records {
+        let ev = match r.kind {
+            EventKind::Complete => format!(
+                "{{\"name\":\"{}\",\"cat\":\"{}\",\"ph\":\"X\",\"ts\":{},\"dur\":{},\
+                 \"pid\":1,\"tid\":{},\"args\":{}}}",
+                esc(r.name),
+                esc(r.cat),
+                r.ts_us,
+                r.dur_us,
+                r.track,
+                args_json(&r.args)
+            ),
+            EventKind::Instant => format!(
+                "{{\"name\":\"{}\",\"cat\":\"{}\",\"ph\":\"i\",\"s\":\"t\",\"ts\":{},\
+                 \"pid\":1,\"tid\":{},\"args\":{}}}",
+                esc(r.name),
+                esc(r.cat),
+                r.ts_us,
+                r.track,
+                args_json(&r.args)
+            ),
+        };
+        push(&mut out, &mut first, ev);
+    }
+    let _ = writeln!(out, "\n],\"droppedEvents\":{}}}", snap.dropped);
+    out
+}
+
+/// Render a metrics registry as Prometheus text exposition (see module
+/// docs). Histogram bucket bounds are scaled by the entry's `scale`
+/// (recorded-unit → exported-unit, e.g. µs → s).
+pub fn prometheus_text(reg: &Registry) -> String {
+    let mut out = String::new();
+    for e in reg.entries() {
+        let _ = writeln!(out, "# HELP {} {}", e.name, e.help);
+        match &e.metric {
+            Metric::Counter(v) => {
+                let _ = writeln!(out, "# TYPE {} counter\n{} {}", e.name, e.name, v);
+            }
+            Metric::Gauge(v) => {
+                let _ = writeln!(out, "# TYPE {} gauge\n{} {}", e.name, e.name, fmt_num(*v));
+            }
+            Metric::Histogram { hist, scale } => {
+                let _ = writeln!(out, "# TYPE {} histogram", e.name);
+                for (upper, cum) in hist.cumulative() {
+                    let le = fmt_num(upper as f64 * scale);
+                    let _ = writeln!(out, "{}_bucket{{le=\"{}\"}} {}", e.name, le, cum);
+                }
+                let _ = writeln!(out, "{}_bucket{{le=\"+Inf\"}} {}", e.name, hist.count());
+                let _ = writeln!(out, "{}_sum {}", e.name, fmt_num(hist.sum() as f64 * scale));
+                let _ = writeln!(out, "{}_count {}", e.name, hist.count());
+            }
+        }
+    }
+    out
+}
+
+/// Structural JSON validation: full grammar (objects, arrays, strings with
+/// escapes, numbers, literals), no value materialization. Returns the byte
+/// offset and cause on malformed input.
+pub fn validate_json(s: &str) -> Result<(), String> {
+    let mut p = JsonChecker { b: s.as_bytes(), i: 0, depth: 0 };
+    p.ws();
+    p.value()?;
+    p.ws();
+    if p.i != p.b.len() {
+        return Err(format!("trailing data at byte {}", p.i));
+    }
+    Ok(())
+}
+
+struct JsonChecker<'a> {
+    b: &'a [u8],
+    i: usize,
+    depth: usize,
+}
+
+impl JsonChecker<'_> {
+    fn ws(&mut self) {
+        while self.i < self.b.len() && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r') {
+            self.i += 1;
+        }
+    }
+
+    fn err(&self, what: &str) -> String {
+        format!("{what} at byte {}", self.i)
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.i).copied()
+    }
+
+    fn eat(&mut self, c: u8) -> Result<(), String> {
+        if self.peek() == Some(c) {
+            self.i += 1;
+            Ok(())
+        } else {
+            Err(self.err(&format!("expected '{}'", c as char)))
+        }
+    }
+
+    fn value(&mut self) -> Result<(), String> {
+        if self.depth > 128 {
+            return Err(self.err("nesting too deep"));
+        }
+        match self.peek() {
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => self.string(),
+            Some(b't') => self.literal("true"),
+            Some(b'f') => self.literal("false"),
+            Some(b'n') => self.literal("null"),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            _ => Err(self.err("expected a JSON value")),
+        }
+    }
+
+    fn literal(&mut self, lit: &str) -> Result<(), String> {
+        if self.b[self.i..].starts_with(lit.as_bytes()) {
+            self.i += lit.len();
+            Ok(())
+        } else {
+            Err(self.err(&format!("expected '{lit}'")))
+        }
+    }
+
+    fn object(&mut self) -> Result<(), String> {
+        self.depth += 1;
+        self.eat(b'{')?;
+        self.ws();
+        if self.peek() == Some(b'}') {
+            self.i += 1;
+            self.depth -= 1;
+            return Ok(());
+        }
+        loop {
+            self.ws();
+            self.string()?;
+            self.ws();
+            self.eat(b':')?;
+            self.ws();
+            self.value()?;
+            self.ws();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b'}') => {
+                    self.i += 1;
+                    self.depth -= 1;
+                    return Ok(());
+                }
+                _ => return Err(self.err("expected ',' or '}'")),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<(), String> {
+        self.depth += 1;
+        self.eat(b'[')?;
+        self.ws();
+        if self.peek() == Some(b']') {
+            self.i += 1;
+            self.depth -= 1;
+            return Ok(());
+        }
+        loop {
+            self.ws();
+            self.value()?;
+            self.ws();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b']') => {
+                    self.i += 1;
+                    self.depth -= 1;
+                    return Ok(());
+                }
+                _ => return Err(self.err("expected ',' or ']'")),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<(), String> {
+        self.eat(b'"')?;
+        while let Some(c) = self.peek() {
+            self.i += 1;
+            match c {
+                b'"' => return Ok(()),
+                b'\\' => match self.peek() {
+                    Some(b'"' | b'\\' | b'/' | b'b' | b'f' | b'n' | b'r' | b't') => self.i += 1,
+                    Some(b'u') => {
+                        self.i += 1;
+                        for _ in 0..4 {
+                            match self.peek() {
+                                Some(h) if h.is_ascii_hexdigit() => self.i += 1,
+                                _ => return Err(self.err("bad \\u escape")),
+                            }
+                        }
+                    }
+                    _ => return Err(self.err("bad escape")),
+                },
+                c if c < 0x20 => return Err(self.err("raw control character in string")),
+                _ => {}
+            }
+        }
+        Err(self.err("unterminated string"))
+    }
+
+    fn number(&mut self) -> Result<(), String> {
+        if self.peek() == Some(b'-') {
+            self.i += 1;
+        }
+        let digits = |p: &mut Self| -> Result<(), String> {
+            let start = p.i;
+            while matches!(p.peek(), Some(c) if c.is_ascii_digit()) {
+                p.i += 1;
+            }
+            if p.i == start {
+                Err(p.err("expected digits"))
+            } else {
+                Ok(())
+            }
+        };
+        digits(self)?;
+        if self.peek() == Some(b'.') {
+            self.i += 1;
+            digits(self)?;
+        }
+        if matches!(self.peek(), Some(b'e' | b'E')) {
+            self.i += 1;
+            if matches!(self.peek(), Some(b'+' | b'-')) {
+                self.i += 1;
+            }
+            digits(self)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::metrics::Histogram;
+    use crate::obs::trace::SpanRecord;
+
+    #[test]
+    fn json_validator_accepts_and_rejects() {
+        for ok in [
+            "{}",
+            "[]",
+            "null",
+            "-12.5e-3",
+            "\"a \\\"quoted\\\" \\u00e9 string\"",
+            "{\"a\":[1,2,{\"b\":null}],\"c\":true}",
+        ] {
+            assert!(validate_json(ok).is_ok(), "{ok}");
+        }
+        for bad in ["", "{", "[1,]", "{\"a\":}", "01a", "\"unterminated", "{}extra", "[1 2]"] {
+            assert!(validate_json(bad).is_err(), "{bad}");
+        }
+    }
+
+    fn rec(kind: EventKind, name: &'static str, track: u32, ts: u64, dur: u64) -> SpanRecord {
+        SpanRecord { kind, cat: "test", name, track, ts_us: ts, dur_us: dur, args: vec![("rows", 2.0)] }
+    }
+
+    #[test]
+    fn chrome_trace_is_valid_json_with_sorted_complete_events() {
+        let snap = TraceSnapshot {
+            tracks: vec![(2, "session-1".to_string()), (1, "engine \"main\"".to_string())],
+            records: vec![
+                rec(EventKind::Complete, "late", 1, 90, 5),
+                rec(EventKind::Complete, "early", 2, 10, 40),
+                rec(EventKind::Instant, "mark", 2, 50, 0),
+            ],
+            dropped: 3,
+        };
+        let json = chrome_trace_json(&snap);
+        validate_json(&json).unwrap();
+        assert!(json.contains("\"process_name\""));
+        assert!(json.contains("\"name\":\"session-1\""));
+        assert!(json.contains("engine \\\"main\\\""), "track names are escaped");
+        assert!(json.contains("\"droppedEvents\":3"));
+        // events are sorted by timestamp: "early" (ts 10) before "late" (ts 90)
+        assert!(json.find("\"early\"").unwrap() < json.find("\"late\"").unwrap());
+        assert!(json.contains("\"ph\":\"X\",\"ts\":10,\"dur\":40"));
+        assert!(json.contains("\"ph\":\"i\""));
+    }
+
+    #[test]
+    fn prometheus_text_renders_all_metric_kinds() {
+        let mut hist = Histogram::new();
+        for v in [1_000u64, 2_000, 2_000, 40_000] {
+            hist.record(v);
+        }
+        let mut reg = Registry::new();
+        reg.counter("llmdt_steps_total", "Engine steps.", 7);
+        reg.gauge("llmdt_pages_in_use", "Held KV pages.", 5.0);
+        reg.histogram("llmdt_ttft_seconds", "TTFT.", hist, 1e-6);
+        let text = prometheus_text(&reg);
+        assert!(text.contains("# TYPE llmdt_steps_total counter\nllmdt_steps_total 7\n"));
+        assert!(text.contains("# TYPE llmdt_pages_in_use gauge\nllmdt_pages_in_use 5\n"));
+        assert!(text.contains("# TYPE llmdt_ttft_seconds histogram\n"));
+        assert!(text.contains("llmdt_ttft_seconds_bucket{le=\"+Inf\"} 4\n"));
+        assert!(text.contains("llmdt_ttft_seconds_count 4\n"));
+        // buckets are cumulative and scaled into seconds (µs * 1e-6 < 1)
+        let bucket_lines: Vec<&str> =
+            text.lines().filter(|l| l.starts_with("llmdt_ttft_seconds_bucket{le=\"0")).collect();
+        assert!(!bucket_lines.is_empty());
+        let counts: Vec<u64> = bucket_lines
+            .iter()
+            .map(|l| l.rsplit(' ').next().unwrap().parse().unwrap())
+            .collect();
+        assert!(counts.windows(2).all(|w| w[0] <= w[1]), "{counts:?}");
+        assert_eq!(*counts.last().unwrap(), 4);
+        assert!(text.ends_with('\n'));
+    }
+}

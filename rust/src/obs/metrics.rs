@@ -1,0 +1,288 @@
+//! Log-bucketed histograms and a named-metric registry.
+//!
+//! [`Histogram`] is an HDR-style log-linear histogram over `u64` samples:
+//! each power-of-two octave splits into 4 linear sub-buckets, so relative
+//! bucket width is at most 25 % and the whole `u64` range fits in
+//! [`BUCKETS`] counters — memory is O(buckets) no matter how many samples
+//! are recorded, which is what lets `MetricsCollector` retire its unbounded
+//! per-token `Vec`s. Percentiles are nearest-rank over the bucket counts,
+//! clamped into the observed `[min, max]`, so a reported quantile is always
+//! within one bucket width of the true sample.
+//!
+//! [`Registry`] is a flat snapshot of named counters / gauges / histograms
+//! assembled at export time; [`crate::obs::export::prometheus_text`]
+//! renders it as Prometheus text exposition.
+
+/// Total bucket count: values 0–3 exactly, then 4 sub-buckets for each of
+/// the remaining 62 octaves (top index is `bucket_index(u64::MAX)` = 251).
+pub const BUCKETS: usize = 252;
+
+/// Bucket index for a sample; monotone in `v`.
+pub fn bucket_index(v: u64) -> usize {
+    if v < 4 {
+        return v as usize;
+    }
+    let octave = 63 - v.leading_zeros() as usize; // >= 2
+    (octave - 1) * 4 + ((v >> (octave - 2)) & 3) as usize
+}
+
+/// Half-open value range `[lo, hi)` covered by bucket `i` (`hi` saturates
+/// at the top of the `u64` range).
+pub fn bucket_bounds(i: usize) -> (u64, u64) {
+    assert!(i < BUCKETS, "bucket {i} out of range");
+    if i < 4 {
+        return (i as u64, i as u64 + 1);
+    }
+    let octave = i / 4 + 1;
+    let sub = (i % 4) as u64;
+    let lo = (4 + sub) << (octave - 2);
+    (lo, lo.saturating_add(1 << (octave - 2)))
+}
+
+/// Bounded-memory histogram of `u64` samples (see module docs).
+#[derive(Clone)]
+pub struct Histogram {
+    counts: Box<[u64; BUCKETS]>,
+    count: u64,
+    sum: u64,
+    min: u64,
+    max: u64,
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram { counts: Box::new([0; BUCKETS]), count: 0, sum: 0, min: u64::MAX, max: 0 }
+    }
+
+    pub fn record(&mut self, v: u64) {
+        self.counts[bucket_index(v)] += 1;
+        self.count += 1;
+        self.sum = self.sum.saturating_add(v);
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Smallest recorded sample (0 when empty).
+    pub fn min(&self) -> u64 {
+        if self.count == 0 {
+            0
+        } else {
+            self.min
+        }
+    }
+
+    /// Largest recorded sample.
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Nearest-rank quantile over the bucket counts, `q` in [0, 1]. The
+    /// result is the rank's bucket lower bound clamped into the observed
+    /// `[min, max]`: within one bucket width of the true sample, and exact
+    /// for single-sample and sub-4 values. Empty histograms report 0.
+    pub fn percentile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((self.count as f64 * q.clamp(0.0, 1.0)).ceil() as u64).clamp(1, self.count);
+        let mut seen = 0;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return bucket_bounds(i).0.clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    /// `(bucket upper bound, cumulative count)` for every non-empty
+    /// bucket, in value order — the Prometheus `_bucket{le=…}` series.
+    pub fn cumulative(&self) -> Vec<(u64, u64)> {
+        let mut out = Vec::new();
+        let mut seen = 0;
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c > 0 {
+                seen += c;
+                out.push((bucket_bounds(i).1, seen));
+            }
+        }
+        out
+    }
+}
+
+/// One exported series.
+pub enum Metric {
+    /// Monotone event count.
+    Counter(u64),
+    /// Point-in-time value.
+    Gauge(f64),
+    /// Distribution; `scale` converts recorded units to exported units
+    /// (1e-6 turns recorded microseconds into Prometheus-idiomatic
+    /// seconds).
+    Histogram { hist: Histogram, scale: f64 },
+}
+
+/// A named metric with help text.
+pub struct Entry {
+    pub name: String,
+    pub help: String,
+    pub metric: Metric,
+}
+
+/// Flat, ordered snapshot of named metrics for export.
+#[derive(Default)]
+pub struct Registry {
+    entries: Vec<Entry>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    pub fn counter(&mut self, name: &str, help: &str, value: u64) {
+        self.push(name, help, Metric::Counter(value));
+    }
+
+    pub fn gauge(&mut self, name: &str, help: &str, value: f64) {
+        self.push(name, help, Metric::Gauge(value));
+    }
+
+    pub fn histogram(&mut self, name: &str, help: &str, hist: Histogram, scale: f64) {
+        self.push(name, help, Metric::Histogram { hist, scale });
+    }
+
+    fn push(&mut self, name: &str, help: &str, metric: Metric) {
+        self.entries.push(Entry { name: name.to_string(), help: help.to_string(), metric });
+    }
+
+    pub fn entries(&self) -> &[Entry] {
+        &self.entries
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Metric> {
+        self.entries.iter().find(|e| e.name == name).map(|e| &e.metric)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buckets_partition_the_u64_range() {
+        // indices are monotone, contiguous, and bounds invert the index
+        let mut prev = None;
+        for i in 0..BUCKETS {
+            let (lo, hi) = bucket_bounds(i);
+            assert!(lo < hi || hi == u64::MAX);
+            assert_eq!(bucket_index(lo), i, "lower bound maps back to its bucket");
+            if let Some(p) = prev {
+                assert_eq!(lo, p, "bucket {i} not contiguous");
+            }
+            prev = Some(hi);
+        }
+        assert_eq!(bucket_index(u64::MAX), BUCKETS - 1);
+        // exact region: one bucket per value below 4
+        for v in 0..4 {
+            assert_eq!(bucket_bounds(bucket_index(v)), (v, v + 1));
+        }
+    }
+
+    #[test]
+    fn record_percentile_round_trip_within_one_bucket_width() {
+        for v in [0, 1, 3, 4, 7, 13, 100, 10_000, 123_456, u64::MAX / 3] {
+            let mut h = Histogram::new();
+            h.record(v);
+            // single sample: clamp to [min, max] makes every quantile exact
+            for q in [0.0, 0.5, 1.0] {
+                assert_eq!(h.percentile(q), v, "v={v} q={q}");
+            }
+        }
+        // multi-sample: each quantile lands within its bucket's width
+        let mut h = Histogram::new();
+        let samples: Vec<u64> = (0..1000).map(|i| i * i).collect();
+        for &s in &samples {
+            h.record(s);
+        }
+        for q in [0.01, 0.25, 0.5, 0.9, 0.99, 1.0] {
+            let got = h.percentile(q);
+            let idx = bucket_index(got);
+            let (lo, hi) = bucket_bounds(idx);
+            let width = hi - lo;
+            let rank = ((samples.len() as f64 * q).ceil() as usize).clamp(1, samples.len());
+            let exact = samples[rank - 1]; // samples are already sorted
+            assert!(
+                got <= exact && exact.saturating_sub(got) <= width,
+                "q={q}: got {got} exact {exact} width {width}"
+            );
+        }
+    }
+
+    #[test]
+    fn percentile_edge_ranks() {
+        let mut h = Histogram::new();
+        assert_eq!(h.percentile(0.5), 0, "empty histogram reports zero");
+        for v in [1u64, 2, 3] {
+            h.record(v);
+        }
+        assert_eq!(h.percentile(0.0), 1, "q=0 is the minimum");
+        assert_eq!(h.percentile(1.0), 3, "q=1 is the maximum");
+        assert_eq!(h.percentile(0.5), 2);
+        assert_eq!(h.count(), 3);
+        assert_eq!(h.sum(), 6);
+        assert_eq!(h.min(), 1);
+        assert_eq!(h.max(), 3);
+        assert!((h.mean() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cumulative_counts_are_monotone_and_total() {
+        let mut h = Histogram::new();
+        for v in [1u64, 1, 5, 900, 900, 900, 1_000_000] {
+            h.record(v);
+        }
+        let cum = h.cumulative();
+        assert!(!cum.is_empty());
+        assert!(cum.windows(2).all(|w| w[0].0 < w[1].0 && w[0].1 <= w[1].1));
+        assert_eq!(cum.last().unwrap().1, h.count());
+    }
+
+    #[test]
+    fn registry_orders_and_finds_entries() {
+        let mut reg = Registry::new();
+        reg.counter("a_total", "a", 3);
+        reg.gauge("b", "b", 1.5);
+        reg.histogram("c_seconds", "c", Histogram::new(), 1e-6);
+        assert_eq!(reg.entries().len(), 3);
+        assert!(matches!(reg.get("a_total"), Some(Metric::Counter(3))));
+        assert!(matches!(reg.get("b"), Some(Metric::Gauge(v)) if *v == 1.5));
+        assert!(reg.get("missing").is_none());
+    }
+}

@@ -1,0 +1,33 @@
+//! Observability: low-overhead tracing + metrics for the serving engine.
+//!
+//! Three layers, each usable alone:
+//!
+//! - [`clock`] — the single monotonic time source every timing call site in
+//!   the engine goes through. Tests inject a fake, thread-local clock
+//!   ([`clock::fake`]) and advance it explicitly, making latency metrics and
+//!   span timelines deterministic.
+//! - [`trace`] — span/event records in per-thread ring buffers (bounded,
+//!   drop-oldest) behind a single global enable flag. The disabled path is
+//!   one relaxed atomic load per span site; no clock read, no allocation,
+//!   no lock. Enabled, a span costs one clock read at open and a ring push
+//!   under an uncontended thread-local mutex at close.
+//! - [`metrics`] — named counters, gauges, and log-bucketed histograms
+//!   ([`metrics::Histogram`]: O(buckets) memory however many samples are
+//!   recorded, ≤ 25 % relative bucket width) assembled into a
+//!   [`metrics::Registry`] snapshot for export.
+//!
+//! [`export`] renders a [`trace::TraceSnapshot`] as Chrome trace-event JSON
+//! (loadable in Perfetto / `chrome://tracing`; one track per worker thread,
+//! one per decode session) and a [`metrics::Registry`] as Prometheus text
+//! exposition. `serve-decode --trace-out/--metrics-out` and the perf
+//! harnesses wire both to files.
+//!
+//! Instrumentation is observation-only by contract: enabling tracing must
+//! not change a single emitted token or logprob bit (pinned by the
+//! `obs_trace` integration tests and tracing-enabled variants of the
+//! bit-identity property suites).
+
+pub mod clock;
+pub mod export;
+pub mod metrics;
+pub mod trace;

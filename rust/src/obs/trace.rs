@@ -1,0 +1,394 @@
+//! Span/event tracing into per-thread ring buffers.
+//!
+//! Every instrumented site first checks one global flag ([`enabled`], a
+//! relaxed atomic load) — with tracing off that load is the *entire* cost,
+//! so span sites are safe inside per-token and per-kernel paths. Enabled,
+//! records go into the recording thread's own bounded ring (drop-oldest,
+//! with a dropped counter), so hot threads never contend with each other;
+//! [`snapshot_and_drain`] collects every ring for export.
+//!
+//! Records target *tracks*: small integer lanes the Chrome exporter renders
+//! as named rows. Each recording thread gets its own track on first use
+//! (named after the thread — pool workers show up as `llmdt-pool-N`), and
+//! logical timelines that outlive any one thread (decode sessions) get
+//! stable named tracks via [`named_track`] / [`session_track`]. A record is
+//! always *stored* in the recording thread's ring but may *target* another
+//! track — the engine thread records a session's `queued` span onto that
+//! session's track.
+
+use std::cell::OnceCell;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+
+use crate::obs::clock;
+
+/// Default per-thread ring capacity, in records.
+pub const DEFAULT_RING_CAPACITY: usize = 16 * 1024;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static RING_CAPACITY: AtomicUsize = AtomicUsize::new(DEFAULT_RING_CAPACITY);
+
+/// All track names ever allocated; track id = index + 1 (0 is unused so
+/// Chrome metadata rows sort after the process row).
+static TRACKS: Mutex<Vec<String>> = Mutex::new(Vec::new());
+
+/// Every thread ring ever registered (rings outlive their threads so a
+/// drained snapshot still sees records from finished workers).
+static RINGS: Mutex<Vec<Arc<Mutex<Ring>>>> = Mutex::new(Vec::new());
+
+thread_local! {
+    static LOCAL_RING: OnceCell<(u32, Arc<Mutex<Ring>>)> = const { OnceCell::new() };
+}
+
+/// Is tracing on? One relaxed load — the whole disabled-path cost.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn tracing on/off. Enabling pins [`clock::epoch`] so all timestamps
+/// share a reference.
+pub fn set_enabled(on: bool) {
+    if on {
+        clock::epoch();
+    }
+    ENABLED.store(on, Ordering::SeqCst);
+}
+
+/// Shrink/grow the per-thread ring capacity (takes effect on the next
+/// push; existing overflow is trimmed then). Tests use tiny rings to pin
+/// wraparound behaviour.
+pub fn set_ring_capacity(records: usize) {
+    RING_CAPACITY.store(records.max(1), Ordering::SeqCst);
+}
+
+/// How a record renders in the Chrome exporter.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EventKind {
+    /// A duration slice (`ph:"X"` complete event).
+    Complete,
+    /// A point-in-time marker (`ph:"i"` instant event).
+    Instant,
+}
+
+/// One traced event: `(name, t_start, t_end, args)` plus its target track.
+#[derive(Clone, Debug)]
+pub struct SpanRecord {
+    pub kind: EventKind,
+    /// Category shown by Chrome's filter UI: "engine", "session",
+    /// "kernel", "pool".
+    pub cat: &'static str,
+    pub name: &'static str,
+    /// Track (Chrome `tid`) this record renders on.
+    pub track: u32,
+    /// Microseconds since [`clock::epoch`].
+    pub ts_us: u64,
+    /// Duration in microseconds (0 for instants).
+    pub dur_us: u64,
+    /// Numeric annotations (batch rows, page-pool pressure, queue wait…).
+    pub args: Vec<(&'static str, f64)>,
+}
+
+struct Ring {
+    buf: VecDeque<SpanRecord>,
+    dropped: u64,
+}
+
+impl Ring {
+    fn push(&mut self, rec: SpanRecord) {
+        let cap = RING_CAPACITY.load(Ordering::Relaxed).max(1);
+        while self.buf.len() >= cap {
+            self.buf.pop_front();
+            self.dropped += 1;
+        }
+        self.buf.push_back(rec);
+    }
+}
+
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    // A panic while holding one of these mutexes only loses trace records;
+    // recover the data rather than poisoning all future tracing.
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Stable track id for `name`, allocating on first use. Same name → same
+/// track (how a session keeps one timeline across preempt/requeue).
+pub fn named_track(name: &str) -> u32 {
+    let mut tracks = lock(&TRACKS);
+    if let Some(i) = tracks.iter().position(|n| n == name) {
+        return (i + 1) as u32;
+    }
+    tracks.push(name.to_string());
+    tracks.len() as u32
+}
+
+/// The per-session track, named `session-<id>`.
+pub fn session_track(id: u64) -> u32 {
+    named_track(&format!("session-{id}"))
+}
+
+/// A fresh track for the current thread, display-name deduplicated so two
+/// unnamed threads don't merge into one lane.
+fn unique_track(label: &str) -> u32 {
+    let mut tracks = lock(&TRACKS);
+    let mut name = label.to_string();
+    let mut k = 1;
+    while tracks.iter().any(|n| n == &name) {
+        k += 1;
+        name = format!("{label} #{k}");
+    }
+    tracks.push(name);
+    tracks.len() as u32
+}
+
+/// Run `f` with this thread's (track, ring), registering both on first use.
+fn with_local_ring<R>(f: impl FnOnce(u32, &mut Ring) -> R) -> R {
+    LOCAL_RING.with(|cell| {
+        let (track, ring) = cell.get_or_init(|| {
+            let label = match std::thread::current().name() {
+                Some(name) => name.to_string(),
+                None => "thread".to_string(),
+            };
+            let track = unique_track(&label);
+            let ring = Arc::new(Mutex::new(Ring { buf: VecDeque::new(), dropped: 0 }));
+            lock(&RINGS).push(Arc::clone(&ring));
+            (track, ring)
+        });
+        f(*track, &mut lock(ring))
+    })
+}
+
+/// The current thread's track id (registers the thread on first use).
+pub fn current_track() -> u32 {
+    with_local_ring(|track, _| track)
+}
+
+/// `Some(now_micros)` when tracing is on, else `None` — the open half of a
+/// manually closed span (`let t0 = trace::start(); … complete_here(…)`).
+#[inline]
+pub fn start() -> Option<u64> {
+    if enabled() {
+        Some(clock::now_micros())
+    } else {
+        None
+    }
+}
+
+/// RAII span on the current thread's track: opens at [`span`], records on
+/// drop. Disabled, construction is the one atomic load and drop is free.
+pub struct Span {
+    t0_us: Option<u64>,
+    cat: &'static str,
+    name: &'static str,
+    args: Vec<(&'static str, f64)>,
+}
+
+/// Open a [`Span`]; attach annotations with [`Span::arg`].
+#[inline]
+pub fn span(cat: &'static str, name: &'static str) -> Span {
+    Span { t0_us: start(), cat, name, args: Vec::new() }
+}
+
+impl Span {
+    /// Attach a numeric annotation (no-op while disabled).
+    pub fn arg(mut self, key: &'static str, value: f64) -> Span {
+        if self.t0_us.is_some() {
+            self.args.push((key, value));
+        }
+        self
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if let Some(t0) = self.t0_us {
+            let t1 = clock::now_micros();
+            let args = std::mem::take(&mut self.args);
+            record(EventKind::Complete, None, self.cat, self.name, t0, t1, args);
+        }
+    }
+}
+
+/// Record a complete span on the current thread's track, closing at "now".
+/// `t0_us` comes from an earlier [`start`] (which already checked the
+/// enable flag, so a `Some` here records unconditionally).
+pub fn complete_here(
+    cat: &'static str,
+    name: &'static str,
+    t0_us: u64,
+    args: &[(&'static str, f64)],
+) {
+    let t1 = clock::now_micros();
+    record(EventKind::Complete, None, cat, name, t0_us, t1, args.to_vec());
+}
+
+/// Record a complete span with explicit bounds on an explicit track (how
+/// the engine thread writes session-lifecycle spans). Checks the enable
+/// flag itself.
+pub fn complete(
+    track: u32,
+    cat: &'static str,
+    name: &'static str,
+    t0_us: u64,
+    t1_us: u64,
+    args: &[(&'static str, f64)],
+) {
+    if !enabled() {
+        return;
+    }
+    record(EventKind::Complete, Some(track), cat, name, t0_us, t1_us, args.to_vec());
+}
+
+/// Record a point-in-time marker on `track` at "now". Checks the enable
+/// flag itself.
+pub fn instant(track: u32, cat: &'static str, name: &'static str, args: &[(&'static str, f64)]) {
+    if !enabled() {
+        return;
+    }
+    let ts = clock::now_micros();
+    record(EventKind::Instant, Some(track), cat, name, ts, ts, args.to_vec());
+}
+
+fn record(
+    kind: EventKind,
+    track: Option<u32>,
+    cat: &'static str,
+    name: &'static str,
+    t0_us: u64,
+    t1_us: u64,
+    args: Vec<(&'static str, f64)>,
+) {
+    with_local_ring(|own_track, ring| {
+        ring.push(SpanRecord {
+            kind,
+            cat,
+            name,
+            track: track.unwrap_or(own_track),
+            ts_us: t0_us,
+            dur_us: t1_us.saturating_sub(t0_us),
+            args,
+        });
+    });
+}
+
+/// Everything the exporters need: the drained records, the track-name
+/// table, and how many records the rings dropped (overwrote) getting here.
+pub struct TraceSnapshot {
+    /// `(track id, display name)` for every allocated track.
+    pub tracks: Vec<(u32, String)>,
+    pub records: Vec<SpanRecord>,
+    pub dropped: u64,
+}
+
+/// Drain every thread's ring into one snapshot. Tracks persist (ids stay
+/// stable for live threads/sessions); records and dropped counts reset.
+pub fn snapshot_and_drain() -> TraceSnapshot {
+    let rings: Vec<Arc<Mutex<Ring>>> = lock(&RINGS).clone();
+    let mut records = Vec::new();
+    let mut dropped = 0;
+    for ring in rings {
+        let mut ring = lock(&ring);
+        records.extend(ring.buf.drain(..));
+        dropped += ring.dropped;
+        ring.dropped = 0;
+    }
+    let tracks = lock(&TRACKS)
+        .iter()
+        .enumerate()
+        .map(|(i, name)| ((i + 1) as u32, name.clone()))
+        .collect();
+    TraceSnapshot { tracks, records, dropped }
+}
+
+/// Discard all buffered records and dropped counts (start a clean capture).
+pub fn reset() {
+    snapshot_and_drain();
+}
+
+#[cfg(test)]
+pub(crate) mod tests {
+    use super::*;
+
+    /// Tests that flip the global enable flag or ring capacity serialize on
+    /// this (shared with the clock/export tests that trace).
+    pub(crate) static OBS_TEST_LOCK: Mutex<()> = Mutex::new(());
+
+    fn drain_mine(name: &'static str) -> Vec<SpanRecord> {
+        snapshot_and_drain().records.into_iter().filter(|r| r.name == name).collect()
+    }
+
+    #[test]
+    fn disabled_span_records_nothing() {
+        let _g = lock(&OBS_TEST_LOCK);
+        set_enabled(false);
+        reset();
+        {
+            let _s = span("test", "disabled_span_probe").arg("x", 1.0);
+        }
+        complete(current_track(), "test", "disabled_span_probe", 0, 5, &[]);
+        instant(current_track(), "test", "disabled_span_probe", &[]);
+        assert!(drain_mine("disabled_span_probe").is_empty());
+    }
+
+    #[test]
+    fn enabled_span_records_bounds_and_args() {
+        let _g = lock(&OBS_TEST_LOCK);
+        set_enabled(true);
+        reset();
+        {
+            let _s = span("test", "enabled_span_probe").arg("rows", 4.0);
+        }
+        set_enabled(false);
+        let got = drain_mine("enabled_span_probe");
+        assert_eq!(got.len(), 1);
+        let r = &got[0];
+        assert_eq!(r.kind, EventKind::Complete);
+        assert_eq!(r.cat, "test");
+        assert_eq!(r.args, vec![("rows", 4.0)]);
+        assert_eq!(r.track, current_track());
+    }
+
+    #[test]
+    fn ring_wraparound_drops_oldest_and_counts() {
+        let _g = lock(&OBS_TEST_LOCK);
+        set_enabled(true);
+        reset();
+        set_ring_capacity(8);
+        for i in 0..20u64 {
+            complete(current_track(), "test", "wrap_probe", i, i + 1, &[("i", i as f64)]);
+        }
+        set_enabled(false);
+        let snap = snapshot_and_drain();
+        set_ring_capacity(DEFAULT_RING_CAPACITY);
+        let mine: Vec<_> = snap.records.iter().filter(|r| r.name == "wrap_probe").collect();
+        // capacity 8: records 0..12 were overwritten, 12..20 survive in order
+        assert_eq!(mine.len(), 8);
+        let ts: Vec<u64> = mine.iter().map(|r| r.ts_us).collect();
+        assert_eq!(ts, (12..20).collect::<Vec<u64>>());
+        assert!(snap.dropped >= 12, "dropped={} < 12", snap.dropped);
+    }
+
+    #[test]
+    fn named_tracks_are_stable_and_unique_tracks_are_not() {
+        let a = named_track("obs-test-stable-track");
+        let b = named_track("obs-test-stable-track");
+        assert_eq!(a, b);
+        let c = unique_track("obs-test-stable-track");
+        assert_ne!(a, c);
+        assert_eq!(session_track(987_654), session_track(987_654));
+    }
+
+    #[test]
+    fn instant_records_zero_duration() {
+        let _g = lock(&OBS_TEST_LOCK);
+        set_enabled(true);
+        reset();
+        instant(current_track(), "test", "instant_probe", &[("v", 2.0)]);
+        set_enabled(false);
+        let got = drain_mine("instant_probe");
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].kind, EventKind::Instant);
+        assert_eq!(got[0].dur_us, 0);
+    }
+}

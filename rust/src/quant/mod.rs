@@ -260,6 +260,10 @@ pub fn lut_gemm_into(
     if m == 0 || k == 0 || n == 0 {
         return;
     }
+    let _span = crate::obs::trace::span("kernel", "quant.lut_gemm")
+        .arg("m", m as f64)
+        .arg("k", k as f64)
+        .arg("n", n as f64);
     let row_bytes = w.row_bytes();
     let lut = &w.lut;
     let kc = GEMM_KC.min(k);

@@ -37,6 +37,8 @@ use std::panic::AssertUnwindSafe;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock};
 
+use crate::obs::{clock, trace};
+
 /// Cached `std::thread::available_parallelism` (>= 1).
 pub fn parallelism() -> usize {
     static CORES: OnceLock<usize> = OnceLock::new();
@@ -79,12 +81,21 @@ impl Latch {
 struct Task {
     job: Job,
     latch: Arc<Latch>,
+    /// µs-since-epoch enqueue time, 0 when tracing was off at dispatch —
+    /// lets the per-task span split queue wait from execution.
+    enqueued_us: u64,
 }
 
 impl Task {
     fn run(self) {
-        let panicked = std::panic::catch_unwind(AssertUnwindSafe(self.job)).is_err();
-        self.latch.count_down(panicked);
+        let Task { job, latch, enqueued_us } = self;
+        let t0 = trace::start();
+        let panicked = std::panic::catch_unwind(AssertUnwindSafe(job)).is_err();
+        if let Some(t0) = t0 {
+            let wait = if enqueued_us > 0 { t0.saturating_sub(enqueued_us) } else { 0 };
+            trace::complete_here("pool", "pool.task", t0, &[("queue_wait_us", wait as f64)]);
+        }
+        latch.count_down(panicked);
     }
 }
 
@@ -160,6 +171,9 @@ impl WorkerPool {
             return;
         }
         self.inner.dispatches.fetch_add(1, Ordering::Relaxed);
+        let _dispatch_span =
+            trace::span("pool", "pool.dispatch").arg("tasks", n as f64);
+        let enqueued_us = if trace::enabled() { clock::now_micros() } else { 0 };
         let latch = Latch::new(n);
         {
             let mut q = lock(&self.inner.queue);
@@ -171,7 +185,7 @@ impl WorkerPool {
                 let job: Job = unsafe {
                     std::mem::transmute::<Box<dyn FnOnce() + Send + 's>, Job>(t)
                 };
-                q.push_back(Task { job, latch: latch.clone() });
+                q.push_back(Task { job, latch: latch.clone(), enqueued_us });
             }
         }
         self.inner.available.notify_all();

@@ -4,34 +4,121 @@
 //! batch occupancy, and the fused-path counters (rows per batched forward,
 //! fused GEMM launches). Supersedes the old `ServeStats` aggregate, which
 //! the coordinator shim now derives from this collector.
+//!
+//! Storage is bounded: every latency sample lands in an O(buckets)
+//! log-bucketed [`Histogram`], and at most [`RAW_SAMPLE_CAP`] raw samples
+//! per series are retained for exact percentiles. Short runs (every test,
+//! every smoke) stay bit-exact; past the cap the report switches to
+//! histogram percentiles (within one bucket width, ≤ 25 % relative) and
+//! says so via [`MetricsReport::samples_dropped`] — memory no longer grows
+//! with token count, which is what lets an engine run for days.
+//! [`MetricsCollector::registry`] exposes the same state as a named-metric
+//! [`Registry`] for Prometheus export.
 
 use std::fmt;
-use std::time::{Duration, Instant};
+use std::time::Duration;
+
+use crate::obs::clock;
+use crate::obs::metrics::{Histogram, Registry};
+use crate::runtime::pool::PoolStats;
+
+/// Raw latency samples retained per series for exact percentiles; beyond
+/// this the histogram answers and `samples_dropped` counts the excess.
+pub const RAW_SAMPLE_CAP: usize = 8192;
 
 /// Nearest-rank percentile of an (unsorted) duration sample; `q` in [0, 1].
-/// Empty samples report zero; a single sample is every percentile.
+/// Empty samples report zero; a single sample is every percentile. Sorts a
+/// copy per call — callers taking several quantiles should sort once and
+/// use [`percentile_sorted`].
 pub fn percentile(samples: &[Duration], q: f64) -> Duration {
-    if samples.is_empty() {
-        return Duration::ZERO;
-    }
     let mut s = samples.to_vec();
     s.sort();
-    let rank = (s.len() as f64 * q.clamp(0.0, 1.0)).ceil() as usize;
-    s[rank.saturating_sub(1).min(s.len() - 1)]
+    percentile_sorted(&s, q)
+}
+
+/// Nearest-rank percentile of an already **sorted** sample (ascending).
+pub fn percentile_sorted(sorted: &[Duration], q: f64) -> Duration {
+    if sorted.is_empty() {
+        return Duration::ZERO;
+    }
+    let rank = (sorted.len() as f64 * q.clamp(0.0, 1.0)).ceil() as usize;
+    sorted[rank.saturating_sub(1).min(sorted.len() - 1)]
+}
+
+fn nearest_rank(sorted: &[u64], q: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let rank = (sorted.len() as f64 * q.clamp(0.0, 1.0)).ceil() as usize;
+    sorted[rank.saturating_sub(1).min(sorted.len() - 1)]
+}
+
+/// One latency series: a histogram of every sample (bounded memory) plus
+/// up to `cap` raw samples for exact percentiles on short runs. Samples
+/// are stored in nanoseconds so sub-microsecond gaps stay observable.
+pub struct SampleSet {
+    hist: Histogram,
+    raw: Vec<u64>,
+    cap: usize,
+    dropped: u64,
+}
+
+impl SampleSet {
+    fn new(cap: usize) -> SampleSet {
+        SampleSet { hist: Histogram::new(), raw: Vec::new(), cap, dropped: 0 }
+    }
+
+    fn record(&mut self, nanos: u64) {
+        self.hist.record(nanos);
+        if self.raw.len() < self.cap {
+            self.raw.push(nanos);
+        } else {
+            self.dropped += 1;
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.hist.count()
+    }
+
+    /// Samples past the raw cap (histogram still has them all).
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    pub fn hist(&self) -> &Histogram {
+        &self.hist
+    }
+
+    /// The requested quantiles, one sort for all of them: exact
+    /// (nearest-rank over raw samples) while nothing was dropped,
+    /// histogram-resolution after.
+    fn percentiles(&self, qs: &[f64]) -> Vec<Duration> {
+        if self.dropped == 0 {
+            let mut sorted = self.raw.clone();
+            sorted.sort_unstable();
+            qs.iter().map(|&q| Duration::from_nanos(nearest_rank(&sorted, q))).collect()
+        } else {
+            qs.iter().map(|&q| Duration::from_nanos(self.hist.percentile(q))).collect()
+        }
+    }
 }
 
 /// Accumulates while the engine runs; snapshot with [`MetricsCollector::report`].
-#[derive(Default)]
 pub struct MetricsCollector {
     /// Per-completed-prefill: submission -> first streamed token.
-    pub ttft: Vec<Duration>,
+    ttft: SampleSet,
     /// Per-generated-token gaps after the first.
-    pub itl: Vec<Duration>,
-    /// Active (prefill + decoding) sessions at each step.
-    pub occupancy: Vec<usize>,
-    /// Rows per fused batched forward (batched-step occupancy: how many
-    /// sequences each `forward_lm_step_batch` call actually carried).
-    pub fused_batch: Vec<usize>,
+    itl: SampleSet,
+    /// Active (prefill + decoding) sessions at each step: distribution plus
+    /// running mean/peak. O(buckets), not O(steps).
+    occupancy: Histogram,
+    occ_sum: u64,
+    occ_samples: usize,
+    occ_peak: usize,
+    /// Rows per fused batched forward, as a running sum (mean in the
+    /// report) — batched-step occupancy of `forward_lm_step_batch`.
+    fused_rows: u64,
     /// Fused batched forwards issued.
     pub fused_steps: usize,
     /// Fused `[B, d] x [d, N]` GEMM launches (one per linear per fused
@@ -56,18 +143,54 @@ pub struct MetricsCollector {
     pub completed: usize,
     pub rejected: usize,
     pub evicted: usize,
-    started: Option<Instant>,
+    started: Option<std::time::Instant>,
     wall: Duration,
 }
 
+impl Default for MetricsCollector {
+    fn default() -> MetricsCollector {
+        MetricsCollector::with_raw_cap(RAW_SAMPLE_CAP)
+    }
+}
+
 impl MetricsCollector {
+    /// A collector retaining at most `cap` raw samples per latency series
+    /// (tests use tiny caps to pin the histogram-fallback path).
+    pub fn with_raw_cap(cap: usize) -> MetricsCollector {
+        MetricsCollector {
+            ttft: SampleSet::new(cap),
+            itl: SampleSet::new(cap),
+            occupancy: Histogram::new(),
+            occ_sum: 0,
+            occ_samples: 0,
+            occ_peak: 0,
+            fused_rows: 0,
+            fused_steps: 0,
+            fused_gemms: 0,
+            kv_bytes_read: 0,
+            page_preemptions: 0,
+            pages_in_use: 0,
+            pages_free: 0,
+            frag_sum: 0.0,
+            frag_samples: 0,
+            steps: 0,
+            decode_tokens: 0,
+            prefill_tokens: 0,
+            completed: 0,
+            rejected: 0,
+            evicted: 0,
+            started: None,
+            wall: Duration::ZERO,
+        }
+    }
+
     pub fn start(&mut self) {
-        self.started = Some(Instant::now());
+        self.started = Some(clock::now());
     }
 
     pub fn finish(&mut self) {
         if let Some(t0) = self.started.take() {
-            self.wall += t0.elapsed();
+            self.wall += clock::now().saturating_duration_since(t0);
         }
     }
 
@@ -75,7 +198,10 @@ impl MetricsCollector {
     /// prefill tokens the step produced.
     pub fn record_step(&mut self, active: usize, decoded: usize, prefilled: usize) {
         self.steps += 1;
-        self.occupancy.push(active);
+        self.occupancy.record(active as u64);
+        self.occ_sum += active as u64;
+        self.occ_samples += 1;
+        self.occ_peak = self.occ_peak.max(active);
         self.decode_tokens += decoded;
         self.prefill_tokens += prefilled;
     }
@@ -85,7 +211,7 @@ impl MetricsCollector {
     pub fn record_fused(&mut self, rows: usize, gemms: u64) {
         self.fused_steps += 1;
         self.fused_gemms += gemms;
-        self.fused_batch.push(rows);
+        self.fused_rows += rows as u64;
     }
 
     /// KV lane bytes one forwarded row's attention read.
@@ -103,23 +229,35 @@ impl MetricsCollector {
     }
 
     pub fn record_first_token(&mut self, since_submit: Duration) {
-        self.ttft.push(since_submit);
+        self.ttft.record(since_submit.as_nanos().min(u64::MAX as u128) as u64);
     }
 
     pub fn record_inter_token(&mut self, gap: Duration) {
-        self.itl.push(gap);
+        self.itl.record(gap.as_nanos().min(u64::MAX as u128) as u64);
     }
 
     pub fn record_completion(&mut self) {
         self.completed += 1;
     }
 
+    /// The TTFT series (histogram + drop accounting), for exporters.
+    pub fn ttft(&self) -> &SampleSet {
+        &self.ttft
+    }
+
+    /// The ITL series (histogram + drop accounting), for exporters.
+    pub fn itl(&self) -> &SampleSet {
+        &self.itl
+    }
+
     pub fn report(&self) -> MetricsReport {
         let wall = match self.started {
-            Some(t0) => self.wall + t0.elapsed(),
+            Some(t0) => self.wall + clock::now().saturating_duration_since(t0),
             None => self.wall,
         };
         let secs = wall.as_secs_f64();
+        let ttft = self.ttft.percentiles(&[0.50, 0.99]);
+        let itl = self.itl.percentiles(&[0.50, 0.99]);
         MetricsReport {
             completed: self.completed,
             rejected: self.rejected,
@@ -127,27 +265,97 @@ impl MetricsCollector {
             steps: self.steps,
             decode_tokens: self.decode_tokens,
             prefill_tokens: self.prefill_tokens,
-            ttft_p50: percentile(&self.ttft, 0.50),
-            ttft_p99: percentile(&self.ttft, 0.99),
-            itl_p50: percentile(&self.itl, 0.50),
-            itl_p99: percentile(&self.itl, 0.99),
+            ttft_p50: ttft[0],
+            ttft_p99: ttft[1],
+            itl_p50: itl[0],
+            itl_p99: itl[1],
             decode_tps: if secs > 0.0 { self.decode_tokens as f64 / secs } else { 0.0 },
-            mean_occupancy: self.occupancy.iter().sum::<usize>() as f64
-                / self.occupancy.len().max(1) as f64,
-            peak_occupancy: self.occupancy.iter().copied().max().unwrap_or(0),
+            mean_occupancy: self.occ_sum as f64 / self.occ_samples.max(1) as f64,
+            peak_occupancy: self.occ_peak,
             pages_in_use: self.pages_in_use,
             pages_free: self.pages_free,
             page_fragmentation: self.frag_sum / self.frag_samples.max(1) as f64,
             page_preemptions: self.page_preemptions,
             fused_steps: self.fused_steps,
             fused_gemms: self.fused_gemms,
-            mean_fused_batch: self.fused_batch.iter().sum::<usize>() as f64
-                / self.fused_batch.len().max(1) as f64,
+            mean_fused_batch: self.fused_rows as f64 / self.fused_steps.max(1) as f64,
             kv_bytes_read: self.kv_bytes_read,
             kv_bytes_per_token: self.kv_bytes_read as f64
                 / (self.decode_tokens + self.prefill_tokens).max(1) as f64,
+            samples_dropped: self.ttft.dropped + self.itl.dropped,
             wall,
         }
+    }
+
+    /// The collector as a named-metric registry (counters, gauges, and the
+    /// TTFT/ITL/occupancy histograms) plus worker-pool series, for
+    /// Prometheus export.
+    pub fn registry(&self, pool: &PoolStats) -> Registry {
+        let r = self.report();
+        let mut reg = Registry::new();
+        reg.histogram(
+            "llmdt_ttft_seconds",
+            "Submission to first streamed token.",
+            self.ttft.hist.clone(),
+            1e-9,
+        );
+        reg.histogram(
+            "llmdt_itl_seconds",
+            "Gap between consecutive streamed tokens.",
+            self.itl.hist.clone(),
+            1e-9,
+        );
+        reg.histogram(
+            "llmdt_step_occupancy",
+            "Active sessions per engine step.",
+            self.occupancy.clone(),
+            1.0,
+        );
+        reg.counter("llmdt_completed_total", "Requests finished.", r.completed as u64);
+        reg.counter("llmdt_rejected_total", "Requests refused at submit.", r.rejected as u64);
+        reg.counter("llmdt_evicted_total", "Sessions preempted out of their slot.", r.evicted as u64);
+        reg.counter(
+            "llmdt_page_preemptions_total",
+            "Evictions forced by KV page-pool pressure.",
+            r.page_preemptions as u64,
+        );
+        reg.counter("llmdt_steps_total", "Engine steps.", r.steps as u64);
+        reg.counter("llmdt_decode_tokens_total", "Generated tokens.", r.decode_tokens as u64);
+        reg.counter("llmdt_prefill_tokens_total", "Prefilled context tokens.", r.prefill_tokens as u64);
+        reg.counter("llmdt_fused_steps_total", "Fused batched forwards.", r.fused_steps as u64);
+        reg.counter("llmdt_fused_gemms_total", "Fused GEMM launches.", r.fused_gemms);
+        reg.counter("llmdt_kv_bytes_read_total", "KV lane bytes attention read.", r.kv_bytes_read);
+        reg.counter(
+            "llmdt_samples_dropped_total",
+            "Raw latency samples past the retention cap (histograms keep them all).",
+            r.samples_dropped,
+        );
+        reg.gauge("llmdt_pages_in_use", "KV pages held at the last sampled step.", r.pages_in_use as f64);
+        reg.gauge("llmdt_pages_free", "KV pages free at the last sampled step.", r.pages_free as f64);
+        reg.gauge(
+            "llmdt_page_fragmentation",
+            "Mean tail fragmentation of held pages, in [0, 1].",
+            r.page_fragmentation,
+        );
+        reg.gauge("llmdt_peak_occupancy", "Most sessions concurrently active.", r.peak_occupancy as f64);
+        reg.gauge(
+            "llmdt_decode_tokens_per_second",
+            "Sustained generated tokens per wall-clock second.",
+            r.decode_tps,
+        );
+        reg.gauge("llmdt_pool_workers", "Worker-pool threads.", pool.workers as f64);
+        reg.gauge(
+            "llmdt_pool_utilization",
+            "Fraction of pool tasks executed by pool workers (vs the caller).",
+            pool.utilization(),
+        );
+        reg.counter("llmdt_pool_dispatches_total", "Parallel scope dispatches.", pool.dispatches);
+        reg.counter(
+            "llmdt_pool_tasks_total",
+            "Tasks run across pool workers and callers.",
+            pool.pool_tasks + pool.caller_tasks,
+        );
+        reg
     }
 }
 
@@ -192,6 +400,10 @@ pub struct MetricsReport {
     /// KV bytes read per forwarded token (decode + prefill) — the traffic
     /// figure the packed KV backend exists to shrink.
     pub kv_bytes_per_token: f64,
+    /// Raw latency samples dropped past [`RAW_SAMPLE_CAP`]; when non-zero,
+    /// the latency percentiles above are histogram-resolution (within one
+    /// bucket width) rather than sample-exact.
+    pub samples_dropped: u64,
     pub wall: Duration,
 }
 
@@ -226,7 +438,11 @@ impl fmt::Display for MetricsReport {
             self.page_fragmentation,
             self.page_preemptions,
             self.wall,
-        )
+        )?;
+        if self.samples_dropped > 0 {
+            write!(f, " | {} raw samples dropped (histogram percentiles)", self.samples_dropped)?;
+        }
+        Ok(())
     }
 }
 
@@ -242,6 +458,8 @@ mod tests {
     fn percentile_empty_is_zero() {
         assert_eq!(percentile(&[], 0.5), Duration::ZERO);
         assert_eq!(percentile(&[], 0.99), Duration::ZERO);
+        assert_eq!(percentile_sorted(&[], 0.0), Duration::ZERO);
+        assert_eq!(percentile_sorted(&[], 1.0), Duration::ZERO);
     }
 
     #[test]
@@ -249,6 +467,7 @@ mod tests {
         let s = [ms(7)];
         for q in [0.0, 0.25, 0.5, 0.99, 1.0] {
             assert_eq!(percentile(&s, q), ms(7), "q={q}");
+            assert_eq!(percentile_sorted(&s, q), ms(7), "q={q}");
         }
     }
 
@@ -267,6 +486,17 @@ mod tests {
     fn percentile_odd_length_median_is_middle() {
         let s = [ms(5), ms(1), ms(3)];
         assert_eq!(percentile(&s, 0.5), ms(3));
+    }
+
+    #[test]
+    fn percentile_sorted_matches_unsorted_and_clamps_q() {
+        let sorted = [ms(1), ms(2), ms(3), ms(4), ms(5)];
+        for q in [0.0, 0.2, 0.5, 0.8, 0.99, 1.0] {
+            assert_eq!(percentile_sorted(&sorted, q), percentile(&sorted, q), "q={q}");
+        }
+        // out-of-range quantiles clamp instead of panicking
+        assert_eq!(percentile_sorted(&sorted, -1.0), ms(1));
+        assert_eq!(percentile_sorted(&sorted, 2.0), ms(5));
     }
 
     #[test]
@@ -307,9 +537,67 @@ mod tests {
         assert_eq!(r.page_preemptions, 0);
         assert_eq!(r.ttft_p50, ms(10));
         assert_eq!(r.itl_p99, ms(4));
+        assert_eq!(r.samples_dropped, 0, "under the cap: percentiles are exact");
         assert!(r.wall > Duration::ZERO);
         assert!(r.decode_tps > 0.0);
         // report is renderable
         assert!(format!("{r}").contains("tok/s"));
+    }
+
+    #[test]
+    fn raw_cap_switches_to_histogram_percentiles_and_counts_drops() {
+        let mut m = MetricsCollector::with_raw_cap(4);
+        for i in 1..=100u64 {
+            m.record_inter_token(ms(i));
+        }
+        let r = m.report();
+        assert_eq!(r.samples_dropped, 96);
+        assert_eq!(m.itl().count(), 100, "histogram saw every sample");
+        assert_eq!(m.itl().dropped(), 96);
+        // histogram percentile: within one log-bucket (<= 25 % relative)
+        let p50 = r.itl_p50.as_micros() as f64;
+        let exact = ms(50).as_micros() as f64;
+        assert!(
+            p50 <= exact && p50 >= exact * 0.75,
+            "p50 {p50} vs exact {exact}"
+        );
+        // extremes stay exact thanks to the [min, max] clamp
+        let r99 = r.itl_p99.as_micros() as f64;
+        assert!(r99 <= ms(100).as_micros() as f64 && r99 >= ms(99).as_micros() as f64 * 0.75);
+        assert!(format!("{r}").contains("raw samples dropped"));
+    }
+
+    #[test]
+    fn occupancy_memory_is_bounded_but_stats_are_exact() {
+        let mut m = MetricsCollector::default();
+        for i in 0..10_000usize {
+            m.record_step(i % 7, 1, 0);
+        }
+        let r = m.report();
+        assert_eq!(r.steps, 10_000);
+        assert_eq!(r.peak_occupancy, 6);
+        let mean: f64 = (0..10_000).map(|i| (i % 7) as f64).sum::<f64>() / 10_000.0;
+        assert!((r.mean_occupancy - mean).abs() < 1e-9);
+    }
+
+    #[test]
+    fn registry_exposes_required_series() {
+        let mut m = MetricsCollector::default();
+        m.record_step(2, 1, 3);
+        m.record_first_token(ms(10));
+        m.record_inter_token(ms(2));
+        m.record_pages(3, 5, 0.1);
+        let reg = m.registry(&PoolStats::default());
+        for name in [
+            "llmdt_ttft_seconds",
+            "llmdt_itl_seconds",
+            "llmdt_step_occupancy",
+            "llmdt_pages_in_use",
+            "llmdt_pool_utilization",
+            "llmdt_decode_tokens_total",
+            "llmdt_samples_dropped_total",
+        ] {
+            assert!(reg.get(name).is_some(), "missing series {name}");
+        }
     }
 }

@@ -40,7 +40,7 @@ pub mod scheduler;
 pub mod session;
 
 pub use kv_cache::{KvCache, KvCacheConfig, KvView, PageId, SlotId, SlotView, DEFAULT_PAGE_SIZE};
-pub use metrics::{percentile, MetricsCollector, MetricsReport};
+pub use metrics::{percentile, percentile_sorted, MetricsCollector, MetricsReport};
 pub use scheduler::{Scheduler, SchedulerConfig};
 pub use session::{DecodeSession, FinishReason, SessionState};
 
@@ -52,6 +52,7 @@ use anyhow::Result;
 
 use crate::model_io::{Checkpoint, ModelConfig};
 use crate::nn;
+use crate::obs::{clock, trace};
 
 /// One generation request. `id` is caller-chosen (echoed on every event);
 /// keep it unique per engine or streams will interleave confusingly.
@@ -79,7 +80,7 @@ impl DecodeRequest {
                 max_new_tokens,
                 eos: None,
                 events: tx,
-                submitted: Instant::now(),
+                submitted: clock::now(),
             },
             rx,
         )
@@ -262,6 +263,7 @@ impl Engine {
     /// mid-step, the page-pressure guard preempts the longest-context
     /// victim (see [`Engine::preemption_victim`]) until the step fits.
     pub fn step(&mut self) -> Result<()> {
+        let step_t0 = trace::start();
         let window = self.window();
         {
             let page_size = self.cache.page_size();
@@ -281,6 +283,21 @@ impl Engine {
                 });
             for mut s in admitted {
                 let slot = self.cache.allocate().expect("admit_within checked free slots");
+                let now = clock::now();
+                if trace::enabled() {
+                    trace::complete(
+                        trace::session_track(s.id),
+                        "session",
+                        "queued",
+                        clock::micros_since_epoch(s.queued_at),
+                        clock::micros_since_epoch(now),
+                        &[
+                            ("context_len", s.context_len() as f64),
+                            ("pages_free", self.cache.pages_free() as f64),
+                        ],
+                    );
+                }
+                s.phase_started_at = now;
                 s.begin_prefill(slot);
                 self.active.push(s);
             }
@@ -314,6 +331,9 @@ impl Engine {
             if rows.is_empty() {
                 break;
             }
+            let micro_t0 = trace::start();
+            let n_prefill_rows =
+                micro_t0.map(|_| rows.iter().filter(|&&(_, _, _, p)| p).count());
             let slot_ids: Vec<SlotId> = rows.iter().map(|&(_, slot, _, _)| slot).collect();
             let tokens: Vec<i32> = rows.iter().map(|&(_, _, t, _)| t).collect();
             let logits = {
@@ -337,12 +357,38 @@ impl Engine {
                     if s.prefilled < s.context_len() {
                         continue;
                     }
+                    let now = clock::now();
+                    if trace::enabled() {
+                        trace::complete(
+                            trace::session_track(s.id),
+                            "session",
+                            "prefill",
+                            clock::micros_since_epoch(s.phase_started_at),
+                            clock::micros_since_epoch(now),
+                            &[("tokens", s.context_len() as f64)],
+                        );
+                    }
+                    s.phase_started_at = now;
                     s.begin_decode();
                 } else {
                     decoded += 1;
                 }
                 let remaining = window - self.cache.len(slot);
                 emit_token(s, logits.row(r), remaining, &mut self.metrics);
+            }
+            if let Some(t0) = micro_t0 {
+                trace::complete_here(
+                    "engine",
+                    "engine.micro_step",
+                    t0,
+                    &[
+                        ("rows", rows.len() as f64),
+                        ("prefill_rows", n_prefill_rows.unwrap_or(0) as f64),
+                        ("decode_rows", (rows.len() - n_prefill_rows.unwrap_or(0)) as f64),
+                        ("pages_in_use", self.cache.pages_in_use() as f64),
+                        ("pages_free", self.cache.pages_free() as f64),
+                    ],
+                );
             }
         }
         if stepped > 0 {
@@ -358,6 +404,21 @@ impl Engine {
                 SessionState::Done(reason) => {
                     if let Some(slot) = s.slot.take() {
                         self.cache.free(slot);
+                    }
+                    if trace::enabled() {
+                        let track = trace::session_track(s.id);
+                        trace::complete(
+                            track,
+                            "session",
+                            "decode",
+                            clock::micros_since_epoch(s.phase_started_at),
+                            clock::now_micros(),
+                            &[("generated", s.generated.len() as f64)],
+                        );
+                        trace::instant(track, "session", "finished", &[(
+                            "generated",
+                            s.generated.len() as f64,
+                        )]);
                     }
                     self.metrics.record_completion();
                     let _ = s.events.send(TokenEvent::Finished {
@@ -380,6 +441,20 @@ impl Engine {
             self.cache.pages_free(),
             self.cache.page_fragmentation(),
         );
+        if let Some(t0) = step_t0 {
+            trace::complete_here(
+                "engine",
+                "engine.step",
+                t0,
+                &[
+                    ("active", stepped as f64),
+                    ("decoded", decoded as f64),
+                    ("prefilled", prefilled as f64),
+                    ("pages_in_use", self.cache.pages_in_use() as f64),
+                    ("pages_free", self.cache.pages_free() as f64),
+                ],
+            );
+        }
         Ok(())
     }
 
@@ -466,6 +541,20 @@ impl Engine {
             None => return false,
         };
         let mut s = self.active.remove(i);
+        if trace::enabled() {
+            let track = trace::session_track(s.id);
+            let phase = if s.state == SessionState::Prefill { "prefill" } else { "decode" };
+            trace::complete(
+                track,
+                "session",
+                phase,
+                clock::micros_since_epoch(s.phase_started_at),
+                clock::now_micros(),
+                &[],
+            );
+            let pages = s.slot.map(|slot| self.cache.pages_held(slot)).unwrap_or(0);
+            trace::instant(track, "session", "preempt", &[("pages_freed", pages as f64)]);
+        }
         if let Some(slot) = s.slot.take() {
             self.cache.free(slot);
         }
@@ -497,9 +586,9 @@ impl Engine {
                         Ok(r) => {
                             self.submit(r);
                             let cfg = *self.sched.config();
-                            let deadline = Instant::now() + cfg.max_wait;
+                            let deadline = clock::now() + cfg.max_wait;
                             while self.sched.queue_len() < cfg.max_batch {
-                                let now = Instant::now();
+                                let now = clock::now();
                                 if now >= deadline {
                                     break;
                                 }
@@ -560,6 +649,12 @@ impl Engine {
     pub fn report(&self) -> MetricsReport {
         self.metrics.report()
     }
+
+    /// The engine's metrics (plus global worker-pool counters) as a named
+    /// registry for Prometheus export ([`crate::obs::export::prometheus_text`]).
+    pub fn metrics_registry(&self) -> crate::obs::metrics::Registry {
+        self.metrics.registry(&crate::runtime::pool::stats())
+    }
 }
 
 /// Greedy-pick from one session's logits row (its lane of the fused batch),
@@ -579,7 +674,7 @@ fn emit_token(
     let mx = logits_row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
     let z: f32 = logits_row.iter().map(|&x| (x - mx).exp()).sum();
     let lz = z.ln() + mx;
-    let now = Instant::now();
+    let now = clock::now();
     match s.last_token_at {
         None => {
             metrics.record_first_token(now.duration_since(s.submitted));
@@ -640,7 +735,7 @@ pub fn run_decode_loadgen(
                         max_new_tokens: max_new,
                         eos: None,
                         events: etx,
-                        submitted: Instant::now(),
+                        submitted: clock::now(),
                     };
                     if tx.send(req).is_err() {
                         return;

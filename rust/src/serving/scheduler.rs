@@ -128,14 +128,14 @@ impl Scheduler {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::obs::clock;
     use crate::serving::TokenEvent;
     use std::sync::mpsc;
-    use std::time::Instant;
 
     fn session(id: u64) -> DecodeSession {
         // the receiver is dropped; these tests never emit events
         let (tx, _rx) = mpsc::channel::<TokenEvent>();
-        DecodeSession::new(id, vec![1, 2], 4, None, tx, Instant::now())
+        DecodeSession::new(id, vec![1, 2], 4, None, tx, clock::now())
     }
 
     fn sched(max_batch: usize, max_queue: usize) -> Scheduler {

@@ -11,6 +11,7 @@
 use std::sync::mpsc;
 use std::time::Instant;
 
+use crate::obs::clock;
 use crate::serving::kv_cache::SlotId;
 use crate::serving::TokenEvent;
 
@@ -55,6 +56,14 @@ pub struct DecodeSession {
     pub last_token_at: Option<Instant>,
     /// Prompt tokens already written into the KV slot.
     pub prefilled: usize,
+    /// When the session last entered the admission queue: submission, then
+    /// reset on every [`Self::requeue`] — the start of each traced
+    /// `queued` span (unlike `submitted`, which anchors TTFT and never
+    /// moves).
+    pub queued_at: Instant,
+    /// When the session entered its current phase (prefill/decode); the
+    /// engine advances it at transitions to bound lifecycle trace spans.
+    pub phase_started_at: Instant,
 }
 
 impl DecodeSession {
@@ -80,6 +89,8 @@ impl DecodeSession {
             first_token_at: None,
             last_token_at: None,
             prefilled: 0,
+            queued_at: submitted,
+            phase_started_at: submitted,
         }
     }
 
@@ -144,6 +155,7 @@ impl DecodeSession {
         assert_eq!(self.state, SessionState::Evicted, "requeue from {:?}", self.state);
         assert!(self.slot.is_none(), "requeue while still holding a slot");
         self.prefilled = 0;
+        self.queued_at = clock::now();
         self.state = SessionState::Queued;
     }
 
@@ -171,7 +183,7 @@ mod tests {
 
     fn session(max_new: usize, eos: Option<i32>) -> (DecodeSession, mpsc::Receiver<TokenEvent>) {
         let (tx, rx) = mpsc::channel();
-        (DecodeSession::new(1, vec![3, 4, 5], max_new, eos, tx, Instant::now()), rx)
+        (DecodeSession::new(1, vec![3, 4, 5], max_new, eos, tx, clock::now()), rx)
     }
 
     #[test]

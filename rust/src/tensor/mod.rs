@@ -348,6 +348,11 @@ pub fn gemm_threaded(
         return;
     }
     let threads = threads.max(1).min(m.div_ceil(GEMM_MR));
+    let _span = crate::obs::trace::span("kernel", "tensor.gemm")
+        .arg("m", m as f64)
+        .arg("k", k as f64)
+        .arg("n", n as f64)
+        .arg("threads", threads as f64);
     if threads <= 1 {
         gemm_block(m, k, n, a, b, out);
         return;
@@ -880,6 +885,9 @@ pub fn lut_attend_paged(
     let dh = q_row.len() / n_heads;
     debug_assert_eq!(q_row.len(), n_heads * dh);
     debug_assert_eq!(ctx_row.len(), q_row.len());
+    let _span = crate::obs::trace::span("kernel", "tensor.lut_attend")
+        .arg("rows", rows as f64)
+        .arg("heads", n_heads as f64);
     // scores + V accumulation are each one MAC per (position, value)
     let work = 2 * rows * q_row.len();
     if n_heads > 1 && work >= GEMM_PAR_FLOPS {

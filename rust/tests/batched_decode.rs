@@ -159,6 +159,35 @@ fn engine_generation_matches_reforward_on_quantized_weights() {
     }
 }
 
+/// Tracing is observation-only: with span recording enabled the fused
+/// engine must produce bit-identical streams to the untraced greedy
+/// re-forwarding reference, on fp32 and both quantized checkpoints.
+#[test]
+fn engine_generation_bit_identical_with_tracing_enabled() {
+    use llm_datatypes::obs::trace;
+    let (cfg, ckpts) = checkpoints();
+    let prompt: Vec<i32> = (0..6).map(|i| (i * 5 + 1) % cfg.vocab as i32).collect();
+    for (label, ckpt) in ckpts {
+        let expect = reference_greedy(&cfg, &ckpt, &prompt, 8);
+        trace::set_enabled(true);
+        let mut eng = engine_for(cfg, ckpt, 2);
+        let (req, rx) = DecodeRequest::new(prompt.clone(), 8);
+        eng.submit(req);
+        while eng.has_work() {
+            eng.step().unwrap();
+        }
+        trace::set_enabled(false);
+        let snap = trace::snapshot_and_drain();
+        let (tokens, fin) = collect(&rx);
+        assert_eq!(tokens, expect, "{label}: traced engine diverged from re-forwarding");
+        assert_eq!(fin, Some(FinishReason::MaxTokens));
+        assert!(
+            snap.records.iter().any(|r| r.name == "engine.step"),
+            "{label}: enabled tracing recorded engine steps"
+        );
+    }
+}
+
 /// A session hitting its budget mid-batch must free its KV slot and shrink
 /// the next fused batch without perturbing the surviving sessions' tokens.
 #[test]

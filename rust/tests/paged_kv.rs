@@ -119,6 +119,36 @@ fn paged_engine_bit_identical_to_contiguous_slots_b1_to_8() {
     }
 }
 
+/// Tracing is observation only: a paged engine running with span
+/// recording enabled streams bit-identically to the contiguous engine
+/// running untraced. Exercises the instrumented step/micro-step, kernel,
+/// and pool paths under the strictest output contract the repo has.
+#[test]
+fn paged_engine_bit_identical_with_tracing_enabled() {
+    use llm_datatypes::obs::trace;
+    let cfg = zoo("nano").unwrap();
+    let ckpt = trainer::init_lm_params(&cfg, 0x9a9e);
+    for kv in [None, Some("sf4")] {
+        let b = 4usize;
+        let mut contiguous = engine(cfg, ckpt.clone(), b, kv, cfg.seq, b);
+        let expect = run_batch(&mut contiguous, &cfg, b, 4);
+
+        trace::set_enabled(true);
+        let mut paged = engine(cfg, ckpt.clone(), b, kv, 8, 0);
+        let got = run_batch(&mut paged, &cfg, b, 4);
+        trace::set_enabled(false);
+        let snap = trace::snapshot_and_drain();
+
+        for (lane, (e, g)) in expect.iter().zip(&got).enumerate() {
+            assert_eq!(e, g, "kv={kv:?} lane {lane}: traced paged run diverged");
+        }
+        assert!(
+            snap.records.iter().any(|r| r.name == "engine.step"),
+            "kv={kv:?}: enabled tracing recorded engine steps"
+        );
+    }
+}
+
 /// Page boundaries inside one sequence: the paged owned store (SeqKvCache)
 /// is step-for-step bit-identical to the contiguous one across a whole
 /// window of positions, fp32 and packed.
