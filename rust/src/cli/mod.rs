@@ -10,6 +10,12 @@
 //!                    [--max-new T] [--slots S] [--prefill-chunk P]
 //!                    [--page-size P] [--kv-pages N]
 //!                    [--trace-out FILE] [--metrics-out FILE]
+//! repro serve-http   [--addr HOST:PORT] [--model NAME] [--format FMT|fp32]
+//!                    [--packed] [--kv-format fp32|FMT] [--slots S]
+//!                    [--max-queue N] [--prefill-chunk P] [--page-size P]
+//!                    [--kv-pages N] [--read-timeout-ms MS]
+//!                    [--write-timeout-ms MS] [--retry-after SECS]
+//!                    [--trace-out FILE] [--metrics-out FILE]
 //! repro all          [--quick]
 //! ```
 //! Global flags: `--artifacts DIR --checkpoints DIR --results DIR`.
@@ -94,6 +100,18 @@ commands:
           the run's span timeline and writes Chrome trace-event JSON —
           load it in Perfetto/chrome://tracing — and --metrics-out writes
           the engine's metrics registry as Prometheus text)
+  serve-http [--addr A] [--model N] [--format F|fp32] [--packed]
+             [--kv-format fp32|F] [--slots S] [--max-queue Q]
+             [--prefill-chunk P] [--page-size P] [--kv-pages N]
+             [--read-timeout-ms MS] [--write-timeout-ms MS]
+             [--retry-after SECS] [--trace-out FILE] [--metrics-out FILE]
+          HTTP/1.1 front end over the decode engine: POST /generate streams
+          tokens as chunked NDJSON; a full admission queue or saturated KV
+          page pool answers 429 + Retry-After instead of queuing without
+          bound (--max-queue defaults to 4x slots); GET /healthz and
+          GET /metrics (Prometheus text incl. llmdt_http_* series) probe
+          the server; POST /shutdown drains gracefully — stop accepting,
+          finish in-flight streams, then exit with the engine report
   all     [--quick]                            every table + figure
 global flags: --artifacts DIR --checkpoints DIR --results DIR
 ";
@@ -118,6 +136,7 @@ pub fn main() -> Result<()> {
         "figure" => cmd_figure(&session, &args),
         "serve" => cmd_serve(&session, &args),
         "serve-decode" => cmd_serve_decode(&session, &args),
+        "serve-http" => cmd_serve_http(&session, &args),
         "all" => cmd_all(&session, &args),
         other => bail!("unknown command `{other}`\n{USAGE}"),
     }
@@ -304,30 +323,41 @@ fn cmd_serve(session: &Session, args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_serve_decode(session: &Session, args: &Args) -> Result<()> {
-    use crate::serving::{run_decode_loadgen, Engine, EngineConfig, SchedulerConfig};
+/// `--trace-out` / `--metrics-out`: a bare flag (no value) falls back to
+/// the default filename.
+fn out_path(args: &Args, name: &str, default: &str) -> Option<String> {
+    if !args.has(name) {
+        return None;
+    }
+    let v = args.flag(name, default);
+    Some(if v == "true" { default.to_string() } else { v })
+}
+
+/// A decode engine built from the shared `serve-decode`/`serve-http` flag
+/// set (`--model --format --packed --kv-format --slots --prefill-chunk
+/// --page-size --kv-pages`), plus its banner line.
+struct DecodeEngineSetup {
+    engine: crate::serving::Engine,
+    cfg: crate::model_io::ModelConfig,
+    banner: String,
+}
+
+fn build_decode_engine(
+    session: &Session,
+    args: &Args,
+    max_queue: usize,
+    reject_saturated: bool,
+) -> Result<DecodeEngineSetup> {
+    use crate::serving::{Engine, EngineConfig, SchedulerConfig};
 
     let model = args.flag("model", "small");
     let format = args.flag("format", "sf4");
     let packed = args.has("packed");
     let kv_fmt = args.flag("kv-format", "fp32");
-    let clients: usize = args.flag("clients", "4").parse()?;
-    let requests: usize = args.flag("requests", "16").parse()?;
-    let max_new: usize = args.flag("max-new", "16").parse()?;
     let slots: usize = args.flag("slots", "4").parse()?;
     let prefill_chunk: usize = args.flag("prefill-chunk", "32").parse()?;
     let page_size: usize = args.flag("page-size", "16").parse()?;
     let kv_pages: usize = args.flag("kv-pages", "0").parse()?;
-    // a bare `--trace-out` (no value) falls back to the default filename
-    let out_path = |name: &str, default: &str| -> Option<String> {
-        if !args.has(name) {
-            return None;
-        }
-        let v = args.flag(name, default);
-        Some(if v == "true" { default.to_string() } else { v })
-    };
-    let trace_out = out_path("trace-out", "trace.json");
-    let metrics_out = out_path("metrics-out", "metrics.prom");
 
     let cfg = zoo(&model)?;
     let ckpt = load_or_init_checkpoint(session, &cfg);
@@ -352,7 +382,7 @@ fn cmd_serve_decode(session: &Session, args: &Args) -> Result<()> {
             Some(&*Box::leak(kv_fmt.clone().into_boxed_str()))
         }
     };
-    let mut engine = Engine::try_new(
+    let engine = Engine::try_new(
         cfg,
         ckpt,
         EngineConfig {
@@ -363,6 +393,8 @@ fn cmd_serve_decode(session: &Session, args: &Args) -> Result<()> {
             scheduler: SchedulerConfig {
                 max_batch: slots,
                 prefill_chunk,
+                max_queue,
+                reject_saturated,
                 ..SchedulerConfig::default()
             },
             ..EngineConfig::default()
@@ -372,7 +404,7 @@ fn cmd_serve_decode(session: &Session, args: &Args) -> Result<()> {
         None => "fp32".to_string(),
         Some(f) => format!("{f} packed-4bit"),
     };
-    println!(
+    let banner = format!(
         "decode engine: model `{}` weights {} | paged KV: {} sequences over {} pages x {} \
          positions (block tables, {} lanes, {} KiB pool) | fused [B,d] batched step, \
          prefill chunk {}",
@@ -385,6 +417,20 @@ fn cmd_serve_decode(session: &Session, args: &Args) -> Result<()> {
         engine.cache().bytes() / 1024,
         prefill_chunk,
     );
+    Ok(DecodeEngineSetup { engine, cfg, banner })
+}
+
+fn cmd_serve_decode(session: &Session, args: &Args) -> Result<()> {
+    use crate::serving::run_decode_loadgen;
+
+    let clients: usize = args.flag("clients", "4").parse()?;
+    let requests: usize = args.flag("requests", "16").parse()?;
+    let max_new: usize = args.flag("max-new", "16").parse()?;
+    let trace_out = out_path(args, "trace-out", "trace.json");
+    let metrics_out = out_path(args, "metrics-out", "metrics.prom");
+
+    let DecodeEngineSetup { mut engine, cfg, banner } = build_decode_engine(session, args, 0, false)?;
+    println!("{banner}");
     let prompts = serve_prompts(&cfg, 64, 2);
     let per_client = (requests / clients.max(1)).max(1);
     if trace_out.is_some() {
@@ -396,6 +442,79 @@ fn cmd_serve_decode(session: &Session, args: &Args) -> Result<()> {
         crate::obs::trace::set_enabled(false);
     }
     println!("{report}");
+    if let Some(path) = &trace_out {
+        let snap = crate::obs::trace::snapshot_and_drain();
+        std::fs::write(path, crate::obs::export::chrome_trace_json(&snap))
+            .with_context(|| format!("writing Chrome trace to {path}"))?;
+        println!(
+            "trace: {} events ({} dropped) -> {path} (open in Perfetto or chrome://tracing)",
+            snap.records.len(),
+            snap.dropped
+        );
+    }
+    if let Some(path) = &metrics_out {
+        let text = crate::obs::export::prometheus_text(&engine.metrics_registry());
+        std::fs::write(path, text)
+            .with_context(|| format!("writing Prometheus metrics to {path}"))?;
+        println!("metrics: Prometheus text -> {path}");
+    }
+    Ok(())
+}
+
+fn cmd_serve_http(session: &Session, args: &Args) -> Result<()> {
+    use crate::serving::http::{serve, HttpConfig, ServerExit};
+
+    let addr = args.flag("addr", "127.0.0.1:8080");
+    let slots: usize = args.flag("slots", "4").parse()?;
+    // bounded by default: the whole point of the front end is answering
+    // 429 under pressure instead of queuing without limit
+    let max_queue: usize = args.flag("max-queue", &(slots * 4).to_string()).parse()?;
+    let read_timeout_ms: u64 = args.flag("read-timeout-ms", "5000").parse()?;
+    let write_timeout_ms: u64 = args.flag("write-timeout-ms", "5000").parse()?;
+    let retry_after: u64 = args.flag("retry-after", "1").parse()?;
+    let trace_out = out_path(args, "trace-out", "trace.json");
+    let metrics_out = out_path(args, "metrics-out", "metrics.prom");
+
+    let setup = build_decode_engine(session, args, max_queue, true)?;
+    println!("{}", setup.banner);
+    if trace_out.is_some() {
+        crate::obs::trace::reset();
+        crate::obs::trace::set_enabled(true);
+    }
+    let server = serve(
+        setup.engine,
+        HttpConfig {
+            addr,
+            read_timeout: std::time::Duration::from_millis(read_timeout_ms),
+            write_timeout: std::time::Duration::from_millis(write_timeout_ms),
+            retry_after_secs: retry_after,
+            ..HttpConfig::default()
+        },
+    )?;
+    println!(
+        "serving http on {} (admission queue {} | POST /generate, GET /healthz, \
+         GET /metrics, POST /shutdown to drain)",
+        server.addr(),
+        max_queue,
+    );
+    // blocks until a client posts /shutdown; in-flight streams finish first
+    let ServerExit { report, engine, http } = server.wait();
+    if trace_out.is_some() {
+        crate::obs::trace::set_enabled(false);
+    }
+    let report = report?;
+    println!("{report}");
+    println!(
+        "http: {} connections, {} requests, {} streams completed, {} rejected (429), \
+         {} bad requests, {} disconnects, {} tokens streamed",
+        http.connections,
+        http.requests,
+        http.streams_completed,
+        http.rejected_429,
+        http.bad_requests,
+        http.disconnects,
+        http.tokens_streamed,
+    );
     if let Some(path) = &trace_out {
         let snap = crate::obs::trace::snapshot_and_drain();
         std::fs::write(path, crate::obs::export::chrome_trace_json(&snap))

@@ -24,7 +24,8 @@ use anyhow::Result;
 use crate::model_io::{Checkpoint, ModelConfig};
 use crate::obs::clock;
 use crate::serving::{
-    percentile_sorted, DecodeRequest, Engine, EngineConfig, SchedulerConfig, TokenEvent,
+    next_request_id, percentile_sorted, DecodeRequest, Engine, EngineConfig, SchedulerConfig,
+    TokenEvent,
 };
 
 /// One scoring request: a prompt (<= seq tokens); response = distribution
@@ -118,7 +119,7 @@ impl Server {
             let reg = registry.clone();
             let dead = engine_dead.clone();
             scope.spawn(move || {
-                let mut next = 0u64;
+                let mut forwarded = 0usize;
                 loop {
                     let req = match rx.recv_timeout(Duration::from_millis(20)) {
                         Ok(r) => r,
@@ -137,8 +138,11 @@ impl Server {
                     if req.prompt.is_empty() {
                         continue;
                     }
-                    let id = next;
-                    next += 1;
+                    // ids come from the process-global allocator so trace
+                    // tracks never collide with other engines' sessions;
+                    // the max_requests budget is counted locally
+                    let id = next_request_id();
+                    forwarded += 1;
                     reg.lock().unwrap().insert(id, (req.resp, req.submitted));
                     let fwd = DecodeRequest {
                         id,
@@ -151,7 +155,7 @@ impl Server {
                     if dtx.send(fwd).is_err() {
                         break;
                     }
-                    if max_requests > 0 && next as usize >= max_requests {
+                    if max_requests > 0 && forwarded >= max_requests {
                         break;
                     }
                 }

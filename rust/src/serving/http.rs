@@ -1,0 +1,1051 @@
+//! HTTP/1.1 serving front end over the decode [`Engine`] — the network edge
+//! that turns the in-process streaming API into a wire protocol.
+//!
+//! Architecture: a `std::net::TcpListener` accept loop, one thread per
+//! connection (the engine itself is the concurrency limiter — connections
+//! mostly block on their event channel), and the engine on its own thread
+//! driven by [`Engine::run_with`]. Each `POST /generate` becomes one
+//! [`DecodeRequest`]; generated tokens stream back as newline-delimited
+//! JSON over chunked transfer encoding the moment they decode.
+//!
+//! Wire format (deliberately minimal — token ids in, token ids out; no
+//! tokenizer lives in this repo):
+//!
+//! ```text
+//! POST /generate
+//! {"prompt":[1,2,3],"max_new_tokens":8,"eos":5}        (eos optional)
+//!
+//! 200 OK, Transfer-Encoding: chunked, one JSON line per chunk:
+//! {"token":17,"index":0,"logprob":-2.1875}
+//! ...
+//! {"done":true,"reason":"max_tokens","generated":8}
+//! ```
+//!
+//! Robustness surface, not just the happy path:
+//!
+//! * **Backpressure**: the engine runs with
+//!   [`SchedulerConfig::reject_saturated`], so a full admission queue or a
+//!   saturated KV page pool answers `429` with a `Retry-After` header
+//!   instead of queuing unboundedly. All admission decisions stay in
+//!   [`Engine::submit`] — the front end only translates the terminal
+//!   `Rejected` event, so the engine's `rejected` metric counts every 429.
+//! * **Timeouts**: per-connection read/write timeouts bound how long a
+//!   slow or stalled peer can hold a connection thread.
+//! * **Disconnects**: a failed chunk write drops the event receiver; the
+//!   engine notices the dead channel at its next token and retires the
+//!   session as [`crate::serving::FinishReason::Disconnected`], freeing
+//!   its KV pages.
+//! * **Graceful drain**: [`HttpServer::shutdown`] (or `POST /shutdown`)
+//!   stops accepting, lets in-flight streams finish, joins every
+//!   connection thread, then closes the request channel so the engine
+//!   drains and returns its final [`MetricsReport`].
+//!
+//! `GET /metrics` serves the engine's Prometheus registry (snapshotted by
+//! the engine thread itself — no shared mutable engine) plus the front
+//! end's own `llmdt_http_*` series; `GET /healthz` answers liveness.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::obs::export::prometheus_text;
+use crate::obs::metrics::Registry;
+use crate::obs::trace;
+use crate::serving::{DecodeRequest, Engine, MetricsReport, TokenEvent};
+
+/// Front-end knobs. `addr` may use port 0 to bind an ephemeral port
+/// (tests/benches); [`HttpServer::addr`] reports the bound address.
+#[derive(Clone, Debug)]
+pub struct HttpConfig {
+    pub addr: String,
+    /// Bound on reading one request head + body from a peer.
+    pub read_timeout: Duration,
+    /// Bound on each response write (a stalled reader cannot pin a
+    /// connection thread past this).
+    pub write_timeout: Duration,
+    /// Seconds advertised in `Retry-After` on 429/503 answers.
+    pub retry_after_secs: u64,
+    /// Largest accepted request body.
+    pub max_body: usize,
+}
+
+impl Default for HttpConfig {
+    fn default() -> Self {
+        HttpConfig {
+            addr: "127.0.0.1:0".into(),
+            read_timeout: Duration::from_secs(5),
+            write_timeout: Duration::from_secs(5),
+            retry_after_secs: 1,
+            max_body: 1 << 20,
+        }
+    }
+}
+
+/// Counters shared between connection threads and the `/metrics` route.
+struct Shared {
+    connections: AtomicU64,
+    requests: AtomicU64,
+    streams_completed: AtomicU64,
+    rejected_429: AtomicU64,
+    bad_requests: AtomicU64,
+    disconnects: AtomicU64,
+    tokens_streamed: AtomicU64,
+    active_connections: AtomicU64,
+    draining: AtomicBool,
+    /// Prometheus text of the engine registry, re-rendered by the engine
+    /// thread's `run_with` observer (the engine is never shared mutably).
+    engine_metrics: Mutex<String>,
+}
+
+impl Shared {
+    fn new() -> Shared {
+        Shared {
+            connections: AtomicU64::new(0),
+            requests: AtomicU64::new(0),
+            streams_completed: AtomicU64::new(0),
+            rejected_429: AtomicU64::new(0),
+            bad_requests: AtomicU64::new(0),
+            disconnects: AtomicU64::new(0),
+            tokens_streamed: AtomicU64::new(0),
+            active_connections: AtomicU64::new(0),
+            draining: AtomicBool::new(false),
+            engine_metrics: Mutex::new(String::new()),
+        }
+    }
+
+    fn registry(&self) -> Registry {
+        let mut reg = Registry::new();
+        reg.counter(
+            "llmdt_http_connections_total",
+            "TCP connections accepted.",
+            self.connections.load(Ordering::Relaxed),
+        );
+        reg.counter(
+            "llmdt_http_requests_total",
+            "HTTP requests parsed.",
+            self.requests.load(Ordering::Relaxed),
+        );
+        reg.counter(
+            "llmdt_http_streams_completed_total",
+            "Generate streams that reached their terminal chunk.",
+            self.streams_completed.load(Ordering::Relaxed),
+        );
+        reg.counter(
+            "llmdt_http_rejected_total",
+            "Requests answered 429 under backpressure.",
+            self.rejected_429.load(Ordering::Relaxed),
+        );
+        reg.counter(
+            "llmdt_http_bad_requests_total",
+            "Requests answered 4xx for malformed input or unknown routes.",
+            self.bad_requests.load(Ordering::Relaxed),
+        );
+        reg.counter(
+            "llmdt_http_disconnects_total",
+            "Streams cut short by the client going away.",
+            self.disconnects.load(Ordering::Relaxed),
+        );
+        reg.counter(
+            "llmdt_http_tokens_streamed_total",
+            "Token chunks written to clients.",
+            self.tokens_streamed.load(Ordering::Relaxed),
+        );
+        reg.gauge(
+            "llmdt_http_active_connections",
+            "Connections currently being served.",
+            self.active_connections.load(Ordering::Relaxed) as f64,
+        );
+        reg.gauge(
+            "llmdt_http_draining",
+            "1 while the server refuses new work and drains in-flight streams.",
+            if self.draining.load(Ordering::SeqCst) { 1.0 } else { 0.0 },
+        );
+        reg
+    }
+}
+
+/// Front-end counter snapshot (tests and the CLI banner).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct HttpStats {
+    pub connections: u64,
+    pub requests: u64,
+    pub streams_completed: u64,
+    pub rejected_429: u64,
+    pub bad_requests: u64,
+    pub disconnects: u64,
+    pub tokens_streamed: u64,
+}
+
+/// A running HTTP front end. Dropping the handle does **not** stop the
+/// server; call [`HttpServer::shutdown`] (or `POST /shutdown`, then
+/// [`HttpServer::wait`]).
+pub struct HttpServer {
+    addr: SocketAddr,
+    shared: Arc<Shared>,
+    accept: JoinHandle<()>,
+    engine: JoinHandle<(Result<MetricsReport>, Engine)>,
+}
+
+/// Everything a drained server hands back: the engine's final report, the
+/// engine itself (tests inspect its KV cache), and the front end's final
+/// counters (read after every connection thread joined — no races).
+pub struct ServerExit {
+    pub report: Result<MetricsReport>,
+    pub engine: Engine,
+    pub http: HttpStats,
+}
+
+impl HttpServer {
+    /// The bound listen address (resolves port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Current front-end counters.
+    pub fn stats(&self) -> HttpStats {
+        snapshot(&self.shared)
+    }
+
+    /// Begin a graceful drain: stop accepting new connections and refuse
+    /// new `/generate` work with 503; in-flight streams keep decoding.
+    /// Idempotent. Follow with [`HttpServer::wait`].
+    pub fn initiate_drain(&self) {
+        initiate_drain(&self.shared, self.addr);
+    }
+
+    /// Join the accept loop (which joins every connection thread, then
+    /// closes the request channel) and the engine thread. Blocks until a
+    /// drain was initiated — by [`HttpServer::initiate_drain`] or a
+    /// client's `POST /shutdown`.
+    pub fn wait(self) -> ServerExit {
+        let HttpServer { shared, accept, engine, .. } = self;
+        accept.join().expect("http accept thread panicked");
+        let http = snapshot(&shared);
+        let (report, engine) = engine.join().expect("engine thread panicked");
+        ServerExit { report, engine, http }
+    }
+
+    /// [`HttpServer::initiate_drain`] + [`HttpServer::wait`].
+    pub fn shutdown(self) -> ServerExit {
+        self.initiate_drain();
+        self.wait()
+    }
+}
+
+fn snapshot(s: &Shared) -> HttpStats {
+    HttpStats {
+        connections: s.connections.load(Ordering::Relaxed),
+        requests: s.requests.load(Ordering::Relaxed),
+        streams_completed: s.streams_completed.load(Ordering::Relaxed),
+        rejected_429: s.rejected_429.load(Ordering::Relaxed),
+        bad_requests: s.bad_requests.load(Ordering::Relaxed),
+        disconnects: s.disconnects.load(Ordering::Relaxed),
+        tokens_streamed: s.tokens_streamed.load(Ordering::Relaxed),
+    }
+}
+
+fn initiate_drain(shared: &Shared, addr: SocketAddr) {
+    shared.draining.store(true, Ordering::SeqCst);
+    // unblock the accept loop: it re-checks the flag per connection
+    let _ = TcpStream::connect(addr);
+}
+
+/// Start serving `engine` on `cfg.addr`. The engine must have been built
+/// with the backpressure posture the front end promises — callers normally
+/// set [`SchedulerConfig::reject_saturated`] and a bounded `max_queue`.
+pub fn serve(mut engine: Engine, cfg: HttpConfig) -> Result<HttpServer> {
+    let listener = TcpListener::bind(&cfg.addr)?;
+    let addr = listener.local_addr()?;
+    let shared = Arc::new(Shared::new());
+    let (tx, rx) = mpsc::channel::<DecodeRequest>();
+
+    let engine_shared = shared.clone();
+    let engine_thread = std::thread::spawn(move || {
+        let mut ticks = 0u64;
+        let res = engine.run_with(rx, |eng| {
+            // re-render the /metrics snapshot when idle and every 16th
+            // iteration while busy (rendering is cheap but not free)
+            if ticks % 16 == 0 || !eng.has_work() {
+                let text = prometheus_text(&eng.metrics_registry());
+                *engine_shared.engine_metrics.lock().unwrap() = text;
+            }
+            ticks += 1;
+        });
+        if res.is_err() {
+            // terminal events for everything in flight so no connection
+            // thread hangs on its event channel
+            engine.abort();
+        }
+        (res, engine)
+    });
+
+    let accept_shared = shared.clone();
+    let accept_cfg = cfg.clone();
+    let accept = std::thread::spawn(move || {
+        let mut conns: Vec<JoinHandle<()>> = Vec::new();
+        for stream in listener.incoming() {
+            if accept_shared.draining.load(Ordering::SeqCst) {
+                break;
+            }
+            let stream = match stream {
+                Ok(s) => s,
+                Err(_) => continue,
+            };
+            accept_shared.connections.fetch_add(1, Ordering::Relaxed);
+            let tx = tx.clone();
+            let shared = accept_shared.clone();
+            let cfg = accept_cfg.clone();
+            conns.retain(|h| !h.is_finished());
+            conns.push(std::thread::spawn(move || handle_connection(stream, tx, shared, cfg)));
+        }
+        // refuse new connections immediately (drain means "stop taking
+        // work", not "hang new clients until in-flight streams finish")
+        drop(listener);
+        // close our sender next: the engine keeps running while any
+        // connection thread still holds a clone for its in-flight stream
+        drop(tx);
+        for h in conns {
+            let _ = h.join();
+        }
+    });
+
+    Ok(HttpServer { addr, shared, accept, engine: engine_thread })
+}
+
+// ---------------------------------------------------------------------------
+// connection handling
+
+fn handle_connection(
+    stream: TcpStream,
+    tx: mpsc::Sender<DecodeRequest>,
+    shared: Arc<Shared>,
+    cfg: HttpConfig,
+) {
+    shared.active_connections.fetch_add(1, Ordering::Relaxed);
+    let t0 = trace::start();
+    let _ = stream.set_read_timeout(Some(cfg.read_timeout));
+    let _ = stream.set_write_timeout(Some(cfg.write_timeout));
+    let _ = stream.set_nodelay(true);
+    let status = handle_request(&stream, &tx, &shared, &cfg);
+    shared.active_connections.fetch_sub(1, Ordering::Relaxed);
+    if let Some(t0) = t0 {
+        trace::complete_here("http", "http.request", t0, &[("status", status as f64)]);
+    }
+}
+
+/// One request per connection (`Connection: close`); returns the response
+/// status for the connection span.
+fn handle_request(
+    mut stream: &TcpStream,
+    tx: &mpsc::Sender<DecodeRequest>,
+    shared: &Shared,
+    cfg: &HttpConfig,
+) -> u16 {
+    let head = match read_head(&mut stream) {
+        Ok(h) => h,
+        Err(_) => {
+            shared.bad_requests.fetch_add(1, Ordering::Relaxed);
+            let _ = respond(stream, 400, "Bad Request", &[], "malformed request head\n");
+            return 400;
+        }
+    };
+    shared.requests.fetch_add(1, Ordering::Relaxed);
+    match (head.method.as_str(), head.path.as_str()) {
+        ("GET", "/healthz") => {
+            let _ = respond(stream, 200, "OK", &[], "ok\n");
+            200
+        }
+        ("GET", "/metrics") => {
+            let engine_text = shared.engine_metrics.lock().unwrap().clone();
+            let body = format!("{engine_text}{}", prometheus_text(&shared.registry()));
+            let _ = respond(
+                stream,
+                200,
+                "OK",
+                &[("Content-Type", "text/plain; version=0.0.4")],
+                &body,
+            );
+            200
+        }
+        ("POST", "/shutdown") => {
+            // answer first: the accept loop (and this listener) is about
+            // to stop serving
+            let _ = respond(stream, 200, "OK", &[], "draining\n");
+            if let Ok(addr) = stream.local_addr() {
+                initiate_drain(shared, addr);
+            }
+            200
+        }
+        ("POST", "/generate") => handle_generate(stream, head, tx, shared, cfg),
+        ("GET", "/generate") | ("POST", "/healthz") | ("POST", "/metrics")
+        | ("GET", "/shutdown") => {
+            shared.bad_requests.fetch_add(1, Ordering::Relaxed);
+            let _ = respond(stream, 405, "Method Not Allowed", &[], "method not allowed\n");
+            405
+        }
+        _ => {
+            shared.bad_requests.fetch_add(1, Ordering::Relaxed);
+            let _ = respond(stream, 404, "Not Found", &[], "unknown route\n");
+            404
+        }
+    }
+}
+
+fn handle_generate(
+    mut stream: &TcpStream,
+    head: RequestHead,
+    tx: &mpsc::Sender<DecodeRequest>,
+    shared: &Shared,
+    cfg: &HttpConfig,
+) -> u16 {
+    let retry = cfg.retry_after_secs.to_string();
+    if shared.draining.load(Ordering::SeqCst) {
+        let _ = respond(
+            stream,
+            503,
+            "Service Unavailable",
+            &[("Retry-After", &retry)],
+            "draining\n",
+        );
+        return 503;
+    }
+    if head.content_length > cfg.max_body {
+        shared.bad_requests.fetch_add(1, Ordering::Relaxed);
+        let _ = respond(stream, 413, "Payload Too Large", &[], "body too large\n");
+        return 413;
+    }
+    let mut body = head.body_prefix;
+    if let Err(e) = read_exact_body(&mut stream, &mut body, head.content_length) {
+        shared.bad_requests.fetch_add(1, Ordering::Relaxed);
+        let _ = respond(stream, 400, "Bad Request", &[], &format!("short body: {e}\n"));
+        return 400;
+    }
+    let gen = match parse_generate(std::str::from_utf8(&body).unwrap_or("")) {
+        Ok(g) => g,
+        Err(e) => {
+            shared.bad_requests.fetch_add(1, Ordering::Relaxed);
+            let _ = respond(stream, 400, "Bad Request", &[], &format!("{e}\n"));
+            return 400;
+        }
+    };
+    if gen.prompt.is_empty() {
+        shared.bad_requests.fetch_add(1, Ordering::Relaxed);
+        let _ = respond(stream, 400, "Bad Request", &[], "empty prompt\n");
+        return 400;
+    }
+
+    let (mut req, events) = DecodeRequest::new(gen.prompt, gen.max_new_tokens);
+    req.eos = gen.eos;
+    let id = req.id;
+    if tx.send(req).is_err() {
+        let _ = respond(
+            stream,
+            503,
+            "Service Unavailable",
+            &[("Retry-After", &retry)],
+            "engine stopped\n",
+        );
+        return 503;
+    }
+
+    // the first event decides the status line: admission happens inside
+    // Engine::submit, so a backpressure rejection arrives before any token
+    match events.recv() {
+        Ok(TokenEvent::Rejected { reason, .. }) => {
+            shared.rejected_429.fetch_add(1, Ordering::Relaxed);
+            let _ = respond(
+                stream,
+                429,
+                "Too Many Requests",
+                &[("Retry-After", &retry)],
+                &format!("{reason}\n"),
+            );
+            429
+        }
+        Ok(first) => {
+            if trace::enabled() {
+                trace::instant(trace::session_track(id), "http", "stream_start", &[]);
+            }
+            stream_events(stream, first, events, shared)
+        }
+        Err(_) => {
+            let _ = respond(
+                stream,
+                503,
+                "Service Unavailable",
+                &[("Retry-After", &retry)],
+                "engine stopped\n",
+            );
+            503
+        }
+    }
+}
+
+/// Stream `first` and every following event as chunked NDJSON. A write
+/// error means the client went away: dropping `events` makes the engine
+/// retire the session as `Disconnected` at its next token.
+fn stream_events(
+    mut stream: &TcpStream,
+    first: TokenEvent,
+    events: mpsc::Receiver<TokenEvent>,
+    shared: &Shared,
+) -> u16 {
+    let header = "HTTP/1.1 200 OK\r\nContent-Type: application/x-ndjson\r\n\
+                  Transfer-Encoding: chunked\r\nConnection: close\r\n\r\n";
+    if stream.write_all(header.as_bytes()).is_err() {
+        shared.disconnects.fetch_add(1, Ordering::Relaxed);
+        return 200;
+    }
+    let mut ev = Some(first);
+    loop {
+        let event = match ev.take() {
+            Some(e) => e,
+            None => match events.recv() {
+                Ok(e) => e,
+                // engine gone mid-stream (abort sends terminal events, so
+                // this is belt-and-braces): end the chunk stream cleanly
+                Err(_) => {
+                    let _ = stream.write_all(b"0\r\n\r\n");
+                    return 200;
+                }
+            },
+        };
+        match event {
+            TokenEvent::Token { token, index, logprob, .. } => {
+                let lp = if logprob.is_finite() { logprob } else { 0.0 };
+                let line = format!("{{\"token\":{token},\"index\":{index},\"logprob\":{lp}}}\n");
+                if write_chunk(stream, &line).is_err() {
+                    shared.disconnects.fetch_add(1, Ordering::Relaxed);
+                    return 200; // dropping `events` propagates the disconnect
+                }
+                shared.tokens_streamed.fetch_add(1, Ordering::Relaxed);
+            }
+            TokenEvent::Finished { reason, generated, .. } => {
+                let line = format!(
+                    "{{\"done\":true,\"reason\":\"{}\",\"generated\":{generated}}}\n",
+                    reason.as_str()
+                );
+                if write_chunk(stream, &line).is_ok()
+                    && stream.write_all(b"0\r\n\r\n").is_ok()
+                {
+                    shared.streams_completed.fetch_add(1, Ordering::Relaxed);
+                } else {
+                    shared.disconnects.fetch_add(1, Ordering::Relaxed);
+                }
+                return 200;
+            }
+            TokenEvent::Rejected { .. } => {
+                // contract: Rejected is always the *first* event; ending the
+                // stream is the only safe translation this late
+                let _ = stream.write_all(b"0\r\n\r\n");
+                return 200;
+            }
+        }
+    }
+}
+
+fn write_chunk(mut stream: &TcpStream, payload: &str) -> std::io::Result<()> {
+    let framed = format!("{:x}\r\n{payload}\r\n", payload.len());
+    stream.write_all(framed.as_bytes())
+}
+
+/// Write a complete non-streamed response with `Content-Length` framing.
+fn respond(
+    mut stream: &TcpStream,
+    status: u16,
+    reason: &str,
+    extra_headers: &[(&str, &str)],
+    body: &str,
+) -> std::io::Result<()> {
+    let mut msg = format!("HTTP/1.1 {status} {reason}\r\n");
+    if !extra_headers.iter().any(|(n, _)| n.eq_ignore_ascii_case("content-type")) {
+        msg.push_str("Content-Type: text/plain; charset=utf-8\r\n");
+    }
+    for (n, v) in extra_headers {
+        msg.push_str(n);
+        msg.push_str(": ");
+        msg.push_str(v);
+        msg.push_str("\r\n");
+    }
+    msg.push_str(&format!("Content-Length: {}\r\nConnection: close\r\n\r\n", body.len()));
+    msg.push_str(body);
+    stream.write_all(msg.as_bytes())
+}
+
+// ---------------------------------------------------------------------------
+// request parsing (hand-rolled: no HTTP or JSON dependency in this repo)
+
+/// Parsed request head plus any body bytes that arrived with it.
+#[derive(Debug)]
+struct RequestHead {
+    method: String,
+    path: String,
+    content_length: usize,
+    body_prefix: Vec<u8>,
+}
+
+const MAX_HEAD: usize = 8 << 10;
+
+/// Read up to the `\r\n\r\n` separator and parse the request line +
+/// `Content-Length`. Bytes past the separator (the body, or a prefix of
+/// it) are returned for the body reader.
+fn read_head(stream: &mut &TcpStream) -> Result<RequestHead, String> {
+    let mut buf: Vec<u8> = Vec::with_capacity(512);
+    let mut chunk = [0u8; 1024];
+    let split = loop {
+        if let Some(i) = find_head_end(&buf) {
+            break i;
+        }
+        if buf.len() > MAX_HEAD {
+            return Err("head too large".into());
+        }
+        let n = stream.read(&mut chunk).map_err(|e| e.to_string())?;
+        if n == 0 {
+            return Err("eof before head end".into());
+        }
+        buf.extend_from_slice(&chunk[..n]);
+    };
+    let head = std::str::from_utf8(&buf[..split]).map_err(|_| "head is not utf-8".to_string())?;
+    let mut lines = head.split("\r\n");
+    let request_line = lines.next().ok_or("empty head")?;
+    let mut parts = request_line.split(' ');
+    let method = parts.next().ok_or("missing method")?.to_string();
+    let path = parts.next().ok_or("missing path")?.to_string();
+    if !parts.next().is_some_and(|v| v.starts_with("HTTP/1.")) {
+        return Err("not an HTTP/1.x request".into());
+    }
+    let mut content_length = 0usize;
+    for line in lines {
+        if let Some((name, value)) = line.split_once(':') {
+            if name.eq_ignore_ascii_case("content-length") {
+                content_length =
+                    value.trim().parse().map_err(|_| "bad content-length".to_string())?;
+            }
+        }
+    }
+    Ok(RequestHead { method, path, content_length, body_prefix: buf[split + 4..].to_vec() })
+}
+
+fn find_head_end(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n")
+}
+
+fn read_exact_body(
+    stream: &mut &TcpStream,
+    body: &mut Vec<u8>,
+    content_length: usize,
+) -> Result<(), String> {
+    let mut chunk = [0u8; 1024];
+    while body.len() < content_length {
+        let n = stream.read(&mut chunk).map_err(|e| e.to_string())?;
+        if n == 0 {
+            return Err("eof mid-body".into());
+        }
+        body.extend_from_slice(&chunk[..n]);
+    }
+    body.truncate(content_length);
+    Ok(())
+}
+
+/// A parsed `/generate` body.
+#[derive(Debug, PartialEq, Eq)]
+pub struct GenerateRequest {
+    pub prompt: Vec<i32>,
+    pub max_new_tokens: usize,
+    pub eos: Option<i32>,
+}
+
+/// Parse the strict JSON subset the wire format uses: one object with
+/// `prompt` (array of ints), `max_new_tokens` (int), and optional `eos`
+/// (int). Unknown fields, trailing garbage, and non-integer tokens are
+/// errors — a typo'd field silently ignored would be a debugging trap.
+pub fn parse_generate(body: &str) -> Result<GenerateRequest, String> {
+    let mut p = Parser { s: body.as_bytes(), i: 0 };
+    p.skip_ws();
+    p.expect(b'{')?;
+    let mut prompt: Option<Vec<i32>> = None;
+    let mut max_new_tokens: Option<usize> = None;
+    let mut eos: Option<i32> = None;
+    loop {
+        p.skip_ws();
+        if p.eat(b'}') {
+            break;
+        }
+        if prompt.is_some() || max_new_tokens.is_some() || eos.is_some() {
+            p.expect(b',')?;
+            p.skip_ws();
+        }
+        let key = p.string()?;
+        p.skip_ws();
+        p.expect(b':')?;
+        p.skip_ws();
+        match key.as_str() {
+            "prompt" => {
+                if prompt.is_some() {
+                    return Err("duplicate field \"prompt\"".into());
+                }
+                prompt = Some(p.int_array()?);
+            }
+            "max_new_tokens" => {
+                if max_new_tokens.is_some() {
+                    return Err("duplicate field \"max_new_tokens\"".into());
+                }
+                let v = p.integer()?;
+                if v < 0 {
+                    return Err("max_new_tokens must be >= 0".into());
+                }
+                max_new_tokens = Some(v as usize);
+            }
+            "eos" => {
+                if eos.is_some() {
+                    return Err("duplicate field \"eos\"".into());
+                }
+                eos = Some(p.i32()?);
+            }
+            other => return Err(format!("unknown field {other:?}")),
+        }
+    }
+    p.skip_ws();
+    if p.i != p.s.len() {
+        return Err("trailing bytes after the request object".into());
+    }
+    Ok(GenerateRequest {
+        prompt: prompt.ok_or("missing field \"prompt\"")?,
+        max_new_tokens: max_new_tokens.ok_or("missing field \"max_new_tokens\"")?,
+        eos,
+    })
+}
+
+struct Parser<'a> {
+    s: &'a [u8],
+    i: usize,
+}
+
+impl Parser<'_> {
+    fn skip_ws(&mut self) {
+        while self.i < self.s.len() && self.s[self.i].is_ascii_whitespace() {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.s.get(self.i).copied()
+    }
+
+    fn eat(&mut self, b: u8) -> bool {
+        if self.peek() == Some(b) {
+            self.i += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    fn expect(&mut self, b: u8) -> Result<(), String> {
+        if self.eat(b) {
+            Ok(())
+        } else {
+            Err(format!("expected {:?} at byte {}", b as char, self.i))
+        }
+    }
+
+    /// A JSON string with no escapes (field names only).
+    fn string(&mut self) -> Result<String, String> {
+        self.expect(b'"')?;
+        let start = self.i;
+        while let Some(c) = self.peek() {
+            if c == b'"' {
+                let out = std::str::from_utf8(&self.s[start..self.i])
+                    .map_err(|_| "non-utf8 string".to_string())?
+                    .to_string();
+                self.i += 1;
+                return Ok(out);
+            }
+            if c == b'\\' {
+                return Err("escapes are not part of the wire format".into());
+            }
+            self.i += 1;
+        }
+        Err("unterminated string".into())
+    }
+
+    fn integer(&mut self) -> Result<i64, String> {
+        let start = self.i;
+        if self.peek() == Some(b'-') {
+            self.i += 1;
+        }
+        while self.peek().is_some_and(|c| c.is_ascii_digit()) {
+            self.i += 1;
+        }
+        let text = std::str::from_utf8(&self.s[start..self.i]).unwrap();
+        text.parse::<i64>().map_err(|_| format!("bad integer at byte {start}"))
+    }
+
+    #[allow(clippy::wrong_self_convention)]
+    fn i32(&mut self) -> Result<i32, String> {
+        let v = self.integer()?;
+        i32::try_from(v).map_err(|_| "integer out of token range".to_string())
+    }
+
+    fn int_array(&mut self) -> Result<Vec<i32>, String> {
+        self.expect(b'[')?;
+        let mut out = Vec::new();
+        self.skip_ws();
+        if self.eat(b']') {
+            return Ok(out);
+        }
+        loop {
+            self.skip_ws();
+            out.push(self.i32()?);
+            self.skip_ws();
+            if self.eat(b']') {
+                return Ok(out);
+            }
+            self.expect(b',')?;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// minimal blocking client (tests, the CI smoke, and the perf_http loadgen)
+
+/// A fully-read HTTP response (chunked bodies are de-framed).
+#[derive(Debug)]
+pub struct HttpResponse {
+    pub status: u16,
+    pub headers: Vec<(String, String)>,
+    pub body: String,
+}
+
+impl HttpResponse {
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(n, _)| n.eq_ignore_ascii_case(name))
+            .map(|(_, v)| v.as_str())
+    }
+}
+
+/// One blocking request; reads the whole response.
+pub fn fetch(addr: SocketAddr, method: &str, path: &str, body: Option<&str>) -> std::io::Result<HttpResponse> {
+    let mut stream = ChunkStream::open(addr, method, path, body)?;
+    let body = stream.read_body()?;
+    Ok(HttpResponse { status: stream.status, headers: stream.headers, body })
+}
+
+/// An in-flight response whose chunks are read incrementally — the loadgen
+/// timestamps each token chunk for client-side TTFT/ITL, and the
+/// disconnect tests drop it mid-stream.
+pub struct ChunkStream {
+    stream: TcpStream,
+    buf: Vec<u8>,
+    pos: usize,
+    chunked: bool,
+    content_length: usize,
+    pub status: u16,
+    pub headers: Vec<(String, String)>,
+}
+
+impl ChunkStream {
+    /// Write the request and parse the response status line + headers.
+    pub fn open(
+        addr: SocketAddr,
+        method: &str,
+        path: &str,
+        body: Option<&str>,
+    ) -> std::io::Result<ChunkStream> {
+        let mut stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        let body = body.unwrap_or("");
+        let req = format!(
+            "{method} {path} HTTP/1.1\r\nHost: llmdt\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+            body.len()
+        );
+        stream.write_all(req.as_bytes())?;
+        let mut buf = Vec::with_capacity(512);
+        let mut chunk = [0u8; 1024];
+        let split = loop {
+            if let Some(i) = find_head_end(&buf) {
+                break i;
+            }
+            let n = stream.read(&mut chunk)?;
+            if n == 0 {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::UnexpectedEof,
+                    "eof before response head",
+                ));
+            }
+            buf.extend_from_slice(&chunk[..n]);
+        };
+        let head = String::from_utf8_lossy(&buf[..split]).to_string();
+        let mut lines = head.split("\r\n");
+        let status_line = lines.next().unwrap_or("");
+        let status: u16 = status_line
+            .split(' ')
+            .nth(1)
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(|| {
+                std::io::Error::new(std::io::ErrorKind::InvalidData, "bad status line")
+            })?;
+        let headers: Vec<(String, String)> = lines
+            .filter_map(|l| {
+                l.split_once(':').map(|(n, v)| (n.trim().to_string(), v.trim().to_string()))
+            })
+            .collect();
+        let chunked = headers.iter().any(|(n, v)| {
+            n.eq_ignore_ascii_case("transfer-encoding") && v.eq_ignore_ascii_case("chunked")
+        });
+        let content_length = headers
+            .iter()
+            .find(|(n, _)| n.eq_ignore_ascii_case("content-length"))
+            .and_then(|(_, v)| v.parse().ok())
+            .unwrap_or(0);
+        let rest = buf[split + 4..].to_vec();
+        Ok(ChunkStream { stream, buf: rest, pos: 0, chunked, content_length, status, headers })
+    }
+
+    fn fill(&mut self) -> std::io::Result<usize> {
+        let mut chunk = [0u8; 1024];
+        let n = self.stream.read(&mut chunk)?;
+        self.buf.extend_from_slice(&chunk[..n]);
+        Ok(n)
+    }
+
+    fn take_line(&mut self) -> std::io::Result<String> {
+        loop {
+            if let Some(i) =
+                self.buf[self.pos..].windows(2).position(|w| w == b"\r\n").map(|i| i + self.pos)
+            {
+                let line = String::from_utf8_lossy(&self.buf[self.pos..i]).to_string();
+                self.pos = i + 2;
+                return Ok(line);
+            }
+            if self.fill()? == 0 {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::UnexpectedEof,
+                    "eof mid chunk frame",
+                ));
+            }
+        }
+    }
+
+    fn take_bytes(&mut self, n: usize) -> std::io::Result<Vec<u8>> {
+        while self.buf.len() - self.pos < n {
+            if self.fill()? == 0 {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::UnexpectedEof,
+                    "eof mid chunk payload",
+                ));
+            }
+        }
+        let out = self.buf[self.pos..self.pos + n].to_vec();
+        self.pos += n;
+        Ok(out)
+    }
+
+    /// The next chunk payload of a chunked response; `None` at the
+    /// terminal zero-length chunk.
+    pub fn next_chunk(&mut self) -> std::io::Result<Option<String>> {
+        let size_line = self.take_line()?;
+        let size = usize::from_str_radix(size_line.trim(), 16).map_err(|_| {
+            std::io::Error::new(std::io::ErrorKind::InvalidData, "bad chunk size")
+        })?;
+        if size == 0 {
+            let _ = self.take_line(); // trailing CRLF after the last chunk
+            return Ok(None);
+        }
+        let payload = self.take_bytes(size)?;
+        let _ = self.take_line(); // CRLF closing the chunk
+        Ok(Some(String::from_utf8_lossy(&payload).to_string()))
+    }
+
+    /// Drain the rest of the response into one string (both framings).
+    pub fn read_body(&mut self) -> std::io::Result<String> {
+        if self.chunked {
+            let mut out = String::new();
+            while let Some(c) = self.next_chunk()? {
+                out.push_str(&c);
+            }
+            Ok(out)
+        } else {
+            let bytes = self.take_bytes(self.content_length)?;
+            Ok(String::from_utf8_lossy(&bytes).to_string())
+        }
+    }
+}
+
+/// Pull an integer field out of a flat NDJSON line (the bench and tests
+/// read `"token"`, `"index"`, `"generated"` this way — no JSON dependency).
+pub fn json_int_field(line: &str, field: &str) -> Option<i64> {
+    let key = format!("\"{field}\":");
+    let at = line.find(&key)? + key.len();
+    let rest = &line[at..];
+    let end = rest
+        .char_indices()
+        .find(|&(_, c)| c != '-' && !c.is_ascii_digit())
+        .map(|(i, _)| i)
+        .unwrap_or(rest.len());
+    rest[..end].parse().ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_generate_golden() {
+        let g = parse_generate("{\"prompt\":[1,2,3],\"max_new_tokens\":8,\"eos\":5}").unwrap();
+        assert_eq!(
+            g,
+            GenerateRequest { prompt: vec![1, 2, 3], max_new_tokens: 8, eos: Some(5) }
+        );
+        let g = parse_generate(" { \"prompt\" : [ 7 ] , \"max_new_tokens\" : 1 } ").unwrap();
+        assert_eq!(g, GenerateRequest { prompt: vec![7], max_new_tokens: 1, eos: None });
+        let g = parse_generate("{\"prompt\":[],\"max_new_tokens\":4}").unwrap();
+        assert!(g.prompt.is_empty(), "empty arrays parse; the route rejects them as 400");
+    }
+
+    #[test]
+    fn parse_generate_rejects_malformed_input() {
+        for (body, why) in [
+            ("", "empty body"),
+            ("{\"prompt\":[1]}", "missing max_new_tokens"),
+            ("{\"max_new_tokens\":4}", "missing prompt"),
+            ("{\"prompt\":[1],\"max_new_tokens\":4,\"temperature\":1.0}", "unknown field"),
+            ("{\"prompt\":[1],\"max_new_tokens\":4}x", "trailing bytes"),
+            ("{\"prompt\":[1,],\"max_new_tokens\":4}", "trailing comma"),
+            ("{\"prompt\":[\"a\"],\"max_new_tokens\":4}", "non-integer token"),
+            ("{\"prompt\":[1],\"max_new_tokens\":-2}", "negative budget"),
+            ("{\"prompt\":[1],\"prompt\":[2],\"max_new_tokens\":4}", "duplicate field"),
+            ("{\"prompt\":[4294967296],\"max_new_tokens\":4}", "token out of i32 range"),
+        ] {
+            assert!(parse_generate(body).is_err(), "{why}: {body:?}");
+        }
+    }
+
+    #[test]
+    fn head_parser_handles_split_reads_and_body_prefix() {
+        // find_head_end + body_prefix are what read_head builds on; pin
+        // the separator logic on awkward splits
+        assert_eq!(find_head_end(b"POST / HTTP/1.1\r\n\r\nrest"), Some(15));
+        assert_eq!(find_head_end(b"POST / HTTP/1.1\r\n"), None);
+        assert_eq!(find_head_end(b""), None);
+    }
+
+    #[test]
+    fn json_int_field_reads_flat_ndjson() {
+        let line = "{\"token\":42,\"index\":0,\"logprob\":-2.5}";
+        assert_eq!(json_int_field(line, "token"), Some(42));
+        assert_eq!(json_int_field(line, "index"), Some(0));
+        assert_eq!(json_int_field(line, "missing"), None);
+        let done = "{\"done\":true,\"reason\":\"max_tokens\",\"generated\":8}";
+        assert_eq!(json_int_field(done, "generated"), Some(8));
+        assert_eq!(json_int_field("{\"token\":-3}", "token"), Some(-3));
+    }
+}

@@ -21,6 +21,7 @@ use std::time::Duration;
 use crate::obs::clock;
 use crate::obs::metrics::{Histogram, Registry};
 use crate::runtime::pool::PoolStats;
+use crate::serving::session::FinishReason;
 
 /// Raw latency samples retained per series for exact percentiles; beyond
 /// this the histogram answers and `samples_dropped` counts the excess.
@@ -108,8 +109,14 @@ impl SampleSet {
 pub struct MetricsCollector {
     /// Per-completed-prefill: submission -> first streamed token.
     ttft: SampleSet,
-    /// Per-generated-token gaps after the first.
+    /// Per-generated-token gaps after the first. Gaps that span a
+    /// preemption land in `resume_gap` instead: ITL measures decode
+    /// cadence, not scheduler artifacts.
     itl: SampleSet,
+    /// Per-preemption-resume: last pre-eviction token -> first replayed
+    /// token (eviction + queue wait + re-prefill, the client-visible
+    /// latency bubble).
+    resume_gap: SampleSet,
     /// Active (prefill + decoding) sessions at each step: distribution plus
     /// running mean/peak. O(buckets), not O(steps).
     occupancy: Histogram,
@@ -141,8 +148,15 @@ pub struct MetricsCollector {
     pub decode_tokens: usize,
     pub prefill_tokens: usize,
     pub completed: usize,
+    /// Streams retired because the client dropped its receiver mid-flight
+    /// (a subset of `completed`).
+    pub disconnected: usize,
     pub rejected: usize,
     pub evicted: usize,
+    /// In-flight sessions terminated by `Engine::abort` with a
+    /// `Finished(Aborted)` event (never `Rejected` — that is reserved for
+    /// requests that never entered the engine).
+    pub aborted: usize,
     started: Option<std::time::Instant>,
     wall: Duration,
 }
@@ -160,6 +174,7 @@ impl MetricsCollector {
         MetricsCollector {
             ttft: SampleSet::new(cap),
             itl: SampleSet::new(cap),
+            resume_gap: SampleSet::new(cap),
             occupancy: Histogram::new(),
             occ_sum: 0,
             occ_samples: 0,
@@ -177,8 +192,10 @@ impl MetricsCollector {
             decode_tokens: 0,
             prefill_tokens: 0,
             completed: 0,
+            disconnected: 0,
             rejected: 0,
             evicted: 0,
+            aborted: 0,
             started: None,
             wall: Duration::ZERO,
         }
@@ -236,8 +253,17 @@ impl MetricsCollector {
         self.itl.record(gap.as_nanos().min(u64::MAX as u128) as u64);
     }
 
-    pub fn record_completion(&mut self) {
+    /// First token after a preemption replay: the whole bubble (eviction +
+    /// queue wait + re-prefill) in one sample, kept out of the ITL series.
+    pub fn record_resume_gap(&mut self, gap: Duration) {
+        self.resume_gap.record(gap.as_nanos().min(u64::MAX as u128) as u64);
+    }
+
+    pub fn record_completion(&mut self, reason: FinishReason) {
         self.completed += 1;
+        if reason == FinishReason::Disconnected {
+            self.disconnected += 1;
+        }
     }
 
     /// The TTFT series (histogram + drop accounting), for exporters.
@@ -250,6 +276,11 @@ impl MetricsCollector {
         &self.itl
     }
 
+    /// The preemption resume-gap series, for exporters.
+    pub fn resume_gap(&self) -> &SampleSet {
+        &self.resume_gap
+    }
+
     pub fn report(&self) -> MetricsReport {
         let wall = match self.started {
             Some(t0) => self.wall + clock::now().saturating_duration_since(t0),
@@ -258,10 +289,13 @@ impl MetricsCollector {
         let secs = wall.as_secs_f64();
         let ttft = self.ttft.percentiles(&[0.50, 0.99]);
         let itl = self.itl.percentiles(&[0.50, 0.99]);
+        let resume = self.resume_gap.percentiles(&[0.50, 0.99]);
         MetricsReport {
             completed: self.completed,
+            disconnected: self.disconnected,
             rejected: self.rejected,
             evicted: self.evicted,
+            aborted: self.aborted,
             steps: self.steps,
             decode_tokens: self.decode_tokens,
             prefill_tokens: self.prefill_tokens,
@@ -269,6 +303,9 @@ impl MetricsCollector {
             ttft_p99: ttft[1],
             itl_p50: itl[0],
             itl_p99: itl[1],
+            resume_gaps: self.resume_gap.count(),
+            resume_gap_p50: resume[0],
+            resume_gap_p99: resume[1],
             decode_tps: if secs > 0.0 { self.decode_tokens as f64 / secs } else { 0.0 },
             mean_occupancy: self.occ_sum as f64 / self.occ_samples.max(1) as f64,
             peak_occupancy: self.occ_peak,
@@ -282,7 +319,7 @@ impl MetricsCollector {
             kv_bytes_read: self.kv_bytes_read,
             kv_bytes_per_token: self.kv_bytes_read as f64
                 / (self.decode_tokens + self.prefill_tokens).max(1) as f64,
-            samples_dropped: self.ttft.dropped + self.itl.dropped,
+            samples_dropped: self.ttft.dropped + self.itl.dropped + self.resume_gap.dropped,
             wall,
         }
     }
@@ -306,14 +343,30 @@ impl MetricsCollector {
             1e-9,
         );
         reg.histogram(
+            "llmdt_resume_gap_seconds",
+            "Last pre-preemption token to first replayed token (scheduler bubble).",
+            self.resume_gap.hist.clone(),
+            1e-9,
+        );
+        reg.histogram(
             "llmdt_step_occupancy",
             "Active sessions per engine step.",
             self.occupancy.clone(),
             1.0,
         );
         reg.counter("llmdt_completed_total", "Requests finished.", r.completed as u64);
+        reg.counter(
+            "llmdt_disconnected_total",
+            "Streams retired because the client went away mid-flight.",
+            r.disconnected as u64,
+        );
         reg.counter("llmdt_rejected_total", "Requests refused at submit.", r.rejected as u64);
         reg.counter("llmdt_evicted_total", "Sessions preempted out of their slot.", r.evicted as u64);
+        reg.counter(
+            "llmdt_aborted_total",
+            "In-flight sessions terminated by engine shutdown.",
+            r.aborted as u64,
+        );
         reg.counter(
             "llmdt_page_preemptions_total",
             "Evictions forced by KV page-pool pressure.",
@@ -363,8 +416,13 @@ impl MetricsCollector {
 #[derive(Clone, Debug)]
 pub struct MetricsReport {
     pub completed: usize,
+    /// Streams retired with `FinishReason::Disconnected` (client went away
+    /// mid-flight; a subset of `completed`).
+    pub disconnected: usize,
     pub rejected: usize,
     pub evicted: usize,
+    /// In-flight sessions ended by `Engine::abort` (`Finished(Aborted)`).
+    pub aborted: usize,
     pub steps: usize,
     pub decode_tokens: usize,
     pub prefill_tokens: usize,
@@ -372,6 +430,12 @@ pub struct MetricsReport {
     pub ttft_p99: Duration,
     pub itl_p50: Duration,
     pub itl_p99: Duration,
+    /// Preemption resume bubbles observed (one per resumed stream segment);
+    /// their latency lives in its own series so ITL stays a decode-cadence
+    /// figure.
+    pub resume_gaps: u64,
+    pub resume_gap_p50: Duration,
+    pub resume_gap_p99: Duration,
     /// Sustained generated tokens per wall-clock second.
     pub decode_tps: f64,
     /// Mean active sessions per step.
@@ -439,6 +503,19 @@ impl fmt::Display for MetricsReport {
             self.page_preemptions,
             self.wall,
         )?;
+        if self.resume_gaps > 0 {
+            write!(
+                f,
+                " | {} resume gaps p50 {:?} p99 {:?}",
+                self.resume_gaps, self.resume_gap_p50, self.resume_gap_p99
+            )?;
+        }
+        if self.disconnected > 0 {
+            write!(f, " | {} disconnected", self.disconnected)?;
+        }
+        if self.aborted > 0 {
+            write!(f, " | {} aborted", self.aborted)?;
+        }
         if self.samples_dropped > 0 {
             write!(f, " | {} raw samples dropped (histogram percentiles)", self.samples_dropped)?;
         }
@@ -515,13 +592,16 @@ mod tests {
         m.record_first_token(ms(10));
         m.record_inter_token(ms(2));
         m.record_inter_token(ms(4));
-        m.record_completion();
+        m.record_resume_gap(ms(40));
+        m.record_completion(FinishReason::MaxTokens);
+        m.record_completion(FinishReason::Disconnected);
         m.finish();
         let r = m.report();
         assert_eq!(r.steps, 2);
         assert_eq!(r.decode_tokens, 6);
         assert_eq!(r.prefill_tokens, 8);
-        assert_eq!(r.completed, 1);
+        assert_eq!(r.completed, 2);
+        assert_eq!(r.disconnected, 1, "disconnect sub-count rides completion");
         assert!((r.mean_occupancy - 3.0).abs() < 1e-12);
         assert_eq!(r.fused_steps, 2);
         assert_eq!(r.fused_gemms, 26);
@@ -536,7 +616,10 @@ mod tests {
         assert!((r.page_fragmentation - 0.375).abs() < 1e-12);
         assert_eq!(r.page_preemptions, 0);
         assert_eq!(r.ttft_p50, ms(10));
-        assert_eq!(r.itl_p99, ms(4));
+        assert_eq!(r.itl_p99, ms(4), "the resume bubble stays out of ITL");
+        assert_eq!(r.resume_gaps, 1);
+        assert_eq!(r.resume_gap_p50, ms(40));
+        assert_eq!(r.resume_gap_p99, ms(40));
         assert_eq!(r.samples_dropped, 0, "under the cap: percentiles are exact");
         assert!(r.wall > Duration::ZERO);
         assert!(r.decode_tps > 0.0);
@@ -586,11 +669,15 @@ mod tests {
         m.record_step(2, 1, 3);
         m.record_first_token(ms(10));
         m.record_inter_token(ms(2));
+        m.record_resume_gap(ms(40));
         m.record_pages(3, 5, 0.1);
         let reg = m.registry(&PoolStats::default());
         for name in [
             "llmdt_ttft_seconds",
             "llmdt_itl_seconds",
+            "llmdt_resume_gap_seconds",
+            "llmdt_disconnected_total",
+            "llmdt_aborted_total",
             "llmdt_step_occupancy",
             "llmdt_pages_in_use",
             "llmdt_pool_utilization",

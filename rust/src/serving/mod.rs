@@ -29,16 +29,20 @@
 //!   brings its own event channel and receives every generated token as it
 //!   is produced, then a terminal `Finished` (or `Rejected`).
 //! * [`kv_cache`] / [`scheduler`] / [`session`] / [`metrics`] — the parts.
+//! * [`http`] — the HTTP/1.1 front end: chunked token streaming, 429
+//!   backpressure, graceful drain ([`http::serve`]).
 //!
 //! The blocking [`Engine::run`] drives `submit`/`step` off an mpsc channel
 //! (the coordinator serve shim and the CLI use it); tests drive the same
 //! methods directly for deterministic interleavings.
 
+pub mod http;
 pub mod kv_cache;
 pub mod metrics;
 pub mod scheduler;
 pub mod session;
 
+pub use http::{HttpConfig, HttpServer, HttpStats, ServerExit};
 pub use kv_cache::{KvCache, KvCacheConfig, KvView, PageId, SlotId, SlotView, DEFAULT_PAGE_SIZE};
 pub use metrics::{percentile, percentile_sorted, MetricsCollector, MetricsReport};
 pub use scheduler::{Scheduler, SchedulerConfig};
@@ -54,8 +58,19 @@ use crate::model_io::{Checkpoint, ModelConfig};
 use crate::nn;
 use crate::obs::{clock, trace};
 
-/// One generation request. `id` is caller-chosen (echoed on every event);
-/// keep it unique per engine or streams will interleave confusingly.
+/// Process-unique request ids. Every front end (direct [`DecodeRequest::new`]
+/// callers, the loadgen, the HTTP server, the coordinator shim) allocates
+/// here: ids key trace tracks (`trace::session_track`) and event streams, so
+/// two allocators handing out overlapping ranges would interleave unrelated
+/// sessions in every exported timeline.
+pub fn next_request_id() -> u64 {
+    static NEXT_ID: AtomicU64 = AtomicU64::new(0);
+    NEXT_ID.fetch_add(1, Ordering::Relaxed)
+}
+
+/// One generation request. `id` should come from [`next_request_id`] (it is
+/// echoed on every event); hand-rolled ids that collide with another live
+/// request will interleave streams confusingly.
 pub struct DecodeRequest {
     pub id: u64,
     pub prompt: Vec<i32>,
@@ -71,11 +86,10 @@ pub struct DecodeRequest {
 impl DecodeRequest {
     /// Request + its event receiver, with a process-unique id.
     pub fn new(prompt: Vec<i32>, max_new_tokens: usize) -> (DecodeRequest, mpsc::Receiver<TokenEvent>) {
-        static NEXT_ID: AtomicU64 = AtomicU64::new(0);
         let (tx, rx) = mpsc::channel();
         (
             DecodeRequest {
-                id: NEXT_ID.fetch_add(1, Ordering::Relaxed),
+                id: next_request_id(),
                 prompt,
                 max_new_tokens,
                 eos: None,
@@ -211,20 +225,49 @@ impl Engine {
         !self.active.is_empty() || !self.sched.is_empty()
     }
 
-    /// Admit a request (any time, including mid-flight). Empty prompts and
-    /// queue overflow are rejected via a terminal [`TokenEvent::Rejected`];
-    /// over-long prompts are clamped to the most recent `window()` tokens.
-    pub fn submit(&mut self, mut req: DecodeRequest) {
+    /// Admission-queue depth right now (front-end backpressure probes).
+    pub fn queue_len(&self) -> usize {
+        self.sched.queue_len()
+    }
+
+    /// The scheduler knobs this engine runs with.
+    pub fn scheduler_config(&self) -> &SchedulerConfig {
+        self.sched.config()
+    }
+
+    /// Admit a request (any time, including mid-flight). Empty prompts,
+    /// queue overflow and — under [`SchedulerConfig::reject_saturated`] —
+    /// KV page-pool saturation are rejected via a terminal
+    /// [`TokenEvent::Rejected`]; over-long prompts are clamped to the most
+    /// recent `window()` tokens. Returns `true` iff the request actually
+    /// entered the admission queue (callers like [`Engine::run`] use this
+    /// to decide whether a coalescing window is worth holding).
+    pub fn submit(&mut self, mut req: DecodeRequest) -> bool {
         if req.prompt.is_empty() {
             self.metrics.rejected += 1;
             let _ = req
                 .events
                 .send(TokenEvent::Rejected { request: req.id, reason: "empty prompt".into() });
-            return;
+            return false;
         }
         let window = self.window();
         if req.prompt.len() > window {
             req.prompt.drain(..req.prompt.len() - window);
+        }
+        // Saturation backpressure: if others already wait and the pool
+        // cannot hold this arrival's first admission (replayed context + one
+        // decode row), answering "try later" now beats queuing it behind an
+        // unbounded wait. Mirrors the admission plan in `step`.
+        if self.sched.config().reject_saturated && !self.sched.is_empty() {
+            let need = (req.prompt.len() + 1).min(window).div_ceil(self.cache.page_size());
+            if need > self.cache.pages_free() {
+                self.metrics.rejected += 1;
+                let _ = req.events.send(TokenEvent::Rejected {
+                    request: req.id,
+                    reason: "page pool saturated".into(),
+                });
+                return false;
+            }
         }
         let s = DecodeSession::new(
             req.id,
@@ -234,11 +277,15 @@ impl Engine {
             req.events,
             req.submitted,
         );
-        if let Err(s) = self.sched.enqueue(s) {
-            self.metrics.rejected += 1;
-            let _ = s
-                .events
-                .send(TokenEvent::Rejected { request: s.id, reason: "queue full".into() });
+        match self.sched.enqueue(s) {
+            Ok(()) => true,
+            Err(s) => {
+                self.metrics.rejected += 1;
+                let _ = s
+                    .events
+                    .send(TokenEvent::Rejected { request: s.id, reason: "queue full".into() });
+                false
+            }
         }
     }
 
@@ -420,7 +467,7 @@ impl Engine {
                             s.generated.len() as f64,
                         )]);
                     }
-                    self.metrics.record_completion();
+                    self.metrics.record_completion(reason);
                     let _ = s.events.send(TokenEvent::Finished {
                         request: s.id,
                         reason,
@@ -575,29 +622,49 @@ impl Engine {
     /// the run's metrics. Blocks when idle; while sequences are in flight it
     /// drains arrivals between steps, so late requests join mid-batch.
     pub fn run(&mut self, rx: mpsc::Receiver<DecodeRequest>) -> Result<MetricsReport> {
+        self.run_with(rx, |_| {})
+    }
+
+    /// [`Engine::run`] with an observer called once per loop iteration (and
+    /// once before blocking on an idle channel, so idle state publishes
+    /// too). The HTTP front end uses it to snapshot the metrics registry
+    /// for `/metrics` without sharing the engine across threads.
+    pub fn run_with(
+        &mut self,
+        rx: mpsc::Receiver<DecodeRequest>,
+        mut observe: impl FnMut(&Engine),
+    ) -> Result<MetricsReport> {
         self.metrics.start();
         let mut open = true;
         while open || self.has_work() {
+            observe(self);
             if open {
                 if !self.has_work() {
                     // idle: block for the next arrival, then hold the
-                    // coalescing window to let a batch form
+                    // coalescing window to let a batch form. A rejected
+                    // arrival (empty prompt / full queue / saturation)
+                    // enqueues nothing, so there is no batch to coalesce:
+                    // holding `max_wait` then would be pure dead latency
+                    // between the reject and the next blocking recv.
                     match rx.recv() {
                         Ok(r) => {
-                            self.submit(r);
-                            let cfg = *self.sched.config();
-                            let deadline = clock::now() + cfg.max_wait;
-                            while self.sched.queue_len() < cfg.max_batch {
-                                let now = clock::now();
-                                if now >= deadline {
-                                    break;
-                                }
-                                match rx.recv_timeout(deadline - now) {
-                                    Ok(r) => self.submit(r),
-                                    Err(mpsc::RecvTimeoutError::Timeout) => break,
-                                    Err(mpsc::RecvTimeoutError::Disconnected) => {
-                                        open = false;
+                            if self.submit(r) {
+                                let cfg = *self.sched.config();
+                                let deadline = clock::now() + cfg.max_wait;
+                                while self.sched.queue_len() < cfg.max_batch {
+                                    let now = clock::now();
+                                    if now >= deadline {
                                         break;
+                                    }
+                                    match rx.recv_timeout(deadline - now) {
+                                        Ok(r) => {
+                                            self.submit(r);
+                                        }
+                                        Err(mpsc::RecvTimeoutError::Timeout) => break,
+                                        Err(mpsc::RecvTimeoutError::Disconnected) => {
+                                            open = false;
+                                            break;
+                                        }
                                     }
                                 }
                             }
@@ -607,7 +674,9 @@ impl Engine {
                 }
                 loop {
                     match rx.try_recv() {
-                        Ok(r) => self.submit(r),
+                        Ok(r) => {
+                            self.submit(r);
+                        }
                         Err(mpsc::TryRecvError::Empty) => break,
                         Err(mpsc::TryRecvError::Disconnected) => {
                             open = false;
@@ -621,11 +690,17 @@ impl Engine {
             }
         }
         self.metrics.finish();
+        observe(self);
         Ok(self.metrics.report())
     }
 
     /// Drop all queued and in-flight work (terminal events are sent, slots
     /// freed). Used on fatal errors so clients never hang on their streams.
+    /// Queued sessions never entered the engine, so they end with
+    /// [`TokenEvent::Rejected`]; sessions past admission already streamed on
+    /// their channel and end with a terminal [`TokenEvent::Finished`]
+    /// carrying [`FinishReason::Aborted`] — a client must never see
+    /// `Rejected` after its first token.
     pub fn abort(&mut self) {
         for s in self.sched.drain() {
             self.metrics.rejected += 1;
@@ -637,11 +712,13 @@ impl Engine {
             if let Some(slot) = s.slot.take() {
                 self.cache.free(slot);
             }
-            s.evict();
-            self.metrics.evicted += 1;
-            let _ = s
-                .events
-                .send(TokenEvent::Rejected { request: s.id, reason: "engine aborted".into() });
+            s.finish(FinishReason::Aborted);
+            self.metrics.aborted += 1;
+            let _ = s.events.send(TokenEvent::Finished {
+                request: s.id,
+                reason: FinishReason::Aborted,
+                generated: s.generated.len(),
+            });
         }
     }
 
@@ -675,12 +752,15 @@ fn emit_token(
     let z: f32 = logits_row.iter().map(|&x| (x - mx).exp()).sum();
     let lz = z.ln() + mx;
     let now = clock::now();
-    match s.last_token_at {
-        None => {
-            metrics.record_first_token(now.duration_since(s.submitted));
-            s.first_token_at = Some(now);
-        }
-        Some(prev) => metrics.record_inter_token(now.duration_since(prev)),
+    if let Some(prev) = s.last_token_at {
+        metrics.record_inter_token(now.duration_since(prev));
+    } else if let Some(prev) = s.resumed_from.take() {
+        // first token after a preemption replay: eviction + queue wait +
+        // re-prefill is scheduler latency, sampled apart from ITL
+        metrics.record_resume_gap(now.duration_since(prev));
+    } else {
+        metrics.record_first_token(now.duration_since(s.submitted));
+        s.first_token_at = Some(now);
     }
     s.last_token_at = Some(now);
     let index = s.generated.len();
@@ -711,7 +791,6 @@ pub fn run_decode_loadgen(
     max_new: usize,
 ) -> Result<MetricsReport> {
     let (tx, rx) = mpsc::channel::<DecodeRequest>();
-    let ids = AtomicU64::new(0);
     let report = std::thread::scope(|scope| {
         let server = scope.spawn(move || {
             let r = engine.run(rx);
@@ -724,13 +803,16 @@ pub fn run_decode_loadgen(
         });
         for c in 0..n_clients {
             let tx = tx.clone();
-            let ids = &ids;
             scope.spawn(move || {
                 for i in 0..per_client {
                     let (etx, erx) = mpsc::channel();
                     let prompt = prompts[(c * per_client + i) % prompts.len()].clone();
+                    // ids come from the process-global allocator — a local
+                    // zero-based counter here once collided with ids minted
+                    // by DecodeRequest::new in the same process, fusing
+                    // unrelated sessions' trace tracks
                     let req = DecodeRequest {
-                        id: ids.fetch_add(1, Ordering::Relaxed),
+                        id: next_request_id(),
                         prompt,
                         max_new_tokens: max_new,
                         eos: None,
@@ -1126,6 +1208,9 @@ mod tests {
 
     #[test]
     fn abort_clears_all_state_and_notifies() {
+        // terminal-event contract: a session past admission (A, already
+        // streaming) ends with Finished(Aborted); only the still-queued B —
+        // which never entered the engine — gets Rejected
         let mut eng = engine(1);
         let (a, rx_a) = DecodeRequest::new(vec![1, 2], 50);
         let (b, rx_b) = DecodeRequest::new(vec![3, 4], 50);
@@ -1135,8 +1220,169 @@ mod tests {
         eng.abort();
         assert!(!eng.has_work());
         assert_eq!(eng.cache().slots_in_use(), 0);
-        let (_, fin_a) = drain_tokens(&rx_a);
-        assert!(fin_a.is_none(), "aborted sessions end with Rejected, not Finished");
+        let (a_tokens, fin_a) = drain_tokens(&rx_a);
+        assert!(a_tokens >= 1, "A had streamed before the abort");
+        assert_eq!(fin_a, Some(FinishReason::Aborted), "in-flight abort is a Finished stream");
         assert!(matches!(rx_b.try_recv(), Ok(TokenEvent::Rejected { .. })));
+        let report = eng.report();
+        assert_eq!(report.aborted, 1);
+        assert_eq!(report.rejected, 1);
+        assert_eq!(report.evicted, 0, "abort is not an eviction");
+    }
+
+    #[test]
+    fn submit_reports_whether_the_request_enqueued() {
+        let cfg = zoo("nano").unwrap();
+        let ckpt = init_lm_params(&cfg, 48);
+        let mut eng = Engine::new(
+            cfg,
+            ckpt,
+            EngineConfig {
+                slots: 1,
+                scheduler: SchedulerConfig { max_batch: 1, max_queue: 1, ..SchedulerConfig::default() },
+                ..EngineConfig::default()
+            },
+        );
+        let (empty, _rx) = DecodeRequest::new(vec![], 4);
+        assert!(!eng.submit(empty), "empty prompt never enqueues");
+        let (ok, _rx_ok) = DecodeRequest::new(vec![1, 2], 4);
+        assert!(eng.submit(ok));
+        let (overflow, rx_overflow) = DecodeRequest::new(vec![3, 4], 4);
+        assert!(!eng.submit(overflow), "bounded queue overflow never enqueues");
+        assert!(matches!(rx_overflow.try_recv(), Ok(TokenEvent::Rejected { .. })));
+    }
+
+    #[test]
+    fn saturated_page_pool_rejects_instead_of_queuing() {
+        // 4-position pages, a pool of 2 pages, and reject_saturated on: with
+        // one session holding the pool and another already waiting, a third
+        // arrival is told to retry (Rejected) instead of queuing unboundedly
+        let cfg = zoo("nano").unwrap();
+        let ckpt = init_lm_params(&cfg, 49);
+        let mut eng = Engine::new(
+            cfg,
+            ckpt,
+            EngineConfig {
+                slots: 2,
+                page_size: 4,
+                kv_pages: 2,
+                scheduler: SchedulerConfig {
+                    max_batch: 2,
+                    reject_saturated: true,
+                    ..SchedulerConfig::default()
+                },
+                ..EngineConfig::default()
+            },
+        );
+        let (a, _rx_a) = DecodeRequest::new(vec![1, 2, 3, 4, 5, 6, 7], 8);
+        assert!(eng.submit(a));
+        eng.step().unwrap(); // A prefilling, both pages claimed
+        assert_eq!(eng.cache().pages_free(), 0);
+        let (b, _rx_b) = DecodeRequest::new(vec![1, 2], 4);
+        assert!(eng.submit(b), "an empty queue always admits the wait");
+        let (c, rx_c) = DecodeRequest::new(vec![1, 2], 4);
+        assert!(!eng.submit(c), "queue occupied + pool dry -> backpressure");
+        match rx_c.try_recv().unwrap() {
+            TokenEvent::Rejected { reason, .. } => assert!(reason.contains("saturated")),
+            other => panic!("expected saturation rejection, got {other:?}"),
+        }
+        assert_eq!(eng.report().rejected, 1);
+        // the queued B still completes once A's pages free up
+        while eng.has_work() {
+            eng.step().unwrap();
+        }
+        assert_eq!(eng.report().completed, 2);
+    }
+
+    #[test]
+    fn rejected_arrival_does_not_hold_the_coalescing_window() {
+        // regression: a rejected blocking arrival used to open the max_wait
+        // coalescing window with nothing queued — the engine sat in
+        // recv_timeout for the whole window instead of returning to the
+        // idle blocking recv. The run_with observer fires once per engine
+        // loop iteration, so with the fix it is called again almost
+        // immediately after the reject; with the bug it stays silent for
+        // the full (here 10s) window.
+        let cfg = zoo("nano").unwrap();
+        let ckpt = init_lm_params(&cfg, 50);
+        let mut eng = Engine::new(
+            cfg,
+            ckpt,
+            EngineConfig {
+                slots: 4,
+                scheduler: SchedulerConfig {
+                    max_batch: 4,
+                    max_wait: std::time::Duration::from_secs(10),
+                    ..SchedulerConfig::default()
+                },
+                ..EngineConfig::default()
+            },
+        );
+        let loops = AtomicU64::new(0);
+        let (tx, rx) = mpsc::channel::<DecodeRequest>();
+        std::thread::scope(|scope| {
+            let loops = &loops;
+            let server =
+                scope.spawn(move || eng.run_with(rx, |_| { loops.fetch_add(1, Ordering::SeqCst); }));
+            // wait for the engine to reach its first idle block
+            while loops.load(Ordering::SeqCst) == 0 {
+                std::thread::yield_now();
+            }
+            let (bad, rx_bad) = DecodeRequest::new(vec![], 4);
+            tx.send(bad).unwrap();
+            // the reject must come back around to the loop top (observer
+            // call #2) without serving out the 10s window
+            let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+            while loops.load(Ordering::SeqCst) < 2 {
+                assert!(
+                    std::time::Instant::now() < deadline,
+                    "engine held the coalescing window for a rejected arrival"
+                );
+                std::thread::sleep(std::time::Duration::from_millis(1));
+            }
+            assert!(matches!(rx_bad.try_recv(), Ok(TokenEvent::Rejected { .. })));
+            drop(tx);
+            let report = server.join().expect("engine thread panicked").unwrap();
+            assert_eq!(report.rejected, 1);
+        });
+    }
+
+    #[test]
+    fn request_ids_share_one_global_allocator() {
+        // regression: run_decode_loadgen minted ids from its own zero-based
+        // counter, colliding with DecodeRequest::new ids in the same
+        // process. All allocation now flows through next_request_id.
+        let (before, _rx) = DecodeRequest::new(vec![1], 1);
+        let cfg = zoo("nano").unwrap();
+        let ckpt = init_lm_params(&cfg, 51);
+        let mut eng = Engine::new(cfg, ckpt, EngineConfig::default());
+        let prompts = vec![vec![1, 2, 3]];
+        run_decode_loadgen(&mut eng, &prompts, 2, 2, 2).unwrap();
+        let (after, _rx) = DecodeRequest::new(vec![1], 1);
+        assert!(
+            after.id >= before.id + 5,
+            "4 loadgen requests must advance the shared allocator: {} -> {}",
+            before.id,
+            after.id
+        );
+    }
+
+    #[test]
+    fn dropped_receiver_retires_the_session_as_disconnected() {
+        // client vanishes mid-stream: the engine must notice the dead
+        // channel, retire the session with Disconnected, and free its pages
+        let mut eng = engine(2);
+        let (req, rx) = DecodeRequest::new(vec![1, 2, 3], 50);
+        eng.submit(req);
+        eng.step().unwrap(); // prefill + first token
+        drop(rx); // client disconnects
+        while eng.has_work() {
+            eng.step().unwrap();
+        }
+        assert_eq!(eng.cache().slots_in_use(), 0, "disconnect frees the slot");
+        assert_eq!(eng.cache().pages_in_use(), 0, "disconnect frees the pages");
+        let report = eng.report();
+        assert_eq!(report.completed, 1);
+        assert_eq!(report.disconnected, 1);
     }
 }

@@ -28,6 +28,13 @@ pub struct SchedulerConfig {
     pub max_queue: usize,
     /// Max prompt tokens one session prefills per engine step.
     pub prefill_chunk: usize,
+    /// Reject arrivals while the KV page pool is saturated (the admission
+    /// queue is non-empty and the pool lacks the pages the arrival's first
+    /// admission would claim) instead of queuing them behind an unknown
+    /// wait. Off by default — batch drivers prefer to queue — and switched
+    /// on by the HTTP front end, whose 429 + `Retry-After` backpressure
+    /// contract promises an answer instead of an unbounded queue.
+    pub reject_saturated: bool,
 }
 
 impl Default for SchedulerConfig {
@@ -37,6 +44,7 @@ impl Default for SchedulerConfig {
             max_wait: Duration::from_millis(2),
             max_queue: 0,
             prefill_chunk: 32,
+            reject_saturated: false,
         }
     }
 }

@@ -29,6 +29,24 @@ pub enum FinishReason {
     /// Evicted for preemption and could not be re-queued (bounded queue
     /// full); the stream ends after the tokens already delivered.
     Preempted,
+    /// The engine shut down (`Engine::abort`) while the session was past
+    /// admission; the stream ends after the tokens already delivered.
+    /// (`Rejected` stays reserved for requests that never entered.)
+    Aborted,
+}
+
+impl FinishReason {
+    /// Stable lowercase name, used on the HTTP wire and in logs.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            FinishReason::MaxTokens => "max_tokens",
+            FinishReason::Eos => "eos",
+            FinishReason::ContextFull => "context_full",
+            FinishReason::Disconnected => "disconnected",
+            FinishReason::Preempted => "preempted",
+            FinishReason::Aborted => "aborted",
+        }
+    }
 }
 
 /// Lifecycle states. Legal moves are enforced by the transition methods.
@@ -54,6 +72,13 @@ pub struct DecodeSession {
     pub submitted: Instant,
     pub first_token_at: Option<Instant>,
     pub last_token_at: Option<Instant>,
+    /// When the stream last emitted before a preemption, if the session has
+    /// been requeued since. `requeue` moves `last_token_at` here so the
+    /// first token after the replay is charged to the `resume_gap` series
+    /// (eviction + queue wait + re-prefill) instead of polluting ITL;
+    /// consecutive preemptions keep the earliest mark so one resume sample
+    /// covers the whole bubble.
+    pub resumed_from: Option<Instant>,
     /// Prompt tokens already written into the KV slot.
     pub prefilled: usize,
     /// When the session last entered the admission queue: submission, then
@@ -88,6 +113,7 @@ impl DecodeSession {
             submitted,
             first_token_at: None,
             last_token_at: None,
+            resumed_from: None,
             prefilled: 0,
             queued_at: submitted,
             phase_started_at: submitted,
@@ -156,6 +182,12 @@ impl DecodeSession {
         assert!(self.slot.is_none(), "requeue while still holding a slot");
         self.prefilled = 0;
         self.queued_at = clock::now();
+        // the gap from the last pre-preemption token to the first replayed
+        // one is scheduler latency, not decode latency: park the mark for
+        // the resume_gap series so ITL never sees the bubble
+        if let Some(t) = self.last_token_at.take() {
+            self.resumed_from.get_or_insert(t);
+        }
         self.state = SessionState::Queued;
     }
 
@@ -264,6 +296,8 @@ mod tests {
         s.prefilled = s.prompt.len();
         s.begin_decode();
         s.generated.push(9);
+        let t_last = clock::now();
+        s.last_token_at = Some(t_last);
         // preemption: slot reclaimed, then back to the queue
         s.slot = None;
         s.evict();
@@ -271,6 +305,14 @@ mod tests {
         assert_eq!(s.state, SessionState::Queued);
         assert_eq!(s.prefilled, 0);
         assert_eq!(s.generated, vec![9], "progress survives the round trip");
+        assert_eq!(s.last_token_at, None, "replay must not record an ITL sample");
+        assert_eq!(s.resumed_from, Some(t_last), "bubble start parked for resume_gap");
+        // a second preemption before any new token keeps the earliest mark
+        s.begin_prefill(1);
+        s.slot = None;
+        s.evict();
+        s.requeue();
+        assert_eq!(s.resumed_from, Some(t_last), "one resume sample spans both bubbles");
         // second admission: the replayed context includes the generated token
         s.begin_prefill(0);
         s.prefilled = s.context_len();

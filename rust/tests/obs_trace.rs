@@ -270,3 +270,63 @@ fn fake_clock_yields_exact_latencies_and_timeline() {
     // decode phase: first token at 5ms, retired with token 4 at 5 + 3*3 ms
     assert_eq!(decode.dur_us, 9_000, "decode span is exactly three 3ms steps");
 }
+
+/// Regression for ITL accounting across preemption: a 50ms
+/// eviction-to-resume bubble must land in the `resume_gap` series, leaving
+/// every ITL quantile at the exact 3ms decode cadence. (Before the fix,
+/// `requeue` kept the stale `last_token_at`, so the first post-replay token
+/// recorded a 50ms inter-token sample and ITL p99 reported scheduler
+/// artifacts instead of decode latency.)
+#[test]
+fn itl_excludes_preemption_bubble_under_fake_clock() {
+    let _g = lock();
+    let _fake = clock::fake();
+
+    let (cfg, ckpt) = nano();
+    let mut eng = engine(cfg, ckpt, 1);
+    let (req, rx) = DecodeRequest::new(vec![1, 2], 6);
+    let id = req.id;
+    eng.submit(req);
+
+    clock::advance(Duration::from_millis(5));
+    eng.step().unwrap(); // admit + prefill + token 1 (TTFT 5ms)
+    for _ in 0..2 {
+        clock::advance(Duration::from_millis(3));
+        eng.step().unwrap(); // tokens 2 and 3, 3ms apart
+    }
+
+    assert!(eng.preempt(id), "mid-stream session is preemptible");
+    clock::advance(Duration::from_millis(50)); // the scheduler bubble
+    eng.step().unwrap(); // re-admit, replay context, token 4
+    while eng.has_work() {
+        clock::advance(Duration::from_millis(3));
+        eng.step().unwrap(); // tokens 5 and 6 resume the 3ms cadence
+    }
+
+    let report = eng.report();
+    assert_eq!(report.completed, 1);
+    assert_eq!(report.evicted, 1);
+    assert_eq!(report.ttft_p50, Duration::from_millis(5));
+    assert_eq!(report.itl_p50, Duration::from_millis(3), "ITL is pure decode cadence");
+    assert_eq!(
+        report.itl_p99,
+        Duration::from_millis(3),
+        "the 50ms preemption bubble must not pollute ITL p99"
+    );
+    assert_eq!(report.resume_gaps, 1, "the bubble lands in its own series");
+    assert_eq!(report.resume_gap_p50, Duration::from_millis(50));
+    assert_eq!(report.resume_gap_p99, Duration::from_millis(50));
+    assert_eq!(report.samples_dropped, 0);
+
+    let mut tokens = 0;
+    let mut finished = None;
+    while let Ok(ev) = rx.try_recv() {
+        match ev {
+            TokenEvent::Token { .. } => tokens += 1,
+            TokenEvent::Finished { reason, .. } => finished = Some(reason),
+            TokenEvent::Rejected { reason, .. } => panic!("rejected: {reason}"),
+        }
+    }
+    assert_eq!(tokens, 6, "the stream is complete despite the round trip");
+    assert_eq!(finished, Some(FinishReason::MaxTokens));
+}
