@@ -1,0 +1,186 @@
+//! Perf: goodput under injected faults. Open-loop traffic over the wire
+//! path (same shape as `perf_http`) while a seeded fault schedule poisons
+//! forward steps, refuses KV reservations, spikes the page pool, and — in
+//! the heavy cell — panics the engine thread itself once so the supervised
+//! restart is on the measured path.
+//!
+//! Three cells, one knob: `chaos_clean` (disarmed), `chaos_light` (2% row
+//! fault rate), `chaos_heavy` (10% + one engine-thread panic). The
+//! invariants hold in every cell — the server never aborts, drains with
+//! zero leaked KV pages, and every client gets a terminal answer (a
+//! completed NDJSON stream, a mid-stream `"reason":"failed"` done line, or
+//! a 503 from the restart path). Goodput is expected to degrade with the
+//! fault rate, not collapse: that trajectory is the artifact, recorded in
+//! `BENCH_chaos.json`. `--smoke` shrinks the arrival count and asserts the
+//! contract (clean cell fails nothing; heavy cell fails something and
+//! restarts the engine exactly once).
+
+use std::net::SocketAddr;
+use std::time::{Duration, Instant};
+
+use llm_datatypes::bench_util::BenchJson;
+use llm_datatypes::coordinator::{corpus_for, trainer};
+use llm_datatypes::faults::{self, FaultPlan, Site};
+use llm_datatypes::model_io::zoo;
+use llm_datatypes::rng::Pcg64;
+use llm_datatypes::serving::http::{serve, ChunkStream, HttpConfig, ServerExit};
+use llm_datatypes::serving::{Engine, EngineConfig, SchedulerConfig};
+
+/// What one client saw, terminally.
+struct Outcome {
+    /// The request got *some* terminal answer: a done line, or a 503 body.
+    terminal: bool,
+    /// Stream finished with a non-failed reason.
+    completed: bool,
+    /// Failed visibly: 503 from the restart path or a `"failed"` done line.
+    failed: bool,
+    tokens: usize,
+}
+
+fn run_client(addr: SocketAddr, body: &str) -> Outcome {
+    let mut out = Outcome { terminal: false, completed: false, failed: false, tokens: 0 };
+    let mut stream = match ChunkStream::open(addr, "POST", "/generate", Some(body)) {
+        Ok(s) => s,
+        Err(_) => return out,
+    };
+    if stream.status != 200 {
+        // the supervised-restart path answers never-streamed sessions 503
+        let _ = stream.read_body();
+        out.terminal = stream.status == 503;
+        out.failed = true;
+        return out;
+    }
+    loop {
+        match stream.next_chunk() {
+            Ok(Some(chunk)) => {
+                if chunk.contains("\"done\":true") {
+                    out.terminal = true;
+                    out.failed = chunk.contains("\"reason\":\"failed\"");
+                    out.completed = !out.failed;
+                } else {
+                    out.tokens += 1;
+                }
+            }
+            Ok(None) => break,
+            Err(_) => break,
+        }
+    }
+    out
+}
+
+fn main() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().collect();
+    let smoke = argv.iter().any(|a| a == "--smoke");
+    let mut json = BenchJson::new();
+    let cfg = zoo("nano")?;
+    let corpus: Vec<i32> = corpus_for(&cfg).heldout;
+    let n = if smoke { 16usize } else { 40 };
+    let gap = Duration::from_millis(4);
+
+    faults::silence_injected_panics();
+    let mut clean_failed = usize::MAX;
+    let mut heavy_failed = 0usize;
+    for (cell, rate, heavy) in
+        [("chaos_clean", 0.0f64, false), ("chaos_light", 0.02, false), ("chaos_heavy", 0.10, true)]
+    {
+        if rate > 0.0 {
+            let mut plan = FaultPlan::new(0xfa57 ^ rate.to_bits())
+                .rate(Site::ForwardPanic, rate)
+                .limit(Site::ForwardPanic, 6)
+                .rate(Site::KvReserveFail, rate)
+                .limit(Site::KvReserveFail, 6)
+                .one_shot(Site::KvPageSpike)
+                .spike(4, 2);
+            if heavy {
+                plan = plan.one_shot(Site::EngineStepPanic);
+            }
+            faults::arm(plan);
+        } else {
+            faults::disarm();
+        }
+
+        let engine = Engine::new(
+            cfg,
+            trainer::init_lm_params(&cfg, 0x5eed),
+            EngineConfig {
+                slots: 4,
+                page_size: 4,
+                scheduler: SchedulerConfig { max_batch: 4, ..SchedulerConfig::default() },
+                ..EngineConfig::default()
+            },
+        );
+        let server = serve(engine, HttpConfig::default())?;
+        let addr = server.addr();
+
+        let mut rng = Pcg64::new(0xc4a05 ^ rate.to_bits());
+        let t0 = Instant::now();
+        let mut handles = Vec::with_capacity(n);
+        for _ in 0..n {
+            std::thread::sleep(gap);
+            let prompt_len = 4 + rng.below(5);
+            let start = rng.below(corpus.len() - prompt_len);
+            let toks: Vec<String> =
+                corpus[start..start + prompt_len].iter().map(|t| t.to_string()).collect();
+            let body =
+                format!("{{\"prompt\":[{}],\"max_new_tokens\":6}}", toks.join(","));
+            handles.push(std::thread::spawn(move || run_client(addr, &body)));
+        }
+        let outcomes: Vec<Outcome> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        let elapsed = t0.elapsed();
+
+        let injected = faults::injected_total();
+        let ServerExit { report, engine, http } = server.shutdown();
+        faults::disarm();
+        let report = report.expect("the supervised engine always returns its report");
+
+        let completed = outcomes.iter().filter(|o| o.completed).count();
+        let failed = outcomes.iter().filter(|o| o.failed).count();
+        let good_tokens: usize = outcomes.iter().filter(|o| o.completed).map(|o| o.tokens).sum();
+        let goodput = good_tokens as f64 / elapsed.as_secs_f64();
+        println!(
+            "bench {cell:<16} goodput={goodput:8.1} tok/s ok={completed} failed={failed} \
+             injected={injected} restarts={} steps={}",
+            http.engine_restarts, report.steps,
+        );
+        json.record(cell, "goodput_tok_s", goodput);
+        json.record(cell, "completed", completed as f64);
+        json.record(cell, "failed_visible", failed as f64);
+        json.record(cell, "faults_injected", injected as f64);
+        json.record(cell, "engine_restarts", http.engine_restarts as f64);
+
+        // survival invariants — these hold at every fault rate
+        assert_eq!(
+            completed + failed,
+            n,
+            "{cell}: every client saw a terminal answer: {} lost",
+            n - completed - failed
+        );
+        assert!(outcomes.iter().all(|o| o.terminal), "{cell}: a client saw no terminal event");
+        assert!(goodput > 0.0, "{cell}: goodput collapsed to zero");
+        assert_eq!(engine.cache().pages_in_use(), 0, "{cell}: drained server leaked KV pages");
+        assert_eq!(engine.cache().slots_in_use(), 0, "{cell}: drained server leaked slots");
+        assert!(report.failed >= failed, "{cell}: every visible failure retired server-side");
+
+        match cell {
+            "chaos_clean" => {
+                assert_eq!(failed, 0, "{cell}: no faults armed, no failures");
+                assert_eq!(injected, 0, "{cell}: disarmed cells inject nothing");
+                clean_failed = failed;
+            }
+            "chaos_heavy" => {
+                assert!(injected >= 1, "{cell}: the heavy schedule must actually fire");
+                assert!(failed >= 1, "{cell}: a 10% fault rate must fail at least one request");
+                assert_eq!(
+                    http.engine_restarts, 1,
+                    "{cell}: exactly one engine-thread panic + restart"
+                );
+                heavy_failed = failed;
+            }
+            _ => {}
+        }
+    }
+    assert!(clean_failed < heavy_failed, "failures grow with the fault rate");
+
+    json.write("BENCH_chaos.json")?;
+    Ok(())
+}

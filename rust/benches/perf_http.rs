@@ -36,7 +36,9 @@ use llm_datatypes::bench_util::BenchJson;
 use llm_datatypes::coordinator::{corpus_for, trainer, Session};
 use llm_datatypes::model_io::zoo;
 use llm_datatypes::rng::Pcg64;
-use llm_datatypes::serving::http::{serve, ChunkStream, HttpConfig, ServerExit};
+use llm_datatypes::serving::http::{
+    fetch_with_retry, serve, ChunkStream, HttpConfig, RetryPolicy, ServerExit,
+};
 use llm_datatypes::serving::{percentile_sorted, Engine, EngineConfig, SchedulerConfig};
 
 /// One request's shape in the workload mix.
@@ -253,6 +255,28 @@ fn main() -> anyhow::Result<()> {
                     Duration::ZERO
                 }
             });
+            // shed clients come back through the bundled retry policy:
+            // exponential backoff + jitter, honoring the server's
+            // Retry-After hint. Once the open-loop wave subsides the
+            // retried requests must land instead of 429ing forever.
+            let mut retry_attempted = 0usize;
+            let mut retry_recovered = 0usize;
+            if load == "overload" {
+                let policy = RetryPolicy::default();
+                let mut retry_rng = Pcg64::new(0x7e721 ^ rate as u64);
+                retry_attempted = r.rejected.min(4);
+                for _ in 0..retry_attempted {
+                    let body =
+                        body_for(sample_job(&mut retry_rng, cfg.seq), &corpus, &mut retry_rng);
+                    if let Ok(resp) =
+                        fetch_with_retry(addr, "POST", "/generate", Some(&body), &policy)
+                    {
+                        if resp.status == 200 {
+                            retry_recovered += 1;
+                        }
+                    }
+                }
+            }
             let ServerExit { report, engine, http } = server.shutdown();
             let report = report.expect("cell server drains cleanly");
             println!(
@@ -274,6 +298,13 @@ fn main() -> anyhow::Result<()> {
             json.record(&cell, "itl_p99_ms", r.itl_p99.as_secs_f64() * 1e3);
             json.record(&cell, "completed", r.completed as f64);
             json.record(&cell, "rejected_429", r.rejected as f64);
+            if load == "overload" {
+                println!(
+                    "bench {cell:<24} retry_recovered={retry_recovered}/{retry_attempted} \
+                     (backoff + Retry-After)"
+                );
+                json.record(&cell, "retry_recovered", retry_recovered as f64);
+            }
 
             // contract checks, cheap enough to hold in full runs too
             assert_eq!(
@@ -288,10 +319,15 @@ fn main() -> anyhow::Result<()> {
                 "{cell}: drained server leaks no KV pages"
             );
             assert_eq!(
-                http.streams_completed as usize, r.completed,
+                http.streams_completed as usize,
+                r.completed + retry_recovered,
                 "{cell}: server-side and client-side completion counts agree"
             );
-            assert_eq!(report.completed, r.completed, "{cell}: engine agrees too");
+            assert_eq!(
+                report.completed,
+                r.completed + retry_recovered,
+                "{cell}: engine agrees too"
+            );
             if smoke {
                 assert!(r.goodput_tok_s > 0.0, "{cell}: goodput collapsed to zero");
                 if load == "overload" {
@@ -301,6 +337,10 @@ fn main() -> anyhow::Result<()> {
                     assert!(
                         r.rejected >= 1,
                         "{cell}: 3x-capacity arrivals produced no 429s"
+                    );
+                    assert_eq!(
+                        retry_recovered, retry_attempted,
+                        "{cell}: backed-off retries must land once the wave subsides"
                     );
                 }
             }

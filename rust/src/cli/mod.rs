@@ -15,6 +15,8 @@
 //!                    [--max-queue N] [--prefill-chunk P] [--page-size P]
 //!                    [--kv-pages N] [--read-timeout-ms MS]
 //!                    [--write-timeout-ms MS] [--retry-after SECS]
+//!                    [--fault-seed N] [--fault-rate P] [--fault-limit N]
+//!                    [--fault-sites a,b,c]
 //!                    [--trace-out FILE] [--metrics-out FILE]
 //! repro all          [--quick]
 //! ```
@@ -104,14 +106,22 @@ commands:
              [--kv-format fp32|F] [--slots S] [--max-queue Q]
              [--prefill-chunk P] [--page-size P] [--kv-pages N]
              [--read-timeout-ms MS] [--write-timeout-ms MS]
-             [--retry-after SECS] [--trace-out FILE] [--metrics-out FILE]
+             [--retry-after SECS] [--fault-seed N] [--fault-rate P]
+             [--fault-limit N] [--fault-sites a,b,c]
+             [--trace-out FILE] [--metrics-out FILE]
           HTTP/1.1 front end over the decode engine: POST /generate streams
           tokens as chunked NDJSON; a full admission queue or saturated KV
           page pool answers 429 + Retry-After instead of queuing without
           bound (--max-queue defaults to 4x slots); GET /healthz and
           GET /metrics (Prometheus text incl. llmdt_http_* series) probe
           the server; POST /shutdown drains gracefully — stop accepting,
-          finish in-flight streams, then exit with the engine report
+          finish in-flight streams, then exit with the engine report;
+          --fault-seed arms deterministic fault injection (chaos drills):
+          each site in --fault-sites (default forward_panic,
+          kv_reserve_fail,pool_worker_panic; see rust/src/faults) fires
+          with probability --fault-rate (default 0.05) at most
+          --fault-limit times (0 = unlimited) — the supervised engine must
+          keep serving, counting llmdt_faults_* in /metrics
   all     [--quick]                            every table + figure
 global flags: --artifacts DIR --checkpoints DIR --results DIR
 ";
@@ -475,6 +485,32 @@ fn cmd_serve_http(session: &Session, args: &Args) -> Result<()> {
     let trace_out = out_path(args, "trace-out", "trace.json");
     let metrics_out = out_path(args, "metrics-out", "metrics.prom");
 
+    // chaos drills: --fault-seed arms the deterministic fault-injection
+    // layer for the whole serve run. The supervised engine is expected to
+    // keep serving through every injected failure; /metrics exposes the
+    // llmdt_faults_* counters for the drill to assert on.
+    if args.has("fault-seed") {
+        let seed: u64 = args.flag("fault-seed", "0").parse()?;
+        let rate: f64 = args.flag("fault-rate", "0.05").parse()?;
+        let limit: u64 = args.flag("fault-limit", "0").parse()?;
+        let sites = args.flag("fault-sites", "forward_panic,kv_reserve_fail,pool_worker_panic");
+        let mut plan = crate::faults::FaultPlan::new(seed);
+        for name in sites.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            let site = crate::faults::Site::from_name(name)
+                .with_context(|| format!("unknown fault site {name:?} in --fault-sites"))?;
+            plan = plan.rate(site, rate);
+            if limit > 0 {
+                plan = plan.limit(site, limit);
+            }
+        }
+        crate::faults::silence_injected_panics();
+        crate::faults::arm(plan);
+        println!(
+            "fault injection armed: seed {seed}, rate {rate}, limit {} on [{sites}]",
+            if limit == 0 { "unlimited".to_string() } else { limit.to_string() },
+        );
+    }
+
     let setup = build_decode_engine(session, args, max_queue, true)?;
     println!("{}", setup.banner);
     if trace_out.is_some() {
@@ -506,7 +542,7 @@ fn cmd_serve_http(session: &Session, args: &Args) -> Result<()> {
     println!("{report}");
     println!(
         "http: {} connections, {} requests, {} streams completed, {} rejected (429), \
-         {} bad requests, {} disconnects, {} tokens streamed",
+         {} bad requests, {} disconnects, {} tokens streamed, {} engine restarts",
         http.connections,
         http.requests,
         http.streams_completed,
@@ -514,7 +550,12 @@ fn cmd_serve_http(session: &Session, args: &Args) -> Result<()> {
         http.bad_requests,
         http.disconnects,
         http.tokens_streamed,
+        http.engine_restarts,
     );
+    if crate::faults::injected_total() > 0 {
+        println!("faults injected: {}", crate::faults::injected_total());
+        crate::faults::disarm();
+    }
     if let Some(path) = &trace_out {
         let snap = crate::obs::trace::snapshot_and_drain();
         std::fs::write(path, crate::obs::export::chrome_trace_json(&snap))

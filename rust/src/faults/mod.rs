@@ -1,0 +1,385 @@
+//! Deterministic, seeded fault injection for the serving stack.
+//!
+//! Mirrors the `obs::trace` cost model: every injection site opens with one
+//! relaxed atomic load of the global arm flag ([`enabled`], via [`fire`]) —
+//! with injection disarmed that load is the *entire* cost, so sites live
+//! safely inside per-token, per-reserve and per-task paths. Armed, each
+//! site draws from its **own** seeded PCG stream ([`crate::rng::Pcg64`]
+//! split per site), so the decision sequence at one site is independent of
+//! how often any other site is queried — a schedule is reproducible from
+//! `(seed, per-site rates/limits)` alone.
+//!
+//! The site registry (what fires where, and what supervises it):
+//!
+//! | site | fires in | blast radius under supervision |
+//! |---|---|---|
+//! | `pool_worker_panic` | `runtime::pool` task execution | one scoped dispatch re-panics; workers survive; engine forwards retire the session |
+//! | `kv_reserve_fail` | `KvCache::try_reserve` | `slots_mut` panics; the fused forward is caught and rows re-run individually |
+//! | `kv_page_spike` | `Engine::step` (pool seizure) | admission backpressure + page-pressure preemption; pages returned after the spike |
+//! | `forward_panic` | `Engine::step` per batch row | the flagged session retires as `FinishReason::Failed`; the batch re-runs without it |
+//! | `engine_step_panic` | end of `Engine::step` | the engine thread unwinds; `http::serve`'s supervisor restarts the run loop |
+//! | `http_client_stall` | bundled client `ChunkStream` reads | server-side write deadline bounds the connection thread |
+//! | `http_client_disconnect` | bundled client `ChunkStream` reads | server sees a dead socket mid-write; session retires `Disconnected` |
+//! | `clock_skew` | `Engine::step` micro-steps (fake clock only) | the stall watchdog (`SchedulerConfig::step_deadline`) kills the offender |
+//!
+//! Only chaos tests (`tests/chaos.rs`), the `perf_chaos` bench and the
+//! `serve-http --fault-*` flags ever [`arm`] this module; unit tests must
+//! not, because the flag is process-global and the test harness runs tests
+//! concurrently.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard, OnceLock};
+use std::time::Duration;
+
+use crate::obs::trace;
+use crate::rng::Pcg64;
+
+/// Number of named injection sites (indexes [`Site`]).
+pub const SITE_COUNT: usize = 8;
+
+/// A named injection site. The discriminant indexes the per-site rate,
+/// limit, RNG stream and fired counter.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Site {
+    /// Panic inside a `runtime::pool` task body.
+    PoolWorkerPanic = 0,
+    /// `KvCache::try_reserve` reports the pool dry.
+    KvReserveFail = 1,
+    /// `Engine::step` seizes free KV pages for a few steps.
+    KvPageSpike = 2,
+    /// One session's row of the fused forward panics.
+    ForwardPanic = 3,
+    /// `Engine::step` panics after its work (engine-thread supervision).
+    EngineStepPanic = 4,
+    /// The bundled HTTP client stalls before a read.
+    HttpClientStall = 5,
+    /// The bundled HTTP client kills its socket mid-stream.
+    HttpClientDisconnect = 6,
+    /// The engine's fake clock jumps forward mid-micro-step.
+    ClockSkew = 7,
+}
+
+impl Site {
+    pub const ALL: [Site; SITE_COUNT] = [
+        Site::PoolWorkerPanic,
+        Site::KvReserveFail,
+        Site::KvPageSpike,
+        Site::ForwardPanic,
+        Site::EngineStepPanic,
+        Site::HttpClientStall,
+        Site::HttpClientDisconnect,
+        Site::ClockSkew,
+    ];
+
+    /// Stable snake_case name (metric suffixes, `--fault-sites` parsing).
+    pub fn name(self) -> &'static str {
+        match self {
+            Site::PoolWorkerPanic => "pool_worker_panic",
+            Site::KvReserveFail => "kv_reserve_fail",
+            Site::KvPageSpike => "kv_page_spike",
+            Site::ForwardPanic => "forward_panic",
+            Site::EngineStepPanic => "engine_step_panic",
+            Site::HttpClientStall => "http_client_stall",
+            Site::HttpClientDisconnect => "http_client_disconnect",
+            Site::ClockSkew => "clock_skew",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<Site> {
+        Site::ALL.into_iter().find(|s| s.name() == name)
+    }
+}
+
+/// A seeded injection schedule: per-site probabilities and fire limits plus
+/// the shape parameters the stateful sites need. Built fluently:
+/// `FaultPlan::new(42).rate(Site::ForwardPanic, 0.05).limit(Site::ForwardPanic, 3)`.
+#[derive(Clone, Debug)]
+pub struct FaultPlan {
+    pub seed: u64,
+    rates: [f64; SITE_COUNT],
+    limits: [u64; SITE_COUNT],
+    /// Free pages a `kv_page_spike` seizes (clamped to what is free).
+    pub spike_pages: usize,
+    /// Engine steps a seizure lasts before the pages return.
+    pub spike_steps: usize,
+    /// Fake-clock jump per `clock_skew` fire.
+    pub skew: Duration,
+    /// Sleep per `http_client_stall` fire.
+    pub stall: Duration,
+    /// Restrict `pool_worker_panic` to the worker thread named
+    /// `llmdt-pool-<i>` (repeated-panic-on-one-worker coverage).
+    pub pool_worker: Option<usize>,
+}
+
+impl FaultPlan {
+    pub fn new(seed: u64) -> FaultPlan {
+        FaultPlan {
+            seed,
+            rates: [0.0; SITE_COUNT],
+            limits: [u64::MAX; SITE_COUNT],
+            spike_pages: 4,
+            spike_steps: 2,
+            skew: Duration::from_millis(50),
+            stall: Duration::from_millis(20),
+            pool_worker: None,
+        }
+    }
+
+    /// Probability a query at `site` fires (0.0 = dormant).
+    pub fn rate(mut self, site: Site, p: f64) -> FaultPlan {
+        self.rates[site as usize] = p.clamp(0.0, 1.0);
+        self
+    }
+
+    /// Cap total fires at `site` for the armed window.
+    pub fn limit(mut self, site: Site, n: u64) -> FaultPlan {
+        self.limits[site as usize] = n;
+        self
+    }
+
+    /// Fire exactly once, on the first query: `rate(1.0).limit(1)`.
+    pub fn one_shot(self, site: Site) -> FaultPlan {
+        self.rate(site, 1.0).limit(site, 1)
+    }
+
+    pub fn spike(mut self, pages: usize, steps: usize) -> FaultPlan {
+        self.spike_pages = pages;
+        self.spike_steps = steps;
+        self
+    }
+
+    pub fn skew(mut self, d: Duration) -> FaultPlan {
+        self.skew = d;
+        self
+    }
+
+    pub fn stall(mut self, d: Duration) -> FaultPlan {
+        self.stall = d;
+        self
+    }
+
+    pub fn pool_worker(mut self, worker: usize) -> FaultPlan {
+        self.pool_worker = Some(worker);
+        self
+    }
+}
+
+struct Armed {
+    plan: FaultPlan,
+    /// One independent PCG stream per site: the draw sequence at a site
+    /// depends only on (seed, site, query count at that site).
+    rngs: [Pcg64; SITE_COUNT],
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static ARMED: Mutex<Option<Armed>> = Mutex::new(None);
+static FIRED: [AtomicU64; SITE_COUNT] = [const { AtomicU64::new(0) }; SITE_COUNT];
+
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    // injected faults panic on purpose; never let that poison the plan
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Is injection armed? One relaxed load — the whole disarmed-path cost.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Arm `plan`: reset all fired counters, seed the per-site streams, raise
+/// the flag. Process-global — serialize callers (chaos tests hold a lock).
+pub fn arm(plan: FaultPlan) {
+    let rngs = std::array::from_fn(|i| Pcg64::with_stream(plan.seed, i as u64));
+    for c in &FIRED {
+        c.store(0, Ordering::SeqCst);
+    }
+    *lock(&ARMED) = Some(Armed { plan, rngs });
+    ENABLED.store(true, Ordering::SeqCst);
+}
+
+/// Lower the flag and drop the plan. Fired counters survive so a drained
+/// run can still be audited ([`injected`] / [`counters`]).
+pub fn disarm() {
+    ENABLED.store(false, Ordering::SeqCst);
+    *lock(&ARMED) = None;
+}
+
+/// Should this site fire now? Consumes one draw from the site's stream
+/// when the site is armed with a positive rate. Disarmed, this is the one
+/// relaxed atomic load.
+#[inline]
+pub fn fire(site: Site) -> bool {
+    if !enabled() {
+        return false;
+    }
+    fire_slow(site)
+}
+
+#[cold]
+fn fire_slow(site: Site) -> bool {
+    let i = site as usize;
+    let fired = {
+        let mut g = lock(&ARMED);
+        let armed = match g.as_mut() {
+            Some(a) => a,
+            None => return false,
+        };
+        if armed.plan.rates[i] <= 0.0 {
+            return false;
+        }
+        if site == Site::PoolWorkerPanic {
+            if let Some(w) = armed.plan.pool_worker {
+                let want = format!("llmdt-pool-{w}");
+                if std::thread::current().name() != Some(want.as_str()) {
+                    return false;
+                }
+            }
+        }
+        if FIRED[i].load(Ordering::SeqCst) >= armed.plan.limits[i] {
+            return false;
+        }
+        armed.rngs[i].uniform() < armed.plan.rates[i]
+    };
+    if fired {
+        FIRED[i].fetch_add(1, Ordering::SeqCst);
+        trace::instant(trace::current_track(), "fault", site.name(), &[]);
+    }
+    fired
+}
+
+/// Fires at `site` since the last [`arm`].
+pub fn injected(site: Site) -> u64 {
+    FIRED[site as usize].load(Ordering::SeqCst)
+}
+
+/// Total fires across every site since the last [`arm`].
+pub fn injected_total() -> u64 {
+    FIRED.iter().map(|c| c.load(Ordering::SeqCst)).sum()
+}
+
+/// `(site name, fires)` for every site — the `llmdt_faults_*` series.
+pub fn counters() -> [(&'static str, u64); SITE_COUNT] {
+    std::array::from_fn(|i| (Site::ALL[i].name(), FIRED[i].load(Ordering::SeqCst)))
+}
+
+/// `kv_page_spike` shape from the armed plan: `(pages, steps)`.
+pub fn spike_shape() -> (usize, usize) {
+    lock(&ARMED).as_ref().map(|a| (a.plan.spike_pages, a.plan.spike_steps)).unwrap_or((0, 0))
+}
+
+/// `clock_skew` jump from the armed plan.
+pub fn skew() -> Duration {
+    lock(&ARMED).as_ref().map(|a| a.plan.skew).unwrap_or(Duration::ZERO)
+}
+
+/// `http_client_stall` sleep from the armed plan.
+pub fn stall() -> Duration {
+    lock(&ARMED).as_ref().map(|a| a.plan.stall).unwrap_or(Duration::ZERO)
+}
+
+/// Marker every injected panic message carries, so supervisors and panic
+/// hooks can tell scheduled chaos from genuine bugs.
+pub const PANIC_MARK: &str = "fault-injected";
+
+/// Install (once) a panic hook that swallows the default report for
+/// injected panics — chaos runs fire hundreds and each would otherwise
+/// print a backtrace banner. Genuine panics still report through the
+/// previous hook.
+pub fn silence_injected_panics() {
+    static INSTALLED: OnceLock<()> = OnceLock::new();
+    INSTALLED.get_or_init(|| {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            let injected = info
+                .payload()
+                .downcast_ref::<&str>()
+                .map(|s| s.contains(PANIC_MARK))
+                .or_else(|| {
+                    info.payload().downcast_ref::<String>().map(|s| s.contains(PANIC_MARK))
+                })
+                .unwrap_or(false);
+            if !injected {
+                prev(info);
+            }
+        }));
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // These tests arm the process-global plan; they serialize on this and
+    // use sites nothing else in the lib test binary queries while armed
+    // (no engine/pool/http activity happens here).
+    static LOCK: Mutex<()> = Mutex::new(());
+
+    #[test]
+    fn disarmed_sites_never_fire_and_cost_only_the_flag_check() {
+        let _g = lock(&LOCK);
+        disarm();
+        for site in Site::ALL {
+            assert!(!fire(site));
+        }
+    }
+
+    #[test]
+    fn one_shot_fires_exactly_once_deterministically() {
+        let _g = lock(&LOCK);
+        arm(FaultPlan::new(7).one_shot(Site::ClockSkew));
+        assert!(fire(Site::ClockSkew), "rate 1.0 must fire on the first query");
+        for _ in 0..10 {
+            assert!(!fire(Site::ClockSkew), "limit 1 caps the schedule");
+        }
+        assert_eq!(injected(Site::ClockSkew), 1);
+        assert!(!fire(Site::HttpClientStall), "unconfigured sites stay dormant");
+        disarm();
+        assert_eq!(injected(Site::ClockSkew), 1, "counters survive disarm");
+    }
+
+    #[test]
+    fn seeded_schedules_are_reproducible_per_site() {
+        let _g = lock(&LOCK);
+        let run = || {
+            arm(FaultPlan::new(99)
+                .rate(Site::HttpClientStall, 0.3)
+                .rate(Site::HttpClientDisconnect, 0.7));
+            let a: Vec<bool> = (0..64).map(|_| fire(Site::HttpClientStall)).collect();
+            let b: Vec<bool> = (0..64).map(|_| fire(Site::HttpClientDisconnect)).collect();
+            disarm();
+            (a, b)
+        };
+        let first = run();
+        let second = run();
+        assert_eq!(first, second, "same seed, same per-site decision sequence");
+        assert!(first.0.iter().any(|&f| f), "rate 0.3 over 64 draws fires");
+        assert!(first.0.iter().any(|&f| !f), "rate 0.3 over 64 draws also skips");
+    }
+
+    #[test]
+    fn per_site_streams_are_independent_of_interleaving() {
+        let _g = lock(&LOCK);
+        arm(FaultPlan::new(5).rate(Site::HttpClientStall, 0.5));
+        let solo: Vec<bool> = (0..32).map(|_| fire(Site::HttpClientStall)).collect();
+        disarm();
+        arm(FaultPlan::new(5)
+            .rate(Site::HttpClientStall, 0.5)
+            .rate(Site::HttpClientDisconnect, 0.5));
+        let interleaved: Vec<bool> = (0..32)
+            .map(|_| {
+                fire(Site::HttpClientDisconnect);
+                fire(Site::HttpClientStall)
+            })
+            .collect();
+        disarm();
+        assert_eq!(solo, interleaved, "another site's draws must not perturb this site");
+    }
+
+    #[test]
+    fn names_round_trip() {
+        for site in Site::ALL {
+            assert_eq!(Site::from_name(site.name()), Some(site));
+        }
+        assert_eq!(Site::from_name("nope"), None);
+    }
+}

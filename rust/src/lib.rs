@@ -18,7 +18,8 @@
 //!   serve shim), [`serving`] (continuous-batching decode engine + KV
 //!   cache), [`exp`] (one module per paper table/figure), [`report`]
 //! * tooling: [`cli`], [`bench_util`], [`obs`] (tracing + metrics:
-//!   span timelines, histogram registry, Chrome-trace/Prometheus export)
+//!   span timelines, histogram registry, Chrome-trace/Prometheus export),
+//!   [`faults`] (deterministic seeded fault injection for chaos testing)
 
 pub mod bench_util;
 pub mod cli;
@@ -26,6 +27,7 @@ pub mod coordinator;
 pub mod data;
 pub mod distfit;
 pub mod exp;
+pub mod faults;
 pub mod formats;
 pub mod hw;
 pub mod model_io;

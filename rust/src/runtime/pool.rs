@@ -90,7 +90,16 @@ impl Task {
     fn run(self) {
         let Task { job, latch, enqueued_us } = self;
         let t0 = trace::start();
-        let panicked = std::panic::catch_unwind(AssertUnwindSafe(job)).is_err();
+        let panicked = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            // the pool_worker_panic injection site: one relaxed atomic load
+            // when disarmed; armed, the task dies before its job runs and
+            // the latch's poison flag carries the panic to the dispatcher
+            if crate::faults::fire(crate::faults::Site::PoolWorkerPanic) {
+                panic!("{} pool worker panic", crate::faults::PANIC_MARK);
+            }
+            job()
+        }))
+        .is_err();
         if let Some(t0) = t0 {
             let wait = if enqueued_us > 0 { t0.saturating_sub(enqueued_us) } else { 0 };
             trace::complete_here("pool", "pool.task", t0, &[("queue_wait_us", wait as f64)]);

@@ -46,18 +46,20 @@
 
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::panic::AssertUnwindSafe;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
+use crate::faults;
 use crate::obs::export::prometheus_text;
 use crate::obs::metrics::Registry;
 use crate::obs::trace;
-use crate::serving::{DecodeRequest, Engine, MetricsReport, TokenEvent};
+use crate::serving::{DecodeRequest, Engine, FinishReason, MetricsReport, TokenEvent};
 
 /// Front-end knobs. `addr` may use port 0 to bind an ephemeral port
 /// (tests/benches); [`HttpServer::addr`] reports the bound address.
@@ -97,6 +99,9 @@ struct Shared {
     disconnects: AtomicU64,
     tokens_streamed: AtomicU64,
     active_connections: AtomicU64,
+    /// Times the engine thread's supervisor caught a panic out of the
+    /// serving loop and re-entered it on the same request channel.
+    engine_restarts: AtomicU64,
     draining: AtomicBool,
     /// Prometheus text of the engine registry, re-rendered by the engine
     /// thread's `run_with` observer (the engine is never shared mutably).
@@ -114,6 +119,7 @@ impl Shared {
             disconnects: AtomicU64::new(0),
             tokens_streamed: AtomicU64::new(0),
             active_connections: AtomicU64::new(0),
+            engine_restarts: AtomicU64::new(0),
             draining: AtomicBool::new(false),
             engine_metrics: Mutex::new(String::new()),
         }
@@ -156,6 +162,11 @@ impl Shared {
             "Token chunks written to clients.",
             self.tokens_streamed.load(Ordering::Relaxed),
         );
+        reg.counter(
+            "llmdt_http_engine_restarts_total",
+            "Engine-thread panics caught by the supervisor and restarted.",
+            self.engine_restarts.load(Ordering::Relaxed),
+        );
         reg.gauge(
             "llmdt_http_active_connections",
             "Connections currently being served.",
@@ -180,6 +191,7 @@ pub struct HttpStats {
     pub bad_requests: u64,
     pub disconnects: u64,
     pub tokens_streamed: u64,
+    pub engine_restarts: u64,
 }
 
 /// A running HTTP front end. Dropping the handle does **not** stop the
@@ -225,6 +237,11 @@ impl HttpServer {
     /// client's `POST /shutdown`.
     pub fn wait(self) -> ServerExit {
         let HttpServer { shared, accept, engine, .. } = self;
+        // construct-time invariant, not a serving-path risk: the accept
+        // loop only joins connection threads (whose panics it swallows via
+        // `let _ = h.join()`), and the engine thread's supervisor catches
+        // serving-loop panics and restarts — so these expects fire only on
+        // a bug in the supervisor/accept scaffolding itself
         accept.join().expect("http accept thread panicked");
         let http = snapshot(&shared);
         let (report, engine) = engine.join().expect("engine thread panicked");
@@ -247,7 +264,15 @@ fn snapshot(s: &Shared) -> HttpStats {
         bad_requests: s.bad_requests.load(Ordering::Relaxed),
         disconnects: s.disconnects.load(Ordering::Relaxed),
         tokens_streamed: s.tokens_streamed.load(Ordering::Relaxed),
+        engine_restarts: s.engine_restarts.load(Ordering::Relaxed),
     }
+}
+
+/// The engine-metrics snapshot lock never stays poisoned: a panic while
+/// holding it (worst case: mid-String-assign, which cannot tear) must not
+/// take `/metrics` down with it.
+fn lock_metrics(m: &Mutex<String>) -> std::sync::MutexGuard<'_, String> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
 }
 
 fn initiate_drain(shared: &Shared, addr: SocketAddr) {
@@ -268,21 +293,41 @@ pub fn serve(mut engine: Engine, cfg: HttpConfig) -> Result<HttpServer> {
     let engine_shared = shared.clone();
     let engine_thread = std::thread::spawn(move || {
         let mut ticks = 0u64;
-        let res = engine.run_with(rx, |eng| {
-            // re-render the /metrics snapshot when idle and every 16th
-            // iteration while busy (rendering is cheap but not free)
-            if ticks % 16 == 0 || !eng.has_work() {
-                let text = prometheus_text(&eng.metrics_registry());
-                *engine_shared.engine_metrics.lock().unwrap() = text;
+        // the supervisor: a panic that unwinds out of the serving loop (an
+        // engine bug, or an injected engine_step_panic) retires every
+        // in-flight session with a terminal event, then re-enters the loop
+        // on the same receiver — queued requests and connected clients
+        // survive the restart; only the sessions that were mid-forward see
+        // a Finished(Failed).
+        loop {
+            let res = std::panic::catch_unwind(AssertUnwindSafe(|| {
+                engine.run_with(&rx, |eng| {
+                    // re-render the /metrics snapshot when idle and every
+                    // 16th iteration while busy (cheap but not free)
+                    if ticks % 16 == 0 || !eng.has_work() {
+                        let text = prometheus_text(&eng.metrics_registry());
+                        *lock_metrics(&engine_shared.engine_metrics) = text;
+                    }
+                    ticks += 1;
+                })
+            }));
+            match res {
+                Ok(res) => {
+                    if res.is_err() {
+                        // terminal events for everything in flight so no
+                        // connection thread hangs on its event channel
+                        engine.abort();
+                    }
+                    return (res, engine);
+                }
+                Err(_) => {
+                    engine.recover_after_panic();
+                    engine_shared.engine_restarts.fetch_add(1, Ordering::Relaxed);
+                    let text = prometheus_text(&engine.metrics_registry());
+                    *lock_metrics(&engine_shared.engine_metrics) = text;
+                }
             }
-            ticks += 1;
-        });
-        if res.is_err() {
-            // terminal events for everything in flight so no connection
-            // thread hangs on its event channel
-            engine.abort();
         }
-        (res, engine)
     });
 
     let accept_shared = shared.clone();
@@ -362,7 +407,7 @@ fn handle_request(
             200
         }
         ("GET", "/metrics") => {
-            let engine_text = shared.engine_metrics.lock().unwrap().clone();
+            let engine_text = lock_metrics(&shared.engine_metrics).clone();
             let body = format!("{engine_text}{}", prometheus_text(&shared.registry()));
             let _ = respond(
                 stream,
@@ -468,11 +513,25 @@ fn handle_generate(
             );
             429
         }
+        Ok(TokenEvent::Finished { reason: FinishReason::Failed, .. }) => {
+            // the session died before streaming anything (engine restart or
+            // supervised forward failure): a whole-response 503 tells the
+            // client it may safely retry — once a token has gone out, the
+            // same Failed arrives as the stream's terminal line instead
+            let _ = respond(
+                stream,
+                503,
+                "Service Unavailable",
+                &[("Retry-After", &retry)],
+                "engine restarted\n",
+            );
+            503
+        }
         Ok(first) => {
             if trace::enabled() {
                 trace::instant(trace::session_track(id), "http", "stream_start", &[]);
             }
-            stream_events(stream, first, events, shared)
+            stream_events(stream, first, events, shared, cfg.write_timeout)
         }
         Err(_) => {
             let _ = respond(
@@ -491,14 +550,15 @@ fn handle_generate(
 /// error means the client went away: dropping `events` makes the engine
 /// retire the session as `Disconnected` at its next token.
 fn stream_events(
-    mut stream: &TcpStream,
+    stream: &TcpStream,
     first: TokenEvent,
     events: mpsc::Receiver<TokenEvent>,
     shared: &Shared,
+    write_timeout: Duration,
 ) -> u16 {
     let header = "HTTP/1.1 200 OK\r\nContent-Type: application/x-ndjson\r\n\
                   Transfer-Encoding: chunked\r\nConnection: close\r\n\r\n";
-    if stream.write_all(header.as_bytes()).is_err() {
+    if write_all_deadline(stream, header.as_bytes(), Instant::now() + write_timeout).is_err() {
         shared.disconnects.fetch_add(1, Ordering::Relaxed);
         return 200;
     }
@@ -511,7 +571,11 @@ fn stream_events(
                 // engine gone mid-stream (abort sends terminal events, so
                 // this is belt-and-braces): end the chunk stream cleanly
                 Err(_) => {
-                    let _ = stream.write_all(b"0\r\n\r\n");
+                    let _ = write_all_deadline(
+                        stream,
+                        b"0\r\n\r\n",
+                        Instant::now() + write_timeout,
+                    );
                     return 200;
                 }
             },
@@ -520,7 +584,7 @@ fn stream_events(
             TokenEvent::Token { token, index, logprob, .. } => {
                 let lp = if logprob.is_finite() { logprob } else { 0.0 };
                 let line = format!("{{\"token\":{token},\"index\":{index},\"logprob\":{lp}}}\n");
-                if write_chunk(stream, &line).is_err() {
+                if write_chunk(stream, &line, write_timeout).is_err() {
                     shared.disconnects.fetch_add(1, Ordering::Relaxed);
                     return 200; // dropping `events` propagates the disconnect
                 }
@@ -531,8 +595,9 @@ fn stream_events(
                     "{{\"done\":true,\"reason\":\"{}\",\"generated\":{generated}}}\n",
                     reason.as_str()
                 );
-                if write_chunk(stream, &line).is_ok()
-                    && stream.write_all(b"0\r\n\r\n").is_ok()
+                if write_chunk(stream, &line, write_timeout).is_ok()
+                    && write_all_deadline(stream, b"0\r\n\r\n", Instant::now() + write_timeout)
+                        .is_ok()
                 {
                     shared.streams_completed.fetch_add(1, Ordering::Relaxed);
                 } else {
@@ -543,16 +608,51 @@ fn stream_events(
             TokenEvent::Rejected { .. } => {
                 // contract: Rejected is always the *first* event; ending the
                 // stream is the only safe translation this late
-                let _ = stream.write_all(b"0\r\n\r\n");
+                let _ =
+                    write_all_deadline(stream, b"0\r\n\r\n", Instant::now() + write_timeout);
                 return 200;
             }
         }
     }
 }
 
-fn write_chunk(mut stream: &TcpStream, payload: &str) -> std::io::Result<()> {
+/// Write one chunked-encoding frame, bounding the whole frame by `timeout`.
+fn write_chunk(stream: &TcpStream, payload: &str, timeout: Duration) -> std::io::Result<()> {
     let framed = format!("{:x}\r\n{payload}\r\n", payload.len());
-    stream.write_all(framed.as_bytes())
+    write_all_deadline(stream, framed.as_bytes(), Instant::now() + timeout)
+}
+
+/// `write_all` with a deadline that spans **partial writes**. Plain
+/// `write_all` under `SO_SNDTIMEO` re-arms the timeout on every syscall, so
+/// a peer draining its receive window one byte per timeout could hold a
+/// connection thread on one chunk indefinitely; here the whole buffer must
+/// land by `deadline` (measured on the real clock — socket behavior must
+/// not change under a test's fake `obs::clock`).
+fn write_all_deadline(
+    mut stream: &TcpStream,
+    mut buf: &[u8],
+    deadline: Instant,
+) -> std::io::Result<()> {
+    use std::io::ErrorKind;
+    while !buf.is_empty() {
+        let now = Instant::now();
+        if now >= deadline {
+            return Err(std::io::Error::new(ErrorKind::TimedOut, "write deadline exceeded"));
+        }
+        stream.set_write_timeout(Some(deadline - now))?;
+        match stream.write(buf) {
+            Ok(0) => {
+                return Err(std::io::Error::new(ErrorKind::WriteZero, "peer stopped accepting"))
+            }
+            Ok(n) => buf = &buf[n..],
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut => {
+                return Err(std::io::Error::new(ErrorKind::TimedOut, "write deadline exceeded"))
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(())
 }
 
 /// Write a complete non-streamed response with `Content-Length` framing.
@@ -839,6 +939,88 @@ pub fn fetch(addr: SocketAddr, method: &str, path: &str, body: Option<&str>) -> 
     Ok(HttpResponse { status: stream.status, headers: stream.headers, body })
 }
 
+/// Client retry policy for [`fetch_with_retry`]: exponential backoff with
+/// deterministic seeded jitter, honoring the server's `Retry-After` hint.
+#[derive(Clone, Copy, Debug)]
+pub struct RetryPolicy {
+    /// Retries after the first attempt (0 = plain [`fetch`]).
+    pub max_retries: u32,
+    /// First backoff; doubles per retry.
+    pub base: Duration,
+    /// Upper bound on any single backoff (including `Retry-After` hints).
+    pub cap: Duration,
+    /// Jitter seed — fixed per client so schedules are reproducible while
+    /// distinct clients still decorrelate.
+    pub seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            max_retries: 3,
+            base: Duration::from_millis(25),
+            cap: Duration::from_secs(2),
+            seed: 0x9e37_79b9_7f4a_7c15,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// Backoff before retry `attempt` (0-based). A server `Retry-After`
+    /// hint overrides the exponential schedule (still capped); otherwise
+    /// `base * 2^attempt`, capped, then jittered into [50%, 100%] by a
+    /// splitmix hash of (seed, attempt) — a thundering herd of rejected
+    /// clients must not re-arrive in lockstep, but tests need the schedule
+    /// to be a pure function of the policy.
+    pub fn delay(&self, attempt: u32, retry_after: Option<Duration>) -> Duration {
+        if let Some(d) = retry_after {
+            return d.min(self.cap);
+        }
+        let exp = self.base.saturating_mul(1u32 << attempt.min(16));
+        let capped = exp.min(self.cap);
+        let mut x = self.seed ^ (u64::from(attempt) + 1).wrapping_mul(0x9e37_79b9_7f4a_7c15);
+        x ^= x >> 30;
+        x = x.wrapping_mul(0xbf58_476d_1ce4_e5b9);
+        x ^= x >> 27;
+        x = x.wrapping_mul(0x94d0_49bb_1331_11eb);
+        x ^= x >> 31;
+        let frac = 0.5 + (x >> 11) as f64 / (1u64 << 53) as f64 / 2.0;
+        capped.mul_f64(frac)
+    }
+}
+
+/// [`fetch`] with retries: transport errors and 429/503 answers back off
+/// and try again (up to `policy.max_retries`); every other status returns
+/// immediately. 429/503 backoffs honor the `Retry-After` header the
+/// server's backpressure contract promises. The overload cells in
+/// `perf_http` drive their clients through this.
+pub fn fetch_with_retry(
+    addr: SocketAddr,
+    method: &str,
+    path: &str,
+    body: Option<&str>,
+    policy: &RetryPolicy,
+) -> std::io::Result<HttpResponse> {
+    let mut attempt = 0u32;
+    loop {
+        let hint = match fetch(addr, method, path, body) {
+            Ok(r) if (r.status == 429 || r.status == 503) && attempt < policy.max_retries => r
+                .header("Retry-After")
+                .and_then(|v| v.trim().parse::<u64>().ok())
+                .map(Duration::from_secs),
+            Ok(r) => return Ok(r),
+            Err(e) => {
+                if attempt >= policy.max_retries {
+                    return Err(e);
+                }
+                None
+            }
+        };
+        std::thread::sleep(policy.delay(attempt, hint));
+        attempt += 1;
+    }
+}
+
 /// An in-flight response whose chunks are read incrementally — the loadgen
 /// timestamps each token chunk for client-side TTFT/ITL, and the
 /// disconnect tests drop it mid-stream.
@@ -911,6 +1093,20 @@ impl ChunkStream {
     }
 
     fn fill(&mut self) -> std::io::Result<usize> {
+        // client-side injection sites: the chaos harness turns this bundled
+        // client into a hostile peer — one that stops reading (the server's
+        // write deadline is what must hold the line) or dies mid-stream
+        // (the engine must retire the session as Disconnected)
+        if faults::fire(faults::Site::HttpClientStall) {
+            std::thread::sleep(faults::stall());
+        }
+        if faults::fire(faults::Site::HttpClientDisconnect) {
+            let _ = self.stream.shutdown(std::net::Shutdown::Both);
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::ConnectionAborted,
+                "fault-injected client disconnect",
+            ));
+        }
         let mut chunk = [0u8; 1024];
         let n = self.stream.read(&mut chunk)?;
         self.buf.extend_from_slice(&chunk[..n]);
@@ -1036,6 +1232,63 @@ mod tests {
         assert_eq!(find_head_end(b"POST / HTTP/1.1\r\n\r\nrest"), Some(15));
         assert_eq!(find_head_end(b"POST / HTTP/1.1\r\n"), None);
         assert_eq!(find_head_end(b""), None);
+    }
+
+    #[test]
+    fn retry_policy_backs_off_deterministically() {
+        let p = RetryPolicy { seed: 7, ..RetryPolicy::default() };
+        // pure function of (policy, attempt): same inputs, same delay
+        assert_eq!(p.delay(0, None), p.delay(0, None));
+        // exponential growth up to the cap, jitter bounded to [50%, 100%]
+        for attempt in 0..6 {
+            let exp = p.base.saturating_mul(1 << attempt).min(p.cap);
+            let d = p.delay(attempt, None);
+            assert!(d <= exp, "jitter never exceeds the schedule: {d:?} > {exp:?}");
+            assert!(d >= exp / 2, "jitter floor is half the schedule: {d:?} < {exp:?}/2");
+        }
+        // a huge attempt count saturates at the cap instead of overflowing
+        assert!(p.delay(40, None) <= p.cap);
+        // the server's Retry-After hint overrides the schedule but not the cap
+        assert_eq!(p.delay(0, Some(Duration::from_secs(1))), Duration::from_secs(1));
+        assert_eq!(p.delay(0, Some(Duration::from_secs(3600))), p.cap);
+        // distinct seeds decorrelate (the whole point of the jitter)
+        let q = RetryPolicy { seed: 8, ..p };
+        assert_ne!(p.delay(2, None), q.delay(2, None));
+    }
+
+    #[test]
+    fn write_deadline_spans_partial_writes() {
+        // regression: write_all under SO_SNDTIMEO re-arms the timeout on
+        // every syscall, so a peer draining one byte per interval could pin
+        // a connection thread on a single chunk forever. The deadline must
+        // bound the WHOLE buffer.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let reader = std::thread::spawn(move || {
+            let (mut peer, _) = listener.accept().unwrap();
+            let mut byte = [0u8; 1];
+            loop {
+                std::thread::sleep(Duration::from_millis(20));
+                match peer.read(&mut byte) {
+                    Ok(0) | Err(_) => return,
+                    Ok(_) => {}
+                }
+            }
+        });
+        let stream = TcpStream::connect(addr).unwrap();
+        // far beyond any socket buffer, so the kernel must block us
+        let payload = vec![b'x'; 32 << 20];
+        let t0 = Instant::now();
+        let err =
+            write_all_deadline(&stream, &payload, t0 + Duration::from_millis(200)).unwrap_err();
+        let took = t0.elapsed();
+        assert_eq!(err.kind(), std::io::ErrorKind::TimedOut);
+        assert!(
+            took < Duration::from_secs(2),
+            "deadline must bound the whole write, took {took:?}"
+        );
+        drop(stream); // reader sees EOF and exits
+        reader.join().unwrap();
     }
 
     #[test]

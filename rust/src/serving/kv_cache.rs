@@ -427,6 +427,9 @@ impl KvCache {
     /// pool runs dry; the engine resolves that by preempting a victim.
     pub fn try_reserve(&mut self, slot: SlotId, positions: usize) -> bool {
         assert!(self.in_use[slot], "reserving for slot {slot} that is not in use");
+        if crate::faults::fire(crate::faults::Site::KvReserveFail) {
+            return false;
+        }
         let target = self.cfg.pages_for(positions.min(self.cfg.capacity));
         while self.tables[slot].len() < target {
             match self.free_pages.pop() {
@@ -435,6 +438,23 @@ impl KvCache {
             }
         }
         true
+    }
+
+    /// Take up to `n` pages out of the free list without attaching them to
+    /// any slot — the `kv_page_spike` fault's exhaustion pressure. The
+    /// seized pages count as in-use (admission and the page-pressure guard
+    /// both see a smaller pool) until [`Self::return_pages`] hands them
+    /// back; they are never written, so the zeroed-free-page invariant
+    /// survives the round trip.
+    pub fn seize_free_pages(&mut self, n: usize) -> Vec<PageId> {
+        let keep = self.free_pages.len().saturating_sub(n);
+        self.free_pages.split_off(keep)
+    }
+
+    /// Return pages taken by [`Self::seize_free_pages`] to the free list.
+    pub fn return_pages(&mut self, pages: Vec<PageId>) {
+        debug_assert!(pages.iter().all(|&p| self.page_is_zeroed(p)), "seized pages were written");
+        self.free_pages.extend(pages);
     }
 
     /// Borrow one slot's lanes as a [`KvStore`] for the incremental
@@ -459,7 +479,8 @@ impl KvCache {
             assert!(self.in_use[id], "viewing slot {id} that is not in use");
             assert!(
                 self.try_reserve(id, self.lens[id] + 1),
-                "page pool exhausted reserving for slot {id} (engine accounting bug)"
+                "page pool exhausted reserving for slot {id} \
+                 (engine accounting bug, or an injected kv_reserve_fail fault)"
             );
         }
         let cfg = self.cfg;
@@ -694,6 +715,31 @@ mod tests {
         }
         assert_eq!(out.len(), rows * view.d, "short block table");
         out
+    }
+
+    #[test]
+    fn seized_pages_leave_and_rejoin_the_free_list_intact() {
+        let mut c = small();
+        assert_eq!(c.pages_free(), 4);
+        let seized = c.seize_free_pages(3);
+        assert_eq!(seized.len(), 3);
+        assert_eq!(c.pages_free(), 1);
+        assert_eq!(c.pages_in_use(), 3, "seized pages read as pool pressure");
+        // seizing more than the pool holds clamps instead of panicking
+        let rest = c.seize_free_pages(10);
+        assert_eq!(rest.len(), 1);
+        assert_eq!(c.pages_free(), 0);
+        // a slot under the spike can still allocate (pages arrive on demand)
+        // but its first reserve fails until pages return
+        let slot = c.allocate().unwrap();
+        assert!(!c.try_reserve(slot, 1), "spike exhausts reservations");
+        c.return_pages(rest);
+        c.return_pages(seized);
+        assert_eq!(c.pages_free(), 4);
+        assert!(c.free_pages_are_zeroed(), "untouched pages come back zeroed");
+        assert!(c.try_reserve(slot, 1), "pool recovers after the spike");
+        c.free(slot);
+        assert_eq!(c.pages_in_use(), 0);
     }
 
     #[test]

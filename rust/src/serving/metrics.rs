@@ -157,6 +157,13 @@ pub struct MetricsCollector {
     /// `Finished(Aborted)` event (never `Rejected` — that is reserved for
     /// requests that never entered the engine).
     pub aborted: usize,
+    /// Sessions retired as `Finished(Failed)` by engine supervision
+    /// (forward panic, watchdog kill, engine-thread restart); a subset of
+    /// `completed` — the stream still ends in exactly one terminal event.
+    pub failed: usize,
+    /// Sessions killed by the micro-step stall watchdog
+    /// (`SchedulerConfig::step_deadline`); a subset of `failed`.
+    pub watchdog_kills: usize,
     started: Option<std::time::Instant>,
     wall: Duration,
 }
@@ -196,6 +203,8 @@ impl MetricsCollector {
             rejected: 0,
             evicted: 0,
             aborted: 0,
+            failed: 0,
+            watchdog_kills: 0,
             started: None,
             wall: Duration::ZERO,
         }
@@ -261,8 +270,10 @@ impl MetricsCollector {
 
     pub fn record_completion(&mut self, reason: FinishReason) {
         self.completed += 1;
-        if reason == FinishReason::Disconnected {
-            self.disconnected += 1;
+        match reason {
+            FinishReason::Disconnected => self.disconnected += 1,
+            FinishReason::Failed => self.failed += 1,
+            _ => {}
         }
     }
 
@@ -296,6 +307,8 @@ impl MetricsCollector {
             rejected: self.rejected,
             evicted: self.evicted,
             aborted: self.aborted,
+            failed: self.failed,
+            watchdog_kills: self.watchdog_kills,
             steps: self.steps,
             decode_tokens: self.decode_tokens,
             prefill_tokens: self.prefill_tokens,
@@ -368,6 +381,30 @@ impl MetricsCollector {
             r.aborted as u64,
         );
         reg.counter(
+            "llmdt_sessions_failed_total",
+            "Sessions retired as Finished(Failed) by engine supervision.",
+            r.failed as u64,
+        );
+        reg.counter(
+            "llmdt_watchdog_kills_total",
+            "Sessions killed by the micro-step stall watchdog.",
+            r.watchdog_kills as u64,
+        );
+        // fault-injection accounting: emitted unconditionally (zero when
+        // disarmed) so CI can grep for the series' presence deterministically
+        reg.counter(
+            "llmdt_faults_injected_total",
+            "Faults fired across every injection site since the last arm.",
+            crate::faults::injected_total(),
+        );
+        for (site, fired) in crate::faults::counters() {
+            reg.counter(
+                &format!("llmdt_faults_{site}_total"),
+                "Faults fired at this injection site since the last arm.",
+                fired,
+            );
+        }
+        reg.counter(
             "llmdt_page_preemptions_total",
             "Evictions forced by KV page-pool pressure.",
             r.page_preemptions as u64,
@@ -423,6 +460,11 @@ pub struct MetricsReport {
     pub evicted: usize,
     /// In-flight sessions ended by `Engine::abort` (`Finished(Aborted)`).
     pub aborted: usize,
+    /// Sessions retired as `Finished(Failed)` by supervision (a subset of
+    /// `completed`).
+    pub failed: usize,
+    /// Stall-watchdog kills (a subset of `failed`).
+    pub watchdog_kills: usize,
     pub steps: usize,
     pub decode_tokens: usize,
     pub prefill_tokens: usize,
@@ -516,6 +558,9 @@ impl fmt::Display for MetricsReport {
         if self.aborted > 0 {
             write!(f, " | {} aborted", self.aborted)?;
         }
+        if self.failed > 0 {
+            write!(f, " | {} failed ({} watchdog kills)", self.failed, self.watchdog_kills)?;
+        }
         if self.samples_dropped > 0 {
             write!(f, " | {} raw samples dropped (histogram percentiles)", self.samples_dropped)?;
         }
@@ -595,13 +640,15 @@ mod tests {
         m.record_resume_gap(ms(40));
         m.record_completion(FinishReason::MaxTokens);
         m.record_completion(FinishReason::Disconnected);
+        m.record_completion(FinishReason::Failed);
         m.finish();
         let r = m.report();
         assert_eq!(r.steps, 2);
         assert_eq!(r.decode_tokens, 6);
         assert_eq!(r.prefill_tokens, 8);
-        assert_eq!(r.completed, 2);
+        assert_eq!(r.completed, 3);
         assert_eq!(r.disconnected, 1, "disconnect sub-count rides completion");
+        assert_eq!(r.failed, 1, "failure sub-count rides completion");
         assert!((r.mean_occupancy - 3.0).abs() < 1e-12);
         assert_eq!(r.fused_steps, 2);
         assert_eq!(r.fused_gemms, 26);
@@ -683,6 +730,14 @@ mod tests {
             "llmdt_pool_utilization",
             "llmdt_decode_tokens_total",
             "llmdt_samples_dropped_total",
+            "llmdt_sessions_failed_total",
+            "llmdt_watchdog_kills_total",
+            // fault series are present (zero) even with injection disarmed
+            "llmdt_faults_injected_total",
+            "llmdt_faults_pool_worker_panic_total",
+            "llmdt_faults_forward_panic_total",
+            "llmdt_faults_kv_reserve_fail_total",
+            "llmdt_faults_engine_step_panic_total",
         ] {
             assert!(reg.get(name).is_some(), "missing series {name}");
         }

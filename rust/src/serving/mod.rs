@@ -48,15 +48,21 @@ pub use metrics::{percentile, percentile_sorted, MetricsCollector, MetricsReport
 pub use scheduler::{Scheduler, SchedulerConfig};
 pub use session::{DecodeSession, FinishReason, SessionState};
 
+use std::panic::AssertUnwindSafe;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::time::Instant;
 
 use anyhow::Result;
 
+use crate::faults;
 use crate::model_io::{Checkpoint, ModelConfig};
 use crate::nn;
 use crate::obs::{clock, trace};
+use crate::tensor::Tensor;
+
+/// One fused-forward batch row: (active index, slot, input token, is_prefill).
+type Row = (usize, SlotId, i32, bool);
 
 /// Process-unique request ids. Every front end (direct [`DecodeRequest::new`]
 /// callers, the loadgen, the HTTP server, the coordinator shim) allocates
@@ -147,6 +153,11 @@ pub struct Engine {
     active: Vec<DecodeSession>,
     metrics: MetricsCollector,
     prefill_chunk: usize,
+    /// Pages seized from the free list by an injected `kv_page_spike`
+    /// (exhaustion pressure), with the remaining step count; always drained
+    /// back into the pool before the engine goes idle so the zero-leaked-
+    /// pages drain invariant holds even under injection.
+    spike: Option<(Vec<PageId>, usize)>,
 }
 
 impl Engine {
@@ -197,6 +208,7 @@ impl Engine {
             active: Vec::new(),
             metrics: MetricsCollector::default(),
             prefill_chunk: cfg.scheduler.prefill_chunk.max(1),
+            spike: None,
         })
     }
 
@@ -311,6 +323,9 @@ impl Engine {
     /// victim (see [`Engine::preemption_victim`]) until the step fits.
     pub fn step(&mut self) -> Result<()> {
         let step_t0 = trace::start();
+        if faults::enabled() {
+            self.maybe_spike_pages();
+        }
         let window = self.window();
         {
             let page_size = self.cache.page_size();
@@ -329,7 +344,20 @@ impl Engine {
                     }
                 });
             for mut s in admitted {
-                let slot = self.cache.allocate().expect("admit_within checked free slots");
+                // admit_within checked slots_free(), so allocate() cannot
+                // come up empty short of an accounting bug — but a bug there
+                // must not abort the serving loop: hand the arrival back to
+                // the queue head and let the next step retry
+                let Some(slot) = self.cache.allocate() else {
+                    if let Err(s) = self.sched.enqueue_front(s) {
+                        self.metrics.rejected += 1;
+                        let _ = s.events.send(TokenEvent::Rejected {
+                            request: s.id,
+                            reason: "engine slot accounting degraded".into(),
+                        });
+                    }
+                    continue;
+                };
                 let now = clock::now();
                 if trace::enabled() {
                     trace::complete(
@@ -352,12 +380,19 @@ impl Engine {
 
         let stepped = self.active.len();
         let gemms_per_call = nn::step_batch_gemms(&self.model_cfg);
+        let deadline = self.sched.config().step_deadline;
         let mut decoded = 0usize;
         let mut prefilled = 0usize;
         for micro in 0..self.prefill_chunk {
+            let micro_started = clock::now();
+            if faults::fire(faults::Site::ClockSkew) && clock::is_fake() {
+                // a deterministic "wedged step": jump the fake clock so the
+                // stall watchdog sees a blown deadline without real sleeping
+                clock::advance(faults::skew());
+            }
             self.resolve_page_pressure(micro);
             // rows: (active index, slot, input token, is_prefill)
-            let mut rows: Vec<(usize, SlotId, i32, bool)> = Vec::new();
+            let mut rows: Vec<Row> = Vec::new();
             for (i, s) in self.active.iter().enumerate() {
                 match s.state {
                     SessionState::Prefill => rows.push((
@@ -379,49 +414,49 @@ impl Engine {
                 break;
             }
             let micro_t0 = trace::start();
+            // the forward runs under catch_unwind supervision: a panicking
+            // row (injected fault, poisoned session, pool-worker death)
+            // retires as Finished(Failed) while the surviving rows' logits
+            // come back bit-identical to an undisturbed batch
+            let (rows, logits) = self.supervised_forward(rows)?;
             let n_prefill_rows =
                 micro_t0.map(|_| rows.iter().filter(|&&(_, _, _, p)| p).count());
-            let slot_ids: Vec<SlotId> = rows.iter().map(|&(_, slot, _, _)| slot).collect();
-            let tokens: Vec<i32> = rows.iter().map(|&(_, _, t, _)| t).collect();
-            let logits = {
-                let mut views = self.cache.slots_mut(&slot_ids);
-                let mut stores: Vec<&mut dyn nn::KvStore> =
-                    views.iter_mut().map(|v| v as &mut dyn nn::KvStore).collect();
-                nn::forward_lm_step_batch(&self.model_cfg, &self.ckpt, &tokens, &mut stores)?
-            };
-            self.metrics.record_fused(rows.len(), gemms_per_call);
-            // KV traffic: each row's attention streamed its whole committed
-            // history (now len(slot) positions) across every layer
-            let pos_bytes = (self.cache.position_bytes() * self.model_cfg.n_layers) as u64;
-            for &(_, slot, _, _) in &rows {
-                self.metrics.record_kv_read(self.cache.len(slot) as u64 * pos_bytes);
-            }
-            for (r, &(i, slot, _, is_prefill)) in rows.iter().enumerate() {
-                let s = &mut self.active[i];
-                if is_prefill {
-                    s.prefilled += 1;
-                    prefilled += 1;
-                    if s.prefilled < s.context_len() {
-                        continue;
-                    }
-                    let now = clock::now();
-                    if trace::enabled() {
-                        trace::complete(
-                            trace::session_track(s.id),
-                            "session",
-                            "prefill",
-                            clock::micros_since_epoch(s.phase_started_at),
-                            clock::micros_since_epoch(now),
-                            &[("tokens", s.context_len() as f64)],
-                        );
-                    }
-                    s.phase_started_at = now;
-                    s.begin_decode();
-                } else {
-                    decoded += 1;
+            if let Some(logits) = &logits {
+                self.metrics.record_fused(rows.len(), gemms_per_call);
+                // KV traffic: each row's attention streamed its whole
+                // committed history (now len(slot) positions) per layer
+                let pos_bytes =
+                    (self.cache.position_bytes() * self.model_cfg.n_layers) as u64;
+                for &(_, slot, _, _) in &rows {
+                    self.metrics.record_kv_read(self.cache.len(slot) as u64 * pos_bytes);
                 }
-                let remaining = window - self.cache.len(slot);
-                emit_token(s, logits.row(r), remaining, &mut self.metrics);
+                for (r, &(i, slot, _, is_prefill)) in rows.iter().enumerate() {
+                    let s = &mut self.active[i];
+                    if is_prefill {
+                        s.prefilled += 1;
+                        prefilled += 1;
+                        if s.prefilled < s.context_len() {
+                            continue;
+                        }
+                        let now = clock::now();
+                        if trace::enabled() {
+                            trace::complete(
+                                trace::session_track(s.id),
+                                "session",
+                                "prefill",
+                                clock::micros_since_epoch(s.phase_started_at),
+                                clock::micros_since_epoch(now),
+                                &[("tokens", s.context_len() as f64)],
+                            );
+                        }
+                        s.phase_started_at = now;
+                        s.begin_decode();
+                    } else {
+                        decoded += 1;
+                    }
+                    let remaining = window - self.cache.len(slot);
+                    emit_token(s, logits.row(r), remaining, &mut self.metrics);
+                }
             }
             if let Some(t0) = micro_t0 {
                 trace::complete_here(
@@ -436,6 +471,14 @@ impl Engine {
                         ("pages_free", self.cache.pages_free() as f64),
                     ],
                 );
+            }
+            // stall watchdog: a micro-step that blew the deadline kills the
+            // batch row holding the most KV pages (the likeliest wedge) so
+            // the rest of the batch keeps serving instead of timing out
+            if !deadline.is_zero()
+                && clock::now().saturating_duration_since(micro_started) > deadline
+            {
+                self.watchdog_kill(&rows);
             }
         }
         if stepped > 0 {
@@ -502,7 +545,261 @@ impl Engine {
                 ],
             );
         }
+        if self.spike.is_some() {
+            self.tick_spike();
+        }
+        // end-of-step placement on purpose: sessions admitted this step are
+        // in flight when the panic unwinds, exercising the supervisor's
+        // recover-and-restart path rather than an empty engine
+        if faults::fire(faults::Site::EngineStepPanic) {
+            panic!("{} engine step panic", faults::PANIC_MARK);
+        }
         Ok(())
+    }
+
+    /// Run the fused batch forward under `catch_unwind` supervision.
+    ///
+    /// Returns the surviving rows and their logits (`None` when every row
+    /// failed). A panicking row — injected `forward_panic` fault, or a real
+    /// panic out of the model/pool stack — retires its session as
+    /// [`FinishReason::Failed`] (slot and pages freed immediately), and the
+    /// remaining rows are re-attempted as one fused batch: batch rows are
+    /// computed independently, so the survivors' logits are bit-identical
+    /// to an undisturbed run.
+    ///
+    /// KV-commit ordering is the hazard here: `forward_lm_step_batch`
+    /// advances *all* rows' KV stores after the layer loop but before the
+    /// final head projection. A panic before that commit leaves every row
+    /// un-appended (safe to re-attempt); a panic after it leaves KV
+    /// committed with the logits lost, where a re-attempt would
+    /// double-append — detected by comparing committed lengths, and the
+    /// whole batch retires as `Failed` instead.
+    fn supervised_forward(&mut self, mut rows: Vec<Row>) -> Result<(Vec<Row>, Option<Tensor>)> {
+        // injected per-row panic flags are drawn only while armed, so the
+        // disabled path allocates nothing and draws no randomness
+        let mut injected: Vec<bool> = if faults::enabled() {
+            rows.iter().map(|_| faults::fire(faults::Site::ForwardPanic)).collect()
+        } else {
+            Vec::new()
+        };
+        loop {
+            if rows.is_empty() {
+                return Ok((rows, None));
+            }
+            let slot_ids: Vec<SlotId> = rows.iter().map(|&(_, slot, _, _)| slot).collect();
+            let tokens: Vec<i32> = rows.iter().map(|&(_, _, t, _)| t).collect();
+            let pre_len = self.cache.len(slot_ids[0]);
+            let inject_any = injected.iter().any(|&f| f);
+            let attempt = {
+                let cache = &mut self.cache;
+                let model_cfg = &self.model_cfg;
+                let ckpt = &self.ckpt;
+                std::panic::catch_unwind(AssertUnwindSafe(|| {
+                    if inject_any {
+                        panic!("{} forward panic", faults::PANIC_MARK);
+                    }
+                    let mut views = cache.slots_mut(&slot_ids);
+                    let mut stores: Vec<&mut dyn nn::KvStore> =
+                        views.iter_mut().map(|v| v as &mut dyn nn::KvStore).collect();
+                    nn::forward_lm_step_batch(model_cfg, ckpt, &tokens, &mut stores)
+                }))
+            };
+            match attempt {
+                Ok(res) => return Ok((rows, Some(res?))),
+                Err(_) if self.cache.len(slot_ids[0]) != pre_len => {
+                    // panicked after the KV commit (head projection): the
+                    // logits are lost but every row's cache already
+                    // advanced, so a re-attempt would double-append. Retire
+                    // the whole batch.
+                    for &(i, _, _, _) in &rows {
+                        self.fail_session(i, "forward panicked after kv commit");
+                    }
+                    rows.clear();
+                    return Ok((rows, None));
+                }
+                Err(_) if inject_any => {
+                    // injected row panics: fail exactly the flagged rows and
+                    // re-attempt the rest fused (KV untouched pre-commit)
+                    for (k, &(i, _, _, _)) in rows.iter().enumerate() {
+                        if injected[k] {
+                            self.fail_session(i, "injected forward panic");
+                        }
+                    }
+                    let keep: Vec<Row> = rows
+                        .iter()
+                        .zip(&injected)
+                        .filter(|&(_, &inj)| !inj)
+                        .map(|(&row, _)| row)
+                        .collect();
+                    rows = keep;
+                    injected = vec![false; rows.len()];
+                }
+                Err(_) => {
+                    // a real (non-injected) panic somewhere in the fused
+                    // forward: probe row-by-row to isolate the poisoned
+                    // session(s) and salvage the rest
+                    return Ok(self.isolate_rows(rows));
+                }
+            }
+        }
+    }
+
+    /// Row-by-row fallback after an unattributed fused-forward panic: each
+    /// row re-runs alone under `catch_unwind`; panicking rows retire as
+    /// [`FinishReason::Failed`], surviving rows' single-row logits are
+    /// reassembled into a `[kept, vocab]` batch (bit-identical to the fused
+    /// result by the batch-row independence invariant).
+    fn isolate_rows(&mut self, rows: Vec<Row>) -> (Vec<Row>, Option<Tensor>) {
+        let mut kept: Vec<Row> = Vec::new();
+        let mut data: Vec<f32> = Vec::new();
+        for row in rows {
+            let (i, slot, token, _) = row;
+            let pre_len = self.cache.len(slot);
+            let attempt = {
+                let cache = &mut self.cache;
+                let model_cfg = &self.model_cfg;
+                let ckpt = &self.ckpt;
+                std::panic::catch_unwind(AssertUnwindSafe(|| {
+                    let mut views = cache.slots_mut(&[slot]);
+                    let mut stores: Vec<&mut dyn nn::KvStore> =
+                        views.iter_mut().map(|v| v as &mut dyn nn::KvStore).collect();
+                    nn::forward_lm_step_batch(model_cfg, ckpt, &[token], &mut stores)
+                }))
+            };
+            match attempt {
+                Ok(Ok(t)) => {
+                    data.extend_from_slice(t.row(0));
+                    kept.push(row);
+                }
+                Ok(Err(_)) => {
+                    // a structured forward error on this row alone: retire
+                    // it like a panic — the batch path would have aborted
+                    // the whole engine on this, so per-row retirement is
+                    // strictly gentler
+                    self.fail_session(i, "forward error during isolation");
+                }
+                Err(_) => {
+                    let why = if self.cache.len(slot) != pre_len {
+                        "row panicked after kv commit"
+                    } else {
+                        "row panicked in isolation"
+                    };
+                    self.fail_session(i, why);
+                }
+            }
+        }
+        if kept.is_empty() {
+            return (kept, None);
+        }
+        let vocab = data.len() / kept.len();
+        let logits = Tensor::new(&[kept.len(), vocab], data);
+        (kept, Some(logits))
+    }
+
+    /// Retire `active[i]` as [`FinishReason::Failed`]: free its slot and
+    /// pages now (the end-of-step retire loop tolerates the taken slot) and
+    /// mark it Done — the retire loop then sends the terminal event and
+    /// records the completion.
+    fn fail_session(&mut self, i: usize, why: &str) {
+        if let Some(slot) = self.active[i].slot.take() {
+            self.cache.free(slot);
+        }
+        let s = &mut self.active[i];
+        if trace::enabled() {
+            trace::instant(trace::session_track(s.id), "session", "failed", &[(
+                "generated",
+                s.generated.len() as f64,
+            )]);
+        }
+        let _ = why; // carried for debugging/trace symmetry; events stay lean
+        s.finish(FinishReason::Failed);
+    }
+
+    /// The stall watchdog's kill policy: among this micro-step's rows,
+    /// retire the still-active session holding the most KV pages — the
+    /// likeliest wedge, and the same ordering the page-pressure preemption
+    /// victim uses — as [`FinishReason::Failed`].
+    fn watchdog_kill(&mut self, rows: &[Row]) {
+        let victim = rows
+            .iter()
+            .map(|&(i, _, _, _)| i)
+            .filter(|&i| self.active[i].is_active())
+            .max_by_key(|&i| {
+                let slot = self.active[i].slot.expect("active session holds a slot");
+                (self.cache.pages_held(slot), self.cache.len(slot))
+            });
+        if let Some(i) = victim {
+            self.metrics.watchdog_kills += 1;
+            self.fail_session(i, "stall watchdog");
+        }
+    }
+
+    /// `kv_page_spike` injection: seize free pages out of the pool for a
+    /// few steps so admission and growth hit genuine exhaustion pressure.
+    fn maybe_spike_pages(&mut self) {
+        if self.spike.is_none() && faults::fire(faults::Site::KvPageSpike) {
+            let (pages, steps) = faults::spike_shape();
+            let seized = self.cache.seize_free_pages(pages);
+            if !seized.is_empty() {
+                self.spike = Some((seized, steps.max(1)));
+            }
+        }
+    }
+
+    /// Count down an active page spike; release it when it expires or the
+    /// engine is about to go idle (seized pages count as in-use, and the
+    /// drain invariant is zero pages in use after the queue empties).
+    fn tick_spike(&mut self) {
+        let expired = match &mut self.spike {
+            Some((_, steps)) => {
+                *steps = steps.saturating_sub(1);
+                *steps == 0
+            }
+            None => false,
+        };
+        if expired || !self.has_work() {
+            self.release_spike();
+        }
+    }
+
+    /// Return any spike-seized pages to the free pool.
+    fn release_spike(&mut self) {
+        if let Some((pages, _)) = self.spike.take() {
+            self.cache.return_pages(pages);
+        }
+    }
+
+    /// Put the engine back into a serveable state after a panic escaped
+    /// [`Engine::step`] (caught by a supervisor's `catch_unwind`, e.g. the
+    /// HTTP front end's engine thread). Every in-flight session retires with
+    /// a terminal event — `Failed` unless it had already finished — and its
+    /// slot and pages return to the pool; queued sessions stay queued, so
+    /// the supervisor's next `run_with` serves admitted-but-unstarted
+    /// requests untouched. The cache itself is panic-consistent: slot
+    /// bookkeeping only mutates outside the unwound forward, and
+    /// [`Engine::supervised_forward`] already contains forward-path unwinds.
+    pub fn recover_after_panic(&mut self) {
+        self.release_spike();
+        for mut s in std::mem::take(&mut self.active) {
+            if let Some(slot) = s.slot.take() {
+                self.cache.free(slot);
+            }
+            let reason = match s.state {
+                SessionState::Done(reason) => reason,
+                _ => FinishReason::Failed,
+            };
+            self.metrics.record_completion(reason);
+            let _ = s.events.send(TokenEvent::Finished {
+                request: s.id,
+                reason,
+                generated: s.generated.len(),
+            });
+        }
+        self.metrics.record_pages(
+            self.cache.pages_in_use(),
+            self.cache.pages_free(),
+            self.cache.page_fragmentation(),
+        );
     }
 
     /// Make sure every row about to step in micro-step `micro` has a page
@@ -622,16 +919,21 @@ impl Engine {
     /// the run's metrics. Blocks when idle; while sequences are in flight it
     /// drains arrivals between steps, so late requests join mid-batch.
     pub fn run(&mut self, rx: mpsc::Receiver<DecodeRequest>) -> Result<MetricsReport> {
-        self.run_with(rx, |_| {})
+        self.run_with(&rx, |_| {})
     }
 
     /// [`Engine::run`] with an observer called once per loop iteration (and
     /// once before blocking on an idle channel, so idle state publishes
     /// too). The HTTP front end uses it to snapshot the metrics registry
     /// for `/metrics` without sharing the engine across threads.
+    ///
+    /// The receiver is borrowed, not consumed: a supervisor that catches a
+    /// panic out of this loop can recover the engine
+    /// ([`Engine::recover_after_panic`]) and re-enter with the same channel,
+    /// so queued requests and connected clients survive the restart.
     pub fn run_with(
         &mut self,
-        rx: mpsc::Receiver<DecodeRequest>,
+        rx: &mpsc::Receiver<DecodeRequest>,
         mut observe: impl FnMut(&Engine),
     ) -> Result<MetricsReport> {
         self.metrics.start();
@@ -702,6 +1004,7 @@ impl Engine {
     /// carrying [`FinishReason::Aborted`] — a client must never see
     /// `Rejected` after its first token.
     pub fn abort(&mut self) {
+        self.release_spike();
         for s in self.sched.drain() {
             self.metrics.rejected += 1;
             let _ = s
@@ -1323,7 +1626,7 @@ mod tests {
         std::thread::scope(|scope| {
             let loops = &loops;
             let server =
-                scope.spawn(move || eng.run_with(rx, |_| { loops.fetch_add(1, Ordering::SeqCst); }));
+                scope.spawn(move || eng.run_with(&rx, |_| { loops.fetch_add(1, Ordering::SeqCst); }));
             // wait for the engine to reach its first idle block
             while loops.load(Ordering::SeqCst) == 0 {
                 std::thread::yield_now();

@@ -35,6 +35,12 @@ pub struct SchedulerConfig {
     /// on by the HTTP front end, whose 429 + `Retry-After` backpressure
     /// contract promises an answer instead of an unbounded queue.
     pub reject_saturated: bool,
+    /// Stall watchdog: if one fused micro-step takes longer than this, the
+    /// engine kills the batch row holding the most KV pages (it retires as
+    /// `FinishReason::Failed`) so the rest of the batch keeps serving.
+    /// `Duration::ZERO` (the default) disables the watchdog. Measured on
+    /// `obs::clock`, so deterministic tests drive it with the fake clock.
+    pub step_deadline: Duration,
 }
 
 impl Default for SchedulerConfig {
@@ -45,6 +51,7 @@ impl Default for SchedulerConfig {
             max_queue: 0,
             prefill_chunk: 32,
             reject_saturated: false,
+            step_deadline: Duration::ZERO,
         }
     }
 }

@@ -33,6 +33,10 @@ pub enum FinishReason {
     /// admission; the stream ends after the tokens already delivered.
     /// (`Rejected` stays reserved for requests that never entered.)
     Aborted,
+    /// The session's forward work panicked (or blew the stall watchdog's
+    /// `step_deadline`) and supervision retired it so the rest of the batch
+    /// keeps serving; the stream ends after the tokens already delivered.
+    Failed,
 }
 
 impl FinishReason {
@@ -45,6 +49,7 @@ impl FinishReason {
             FinishReason::Disconnected => "disconnected",
             FinishReason::Preempted => "preempted",
             FinishReason::Aborted => "aborted",
+            FinishReason::Failed => "failed",
         }
     }
 }

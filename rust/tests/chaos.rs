@@ -1,0 +1,439 @@
+//! Chaos harness: arm seeded fault schedules against the full stack and
+//! prove the blast radius stays contained — a poisoned pool task fails one
+//! dispatch and the workers live on, an injected forward panic fails only
+//! the flagged sessions, a wedged micro-step costs exactly one watchdog
+//! victim, an engine-thread panic costs one 503 and a supervised restart,
+//! and a client disconnect storm leaks nothing. Fault state is
+//! process-global, so every test here serializes through [`CHAOS_LOCK`]
+//! (this binary is the only test binary that ever arms).
+
+use std::panic::AssertUnwindSafe;
+use std::sync::{mpsc, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+use llm_datatypes::coordinator::trainer;
+use llm_datatypes::faults::{self, FaultPlan, Site};
+use llm_datatypes::model_io::{zoo, Checkpoint, ModelConfig};
+use llm_datatypes::obs::clock;
+use llm_datatypes::runtime::pool;
+use llm_datatypes::serving::http::{fetch, serve, ChunkStream, HttpConfig};
+use llm_datatypes::serving::{
+    DecodeRequest, Engine, EngineConfig, FinishReason, SchedulerConfig, TokenEvent,
+};
+use llm_datatypes::tensor::{gemm_naive, gemm_threaded};
+
+static CHAOS_LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> MutexGuard<'static, ()> {
+    // a previous test panicking while armed must not wedge the rest
+    CHAOS_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn model(name: &str) -> (ModelConfig, Checkpoint) {
+    let cfg = zoo(name).unwrap();
+    let ckpt = trainer::init_lm_params(&cfg, 0xb0b5);
+    (cfg, ckpt)
+}
+
+fn gen_body(prompt: &[i32], max_new: usize) -> String {
+    let toks: Vec<String> = prompt.iter().map(|t| t.to_string()).collect();
+    format!("{{\"prompt\":[{}],\"max_new_tokens\":{max_new}}}", toks.join(","))
+}
+
+/// Drive the engine to drain; `step()` degrading to `Err` or wedging
+/// forever are both failures — chaos must never abort the loop.
+fn drive(eng: &mut Engine) {
+    for _ in 0..10_000 {
+        if !eng.has_work() {
+            return;
+        }
+        eng.step().expect("engine step must degrade, never abort");
+    }
+    panic!("engine failed to drain within 10k steps");
+}
+
+/// Drain a receiver: streamed token count + every terminal event seen.
+fn terminal(rx: &mpsc::Receiver<TokenEvent>) -> (usize, Vec<FinishReason>) {
+    let mut tokens = 0;
+    let mut fins = Vec::new();
+    while let Ok(ev) = rx.try_recv() {
+        match ev {
+            TokenEvent::Token { .. } => tokens += 1,
+            TokenEvent::Finished { reason, .. } => fins.push(reason),
+            TokenEvent::Rejected { reason, .. } => panic!("unexpected rejection: {reason}"),
+        }
+    }
+    (tokens, fins)
+}
+
+#[test]
+fn pool_survives_repeated_worker_panics_and_recovers() {
+    let _g = lock();
+    faults::silence_injected_panics();
+    let workers = pool::global().workers();
+    if workers == 0 {
+        // single-core host: every dispatch runs inline on the caller and
+        // the pool_worker_panic site is unreachable — nothing to test
+        return;
+    }
+    let (m, k, n) = (128usize, 64usize, 96usize);
+    let a: Vec<f32> = (0..m * k).map(|i| ((i * 37 + 11) % 97) as f32 * 0.01 - 0.5).collect();
+    let b: Vec<f32> = (0..k * n).map(|i| ((i * 53 + 7) % 89) as f32 * 0.01 - 0.4).collect();
+    let mut oracle = vec![0.0f32; m * n];
+    gemm_naive(m, k, n, &a, &b, &mut oracle);
+
+    let before = pool::stats();
+    // worker 0 poisons every task it pulls, three times over
+    faults::arm(
+        FaultPlan::new(0xc4a05)
+            .rate(Site::PoolWorkerPanic, 1.0)
+            .limit(Site::PoolWorkerPanic, 3)
+            .pool_worker(0),
+    );
+    let mut failed_dispatches = 0usize;
+    for _ in 0..50 {
+        let mut out = vec![0.0f32; m * n];
+        let r = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            gemm_threaded(m, k, n, &a, &b, &mut out, workers + 1);
+        }));
+        if let Err(p) = r {
+            let msg = p
+                .downcast_ref::<&str>()
+                .map(|s| s.to_string())
+                .or_else(|| p.downcast_ref::<String>().cloned())
+                .unwrap_or_default();
+            assert!(
+                msg.contains("worker pool task panicked"),
+                "dispatch surfaces the worker panic, not something else: {msg:?}"
+            );
+            failed_dispatches += 1;
+        }
+        if faults::injected(Site::PoolWorkerPanic) >= 3 {
+            break;
+        }
+    }
+    faults::disarm();
+    assert!(
+        faults::injected(Site::PoolWorkerPanic) >= 1,
+        "worker 0 pulled at least one poisoned task in 50 dispatches"
+    );
+    assert!(failed_dispatches >= 1, "a poisoned task fails its whole dispatch");
+
+    // recovery on the same pool: workers survived the panics, dispatches
+    // still engage them, and the result is bit-identical to the oracle
+    let mut out = vec![0.0f32; m * n];
+    gemm_threaded(m, k, n, &a, &b, &mut out, workers + 1);
+    assert!(
+        out.iter().zip(&oracle).all(|(x, y)| x.to_bits() == y.to_bits()),
+        "post-chaos gemm_threaded diverges from the scalar oracle"
+    );
+    let delta = pool::stats().since(&before);
+    assert_eq!(delta.workers, workers, "no worker thread died: panics are caught per-task");
+    assert!(delta.dispatches >= 1, "the gemms above dispatched to the pool");
+    assert!(
+        delta.pool_tasks >= 1 && delta.utilization() > 0.0,
+        "workers still pull tasks after repeated panics: {delta:?}"
+    );
+}
+
+#[test]
+fn engine_survives_seeded_fault_schedule_without_leaks() {
+    let _g = lock();
+    faults::silence_injected_panics();
+    let (cfg, ckpt) = model("nano");
+    let mut eng = Engine::new(
+        cfg,
+        ckpt,
+        EngineConfig {
+            slots: 4,
+            page_size: 4,
+            kv_pages: 12,
+            scheduler: SchedulerConfig { max_batch: 4, ..SchedulerConfig::default() },
+            ..EngineConfig::default()
+        },
+    );
+    let mut rxs = Vec::new();
+    for i in 0..12 {
+        let (req, rx) = DecodeRequest::new(vec![1 + i % 7, 2, 3, 4], 5);
+        eng.submit(req);
+        rxs.push(rx);
+    }
+    // one schedule, three failure modes: the first two forward rows panic
+    // (fused batch unwinds, survivors re-attempt), one KV reservation is
+    // refused (the whole batch falls back to per-row isolation), and a
+    // page spike seizes a third of the pool for two steps
+    faults::arm(
+        FaultPlan::new(0x5eed)
+            .rate(Site::ForwardPanic, 1.0)
+            .limit(Site::ForwardPanic, 2)
+            .one_shot(Site::KvReserveFail)
+            .one_shot(Site::KvPageSpike)
+            .spike(4, 2),
+    );
+    drive(&mut eng);
+    faults::disarm();
+
+    let mut failed = 0;
+    for (i, rx) in rxs.iter().enumerate() {
+        let (tokens, fins) = terminal(rx);
+        assert_eq!(fins.len(), 1, "request {i}: exactly one terminal event, got {fins:?}");
+        match fins[0] {
+            FinishReason::Failed => {
+                failed += 1;
+                assert_eq!(tokens, 0, "request {i} died mid-prefill, before any token");
+            }
+            FinishReason::MaxTokens => {
+                assert_eq!(tokens, 5, "request {i} streamed its full budget");
+            }
+            other => panic!("request {i}: unexpected terminal {other:?}"),
+        }
+    }
+    assert_eq!(failed, 2, "the forward_panic limit caps the blast radius at two sessions");
+
+    let report = eng.report();
+    assert_eq!(report.failed, 2);
+    assert_eq!(report.completed, 12, "every request retired through exactly one path");
+    assert_eq!(faults::injected(Site::ForwardPanic), 2);
+    assert!(faults::injected(Site::KvReserveFail) >= 1, "the reserve refusal was exercised");
+    assert!(faults::injected(Site::KvPageSpike) >= 1, "the page spike was exercised");
+    assert_eq!(eng.cache().pages_in_use(), 0, "no leaked pages after the chaos drain");
+    assert_eq!(eng.cache().slots_in_use(), 0);
+    assert!(eng.cache().free_pages_are_zeroed(), "failed sessions scrubbed their KV");
+}
+
+#[test]
+fn stall_watchdog_kills_the_deepest_context_and_spares_the_rest() {
+    let _g = lock();
+    faults::silence_injected_panics();
+    // the fake clock makes the "stall" deterministic: a clock_skew fault
+    // jumps time past the deadline with no real sleeping
+    let _clock = clock::fake();
+    let (cfg, ckpt) = model("nano");
+    let mut eng = Engine::new(
+        cfg,
+        ckpt,
+        EngineConfig {
+            slots: 4,
+            page_size: 4,
+            scheduler: SchedulerConfig {
+                max_batch: 4,
+                step_deadline: Duration::from_millis(10),
+                ..SchedulerConfig::default()
+            },
+            ..EngineConfig::default()
+        },
+    );
+    let mut rxs = Vec::new();
+    for len in [4i32, 8, 16] {
+        let (req, rx) = DecodeRequest::new((0..len).map(|t| t % 7 + 1).collect(), 8);
+        eng.submit(req);
+        rxs.push(rx);
+    }
+    // healthy steps first so contexts (and page holdings) diverge:
+    // lengths 7 / 11 / 19 -> 2 / 3 / 5 pages held
+    for _ in 0..3 {
+        eng.step().unwrap();
+    }
+    faults::arm(FaultPlan::new(3).one_shot(Site::ClockSkew).skew(Duration::from_millis(50)));
+    eng.step().unwrap();
+    faults::disarm();
+    drive(&mut eng);
+
+    let (t0, f0) = terminal(&rxs[0]);
+    let (t1, f1) = terminal(&rxs[1]);
+    let (t2, f2) = terminal(&rxs[2]);
+    assert_eq!((t0, f0), (8, vec![FinishReason::MaxTokens]), "small context untouched");
+    assert_eq!((t1, f1), (8, vec![FinishReason::MaxTokens]), "medium context untouched");
+    assert_eq!(f2, vec![FinishReason::Failed], "the deepest context is the watchdog's victim");
+    assert!(t2 < 8, "the victim never finished its budget (streamed {t2})");
+
+    let report = eng.report();
+    assert_eq!(report.watchdog_kills, 1, "exactly one kill for one blown deadline");
+    assert_eq!(report.failed, 1);
+    assert_eq!(eng.cache().pages_in_use(), 0, "the victim's pages came back");
+}
+
+#[test]
+fn http_supervisor_restarts_the_engine_and_keeps_serving() {
+    let _g = lock();
+    faults::silence_injected_panics();
+    faults::arm(FaultPlan::new(0xd00d).one_shot(Site::EngineStepPanic));
+    let (cfg, ckpt) = model("nano");
+    let eng = Engine::new(
+        cfg,
+        ckpt,
+        EngineConfig {
+            slots: 1,
+            scheduler: SchedulerConfig {
+                max_batch: 1,
+                prefill_chunk: 1,
+                ..SchedulerConfig::default()
+            },
+            ..EngineConfig::default()
+        },
+    );
+    let server = serve(eng, HttpConfig::default()).expect("bind 127.0.0.1:0");
+    let addr = server.addr();
+
+    // A is mid-prefill (24 tokens, one per step) when the injected step
+    // panic unwinds the engine thread; its stream never started, so the
+    // supervisor's recovery answers it 503 + Retry-After
+    let prompt: Vec<i32> = (0..24).map(|t| t % 7 + 1).collect();
+    let a = fetch(addr, "POST", "/generate", Some(&gen_body(&prompt, 2))).unwrap();
+    assert_eq!(a.status, 503, "in-flight work fails visibly: {}", a.body);
+    assert!(a.body.contains("engine restarted"), "{}", a.body);
+    assert!(a.header("Retry-After").is_some(), "503 invites the client back");
+
+    // the restarted loop serves fresh work on the same queue and channel
+    let b = fetch(addr, "POST", "/generate", Some(&gen_body(&[5, 6], 3))).unwrap();
+    assert_eq!(b.status, 200, "{}", b.body);
+    assert!(b.body.contains("\"done\":true"), "{}", b.body);
+    assert!(b.body.contains("\"reason\":\"max_tokens\""), "{}", b.body);
+
+    // the restarted thread re-renders /metrics; poll for the new series
+    let deadline = Instant::now() + Duration::from_secs(5);
+    let metrics = loop {
+        let m = fetch(addr, "GET", "/metrics", None).unwrap();
+        if m.body.contains("llmdt_http_engine_restarts_total 1") || Instant::now() > deadline {
+            break m;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    };
+    for series in [
+        "llmdt_http_engine_restarts_total 1",
+        "llmdt_sessions_failed_total 1",
+        "llmdt_faults_injected_total 1",
+        "llmdt_faults_engine_step_panic_total 1",
+    ] {
+        assert!(metrics.body.contains(series), "missing {series} in:\n{}", metrics.body);
+    }
+    faults::disarm();
+
+    let exit = server.shutdown();
+    let report = exit.report.expect("the supervised engine still returns its report");
+    assert_eq!(exit.http.engine_restarts, 1);
+    assert_eq!(report.failed, 1, "A retired Failed through the recovery path");
+    assert_eq!(report.completed, 2, "A (failed) and B (served) both retired exactly once");
+    assert_eq!(exit.engine.cache().pages_in_use(), 0, "recovery freed A's pages");
+    assert_eq!(exit.engine.cache().slots_in_use(), 0);
+}
+
+#[test]
+fn client_disconnect_storm_drains_clean_and_leaks_nothing() {
+    let _g = lock();
+    faults::silence_injected_panics();
+    // the first three chunk reads across the storm die at the socket
+    faults::arm(
+        FaultPlan::new(0xd15c)
+            .rate(Site::HttpClientDisconnect, 1.0)
+            .limit(Site::HttpClientDisconnect, 3),
+    );
+    let (cfg, ckpt) = model("med");
+    let eng = Engine::new(
+        cfg,
+        ckpt,
+        EngineConfig {
+            slots: 4,
+            scheduler: SchedulerConfig { max_batch: 4, ..SchedulerConfig::default() },
+            ..EngineConfig::default()
+        },
+    );
+    let server = serve(eng, HttpConfig::default()).expect("bind 127.0.0.1:0");
+    let addr = server.addr();
+
+    let clients: Vec<_> = (0..6)
+        .map(|i| {
+            std::thread::spawn(move || {
+                let body = gen_body(&[i + 1, 2, 3], 24);
+                let mut stream =
+                    ChunkStream::open(addr, "POST", "/generate", Some(&body)).unwrap();
+                assert_eq!(stream.status, 200, "the storm starts with admitted streams");
+                let mut done = false;
+                loop {
+                    match stream.next_chunk() {
+                        Ok(Some(line)) => done = line.contains("\"done\":true"),
+                        Ok(None) => return (done, false),
+                        Err(_) => return (done, true), // injected disconnect
+                    }
+                }
+            })
+        })
+        .collect();
+    let outcomes: Vec<(bool, bool)> = clients.into_iter().map(|h| h.join().unwrap()).collect();
+    let dropped = outcomes.iter().filter(|(_, dropped)| *dropped).count();
+    let finished = outcomes.iter().filter(|(done, dropped)| *done && !*dropped).count();
+    assert_eq!(
+        finished + dropped,
+        6,
+        "every client either saw its terminal line or was injected away: {outcomes:?}"
+    );
+    assert!(dropped >= 1, "the armed schedule hit at least one live stream");
+    assert_eq!(
+        dropped as u64,
+        faults::injected(Site::HttpClientDisconnect),
+        "each injection kills exactly one stream"
+    );
+    faults::disarm();
+
+    let exit = server.shutdown();
+    let report = exit.report.unwrap();
+    assert_eq!(report.completed, 6, "all six requests retired server-side exactly once");
+    assert_eq!(exit.engine.cache().pages_in_use(), 0, "the storm leaked no pages");
+    assert_eq!(exit.engine.cache().slots_in_use(), 0);
+    assert!(exit.engine.cache().free_pages_are_zeroed(), "retired KV was scrubbed");
+}
+
+#[test]
+fn disarmed_faults_change_nothing_and_runs_are_bit_identical() {
+    let _g = lock();
+    faults::disarm();
+    assert!(!faults::enabled(), "disarmed is the default state");
+
+    let run = || {
+        let (cfg, ckpt) = model("nano");
+        let mut eng = Engine::new(
+            cfg,
+            ckpt,
+            EngineConfig {
+                slots: 2,
+                page_size: 4,
+                scheduler: SchedulerConfig { max_batch: 2, ..SchedulerConfig::default() },
+                ..EngineConfig::default()
+            },
+        );
+        let mut rxs = Vec::new();
+        for i in 0..4 {
+            let (req, rx) = DecodeRequest::new(vec![1, 2, 3 + i], 6);
+            eng.submit(req);
+            rxs.push(rx);
+        }
+        drive(&mut eng);
+        rxs.iter()
+            .map(|rx| {
+                let mut tokens: Vec<(i32, u32)> = Vec::new();
+                let mut end = None;
+                while let Ok(ev) = rx.try_recv() {
+                    match ev {
+                        TokenEvent::Token { token, logprob, .. } => {
+                            tokens.push((token, logprob.to_bits()));
+                        }
+                        TokenEvent::Finished { reason, generated, .. } => {
+                            end = Some((reason, generated));
+                        }
+                        TokenEvent::Rejected { reason, .. } => {
+                            panic!("unexpected rejection: {reason}");
+                        }
+                    }
+                }
+                (tokens, end)
+            })
+            .collect::<Vec<_>>()
+    };
+    let first = run();
+    let second = run();
+    assert!(
+        first.iter().all(|(tokens, end)| !tokens.is_empty() && end.is_some()),
+        "both runs actually generated: {first:?}"
+    );
+    assert_eq!(first, second, "with faults disarmed, token and logprob streams are bit-identical");
+}
