@@ -4,8 +4,11 @@
 //! the heavy cell — panics the engine thread itself once so the supervised
 //! restart is on the measured path.
 //!
-//! Three cells, one knob: `chaos_clean` (disarmed), `chaos_light` (2% row
-//! fault rate), `chaos_heavy` (10% + one engine-thread panic). The
+//! Four cells: `chaos_clean` (disarmed), `chaos_light` (2% row fault
+//! rate), `chaos_heavy` (10% + one engine-thread panic), and
+//! `chaos_spill_heavy` — the same heavy schedule against a page-starved
+//! pool with the host spill tier and session resurrection on, where the
+//! engine panic costs resume gaps instead of failed answers. The
 //! invariants hold in every cell — the server never aborts, drains with
 //! zero leaked KV pages, and every client gets a terminal answer (a
 //! completed NDJSON stream, a mid-stream `"reason":"failed"` done line, or
@@ -80,9 +83,16 @@ fn main() -> anyhow::Result<()> {
     faults::silence_injected_panics();
     let mut clean_failed = usize::MAX;
     let mut heavy_failed = 0usize;
-    for (cell, rate, heavy) in
-        [("chaos_clean", 0.0f64, false), ("chaos_light", 0.02, false), ("chaos_heavy", 0.10, true)]
-    {
+    // the fourth cell reruns the heavy schedule with the ISSUE 9 degradation
+    // stack on: a page-starved pool backed by the host spill tier, and
+    // resurrection replaying in-flight sessions across the engine restart —
+    // the same faults should now cost latency (resume gaps), not answers
+    for (cell, rate, heavy, degrade) in [
+        ("chaos_clean", 0.0f64, false, false),
+        ("chaos_light", 0.02, false, false),
+        ("chaos_heavy", 0.10, true, false),
+        ("chaos_spill_heavy", 0.10, true, true),
+    ] {
         if rate > 0.0 {
             let mut plan = FaultPlan::new(0xfa57 ^ rate.to_bits())
                 .rate(Site::ForwardPanic, rate)
@@ -105,7 +115,15 @@ fn main() -> anyhow::Result<()> {
             EngineConfig {
                 slots: 4,
                 page_size: 4,
-                scheduler: SchedulerConfig { max_batch: 4, ..SchedulerConfig::default() },
+                // degraded cell: 12 pages cannot hold four full contexts, so
+                // page pressure spills victims to the host tier mid-run
+                kv_pages: if degrade { 12 } else { 0 },
+                host_tier_bytes: if degrade { 1 << 20 } else { 0 },
+                scheduler: SchedulerConfig {
+                    max_batch: 4,
+                    resurrect: degrade,
+                    ..SchedulerConfig::default()
+                },
                 ..EngineConfig::default()
             },
         );
@@ -147,6 +165,9 @@ fn main() -> anyhow::Result<()> {
         json.record(cell, "failed_visible", failed as f64);
         json.record(cell, "faults_injected", injected as f64);
         json.record(cell, "engine_restarts", http.engine_restarts as f64);
+        json.record(cell, "pages_spilled", report.pages_spilled as f64);
+        json.record(cell, "restores", report.restores as f64);
+        json.record(cell, "resurrections", report.resurrections as f64);
 
         // survival invariants — these hold at every fault rate
         assert_eq!(
@@ -175,6 +196,27 @@ fn main() -> anyhow::Result<()> {
                     "{cell}: exactly one engine-thread panic + restart"
                 );
                 heavy_failed = failed;
+            }
+            "chaos_spill_heavy" => {
+                assert!(injected >= 1, "{cell}: the heavy schedule must actually fire");
+                assert_eq!(
+                    http.engine_restarts, 1,
+                    "{cell}: exactly one engine-thread panic + restart"
+                );
+                // the engine panic no longer fails its in-flight sessions —
+                // resurrection replays them — so only row-level poison
+                // (forward panics) stays visible; never more than the
+                // undegraded heavy cell
+                assert!(
+                    failed <= heavy_failed,
+                    "{cell}: degradation must not increase visible failures \
+                     ({failed} > {heavy_failed})"
+                );
+                assert_eq!(
+                    engine.host_tier().sessions(),
+                    0,
+                    "{cell}: drained server leaked host-tier entries"
+                );
             }
             _ => {}
         }

@@ -73,6 +73,8 @@ struct Observation {
     tokens: usize,
     completed: bool,
     had_retry_after: bool,
+    /// Parsed Retry-After seconds, when the header was present.
+    retry_after: Option<u64>,
 }
 
 /// Fire one request and watch the chunks arrive. Client-side clocks: TTFT
@@ -86,14 +88,19 @@ fn run_client(addr: SocketAddr, body: &str) -> Observation {
         tokens: 0,
         completed: false,
         had_retry_after: false,
+        retry_after: None,
     };
     let mut stream = match ChunkStream::open(addr, "POST", "/generate", Some(body)) {
         Ok(s) => s,
         Err(_) => return obs,
     };
     obs.status = stream.status;
-    obs.had_retry_after =
-        stream.headers.iter().any(|(n, _)| n.eq_ignore_ascii_case("retry-after"));
+    obs.retry_after = stream
+        .headers
+        .iter()
+        .find(|(n, _)| n.eq_ignore_ascii_case("retry-after"))
+        .and_then(|(_, v)| v.trim().parse().ok());
+    obs.had_retry_after = obs.retry_after.is_some();
     if stream.status != 200 {
         let _ = stream.read_body();
         return obs;
@@ -155,6 +162,10 @@ struct CellResult {
     itl_p50: Duration,
     itl_p99: Duration,
     retry_after_ok: bool,
+    /// Distinct Retry-After hints handed out across the cell's 429s. The
+    /// pressure-derived, staggered hint must spread a shed wave over
+    /// several comeback slots instead of landing it in one burst.
+    retry_after_distinct: usize,
 }
 
 /// Drive `n` open-loop arrivals against `addr`. `gap(i)` yields the wait
@@ -197,6 +208,13 @@ fn run_cell(
         itl_p50: percentile_sorted(&itl, 0.50),
         itl_p99: percentile_sorted(&itl, 0.99),
         retry_after_ok: obs.iter().filter(|o| o.status == 429).all(|o| o.had_retry_after),
+        retry_after_distinct: {
+            let mut hints: Vec<u64> =
+                obs.iter().filter(|o| o.status == 429).filter_map(|o| o.retry_after).collect();
+            hints.sort_unstable();
+            hints.dedup();
+            hints.len()
+        },
     }
 }
 
@@ -313,6 +331,18 @@ fn main() -> anyhow::Result<()> {
                  past the 429 path"
             );
             assert!(r.retry_after_ok, "{cell}: every 429 carries Retry-After");
+            if r.rejected >= 4 {
+                // the hint is derived per answer (queue depth + page
+                // pressure + a mod-3 stagger), so a shed wave must see
+                // more than one comeback slot — a constant hint would
+                // re-land the whole wave at once
+                assert!(
+                    r.retry_after_distinct > 1,
+                    "{cell}: {} 429s all got the same Retry-After hint",
+                    r.rejected
+                );
+            }
+            json.record(&cell, "retry_after_distinct", r.retry_after_distinct as f64);
             assert_eq!(
                 engine.cache().pages_in_use(),
                 0,

@@ -8,13 +8,18 @@
 //! repro serve-decode [--model NAME] [--format FMT|fp32] [--packed]
 //!                    [--kv-format fp32|FMT] [--clients N] [--requests N]
 //!                    [--max-new T] [--slots S] [--prefill-chunk P]
-//!                    [--page-size P] [--kv-pages N]
+//!                    [--page-size P] [--kv-pages N] [--host-tier-mb MB]
+//!                    [--victim-policy most-pages|lru|fair-share]
+//!                    [--resume-cooldown-ms MS]
 //!                    [--trace-out FILE] [--metrics-out FILE]
 //! repro serve-http   [--addr HOST:PORT] [--model NAME] [--format FMT|fp32]
 //!                    [--packed] [--kv-format fp32|FMT] [--slots S]
 //!                    [--max-queue N] [--prefill-chunk P] [--page-size P]
-//!                    [--kv-pages N] [--read-timeout-ms MS]
-//!                    [--write-timeout-ms MS] [--retry-after SECS]
+//!                    [--kv-pages N] [--host-tier-mb MB]
+//!                    [--victim-policy most-pages|lru|fair-share]
+//!                    [--resume-cooldown-ms MS] [--resurrect]
+//!                    [--read-timeout-ms MS] [--write-timeout-ms MS]
+//!                    [--retry-after SECS] [--retry-after-cap SECS]
 //!                    [--fault-seed N] [--fault-rate P] [--fault-limit N]
 //!                    [--fault-sites a,b,c]
 //!                    [--trace-out FILE] [--metrics-out FILE]
@@ -90,6 +95,8 @@ commands:
   serve-decode [--model N] [--format F|fp32] [--packed] [--kv-format fp32|F]
                [--clients C] [--requests R] [--max-new T] [--slots S]
                [--prefill-chunk P] [--page-size P] [--kv-pages N]
+               [--host-tier-mb MB] [--victim-policy most-pages|lru|fair-share]
+               [--resume-cooldown-ms MS]
                [--trace-out FILE] [--metrics-out FILE]
           continuous-batching multi-token generation (streaming, paged KV
           cache with block tables, fused [B,d] batched decode step;
@@ -98,21 +105,37 @@ commands:
           codebook, attended through the fused dequant-attention kernels;
           --page-size sets positions per KV page and --kv-pages bounds the
           page pool — 0 = worst case — so long-context mixes admit against
-          pages available, not per-slot reservations; --trace-out records
+          pages available, not per-slot reservations; --host-tier-mb > 0
+          enables the host KV spill tier: under page pressure the victim's
+          packed pages move to host memory and splice back bit-identically
+          at re-admission instead of being recomputed; --victim-policy picks
+          the eviction victim (most-pages frees the most pages, lru the
+          coldest stream, fair-share the most deadline slack) and
+          --resume-cooldown-ms shields a just-resumed session from
+          re-eviction (default 250, anti-thrash); --trace-out records
           the run's span timeline and writes Chrome trace-event JSON —
           load it in Perfetto/chrome://tracing — and --metrics-out writes
           the engine's metrics registry as Prometheus text)
   serve-http [--addr A] [--model N] [--format F|fp32] [--packed]
              [--kv-format fp32|F] [--slots S] [--max-queue Q]
              [--prefill-chunk P] [--page-size P] [--kv-pages N]
+             [--host-tier-mb MB] [--victim-policy most-pages|lru|fair-share]
+             [--resume-cooldown-ms MS] [--resurrect]
              [--read-timeout-ms MS] [--write-timeout-ms MS]
-             [--retry-after SECS] [--fault-seed N] [--fault-rate P]
+             [--retry-after SECS] [--retry-after-cap SECS]
+             [--fault-seed N] [--fault-rate P]
              [--fault-limit N] [--fault-sites a,b,c]
              [--trace-out FILE] [--metrics-out FILE]
           HTTP/1.1 front end over the decode engine: POST /generate streams
           tokens as chunked NDJSON; a full admission queue or saturated KV
           page pool answers 429 + Retry-After instead of queuing without
-          bound (--max-queue defaults to 4x slots); GET /healthz and
+          bound (--max-queue defaults to 4x slots; the hint is derived per
+          answer from queue depth + page/spill pressure, staggered, and
+          clamped to [--retry-after, --retry-after-cap]); --resurrect
+          replays in-flight sessions after an engine panic and continues
+          the same streams (clients see resume_gap, not \"failed\");
+          requests may carry deadline_ms, which the fair-share victim
+          policy ranks by; GET /healthz and
           GET /metrics (Prometheus text incl. llmdt_http_* series) probe
           the server; POST /shutdown drains gracefully — stop accepting,
           finish in-flight streams, then exit with the engine report;
@@ -358,7 +381,7 @@ fn build_decode_engine(
     max_queue: usize,
     reject_saturated: bool,
 ) -> Result<DecodeEngineSetup> {
-    use crate::serving::{Engine, EngineConfig, SchedulerConfig};
+    use crate::serving::{Engine, EngineConfig, SchedulerConfig, VictimPolicyKind};
 
     let model = args.flag("model", "small");
     let format = args.flag("format", "sf4");
@@ -368,6 +391,18 @@ fn build_decode_engine(
     let prefill_chunk: usize = args.flag("prefill-chunk", "32").parse()?;
     let page_size: usize = args.flag("page-size", "16").parse()?;
     let kv_pages: usize = args.flag("kv-pages", "0").parse()?;
+    // graceful degradation under page pressure: a nonzero host tier lets
+    // the engine spill a victim's packed KV pages to host memory and
+    // splice them back at re-admission instead of recomputing prefill
+    let host_tier_mb: usize = args.flag("host-tier-mb", "0").parse()?;
+    let policy_name = args.flag("victim-policy", "most-pages");
+    let victim_policy = VictimPolicyKind::from_name(&policy_name).ok_or_else(|| {
+        anyhow::anyhow!("unknown --victim-policy `{policy_name}` (most-pages|lru|fair-share)")
+    })?;
+    // the serving CLIs default the anti-thrash cooldown on; the library
+    // default stays ZERO so batch drivers keep their pinned schedules
+    let resume_cooldown_ms: u64 = args.flag("resume-cooldown-ms", "250").parse()?;
+    let resurrect = args.has("resurrect");
 
     let cfg = zoo(&model)?;
     let ckpt = load_or_init_checkpoint(session, &cfg);
@@ -400,11 +435,15 @@ fn build_decode_engine(
             kv_format,
             page_size,
             kv_pages,
+            host_tier_bytes: host_tier_mb << 20,
             scheduler: SchedulerConfig {
                 max_batch: slots,
                 prefill_chunk,
                 max_queue,
                 reject_saturated,
+                victim_policy,
+                resume_cooldown: std::time::Duration::from_millis(resume_cooldown_ms),
+                resurrect,
                 ..SchedulerConfig::default()
             },
             ..EngineConfig::default()
@@ -414,10 +453,15 @@ fn build_decode_engine(
         None => "fp32".to_string(),
         Some(f) => format!("{f} packed-4bit"),
     };
+    let tier_label = if host_tier_mb > 0 {
+        format!(" | host spill tier {host_tier_mb} MiB")
+    } else {
+        String::new()
+    };
     let banner = format!(
         "decode engine: model `{}` weights {} | paged KV: {} sequences over {} pages x {} \
          positions (block tables, {} lanes, {} KiB pool) | fused [B,d] batched step, \
-         prefill chunk {}",
+         prefill chunk {}, victim policy {}{}",
         cfg.name,
         weight_label,
         engine.cache().slots_total(),
@@ -426,6 +470,8 @@ fn build_decode_engine(
         kv_label,
         engine.cache().bytes() / 1024,
         prefill_chunk,
+        victim_policy.name(),
+        tier_label,
     );
     Ok(DecodeEngineSetup { engine, cfg, banner })
 }
@@ -482,6 +528,7 @@ fn cmd_serve_http(session: &Session, args: &Args) -> Result<()> {
     let read_timeout_ms: u64 = args.flag("read-timeout-ms", "5000").parse()?;
     let write_timeout_ms: u64 = args.flag("write-timeout-ms", "5000").parse()?;
     let retry_after: u64 = args.flag("retry-after", "1").parse()?;
+    let retry_after_cap: u64 = args.flag("retry-after-cap", "8").parse()?;
     let trace_out = out_path(args, "trace-out", "trace.json");
     let metrics_out = out_path(args, "metrics-out", "metrics.prom");
 
@@ -524,6 +571,7 @@ fn cmd_serve_http(session: &Session, args: &Args) -> Result<()> {
             read_timeout: std::time::Duration::from_millis(read_timeout_ms),
             write_timeout: std::time::Duration::from_millis(write_timeout_ms),
             retry_after_secs: retry_after,
+            retry_after_cap,
             ..HttpConfig::default()
         },
     )?;

@@ -151,6 +151,7 @@ impl Server {
                         eos: None,
                         events: etx.clone(),
                         submitted: req.submitted,
+                        deadline: None,
                     };
                     if dtx.send(fwd).is_err() {
                         break;

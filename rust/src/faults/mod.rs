@@ -21,6 +21,8 @@
 //! | `http_client_stall` | bundled client `ChunkStream` reads | server-side write deadline bounds the connection thread |
 //! | `http_client_disconnect` | bundled client `ChunkStream` reads | server sees a dead socket mid-write; session retires `Disconnected` |
 //! | `clock_skew` | `Engine::step` micro-steps (fake clock only) | the stall watchdog (`SchedulerConfig::step_deadline`) kills the offender |
+//! | `host_tier_fail` | `HostTier` spill / restore copies | the engine falls back to preempt-and-recompute; no pages leak on either tier |
+//! | `restore_stall` | host-tier page restore | the restore bubble lands in the session's `resume_gap`, not its ITL |
 //!
 //! Only chaos tests (`tests/chaos.rs`), the `perf_chaos` bench and the
 //! `serve-http --fault-*` flags ever [`arm`] this module; unit tests must
@@ -35,7 +37,7 @@ use crate::obs::trace;
 use crate::rng::Pcg64;
 
 /// Number of named injection sites (indexes [`Site`]).
-pub const SITE_COUNT: usize = 8;
+pub const SITE_COUNT: usize = 10;
 
 /// A named injection site. The discriminant indexes the per-site rate,
 /// limit, RNG stream and fired counter.
@@ -57,6 +59,11 @@ pub enum Site {
     HttpClientDisconnect = 6,
     /// The engine's fake clock jumps forward mid-micro-step.
     ClockSkew = 7,
+    /// A host-tier spill or restore copy fails (simulated allocation /
+    /// transfer failure); the engine falls back to preempt-and-recompute.
+    HostTierFail = 8,
+    /// A host-tier page restore stalls (simulated slow host link).
+    RestoreStall = 9,
 }
 
 impl Site {
@@ -69,6 +76,8 @@ impl Site {
         Site::HttpClientStall,
         Site::HttpClientDisconnect,
         Site::ClockSkew,
+        Site::HostTierFail,
+        Site::RestoreStall,
     ];
 
     /// Stable snake_case name (metric suffixes, `--fault-sites` parsing).
@@ -82,6 +91,8 @@ impl Site {
             Site::HttpClientStall => "http_client_stall",
             Site::HttpClientDisconnect => "http_client_disconnect",
             Site::ClockSkew => "clock_skew",
+            Site::HostTierFail => "host_tier_fail",
+            Site::RestoreStall => "restore_stall",
         }
     }
 

@@ -71,8 +71,14 @@ pub struct HttpConfig {
     /// Bound on each response write (a stalled reader cannot pin a
     /// connection thread past this).
     pub write_timeout: Duration,
-    /// Seconds advertised in `Retry-After` on 429/503 answers.
+    /// Minimum seconds advertised in `Retry-After` on 429/503 answers.
+    /// The advertised value is **derived per answer** from queue depth and
+    /// KV page/spill pressure, staggered across consecutive rejects so one
+    /// overload burst does not synchronize every client's retry into a
+    /// second wave, and clamped to `[retry_after_secs, retry_after_cap]`.
     pub retry_after_secs: u64,
+    /// Upper clamp on the derived `Retry-After` (see `retry_after_secs`).
+    pub retry_after_cap: u64,
     /// Largest accepted request body.
     pub max_body: usize,
 }
@@ -84,6 +90,7 @@ impl Default for HttpConfig {
             read_timeout: Duration::from_secs(5),
             write_timeout: Duration::from_secs(5),
             retry_after_secs: 1,
+            retry_after_cap: 8,
             max_body: 1 << 20,
         }
     }
@@ -102,6 +109,15 @@ struct Shared {
     /// Times the engine thread's supervisor caught a panic out of the
     /// serving loop and re-entered it on the same request channel.
     engine_restarts: AtomicU64,
+    /// Engine pressure gauges, published by the engine thread's observer
+    /// each loop iteration; connection threads read them to derive
+    /// per-answer `Retry-After` values (never touching the engine).
+    queue_depth: AtomicU64,
+    pages_free: AtomicU64,
+    pages_total: AtomicU64,
+    /// Monotone sequence over derived `Retry-After` answers: consecutive
+    /// rejects land on different values, de-synchronizing the retry wave.
+    retry_seq: AtomicU64,
     draining: AtomicBool,
     /// Prometheus text of the engine registry, re-rendered by the engine
     /// thread's `run_with` observer (the engine is never shared mutably).
@@ -120,9 +136,39 @@ impl Shared {
             tokens_streamed: AtomicU64::new(0),
             active_connections: AtomicU64::new(0),
             engine_restarts: AtomicU64::new(0),
+            queue_depth: AtomicU64::new(0),
+            pages_free: AtomicU64::new(0),
+            pages_total: AtomicU64::new(0),
+            retry_seq: AtomicU64::new(0),
             draining: AtomicBool::new(false),
             engine_metrics: Mutex::new(String::new()),
         }
+    }
+
+    /// Derive one `Retry-After` answer from the published engine pressure:
+    /// the base grows by one second per four queued requests plus a 0–2 s
+    /// page-pressure bucket (pool quarter-full headroom / pool dry), then a
+    /// rotating 0–2 s stagger spreads consecutive rejects apart so the
+    /// overload's retry wave lands spread out instead of as one burst. The
+    /// result is clamped to `[retry_after_secs, retry_after_cap]`.
+    fn retry_secs(&self, cfg: &HttpConfig) -> u64 {
+        let base = cfg.retry_after_secs.max(1);
+        let cap = cfg.retry_after_cap.max(base);
+        let queue = self.queue_depth.load(Ordering::Relaxed);
+        let free = self.pages_free.load(Ordering::Relaxed);
+        let total = self.pages_total.load(Ordering::Relaxed);
+        let pressure = if total == 0 {
+            0
+        } else if free == 0 {
+            2
+        } else if free * 4 <= total {
+            1
+        } else {
+            0
+        };
+        let load = (base + queue / 4 + pressure).min(cap.saturating_sub(2)).max(base);
+        let stagger = self.retry_seq.fetch_add(1, Ordering::Relaxed) % 3;
+        (load + stagger).clamp(base, cap)
     }
 
     fn registry(&self) -> Registry {
@@ -302,6 +348,15 @@ pub fn serve(mut engine: Engine, cfg: HttpConfig) -> Result<HttpServer> {
         loop {
             let res = std::panic::catch_unwind(AssertUnwindSafe(|| {
                 engine.run_with(&rx, |eng| {
+                    // pressure gauges feed the derived Retry-After; cheap
+                    // enough to publish every iteration
+                    engine_shared.queue_depth.store(eng.queue_len() as u64, Ordering::Relaxed);
+                    engine_shared
+                        .pages_free
+                        .store(eng.cache().pages_free() as u64, Ordering::Relaxed);
+                    engine_shared
+                        .pages_total
+                        .store(eng.cache().pages_total() as u64, Ordering::Relaxed);
                     // re-render the /metrics snapshot when idle and every
                     // 16th iteration while busy (cheap but not free)
                     if ticks % 16 == 0 || !eng.has_work() {
@@ -449,8 +504,11 @@ fn handle_generate(
     shared: &Shared,
     cfg: &HttpConfig,
 ) -> u16 {
-    let retry = cfg.retry_after_secs.to_string();
+    // each rejecting arm derives its own Retry-After: the rotating stagger
+    // must advance once per *hinted answer*, not once per request, so
+    // consecutive rejects always land on different seconds
     if shared.draining.load(Ordering::SeqCst) {
+        let retry = shared.retry_secs(cfg).to_string();
         let _ = respond(
             stream,
             503,
@@ -487,8 +545,10 @@ fn handle_generate(
 
     let (mut req, events) = DecodeRequest::new(gen.prompt, gen.max_new_tokens);
     req.eos = gen.eos;
+    req.deadline = gen.deadline_ms.map(Duration::from_millis);
     let id = req.id;
     if tx.send(req).is_err() {
+        let retry = shared.retry_secs(cfg).to_string();
         let _ = respond(
             stream,
             503,
@@ -504,6 +564,7 @@ fn handle_generate(
     match events.recv() {
         Ok(TokenEvent::Rejected { reason, .. }) => {
             shared.rejected_429.fetch_add(1, Ordering::Relaxed);
+            let retry = shared.retry_secs(cfg).to_string();
             let _ = respond(
                 stream,
                 429,
@@ -518,6 +579,7 @@ fn handle_generate(
             // supervised forward failure): a whole-response 503 tells the
             // client it may safely retry — once a token has gone out, the
             // same Failed arrives as the stream's terminal line instead
+            let retry = shared.retry_secs(cfg).to_string();
             let _ = respond(
                 stream,
                 503,
@@ -534,6 +596,7 @@ fn handle_generate(
             stream_events(stream, first, events, shared, cfg.write_timeout)
         }
         Err(_) => {
+            let retry = shared.retry_secs(cfg).to_string();
             let _ = respond(
                 stream,
                 503,
@@ -759,12 +822,17 @@ pub struct GenerateRequest {
     pub prompt: Vec<i32>,
     pub max_new_tokens: usize,
     pub eos: Option<i32>,
+    /// Optional client latency budget in milliseconds, measured from
+    /// submission; feeds the engine's fair-share victim policy (sessions
+    /// with less slack are preempted last). Absent = best-effort.
+    pub deadline_ms: Option<u64>,
 }
 
 /// Parse the strict JSON subset the wire format uses: one object with
 /// `prompt` (array of ints), `max_new_tokens` (int), and optional `eos`
-/// (int). Unknown fields, trailing garbage, and non-integer tokens are
-/// errors — a typo'd field silently ignored would be a debugging trap.
+/// (int) and `deadline_ms` (non-negative int). Unknown fields, trailing
+/// garbage, and non-integer tokens are errors — a typo'd field silently
+/// ignored would be a debugging trap.
 pub fn parse_generate(body: &str) -> Result<GenerateRequest, String> {
     let mut p = Parser { s: body.as_bytes(), i: 0 };
     p.skip_ws();
@@ -772,12 +840,14 @@ pub fn parse_generate(body: &str) -> Result<GenerateRequest, String> {
     let mut prompt: Option<Vec<i32>> = None;
     let mut max_new_tokens: Option<usize> = None;
     let mut eos: Option<i32> = None;
+    let mut deadline_ms: Option<u64> = None;
     loop {
         p.skip_ws();
         if p.eat(b'}') {
             break;
         }
-        if prompt.is_some() || max_new_tokens.is_some() || eos.is_some() {
+        if prompt.is_some() || max_new_tokens.is_some() || eos.is_some() || deadline_ms.is_some()
+        {
             p.expect(b',')?;
             p.skip_ws();
         }
@@ -808,6 +878,16 @@ pub fn parse_generate(body: &str) -> Result<GenerateRequest, String> {
                 }
                 eos = Some(p.i32()?);
             }
+            "deadline_ms" => {
+                if deadline_ms.is_some() {
+                    return Err("duplicate field \"deadline_ms\"".into());
+                }
+                let v = p.integer()?;
+                if v < 0 {
+                    return Err("deadline_ms must be >= 0".into());
+                }
+                deadline_ms = Some(v as u64);
+            }
             other => return Err(format!("unknown field {other:?}")),
         }
     }
@@ -819,6 +899,7 @@ pub fn parse_generate(body: &str) -> Result<GenerateRequest, String> {
         prompt: prompt.ok_or("missing field \"prompt\"")?,
         max_new_tokens: max_new_tokens.ok_or("missing field \"max_new_tokens\"")?,
         eos,
+        deadline_ms,
     })
 }
 
@@ -1195,14 +1276,66 @@ mod tests {
     use super::*;
 
     #[test]
+    fn retry_after_derives_from_pressure_and_staggers_consecutive_rejects() {
+        let cfg = HttpConfig::default();
+        let shared = Shared::new();
+
+        // idle server: no queue, no published pool -> the hint floors at
+        // the configured base, plus the rotating stagger
+        let idle: Vec<u64> = (0..3).map(|_| shared.retry_secs(&cfg)).collect();
+        assert!(idle.iter().all(|&s| s >= cfg.retry_after_secs.max(1)), "{idle:?}");
+        assert!(idle.iter().all(|&s| s <= cfg.retry_after_cap), "{idle:?}");
+        let mut distinct = idle.clone();
+        distinct.sort_unstable();
+        distinct.dedup();
+        assert!(
+            distinct.len() > 1,
+            "three consecutive rejects must not share one comeback slot: {idle:?}"
+        );
+
+        // deep queue + dry pool: the hint grows with pressure but stays
+        // clamped at the cap
+        shared.queue_depth.store(64, Ordering::Relaxed);
+        shared.pages_total.store(16, Ordering::Relaxed);
+        shared.pages_free.store(0, Ordering::Relaxed);
+        let loaded: Vec<u64> = (0..3).map(|_| shared.retry_secs(&cfg)).collect();
+        assert!(
+            loaded.iter().all(|&s| s <= cfg.retry_after_cap),
+            "pressure never overshoots the cap: {loaded:?}"
+        );
+        assert!(
+            loaded.iter().min() > idle.iter().min(),
+            "a saturated server asks shed clients to wait longer than an idle \
+             one: idle {idle:?} vs loaded {loaded:?}"
+        );
+
+        // a quarter-full pool sits between the two
+        shared.queue_depth.store(4, Ordering::Relaxed);
+        shared.pages_free.store(4, Ordering::Relaxed);
+        let mid = shared.retry_secs(&cfg);
+        assert!(mid >= cfg.retry_after_secs.max(1) && mid <= cfg.retry_after_cap);
+    }
+
+    #[test]
     fn parse_generate_golden() {
         let g = parse_generate("{\"prompt\":[1,2,3],\"max_new_tokens\":8,\"eos\":5}").unwrap();
         assert_eq!(
             g,
-            GenerateRequest { prompt: vec![1, 2, 3], max_new_tokens: 8, eos: Some(5) }
+            GenerateRequest {
+                prompt: vec![1, 2, 3],
+                max_new_tokens: 8,
+                eos: Some(5),
+                deadline_ms: None,
+            }
         );
         let g = parse_generate(" { \"prompt\" : [ 7 ] , \"max_new_tokens\" : 1 } ").unwrap();
-        assert_eq!(g, GenerateRequest { prompt: vec![7], max_new_tokens: 1, eos: None });
+        assert_eq!(
+            g,
+            GenerateRequest { prompt: vec![7], max_new_tokens: 1, eos: None, deadline_ms: None }
+        );
+        let g =
+            parse_generate("{\"prompt\":[1],\"max_new_tokens\":4,\"deadline_ms\":250}").unwrap();
+        assert_eq!(g.deadline_ms, Some(250), "latency budget rides the wire");
         let g = parse_generate("{\"prompt\":[],\"max_new_tokens\":4}").unwrap();
         assert!(g.prompt.is_empty(), "empty arrays parse; the route rejects them as 400");
     }
@@ -1220,6 +1353,11 @@ mod tests {
             ("{\"prompt\":[1],\"max_new_tokens\":-2}", "negative budget"),
             ("{\"prompt\":[1],\"prompt\":[2],\"max_new_tokens\":4}", "duplicate field"),
             ("{\"prompt\":[4294967296],\"max_new_tokens\":4}", "token out of i32 range"),
+            ("{\"prompt\":[1],\"max_new_tokens\":4,\"deadline_ms\":-5}", "negative deadline"),
+            (
+                "{\"prompt\":[1],\"max_new_tokens\":4,\"deadline_ms\":1,\"deadline_ms\":2}",
+                "duplicate deadline",
+            ),
         ] {
             assert!(parse_generate(body).is_err(), "{why}: {body:?}");
         }

@@ -26,6 +26,8 @@
 //! never leak a prior session's K/V). All storage is allocated once at
 //! engine start; per-step work allocates only transient views.
 
+use std::collections::HashMap;
+
 use crate::model_io::ModelConfig;
 use crate::nn::{KvLanes, KvStore};
 use crate::quant::KvFormat;
@@ -422,19 +424,31 @@ impl KvCache {
     }
 
     /// Grow one slot's block table (from the free list) until it covers
-    /// `positions` committed positions (clamped to `capacity`). Returns
-    /// `false` — leaving any pages already claimed in place — when the
-    /// pool runs dry; the engine resolves that by preempting a victim.
+    /// `positions` committed positions (clamped to `capacity`). A
+    /// reservation is all-or-nothing: when the pool runs dry partway
+    /// through a multi-page grow, every page claimed **by this call** goes
+    /// back to the free list before `false` returns — a half-satisfied
+    /// reservation must not hold pages it cannot use while the engine
+    /// resolves the pressure by preempting or spilling a victim. (Claimed-
+    /// and-rolled-back pages were never written, so the zeroed-free-page
+    /// invariant survives.)
     pub fn try_reserve(&mut self, slot: SlotId, positions: usize) -> bool {
         assert!(self.in_use[slot], "reserving for slot {slot} that is not in use");
         if crate::faults::fire(crate::faults::Site::KvReserveFail) {
             return false;
         }
         let target = self.cfg.pages_for(positions.min(self.cfg.capacity));
+        let before = self.tables[slot].len();
         while self.tables[slot].len() < target {
             match self.free_pages.pop() {
                 Some(page) => self.tables[slot].push(page),
-                None => return false,
+                None => {
+                    while self.tables[slot].len() > before {
+                        let page = self.tables[slot].pop().expect("rollback page");
+                        self.free_pages.push(page);
+                    }
+                    return false;
+                }
             }
         }
         true
@@ -528,6 +542,267 @@ impl KvCache {
                 d,
             })
             .collect()
+    }
+
+    // -- host-tier spill / restore ------------------------------------------
+
+    /// Bytes one page occupies in the host-tier byte image: every layer's K
+    /// then V lane bytes, in the exact on-device layout (raw f32 words for
+    /// fp32 lanes, already-encoded codes + scale words for packed lanes).
+    pub fn page_spill_bytes(&self) -> usize {
+        self.cfg.n_layers * self.cfg.page_size * self.position_bytes()
+    }
+
+    /// Copy one slot's pages into a [`HostEntry`] — the device-layout byte
+    /// image a later [`Self::restore_slot`] splices back. fp32 lanes are
+    /// captured as raw f32 words (quantizing them on the way out would
+    /// break the byte-identical restore the resume path promises); packed
+    /// lanes are captured as their codes + scales, which *are* the
+    /// configured `KvFormat` encoder's output — spilling a packed page
+    /// moves ~8x fewer bytes than fp32. The slot itself is untouched; the
+    /// engine frees it (zeroing the device pages) after the copy.
+    pub fn export_slot(&self, slot: SlotId) -> HostEntry {
+        assert!(self.in_use[slot], "exporting slot {slot} that is not in use");
+        let pages = self.tables[slot]
+            .iter()
+            .map(|&p| {
+                let mut buf = Vec::with_capacity(self.page_spill_bytes());
+                self.export_page(p, &mut buf);
+                buf
+            })
+            .collect();
+        HostEntry { len: self.lens[slot], pages }
+    }
+
+    /// Splice a spilled byte image back into a freshly allocated slot:
+    /// claim pages for `entry.len` positions, copy each host page into its
+    /// device page (same byte layout both ways, so the round trip is
+    /// bit-identical), and set the committed length. Returns `false` —
+    /// with nothing claimed, by the all-or-nothing [`Self::try_reserve`] —
+    /// when the pool cannot supply the pages; the caller falls back to
+    /// replaying the context through prefill instead.
+    pub fn restore_slot(&mut self, slot: SlotId, entry: &HostEntry) -> bool {
+        assert!(self.in_use[slot], "restoring into slot {slot} that is not in use");
+        assert!(self.tables[slot].is_empty() && self.lens[slot] == 0, "restore needs a fresh slot");
+        assert_eq!(
+            entry.pages.len(),
+            self.cfg.pages_for(entry.len),
+            "host entry page count disagrees with its length"
+        );
+        if !self.try_reserve(slot, entry.len) {
+            return false;
+        }
+        for (i, bytes) in entry.pages.iter().enumerate() {
+            let page = self.tables[slot][i];
+            self.import_page(page, bytes);
+        }
+        self.lens[slot] = entry.len;
+        true
+    }
+
+    /// Serialize one device page into `out` (layer-major, K then V).
+    fn export_page(&self, page: PageId, out: &mut Vec<u8>) {
+        let d = self.cfg.d_model;
+        match &self.store {
+            PoolStore::F32 { k, v } => {
+                let lane = self.cfg.page_size * d;
+                for layer in 0..self.cfg.n_layers {
+                    push_f32s(out, &k[layer][page * lane..(page + 1) * lane]);
+                    push_f32s(out, &v[layer][page * lane..(page + 1) * lane]);
+                }
+            }
+            PoolStore::Packed4 { fmt, k_codes, k_scales, v_codes, v_scales } => {
+                let clane = fmt.codes_per_page(d, self.cfg.page_size);
+                let slane = fmt.scales_per_page(d, self.cfg.page_size);
+                for layer in 0..self.cfg.n_layers {
+                    out.extend_from_slice(&k_codes[layer][page * clane..(page + 1) * clane]);
+                    push_f32s(out, &k_scales[layer][page * slane..(page + 1) * slane]);
+                    out.extend_from_slice(&v_codes[layer][page * clane..(page + 1) * clane]);
+                    push_f32s(out, &v_scales[layer][page * slane..(page + 1) * slane]);
+                }
+            }
+        }
+    }
+
+    /// Inverse of [`Self::export_page`]: write one host page image into a
+    /// device page. Bit-exact — f32 words round-trip through `to_le_bytes`
+    /// / `from_le_bytes`, which preserve every bit pattern including NaNs.
+    fn import_page(&mut self, page: PageId, bytes: &[u8]) {
+        let d = self.cfg.d_model;
+        assert_eq!(bytes.len(), self.page_spill_bytes(), "host page image size");
+        let mut at = 0usize;
+        match &mut self.store {
+            PoolStore::F32 { k, v } => {
+                let lane = self.cfg.page_size * d;
+                for layer in 0..self.cfg.n_layers {
+                    at = take_f32s(bytes, at, &mut k[layer][page * lane..(page + 1) * lane]);
+                    at = take_f32s(bytes, at, &mut v[layer][page * lane..(page + 1) * lane]);
+                }
+            }
+            PoolStore::Packed4 { fmt, k_codes, k_scales, v_codes, v_scales } => {
+                let clane = fmt.codes_per_page(d, self.cfg.page_size);
+                let slane = fmt.scales_per_page(d, self.cfg.page_size);
+                for layer in 0..self.cfg.n_layers {
+                    k_codes[layer][page * clane..(page + 1) * clane]
+                        .copy_from_slice(&bytes[at..at + clane]);
+                    at += clane;
+                    at = take_f32s(bytes, at, &mut k_scales[layer][page * slane..(page + 1) * slane]);
+                    v_codes[layer][page * clane..(page + 1) * clane]
+                        .copy_from_slice(&bytes[at..at + clane]);
+                    at += clane;
+                    at = take_f32s(bytes, at, &mut v_scales[layer][page * slane..(page + 1) * slane]);
+                }
+            }
+        }
+        debug_assert_eq!(at, bytes.len(), "host page image fully consumed");
+    }
+}
+
+fn push_f32s(out: &mut Vec<u8>, vals: &[f32]) {
+    for &x in vals {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn take_f32s(bytes: &[u8], mut at: usize, dst: &mut [f32]) -> usize {
+    for x in dst {
+        *x = f32::from_le_bytes(bytes[at..at + 4].try_into().expect("4-byte f32 word"));
+        at += 4;
+    }
+    at
+}
+
+/// One spilled sequence: its committed length and its pages as device-
+/// layout byte images, in block-table order.
+pub struct HostEntry {
+    /// Committed positions the spilled block table covered.
+    pub len: usize,
+    pages: Vec<Vec<u8>>,
+}
+
+impl HostEntry {
+    pub fn pages(&self) -> usize {
+        self.pages.len()
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.pages.iter().map(|p| p.len()).sum()
+    }
+}
+
+/// Host-side tier for spilled KV pages, keyed by session id. Bounded by a
+/// byte budget: an insert past the budget is refused and the engine falls
+/// back to preempt-and-recompute — degrading to the old behavior, never
+/// growing host memory without bound. A budget of zero disables the tier.
+pub struct HostTier {
+    cap_bytes: usize,
+    used_bytes: usize,
+    entries: HashMap<u64, HostEntry>,
+}
+
+impl HostTier {
+    pub fn new(cap_bytes: usize) -> HostTier {
+        HostTier { cap_bytes, used_bytes: 0, entries: HashMap::new() }
+    }
+
+    /// True when the tier can hold anything at all.
+    pub fn enabled(&self) -> bool {
+        self.cap_bytes > 0
+    }
+
+    pub fn cap_bytes(&self) -> usize {
+        self.cap_bytes
+    }
+
+    pub fn bytes_in_use(&self) -> usize {
+        self.used_bytes
+    }
+
+    /// Spilled pages currently held (the zero-leak accounting surface: a
+    /// drained engine must report 0 here, like `pages_in_use` on-device).
+    pub fn pages_in_use(&self) -> usize {
+        self.entries.values().map(|e| e.pages()).sum()
+    }
+
+    pub fn sessions(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn contains(&self, session: u64) -> bool {
+        self.entries.contains_key(&session)
+    }
+
+    /// Admit one spilled sequence; refuses (returning the entry back) when
+    /// it would exceed the byte budget or the tier is disabled.
+    pub fn insert(&mut self, session: u64, entry: HostEntry) -> Result<(), HostEntry> {
+        let bytes = entry.bytes();
+        if self.used_bytes.saturating_add(bytes) > self.cap_bytes {
+            return Err(entry);
+        }
+        self.used_bytes += bytes;
+        if let Some(old) = self.entries.insert(session, entry) {
+            // a session spilled twice keeps only its latest image
+            self.used_bytes -= old.bytes();
+        }
+        Ok(())
+    }
+
+    /// Remove and return a session's spilled image (the restore path).
+    pub fn take(&mut self, session: u64) -> Option<HostEntry> {
+        let entry = self.entries.remove(&session)?;
+        self.used_bytes -= entry.bytes();
+        Some(entry)
+    }
+
+    /// Drop a session's spilled image, if any — every terminal path
+    /// (finish, disconnect, abort, failed) must call this so host pages
+    /// never outlive their session.
+    pub fn remove(&mut self, session: u64) {
+        if let Some(entry) = self.entries.remove(&session) {
+            self.used_bytes -= entry.bytes();
+        }
+    }
+}
+
+/// Spill-vs-recompute decision: restoring a spilled image costs
+/// `bytes / restore bandwidth`; recomputing it costs
+/// `tokens / prefill rate`. Spill wins exactly when the modeled restore is
+/// no slower — with packed lanes ~8x smaller than fp32, spill wins at far
+/// shorter contexts, which is what makes the host tier a robustness
+/// feature of the paper's formats rather than a generic cache. The rates
+/// are configuration, not measurements: they keep the decision
+/// deterministic and testable.
+#[derive(Clone, Copy, Debug)]
+pub struct SpillPolicy {
+    /// Modeled host-link restore bandwidth, bytes per microsecond.
+    pub restore_bytes_per_us: f64,
+    /// Modeled chunked-prefill recompute rate, tokens per microsecond.
+    pub prefill_tokens_per_us: f64,
+}
+
+impl Default for SpillPolicy {
+    fn default() -> SpillPolicy {
+        // ~16 GiB/s host link vs ~50k tok/s prefill: spill wins whenever a
+        // token's KV image is under ~340 KiB, i.e. essentially always for
+        // the zoo geometries — recompute remains the escape hatch for
+        // hosts with a slow link (set a small restore bandwidth).
+        SpillPolicy { restore_bytes_per_us: 16384.0, prefill_tokens_per_us: 0.05 }
+    }
+}
+
+impl SpillPolicy {
+    /// Should a victim holding `bytes` of KV across `tokens` committed
+    /// positions spill (true) or be preempted for recompute (false)?
+    pub fn spill_wins(&self, bytes: usize, tokens: usize) -> bool {
+        if self.restore_bytes_per_us <= 0.0 {
+            return false;
+        }
+        if self.prefill_tokens_per_us <= 0.0 {
+            return true;
+        }
+        let restore_us = bytes as f64 / self.restore_bytes_per_us;
+        let recompute_us = tokens as f64 / self.prefill_tokens_per_us;
+        restore_us <= recompute_us
     }
 }
 
@@ -795,6 +1070,107 @@ mod tests {
                 "pos {pos} landed on the wrong page row"
             );
         }
+    }
+
+    #[test]
+    fn partial_reservation_rolls_back_fully_under_pool_pressure() {
+        // regression (mid-reservation kv_page_spike shape): a multi-page
+        // reservation that only partially satisfies must return every page
+        // it claimed — no leaked claimed pages, pool count restored
+        let mut c = small();
+        let a = c.allocate().unwrap();
+        // the spike's mechanism: seize pages out from under the reservation
+        let seized = c.seize_free_pages(3);
+        assert_eq!(c.pages_free(), 1);
+        // needs 2 pages, pool holds 1: claims one, then must roll it back
+        assert!(!c.try_reserve(a, 4), "pool cannot cover the reservation");
+        assert_eq!(c.pages_held(a), 0, "half-satisfied reservation leaked a page");
+        assert_eq!(c.pages_free(), 1, "claimed page went back to the pool");
+        assert!(c.free_pages_are_zeroed(), "rolled-back pages stay zeroed");
+        c.return_pages(seized);
+        assert!(c.try_reserve(a, 4), "reservation succeeds once the spike lifts");
+        assert_eq!(c.pages_held(a), 2);
+        c.free(a);
+        assert_eq!(c.pages_in_use(), 0);
+    }
+
+    #[test]
+    fn host_tier_round_trips_every_format_bit_exactly() {
+        // spill -> free -> restore must reproduce the device lanes byte for
+        // byte, in both lane formats and every packed codebook
+        let caches: Vec<(&str, KvCache)> = vec![
+            ("fp32", small()),
+            ("sf4", KvCache::new_packed(geometry(), KvFormat::new(&formats::must("sf4"), 4))),
+            ("nf4", KvCache::new_packed(geometry(), KvFormat::new(&formats::must("nf4"), 4))),
+            (
+                "e2m1_sp",
+                KvCache::new_packed(geometry(), KvFormat::new(&formats::must("e2m1_sp"), 4)),
+            ),
+        ];
+        for (label, mut c) in caches {
+            let a = c.allocate().unwrap();
+            for pos in 0..3 {
+                let mut view = c.slot(a);
+                let row: Vec<f32> = (0..8).map(|i| (i as f32 - 3.0) * 0.3 + pos as f32).collect();
+                view.append_kv(0, &row, &row);
+                view.append_kv(1, &row, &row);
+                view.advance();
+            }
+            let before = k_lane(&c.slot(a), 0, 3);
+            let entry = c.export_slot(a);
+            assert_eq!(entry.len, 3, "{label}");
+            assert_eq!(entry.pages(), 2, "{label}: 3 positions over 2-row pages");
+            assert_eq!(entry.bytes(), 2 * c.page_spill_bytes(), "{label}");
+            let mut tier = HostTier::new(1 << 20);
+            assert!(tier.insert(7, entry).is_ok(), "{label}: fits the budget");
+            assert_eq!(tier.sessions(), 1, "{label}");
+            assert_eq!(tier.pages_in_use(), 2, "{label}");
+            c.free(a);
+            assert_eq!(c.pages_in_use(), 0, "{label}");
+
+            let b = c.allocate().unwrap();
+            let entry = tier.take(7).expect("entry present");
+            assert!(c.restore_slot(b, &entry), "{label}: pool has room");
+            assert_eq!(tier.pages_in_use(), 0, "{label}: take() releases host pages");
+            assert_eq!(tier.bytes_in_use(), 0, "{label}");
+            assert_eq!(c.len(b), 3, "{label}: restored length");
+            assert_eq!(c.pages_held(b), 2, "{label}");
+            let after = k_lane(&c.slot(b), 0, 3);
+            let (ab, bb): (Vec<u32>, Vec<u32>) = (
+                before.iter().map(|x| x.to_bits()).collect(),
+                after.iter().map(|x| x.to_bits()).collect(),
+            );
+            assert_eq!(ab, bb, "{label}: restore is not bit-identical");
+            c.free(b);
+            assert!(c.free_pages_are_zeroed(), "{label}");
+        }
+    }
+
+    #[test]
+    fn host_tier_budget_refuses_and_restore_fails_clean_when_pool_dry() {
+        let mut c = small();
+        let a = c.allocate().unwrap();
+        for _ in 0..3 {
+            let mut view = c.slot(a);
+            view.append_kv(0, &[1.0; 8], &[1.0; 8]);
+            view.advance();
+        }
+        let entry = c.export_slot(a);
+        // budget smaller than the image: refused, entry handed back
+        let mut tiny = HostTier::new(entry.bytes() - 1);
+        assert!(tiny.enabled());
+        let entry = tiny.insert(1, entry).expect_err("over budget");
+        assert_eq!(tiny.bytes_in_use(), 0);
+        assert!(!HostTier::new(0).enabled(), "zero budget disables the tier");
+        c.free(a);
+        // restore into a pool too dry to cover the image: false, nothing claimed
+        let seized = c.seize_free_pages(3);
+        let b = c.allocate().unwrap();
+        assert!(!c.restore_slot(b, &entry), "dry pool cannot restore");
+        assert_eq!(c.pages_held(b), 0, "failed restore claimed nothing");
+        c.return_pages(seized);
+        assert!(c.restore_slot(b, &entry), "restore succeeds with the pool back");
+        assert_eq!(c.len(b), 3);
     }
 
     #[test]

@@ -138,9 +138,26 @@ pub struct MetricsCollector {
     /// Sessions evicted by the page-pressure guard (pool ran dry
     /// mid-step), a subset of `evicted`.
     pub page_preemptions: usize,
+    /// KV pages copied to the host tier by spill-evictions (instead of
+    /// being discarded for recompute).
+    pub pages_spilled: usize,
+    /// Bytes those spilled pages carried (packed on-device layout).
+    pub spill_bytes: u64,
+    /// Re-admissions served by a host-tier block-table splice instead of a
+    /// prefill replay.
+    pub restores: usize,
+    /// In-flight sessions requeued (not failed) by
+    /// `Engine::recover_after_panic` under `SchedulerConfig::resurrect`.
+    pub resurrections: usize,
+    /// Context tokens scheduled for re-prefill by those resurrections
+    /// (prompt + already-generated, the recompute debt of each replay).
+    pub replay_tokens: usize,
     /// Latest KV page-pool gauges (sampled once per engine step).
     pages_in_use: usize,
     pages_free: usize,
+    /// Latest host-tier gauges (spilled pages resident / bytes held).
+    host_pages: usize,
+    host_bytes: u64,
     /// Running mean of tail fragmentation across sampled steps.
     frag_sum: f64,
     frag_samples: usize,
@@ -191,8 +208,15 @@ impl MetricsCollector {
             fused_gemms: 0,
             kv_bytes_read: 0,
             page_preemptions: 0,
+            pages_spilled: 0,
+            spill_bytes: 0,
+            restores: 0,
+            resurrections: 0,
+            replay_tokens: 0,
             pages_in_use: 0,
             pages_free: 0,
+            host_pages: 0,
+            host_bytes: 0,
             frag_sum: 0.0,
             frag_samples: 0,
             steps: 0,
@@ -252,6 +276,13 @@ impl MetricsCollector {
         self.pages_free = free;
         self.frag_sum += fragmentation;
         self.frag_samples += 1;
+    }
+
+    /// One sample of the host spill tier: resident spilled pages and the
+    /// bytes they hold.
+    pub fn record_host(&mut self, pages: usize, bytes: u64) {
+        self.host_pages = pages;
+        self.host_bytes = bytes;
     }
 
     pub fn record_first_token(&mut self, since_submit: Duration) {
@@ -326,6 +357,13 @@ impl MetricsCollector {
             pages_free: self.pages_free,
             page_fragmentation: self.frag_sum / self.frag_samples.max(1) as f64,
             page_preemptions: self.page_preemptions,
+            pages_spilled: self.pages_spilled,
+            spill_bytes: self.spill_bytes,
+            restores: self.restores,
+            resurrections: self.resurrections,
+            replay_tokens: self.replay_tokens,
+            host_pages: self.host_pages,
+            host_bytes: self.host_bytes,
             fused_steps: self.fused_steps,
             fused_gemms: self.fused_gemms,
             mean_fused_batch: self.fused_rows as f64 / self.fused_steps.max(1) as f64,
@@ -408,6 +446,41 @@ impl MetricsCollector {
             "llmdt_page_preemptions_total",
             "Evictions forced by KV page-pool pressure.",
             r.page_preemptions as u64,
+        );
+        reg.counter(
+            "llmdt_pages_spilled_total",
+            "KV pages copied to the host tier by spill-evictions.",
+            r.pages_spilled as u64,
+        );
+        reg.counter(
+            "llmdt_spill_bytes_total",
+            "Bytes spilled to the host tier (packed on-device layout).",
+            r.spill_bytes,
+        );
+        reg.counter(
+            "llmdt_restores_total",
+            "Re-admissions served by a host-tier splice instead of a prefill replay.",
+            r.restores as u64,
+        );
+        reg.counter(
+            "llmdt_resurrections_total",
+            "In-flight sessions requeued (not failed) across an engine restart.",
+            r.resurrections as u64,
+        );
+        reg.counter(
+            "llmdt_replay_tokens_total",
+            "Context tokens scheduled for re-prefill by resurrections.",
+            r.replay_tokens as u64,
+        );
+        reg.gauge(
+            "llmdt_host_pages",
+            "Spilled KV pages resident on the host tier at the last sample.",
+            r.host_pages as f64,
+        );
+        reg.gauge(
+            "llmdt_host_bytes",
+            "Host-tier bytes held at the last sample.",
+            r.host_bytes as f64,
         );
         reg.counter("llmdt_steps_total", "Engine steps.", r.steps as u64);
         reg.counter("llmdt_decode_tokens_total", "Generated tokens.", r.decode_tokens as u64);
@@ -495,6 +568,20 @@ pub struct MetricsReport {
     pub page_fragmentation: f64,
     /// Sessions evicted because the page pool ran dry mid-step.
     pub page_preemptions: usize,
+    /// KV pages copied to the host tier by spill-evictions.
+    pub pages_spilled: usize,
+    /// Bytes spilled to the host tier (packed on-device layout).
+    pub spill_bytes: u64,
+    /// Re-admissions served by a host-tier splice instead of a replay.
+    pub restores: usize,
+    /// In-flight sessions requeued (not failed) across engine restarts.
+    pub resurrections: usize,
+    /// Context tokens scheduled for re-prefill by those resurrections.
+    pub replay_tokens: usize,
+    /// Spilled pages resident on the host tier at the last sample.
+    pub host_pages: usize,
+    /// Host-tier bytes held at the last sample.
+    pub host_bytes: u64,
     /// Fused batched forwards issued.
     pub fused_steps: usize,
     /// Fused GEMM launches across the run.
@@ -550,6 +637,22 @@ impl fmt::Display for MetricsReport {
                 f,
                 " | {} resume gaps p50 {:?} p99 {:?}",
                 self.resume_gaps, self.resume_gap_p50, self.resume_gap_p99
+            )?;
+        }
+        if self.pages_spilled > 0 || self.restores > 0 {
+            write!(
+                f,
+                " | spilled {} pages ({:.1} KiB) / {} restores",
+                self.pages_spilled,
+                self.spill_bytes as f64 / 1024.0,
+                self.restores
+            )?;
+        }
+        if self.resurrections > 0 {
+            write!(
+                f,
+                " | {} resurrections ({} replay tok)",
+                self.resurrections, self.replay_tokens
             )?;
         }
         if self.disconnected > 0 {
@@ -732,12 +835,23 @@ mod tests {
             "llmdt_samples_dropped_total",
             "llmdt_sessions_failed_total",
             "llmdt_watchdog_kills_total",
+            // spill / resurrection series are present (zero) even when the
+            // host tier is disabled, so dashboards and CI greps never 404
+            "llmdt_pages_spilled_total",
+            "llmdt_spill_bytes_total",
+            "llmdt_restores_total",
+            "llmdt_resurrections_total",
+            "llmdt_replay_tokens_total",
+            "llmdt_host_pages",
+            "llmdt_host_bytes",
             // fault series are present (zero) even with injection disarmed
             "llmdt_faults_injected_total",
             "llmdt_faults_pool_worker_panic_total",
             "llmdt_faults_forward_panic_total",
             "llmdt_faults_kv_reserve_fail_total",
             "llmdt_faults_engine_step_panic_total",
+            "llmdt_faults_host_tier_fail_total",
+            "llmdt_faults_restore_stall_total",
         ] {
             assert!(reg.get(name).is_some(), "missing series {name}");
         }

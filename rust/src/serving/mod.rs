@@ -41,17 +41,22 @@ pub mod kv_cache;
 pub mod metrics;
 pub mod scheduler;
 pub mod session;
+pub mod victim;
 
 pub use http::{HttpConfig, HttpServer, HttpStats, ServerExit};
-pub use kv_cache::{KvCache, KvCacheConfig, KvView, PageId, SlotId, SlotView, DEFAULT_PAGE_SIZE};
+pub use kv_cache::{
+    HostEntry, HostTier, KvCache, KvCacheConfig, KvView, PageId, SlotId, SlotView, SpillPolicy,
+    DEFAULT_PAGE_SIZE,
+};
 pub use metrics::{percentile, percentile_sorted, MetricsCollector, MetricsReport};
 pub use scheduler::{Scheduler, SchedulerConfig};
 pub use session::{DecodeSession, FinishReason, SessionState};
+pub use victim::{VictimPolicy, VictimPolicyKind, VictimView};
 
 use std::panic::AssertUnwindSafe;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
@@ -87,6 +92,10 @@ pub struct DecodeRequest {
     /// Per-request event stream (tokens arrive as they are decoded).
     pub events: mpsc::Sender<TokenEvent>,
     pub submitted: Instant,
+    /// Client-declared latency budget from `submitted` (`deadline_ms` on
+    /// the HTTP wire); the fair-share victim policy preempts the sessions
+    /// with the most remaining slack first. `None` = best-effort.
+    pub deadline: Option<Duration>,
 }
 
 impl DecodeRequest {
@@ -101,6 +110,7 @@ impl DecodeRequest {
                 eos: None,
                 events: tx,
                 submitted: clock::now(),
+                deadline: None,
             },
             rx,
         )
@@ -141,6 +151,14 @@ pub struct EngineConfig {
     /// oversubscribe: more long-context sequences admit against the same
     /// memory, with page-pressure preemption as the safety valve.
     pub kv_pages: usize,
+    /// Host-tier KV budget in bytes; 0 (the default) disables the tier.
+    /// When enabled, page-pressure evictions *spill* the victim's packed
+    /// page bytes to host memory instead of discarding them, and
+    /// re-admission splices the pages back into a fresh block table —
+    /// bit-identical to a replayed prefill, minus the recompute.
+    pub host_tier_bytes: usize,
+    /// Spill-vs-recompute break-even model consulted per eviction.
+    pub spill: SpillPolicy,
     pub scheduler: SchedulerConfig,
 }
 
@@ -153,6 +171,14 @@ pub struct Engine {
     active: Vec<DecodeSession>,
     metrics: MetricsCollector,
     prefill_chunk: usize,
+    /// Host-tier store for spilled KV images, keyed by session id. Entries
+    /// live only while their session waits in the admission queue: the
+    /// spill path inserts, re-admission takes (restore or fallback), and
+    /// every terminal exit for a queued session removes — host pages never
+    /// outlive their session (the drain invariant extends to this tier).
+    host: HostTier,
+    /// Break-even model for spill-vs-recompute (see [`SpillPolicy`]).
+    spill: SpillPolicy,
     /// Pages seized from the free list by an injected `kv_page_spike`
     /// (exhaustion pressure), with the remaining step count; always drained
     /// back into the pool before the engine goes idle so the zero-leaked-
@@ -208,6 +234,8 @@ impl Engine {
             active: Vec::new(),
             metrics: MetricsCollector::default(),
             prefill_chunk: cfg.scheduler.prefill_chunk.max(1),
+            host: HostTier::new(cfg.host_tier_bytes),
+            spill: cfg.spill,
             spike: None,
         })
     }
@@ -218,6 +246,12 @@ impl Engine {
 
     pub fn cache(&self) -> &KvCache {
         &self.cache
+    }
+
+    /// The host-tier spill store (occupancy probes; the drain invariant —
+    /// zero host pages once the queue empties — is asserted through this).
+    pub fn host_tier(&self) -> &HostTier {
+        &self.host
     }
 
     /// Positions one sequence may occupy (prompt + generated - 1). Clamped
@@ -281,7 +315,7 @@ impl Engine {
                 return false;
             }
         }
-        let s = DecodeSession::new(
+        let mut s = DecodeSession::new(
             req.id,
             req.prompt,
             req.max_new_tokens,
@@ -289,6 +323,7 @@ impl Engine {
             req.events,
             req.submitted,
         );
+        s.deadline = req.deadline;
         match self.sched.enqueue(s) {
             Ok(()) => true,
             Err(s) => {
@@ -350,6 +385,7 @@ impl Engine {
                 // the queue head and let the next step retry
                 let Some(slot) = self.cache.allocate() else {
                     if let Err(s) = self.sched.enqueue_front(s) {
+                        self.host.remove(s.id);
                         self.metrics.rejected += 1;
                         let _ = s.events.send(TokenEvent::Rejected {
                             request: s.id,
@@ -373,7 +409,39 @@ impl Engine {
                     );
                 }
                 s.phase_started_at = now;
-                s.begin_prefill(slot);
+                match self.host.take(s.id) {
+                    // spilled image on the host tier: splice it back into
+                    // the fresh block table and skip the prefill replay.
+                    // Restore can stall (injected slow host link — the
+                    // bubble lands in the session's resume_gap via
+                    // `resumed_from`, never its ITL) or fail (injected
+                    // transfer failure, or a pool raced dry), in which case
+                    // the entry is dropped and the session falls back to
+                    // the ordinary recompute replay — strictly the
+                    // pre-spill behavior.
+                    Some(entry) => {
+                        if faults::fire(faults::Site::RestoreStall) && clock::is_fake() {
+                            clock::advance(faults::stall());
+                        }
+                        let restored = !faults::fire(faults::Site::HostTierFail)
+                            && self.cache.restore_slot(slot, &entry);
+                        if restored {
+                            s.restore(slot, entry.len);
+                            self.metrics.restores += 1;
+                            if trace::enabled() {
+                                trace::instant(
+                                    trace::session_track(s.id),
+                                    "session",
+                                    "restore",
+                                    &[("positions", entry.len as f64)],
+                                );
+                            }
+                        } else {
+                            s.begin_prefill(slot);
+                        }
+                    }
+                    None => s.begin_prefill(slot),
+                }
                 self.active.push(s);
             }
         }
@@ -531,6 +599,9 @@ impl Engine {
             self.cache.pages_free(),
             self.cache.page_fragmentation(),
         );
+        if self.host.enabled() {
+            self.metrics.record_host(self.host.pages_in_use(), self.host.bytes_in_use() as u64);
+        }
         if let Some(t0) = step_t0 {
             trace::complete_here(
                 "engine",
@@ -716,19 +787,21 @@ impl Engine {
     }
 
     /// The stall watchdog's kill policy: among this micro-step's rows,
-    /// retire the still-active session holding the most KV pages — the
-    /// likeliest wedge, and the same ordering the page-pressure preemption
-    /// victim uses — as [`FinishReason::Failed`].
+    /// retire one still-active session as [`FinishReason::Failed`] —
+    /// chosen by the same configured [`VictimPolicyKind`] as page-pressure
+    /// preemption (under the default most-pages policy that is the
+    /// likeliest wedge, exactly the pre-policy behavior).
     fn watchdog_kill(&mut self, rows: &[Row]) {
-        let victim = rows
+        let cfg = self.sched.config();
+        let (kind, cooldown) = (cfg.victim_policy, cfg.resume_cooldown);
+        let views: Vec<VictimView> = rows
             .iter()
             .map(|&(i, _, _, _)| i)
             .filter(|&i| self.active[i].is_active())
-            .max_by_key(|&i| {
-                let slot = self.active[i].slot.expect("active session holds a slot");
-                (self.cache.pages_held(slot), self.cache.len(slot))
-            });
-        if let Some(i) = victim {
+            .map(|i| self.victim_view(&self.active[i]))
+            .collect();
+        if let Some(id) = victim::select(kind, &views, cooldown, clock::now()) {
+            let i = self.active.iter().position(|s| s.id == id).expect("victim is active");
             self.metrics.watchdog_kills += 1;
             self.fail_session(i, "stall watchdog");
         }
@@ -771,27 +844,66 @@ impl Engine {
 
     /// Put the engine back into a serveable state after a panic escaped
     /// [`Engine::step`] (caught by a supervisor's `catch_unwind`, e.g. the
-    /// HTTP front end's engine thread). Every in-flight session retires with
-    /// a terminal event — `Failed` unless it had already finished — and its
-    /// slot and pages return to the pool; queued sessions stay queued, so
-    /// the supervisor's next `run_with` serves admitted-but-unstarted
-    /// requests untouched. The cache itself is panic-consistent: slot
-    /// bookkeeping only mutates outside the unwound forward, and
-    /// [`Engine::supervised_forward`] already contains forward-path unwinds.
+    /// HTTP front end's engine thread). Sessions that already finished
+    /// retire with their real reason; queued sessions stay queued, so the
+    /// supervisor's next `run_with` serves admitted-but-unstarted requests
+    /// untouched. In-flight sessions split on
+    /// [`SchedulerConfig::resurrect`]:
+    ///
+    /// * **off** (default): they retire as `Failed` with a terminal event —
+    ///   the legacy restart contract (HTTP answers their never-streamed
+    ///   requests 503).
+    /// * **on**: they are requeued for deterministic resurrection — the
+    ///   prompt plus every token already emitted replays through chunked
+    ///   prefill into a fresh slot, greedy decode continues the same event
+    ///   stream bit-identically, and the client sees a `resume_gap` sample
+    ///   instead of a terminal `"failed"` line. `sessions_failed` then
+    ///   counts only genuinely poisoned rows (the ones
+    ///   [`Engine::supervised_forward`] retired before the panic escaped).
+    ///   A full bounded queue falls back to [`FinishReason::Preempted`],
+    ///   exactly like [`Engine::preempt`].
+    ///
+    /// In both modes every slot and its pages return to the pool. The cache
+    /// itself is panic-consistent: slot bookkeeping only mutates outside
+    /// the unwound forward, and [`Engine::supervised_forward`] already
+    /// contains forward-path unwinds.
     pub fn recover_after_panic(&mut self) {
         self.release_spike();
+        let resurrect = self.sched.config().resurrect;
         for mut s in std::mem::take(&mut self.active) {
             if let Some(slot) = s.slot.take() {
                 self.cache.free(slot);
             }
-            let reason = match s.state {
-                SessionState::Done(reason) => reason,
-                _ => FinishReason::Failed,
-            };
-            self.metrics.record_completion(reason);
+            if let SessionState::Done(reason) = s.state {
+                self.metrics.record_completion(reason);
+                let _ = s.events.send(TokenEvent::Finished {
+                    request: s.id,
+                    reason,
+                    generated: s.generated.len(),
+                });
+                continue;
+            }
+            if resurrect {
+                if s.is_active() {
+                    s.evict();
+                }
+                self.metrics.resurrections += 1;
+                self.metrics.replay_tokens += s.context_len();
+                s.requeue();
+                if let Err(s) = self.sched.enqueue_front(s) {
+                    self.host.remove(s.id);
+                    let _ = s.events.send(TokenEvent::Finished {
+                        request: s.id,
+                        reason: FinishReason::Preempted,
+                        generated: s.generated.len(),
+                    });
+                }
+                continue;
+            }
+            self.metrics.record_completion(FinishReason::Failed);
             let _ = s.events.send(TokenEvent::Finished {
                 request: s.id,
-                reason,
+                reason: FinishReason::Failed,
                 generated: s.generated.len(),
             });
         }
@@ -800,6 +912,7 @@ impl Engine {
             self.cache.pages_free(),
             self.cache.page_fragmentation(),
         );
+        self.metrics.record_host(self.host.pages_in_use(), self.host.bytes_in_use() as u64);
     }
 
     /// Make sure every row about to step in micro-step `micro` has a page
@@ -847,27 +960,79 @@ impl Engine {
             }
             let victim =
                 self.preemption_victim().expect("page pressure implies a runnable session");
-            self.preempt(victim);
+            if !self.spill_evict(victim) {
+                self.preempt(victim);
+            }
             self.metrics.page_preemptions += 1;
         }
     }
 
-    /// The page-pressure eviction policy: the runnable (prefill/decoding)
-    /// session holding the **most KV pages** — the longest context. It
-    /// frees the most pages per eviction, and preferring it over
-    /// short-context sessions minimizes evictions per reclaimed page (its
-    /// replay cost is paid at most once either way). Ties break toward the
-    /// most committed positions, then the most recently admitted. `None`
-    /// when nothing runnable is active.
+    /// Try to spill `id`'s KV image to the host tier instead of discarding
+    /// it. All of the victim's pages move (attention reads the whole
+    /// committed history every step, so there is no colder subset): the
+    /// packed page bytes are copied out, the device pages freed, and the
+    /// session requeued exactly like [`Engine::preempt`] — except its next
+    /// admission splices the image back instead of replaying prefill.
+    /// Returns `false` — caller falls back to preempt-and-recompute — when
+    /// the tier is disabled, the break-even model favors recompute, the
+    /// insert would blow the host budget, or a `host_tier_fail` injection
+    /// simulates the copy failing.
+    fn spill_evict(&mut self, id: u64) -> bool {
+        if !self.host.enabled() {
+            return false;
+        }
+        let Some(i) = self.active.iter().position(|s| s.id == id) else {
+            return false;
+        };
+        let Some(slot) = self.active[i].slot else {
+            return false;
+        };
+        let pages = self.cache.pages_held(slot);
+        let bytes = pages * self.cache.page_spill_bytes();
+        if pages == 0 || !self.spill.spill_wins(bytes, self.active[i].context_len()) {
+            return false;
+        }
+        if faults::fire(faults::Site::HostTierFail) {
+            return false;
+        }
+        let entry = self.cache.export_slot(slot);
+        if self.host.insert(id, entry).is_err() {
+            return false;
+        }
+        self.metrics.pages_spilled += pages;
+        self.metrics.spill_bytes += bytes as u64;
+        self.evict_to_queue(i, "spill");
+        true
+    }
+
+    /// The page-pressure eviction choice, delegated to the configured
+    /// [`VictimPolicyKind`] over the runnable (prefill/decoding) sessions,
+    /// after the resume-cooldown filter ([`victim::select`]). The default
+    /// ([`VictimPolicyKind::MostPages`], zero cooldown) reproduces the
+    /// pre-policy engine exactly: the session holding the most KV pages,
+    /// ties toward the most committed positions, then the most recently
+    /// admitted. `None` when nothing runnable is active.
     pub fn preemption_victim(&self) -> Option<u64> {
-        self.active
-            .iter()
-            .filter(|s| s.is_active())
-            .max_by_key(|s| {
-                let slot = s.slot.expect("active session holds a slot");
-                (self.cache.pages_held(slot), self.cache.len(slot))
-            })
-            .map(|s| s.id)
+        let cfg = self.sched.config();
+        let (kind, cooldown) = (cfg.victim_policy, cfg.resume_cooldown);
+        let views: Vec<VictimView> =
+            self.active.iter().filter(|s| s.is_active()).map(|s| self.victim_view(s)).collect();
+        victim::select(kind, &views, cooldown, clock::now())
+    }
+
+    /// Snapshot one active session for victim selection.
+    fn victim_view(&self, s: &DecodeSession) -> VictimView {
+        let slot = s.slot.expect("active session holds a slot");
+        VictimView {
+            id: s.id,
+            pages: self.cache.pages_held(slot),
+            len: self.cache.len(slot),
+            last_token_at: s.last_token_at,
+            deadline_slack: s
+                .deadline
+                .map(|d| d.saturating_sub(clock::now().saturating_duration_since(s.submitted))),
+            resumed_at: s.resumed_at,
+        }
     }
 
     /// Preempt an active session: reclaim its KV pages and block table
@@ -884,6 +1049,18 @@ impl Engine {
             Some(i) => i,
             None => return false,
         };
+        self.evict_to_queue(i, "preempt");
+        true
+    }
+
+    /// Shared eviction tail for [`Engine::preempt`] and
+    /// [`Engine::spill_evict`]: remove `active[i]`, free its slot and
+    /// pages, and send it back to the head of the admission queue. `how`
+    /// labels the trace instant (`"preempt"` = recompute on re-admission,
+    /// `"spill"` = host-tier restore). If the bounded queue is full the
+    /// stream ends with [`FinishReason::Preempted`] and any spilled image
+    /// is dropped — a terminal exit must never leave host pages behind.
+    fn evict_to_queue(&mut self, i: usize, how: &'static str) {
         let mut s = self.active.remove(i);
         if trace::enabled() {
             let track = trace::session_track(s.id);
@@ -897,7 +1074,7 @@ impl Engine {
                 &[],
             );
             let pages = s.slot.map(|slot| self.cache.pages_held(slot)).unwrap_or(0);
-            trace::instant(track, "session", "preempt", &[("pages_freed", pages as f64)]);
+            trace::instant(track, "session", how, &[("pages_freed", pages as f64)]);
         }
         if let Some(slot) = s.slot.take() {
             self.cache.free(slot);
@@ -906,13 +1083,13 @@ impl Engine {
         self.metrics.evicted += 1;
         s.requeue();
         if let Err(s) = self.sched.enqueue_front(s) {
+            self.host.remove(s.id);
             let _ = s.events.send(TokenEvent::Finished {
                 request: s.id,
                 reason: FinishReason::Preempted,
                 generated: s.generated.len(),
             });
         }
-        true
     }
 
     /// Serve a request channel until it closes and all work drains; returns
@@ -1006,6 +1183,7 @@ impl Engine {
     pub fn abort(&mut self) {
         self.release_spike();
         for s in self.sched.drain() {
+            self.host.remove(s.id);
             self.metrics.rejected += 1;
             let _ = s
                 .events
@@ -1121,6 +1299,7 @@ pub fn run_decode_loadgen(
                         eos: None,
                         events: etx,
                         submitted: clock::now(),
+                        deadline: None,
                     };
                     if tx.send(req).is_err() {
                         return;

@@ -12,6 +12,7 @@ use std::collections::VecDeque;
 use std::time::Duration;
 
 use crate::serving::session::DecodeSession;
+use crate::serving::victim::VictimPolicyKind;
 
 /// Scheduling knobs, generalizing the old `ServeConfig` pair
 /// (`max_wait`/`max_requests`) to the decode engine.
@@ -41,6 +42,28 @@ pub struct SchedulerConfig {
     /// `Duration::ZERO` (the default) disables the watchdog. Measured on
     /// `obs::clock`, so deterministic tests drive it with the fake clock.
     pub step_deadline: Duration,
+    /// How the engine picks which active session to evict under page
+    /// pressure (and which row the stall watchdog retires). See
+    /// [`VictimPolicyKind`] for the policies.
+    pub victim_policy: VictimPolicyKind,
+    /// A session re-admitted after an eviction is ineligible as a victim
+    /// for this long (measured on `obs::clock` from its re-admission), so
+    /// two equal candidates under sustained pressure cannot ping-pong
+    /// preempt→requeue→preempt forever. When *every* candidate is inside
+    /// the cooldown the filter is waived — page pressure must always be
+    /// able to reclaim a runnable session. `Duration::ZERO` (the default —
+    /// batch drivers and the existing eviction schedules are pinned
+    /// without it; the serving CLIs switch it on) disables it.
+    pub resume_cooldown: Duration,
+    /// Resurrect in-flight sessions after an engine-thread panic: instead
+    /// of retiring them as `Failed`, [`Engine::recover_after_panic`]
+    /// requeues them and the deterministic replay continues each HTTP
+    /// stream (clients see a `resume_gap`, not a terminal `"failed"`
+    /// line). Off by default: batch drivers and the legacy restart
+    /// contract expect admitted work to fail visibly on a crash.
+    ///
+    /// [`Engine::recover_after_panic`]: crate::serving::Engine::recover_after_panic
+    pub resurrect: bool,
 }
 
 impl Default for SchedulerConfig {
@@ -52,6 +75,9 @@ impl Default for SchedulerConfig {
             prefill_chunk: 32,
             reject_saturated: false,
             step_deadline: Duration::ZERO,
+            victim_policy: VictimPolicyKind::MostPages,
+            resume_cooldown: Duration::ZERO,
+            resurrect: false,
         }
     }
 }

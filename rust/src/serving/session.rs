@@ -9,7 +9,7 @@
 //! decoding resumes bit-identically in a fresh slot.
 
 use std::sync::mpsc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::obs::clock;
 use crate::serving::kv_cache::SlotId;
@@ -94,6 +94,18 @@ pub struct DecodeSession {
     /// When the session entered its current phase (prefill/decode); the
     /// engine advances it at transitions to bound lifecycle trace spans.
     pub phase_started_at: Instant,
+    /// Client-declared latency budget (`deadline_ms` on the wire), measured
+    /// from `submitted`. Only the fair-share victim policy reads it: sessions
+    /// with less slack are preempted last. `None` means best-effort.
+    pub deadline: Option<Duration>,
+    /// How many times the session has been requeued after an eviction
+    /// (spill, preemption, or resurrection). Distinguishes a resumed
+    /// admission from a first admission.
+    pub resumes: usize,
+    /// When the session last re-entered a slot after an eviction. Victim
+    /// selection treats sessions inside the resume cooldown as ineligible so
+    /// two equal candidates cannot ping-pong preempt→requeue→preempt.
+    pub resumed_at: Option<Instant>,
 }
 
 impl DecodeSession {
@@ -122,6 +134,9 @@ impl DecodeSession {
             prefilled: 0,
             queued_at: submitted,
             phase_started_at: submitted,
+            deadline: None,
+            resumes: 0,
+            resumed_at: None,
         }
     }
 
@@ -157,6 +172,27 @@ impl DecodeSession {
         assert_eq!(self.state, SessionState::Queued, "begin_prefill from {:?}", self.state);
         self.slot = Some(slot);
         self.state = SessionState::Prefill;
+        if self.resumes > 0 {
+            self.resumed_at = Some(clock::now());
+        }
+    }
+
+    /// Queued → Prefill/Decoding with `cached` context positions already
+    /// restored into the slot (host-tier block-table splice). If the whole
+    /// context is cached the session skips prefill entirely and decodes from
+    /// [`Self::last_token`] exactly as it would have without the eviction.
+    pub fn restore(&mut self, slot: SlotId, cached: usize) {
+        assert_eq!(self.state, SessionState::Queued, "restore from {:?}", self.state);
+        assert!(self.slot.is_none(), "restore while already holding a slot");
+        assert!(cached <= self.context_len(), "restored {cached} > context {}", self.context_len());
+        self.slot = Some(slot);
+        self.prefilled = cached;
+        self.state = if cached == self.context_len() {
+            SessionState::Decoding
+        } else {
+            SessionState::Prefill
+        };
+        self.resumed_at = Some(clock::now());
     }
 
     /// Prefill → Decoding once the whole context is cached.
@@ -193,6 +229,7 @@ impl DecodeSession {
         if let Some(t) = self.last_token_at.take() {
             self.resumed_from.get_or_insert(t);
         }
+        self.resumes += 1;
         self.state = SessionState::Queued;
     }
 
@@ -330,5 +367,58 @@ mod tests {
     fn requeue_requires_evicted() {
         let (mut s, _rx) = session(4, None);
         s.requeue();
+    }
+
+    #[test]
+    fn restore_skips_prefill_when_the_whole_context_is_cached() {
+        let (mut s, _rx) = session(8, None);
+        s.begin_prefill(1);
+        s.prefilled = s.prompt.len();
+        s.begin_decode();
+        s.generated.push(9);
+        s.slot = None;
+        s.evict();
+        s.requeue();
+        assert_eq!(s.resumes, 1);
+        // host-tier restore: all 4 context positions spliced back in
+        s.restore(2, s.context_len());
+        assert_eq!(s.state, SessionState::Decoding);
+        assert_eq!(s.slot, Some(2));
+        assert_eq!(s.prefilled, 4);
+        assert!(s.resumed_at.is_some(), "restore marks the cooldown clock");
+        assert_eq!(s.last_token(), 9, "decode continues from the last generated token");
+    }
+
+    #[test]
+    fn restore_with_partial_cache_continues_chunked_prefill() {
+        let (mut s, _rx) = session(8, None);
+        s.begin_prefill(0);
+        s.slot = None;
+        s.evict();
+        s.requeue();
+        s.restore(1, 2); // 2 of 3 prompt tokens cached
+        assert_eq!(s.state, SessionState::Prefill);
+        assert_eq!(s.prefilled, 2);
+        assert_eq!(s.context_token(s.prefilled), 5, "prefill resumes at the first uncached token");
+    }
+
+    #[test]
+    fn first_admission_never_marks_the_resume_cooldown() {
+        let (mut s, _rx) = session(4, None);
+        s.begin_prefill(0);
+        assert_eq!(s.resumed_at, None, "fresh admissions are immediately evictable");
+        s.slot = None;
+        s.evict();
+        s.requeue();
+        s.begin_prefill(1);
+        assert!(s.resumed_at.is_some(), "re-admission after eviction arms the cooldown");
+    }
+
+    #[test]
+    #[should_panic(expected = "restore from")]
+    fn restore_requires_queued() {
+        let (mut s, _rx) = session(4, None);
+        s.begin_prefill(0);
+        s.restore(1, 1);
     }
 }

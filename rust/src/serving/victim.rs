@@ -1,0 +1,269 @@
+//! Victim selection for page-pressure preemption and the stall watchdog.
+//!
+//! When the KV page pool runs dry mid-step the engine must reclaim pages
+//! from one active session; when a micro-step blows the stall deadline the
+//! watchdog must retire one batch row. Both used to hard-code
+//! "most-pages-held". This module makes the choice a policy: the engine
+//! snapshots each runnable session into a [`VictimView`] and hands the
+//! slate to the configured [`VictimPolicy`], which returns the index of
+//! the session to sacrifice.
+//!
+//! Selection also enforces the **resume cooldown** (satellite of ISSUE 9):
+//! a session re-admitted after an eviction is ineligible for
+//! `resume_cooldown`, so two equal candidates under sustained pressure
+//! cannot ping-pong preempt→requeue→preempt forever. The filter is waived
+//! when *every* candidate is inside the cooldown — page pressure must
+//! always be able to reclaim a runnable session (the engine's
+//! `resolve_page_pressure` loop relies on it).
+
+use std::time::{Duration, Instant};
+
+/// Policy selector carried in `SchedulerConfig` (which is `Copy`, so this
+/// is too). CLI names: `most-pages`, `lru`, `fair-share`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum VictimPolicyKind {
+    /// Evict the session holding the most KV pages (the longest context):
+    /// most pages freed per eviction, fewest evictions per reclaimed page.
+    /// The pre-policy engine's behavior, and the default.
+    MostPages,
+    /// Evict the session whose decode advanced least recently — the
+    /// coldest stream loses its slot, mirroring the LRU intuition of the
+    /// host tier itself.
+    Lru,
+    /// Evict the session with the most deadline slack; best-effort
+    /// sessions (no deadline) go first. Fed by the HTTP layer's
+    /// `deadline_ms` request field, judged by the `perf_http` p99 curves.
+    FairShare,
+}
+
+impl VictimPolicyKind {
+    /// Parse a CLI/config name; `None` for unknown names.
+    pub fn from_name(name: &str) -> Option<VictimPolicyKind> {
+        match name {
+            "most-pages" => Some(VictimPolicyKind::MostPages),
+            "lru" => Some(VictimPolicyKind::Lru),
+            "fair-share" => Some(VictimPolicyKind::FairShare),
+            _ => None,
+        }
+    }
+
+    /// Stable name, inverse of [`Self::from_name`].
+    pub fn name(&self) -> &'static str {
+        match self {
+            VictimPolicyKind::MostPages => "most-pages",
+            VictimPolicyKind::Lru => "lru",
+            VictimPolicyKind::FairShare => "fair-share",
+        }
+    }
+
+    /// The policy implementation behind this kind.
+    pub fn policy(&self) -> &'static dyn VictimPolicy {
+        match self {
+            VictimPolicyKind::MostPages => &MostPagesHeld,
+            VictimPolicyKind::Lru => &LruByLastStep,
+            VictimPolicyKind::FairShare => &FairShareSlack,
+        }
+    }
+}
+
+/// One eviction candidate, snapshotted at selection time. Built by the
+/// engine from each runnable session + its cache accounting; policies see
+/// only this view, never the sessions themselves.
+#[derive(Clone, Copy, Debug)]
+pub struct VictimView {
+    pub id: u64,
+    /// KV pages the session's slot holds right now.
+    pub pages: usize,
+    /// Committed cache positions (context length so far).
+    pub len: usize,
+    /// When the session last emitted a token; `None` while still
+    /// prefilling its first token.
+    pub last_token_at: Option<Instant>,
+    /// Remaining latency budget (`deadline - elapsed`, floored at zero);
+    /// `None` for best-effort sessions without a deadline.
+    pub deadline_slack: Option<Duration>,
+    /// When the session last re-entered a slot after an eviction; `None`
+    /// for first admissions (immediately evictable).
+    pub resumed_at: Option<Instant>,
+}
+
+/// A victim-selection policy: given the runnable candidates (in batch
+/// order), return the index of the one to evict, or `None` for an empty
+/// slate. Implementations must be deterministic — tests replay schedules
+/// and expect identical victims.
+pub trait VictimPolicy {
+    fn pick(&self, candidates: &[VictimView]) -> Option<usize>;
+}
+
+/// See [`VictimPolicyKind::MostPages`]. Ties break toward the most
+/// committed positions, then the most recently admitted (matching the
+/// pre-policy `max_by_key` exactly, so existing eviction tests and traces
+/// replay unchanged).
+pub struct MostPagesHeld;
+
+impl VictimPolicy for MostPagesHeld {
+    fn pick(&self, candidates: &[VictimView]) -> Option<usize> {
+        candidates
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, c)| (c.pages, c.len))
+            .map(|(i, _)| i)
+    }
+}
+
+/// See [`VictimPolicyKind::Lru`]. A session that has never emitted
+/// (`last_token_at == None`) is the coldest of all; ties break toward the
+/// most pages freed, then the earliest candidate.
+pub struct LruByLastStep;
+
+impl VictimPolicy for LruByLastStep {
+    fn pick(&self, candidates: &[VictimView]) -> Option<usize> {
+        use std::cmp::Reverse;
+        candidates
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, c)| (c.last_token_at, Reverse(c.pages), Reverse(c.len)))
+            .map(|(i, _)| i)
+    }
+}
+
+/// See [`VictimPolicyKind::FairShare`]. Best-effort sessions outrank any
+/// deadline-bearing one as victims; among deadline holders the most slack
+/// loses; ties break toward the most pages freed.
+pub struct FairShareSlack;
+
+impl VictimPolicy for FairShareSlack {
+    fn pick(&self, candidates: &[VictimView]) -> Option<usize> {
+        candidates
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, c)| (c.deadline_slack.is_none(), c.deadline_slack, c.pages, c.len))
+            .map(|(i, _)| i)
+    }
+}
+
+/// Apply the resume cooldown, then the policy: candidates re-admitted
+/// within `cooldown` of `now` are filtered out unless that would empty the
+/// slate (pressure always reclaims *someone*). Returns the victim's
+/// session id.
+pub fn select(
+    kind: VictimPolicyKind,
+    candidates: &[VictimView],
+    cooldown: Duration,
+    now: Instant,
+) -> Option<u64> {
+    if candidates.is_empty() {
+        return None;
+    }
+    let policy = kind.policy();
+    if !cooldown.is_zero() {
+        let eligible: Vec<VictimView> = candidates
+            .iter()
+            .copied()
+            .filter(|c| match c.resumed_at {
+                Some(t) => now.saturating_duration_since(t) >= cooldown,
+                None => true,
+            })
+            .collect();
+        if !eligible.is_empty() {
+            return policy.pick(&eligible).map(|i| eligible[i].id);
+        }
+        // every candidate is mid-cooldown: waive the filter rather than
+        // leave the pressure loop with no victim
+    }
+    policy.pick(candidates).map(|i| candidates[i].id)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::clock;
+
+    fn view(id: u64, pages: usize, len: usize) -> VictimView {
+        VictimView { id, pages, len, last_token_at: None, deadline_slack: None, resumed_at: None }
+    }
+
+    #[test]
+    fn policy_names_round_trip() {
+        for kind in [VictimPolicyKind::MostPages, VictimPolicyKind::Lru, VictimPolicyKind::FairShare]
+        {
+            assert_eq!(VictimPolicyKind::from_name(kind.name()), Some(kind));
+        }
+        assert_eq!(VictimPolicyKind::from_name("round-robin"), None);
+    }
+
+    #[test]
+    fn most_pages_prefers_pages_then_len_then_latest() {
+        let c = [view(1, 2, 8), view(2, 3, 4), view(3, 3, 6), view(4, 3, 6)];
+        let picked = MostPagesHeld.pick(&c).unwrap();
+        // pages tie at 3 → len tie at 6 → max_by_key keeps the last (the
+        // most recently admitted), exactly like the pre-policy engine
+        assert_eq!(c[picked].id, 4);
+    }
+
+    #[test]
+    fn lru_evicts_the_coldest_stream() {
+        let _clock = clock::fake();
+        let t0 = clock::now();
+        clock::advance(Duration::from_millis(10));
+        let t1 = clock::now();
+        let c = [
+            VictimView { last_token_at: Some(t1), ..view(1, 4, 9) },
+            VictimView { last_token_at: Some(t0), ..view(2, 1, 3) },
+            VictimView { last_token_at: Some(t1), ..view(3, 2, 5) },
+        ];
+        assert_eq!(c[LruByLastStep.pick(&c).unwrap()].id, 2, "oldest token wins eviction");
+        // a never-emitted session is colder than any emitted one
+        let c2 = [VictimView { last_token_at: Some(t0), ..view(1, 4, 9) }, view(2, 1, 3)];
+        assert_eq!(c2[LruByLastStep.pick(&c2).unwrap()].id, 2);
+    }
+
+    #[test]
+    fn fair_share_sacrifices_best_effort_then_most_slack() {
+        let slack = |ms| Some(Duration::from_millis(ms));
+        let c = [
+            VictimView { deadline_slack: slack(5), ..view(1, 4, 9) },
+            VictimView { deadline_slack: None, ..view(2, 1, 3) },
+            VictimView { deadline_slack: slack(500), ..view(3, 2, 5) },
+        ];
+        assert_eq!(c[FairShareSlack.pick(&c).unwrap()].id, 2, "best-effort goes first");
+        let c2 = [
+            VictimView { deadline_slack: slack(5), ..view(1, 4, 9) },
+            VictimView { deadline_slack: slack(500), ..view(3, 2, 5) },
+        ];
+        assert_eq!(c2[FairShareSlack.pick(&c2).unwrap()].id, 3, "most slack loses");
+    }
+
+    #[test]
+    fn cooldown_shields_the_just_resumed_until_it_expires() {
+        let _clock = clock::fake();
+        let resumed = clock::now();
+        let cooldown = Duration::from_millis(250);
+        // the bigger session just resumed; the smaller one is fair game
+        let c = [VictimView { resumed_at: Some(resumed), ..view(1, 4, 9) }, view(2, 1, 3)];
+        assert_eq!(select(VictimPolicyKind::MostPages, &c, cooldown, clock::now()), Some(2));
+        // once the cooldown lapses the policy's own preference returns
+        clock::advance(cooldown);
+        assert_eq!(select(VictimPolicyKind::MostPages, &c, cooldown, clock::now()), Some(1));
+    }
+
+    #[test]
+    fn cooldown_is_waived_when_every_candidate_is_inside_it() {
+        let _clock = clock::fake();
+        let resumed = clock::now();
+        let c = [
+            VictimView { resumed_at: Some(resumed), ..view(1, 4, 9) },
+            VictimView { resumed_at: Some(resumed), ..view(2, 1, 3) },
+        ];
+        let picked = select(VictimPolicyKind::MostPages, &c, Duration::from_millis(250), clock::now());
+        assert_eq!(picked, Some(1), "pressure still reclaims a session");
+    }
+
+    #[test]
+    fn zero_cooldown_disables_the_filter() {
+        let _clock = clock::fake();
+        let c = [VictimView { resumed_at: Some(clock::now()), ..view(1, 4, 9) }, view(2, 1, 3)];
+        assert_eq!(select(VictimPolicyKind::MostPages, &c, Duration::ZERO, clock::now()), Some(1));
+        assert_eq!(select(VictimPolicyKind::MostPages, &[], Duration::ZERO, clock::now()), None);
+    }
+}

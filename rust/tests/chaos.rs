@@ -319,6 +319,198 @@ fn http_supervisor_restarts_the_engine_and_keeps_serving() {
 }
 
 #[test]
+fn resurrection_continues_admitted_streams_across_an_engine_panic() {
+    let _g = lock();
+    faults::silence_injected_panics();
+    faults::arm(FaultPlan::new(0xd00d).one_shot(Site::EngineStepPanic));
+    let (cfg, ckpt) = model("nano");
+    let eng = Engine::new(
+        cfg,
+        ckpt,
+        EngineConfig {
+            slots: 1,
+            scheduler: SchedulerConfig {
+                max_batch: 1,
+                prefill_chunk: 1,
+                resurrect: true,
+                ..SchedulerConfig::default()
+            },
+            ..EngineConfig::default()
+        },
+    );
+    let server = serve(eng, HttpConfig::default()).expect("bind 127.0.0.1:0");
+    let addr = server.addr();
+
+    // Same schedule as the legacy supervisor test: A is mid-prefill when
+    // the injected step panic unwinds the engine thread. With `resurrect`
+    // on, the recovery requeues A instead of failing it, the replay
+    // continues the *same* chunked stream, and the client never sees a
+    // 503 for work that was already admitted.
+    let prompt: Vec<i32> = (0..24).map(|t| t % 7 + 1).collect();
+    let mut stream =
+        ChunkStream::open(addr, "POST", "/generate", Some(&gen_body(&prompt, 4))).unwrap();
+    assert_eq!(stream.status, 200, "an admitted request is never answered 503");
+    let mut indices = Vec::new();
+    let mut done_line = String::new();
+    while let Ok(Some(line)) = stream.next_chunk() {
+        if line.contains("\"done\":true") {
+            done_line = line;
+            break;
+        }
+        let idx = llm_datatypes::serving::http::json_int_field(&line, "index")
+            .unwrap_or_else(|| panic!("token line without index: {line}"));
+        indices.push(idx);
+    }
+    assert_eq!(
+        indices,
+        vec![0, 1, 2, 3],
+        "the resurrected stream is gapless and duplicate-free across the restart"
+    );
+    assert!(done_line.contains("\"reason\":\"max_tokens\""), "terminal: {done_line}");
+
+    let deadline = Instant::now() + Duration::from_secs(5);
+    let metrics = loop {
+        let m = fetch(addr, "GET", "/metrics", None).unwrap();
+        if m.body.contains("llmdt_http_engine_restarts_total 1") || Instant::now() > deadline {
+            break m;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    };
+    for series in [
+        "llmdt_http_engine_restarts_total 1",
+        "llmdt_sessions_failed_total 0",
+        "llmdt_resurrections_total 1",
+        "llmdt_faults_engine_step_panic_total 1",
+    ] {
+        assert!(metrics.body.contains(series), "missing {series} in:\n{}", metrics.body);
+    }
+    faults::disarm();
+
+    let exit = server.shutdown();
+    let report = exit.report.expect("the supervised engine still returns its report");
+    assert_eq!(exit.http.engine_restarts, 1);
+    assert_eq!(report.failed, 0, "resurrection reserves Failed for poisoned rows");
+    assert_eq!(report.resurrections, 1, "A was requeued, not retired");
+    assert!(report.replay_tokens >= prompt.len(), "the replay re-prefills A's context");
+    assert_eq!(exit.engine.cache().pages_in_use(), 0, "recovery leaked no pages");
+    assert_eq!(exit.engine.cache().slots_in_use(), 0);
+}
+
+#[test]
+fn host_tier_failure_degrades_spill_to_recompute_without_losing_sessions() {
+    let _g = lock();
+    faults::silence_injected_panics();
+    let (cfg, ckpt) = model("nano");
+    // page-starved enough that pressure must evict (12 pages of 4 against
+    // four ~3-page contexts growing to ~4 pages), with a host tier that
+    // would normally absorb every victim
+    let mut eng = Engine::new(
+        cfg,
+        ckpt,
+        EngineConfig {
+            slots: 4,
+            page_size: 4,
+            kv_pages: 12,
+            host_tier_bytes: 1 << 20,
+            scheduler: SchedulerConfig { max_batch: 4, ..SchedulerConfig::default() },
+            ..EngineConfig::default()
+        },
+    );
+    let mut rxs = Vec::new();
+    for i in 0..4 {
+        let (req, rx) = DecodeRequest::new(vec![1 + i % 7, 2, 3, 4, 5, 6], 10);
+        eng.submit(req);
+        rxs.push(rx);
+    }
+    // every spill attempt fails at the (simulated) host copy
+    faults::arm(FaultPlan::new(0xf411).rate(Site::HostTierFail, 1.0));
+    drive(&mut eng);
+    faults::disarm();
+
+    for (i, rx) in rxs.iter().enumerate() {
+        let (tokens, fins) = terminal(rx);
+        assert_eq!(fins, vec![FinishReason::MaxTokens], "request {i} survived the fallback");
+        assert_eq!(tokens, 10, "request {i} streamed its full budget");
+    }
+    let report = eng.report();
+    assert!(report.page_preemptions > 0, "the pool actually hit pressure");
+    assert_eq!(report.pages_spilled, 0, "no spill completes while the host link is down");
+    assert_eq!(report.restores, 0);
+    assert_eq!(report.failed, 0, "recompute fallback loses nothing");
+    assert!(faults::injected(Site::HostTierFail) >= 1, "the fallback was exercised");
+    assert_eq!(eng.host_tier().sessions(), 0, "failed spills leave no host entries");
+    assert_eq!(eng.cache().pages_in_use(), 0, "no leaked pages after the drain");
+}
+
+#[test]
+fn resume_cooldown_stops_preemption_ping_pong() {
+    let _g = lock();
+    faults::silence_injected_panics();
+    // fake clock: time only moves when the test says so, making "inside
+    // the cooldown" a deterministic statement
+    let _clock = clock::fake();
+    let (cfg, ckpt) = model("nano");
+    let cooldown = Duration::from_millis(250);
+    let mut eng = Engine::new(
+        cfg,
+        ckpt,
+        EngineConfig {
+            slots: 2,
+            page_size: 4,
+            scheduler: SchedulerConfig {
+                max_batch: 2,
+                resume_cooldown: cooldown,
+                ..SchedulerConfig::default()
+            },
+            ..EngineConfig::default()
+        },
+    );
+    // A's context dwarfs B's, so most-pages always names A when eligible
+    let (req_a, rx_a) = DecodeRequest::new((0..16).map(|t| t % 7 + 1).collect(), 24);
+    let a_id = req_a.id;
+    let (req_b, rx_b) = DecodeRequest::new(vec![1, 2, 3], 24);
+    let b_id = req_b.id;
+    eng.submit(req_a);
+    eng.submit(req_b);
+    for _ in 0..2 {
+        eng.step().unwrap();
+    }
+    assert_eq!(eng.preemption_victim(), Some(a_id), "most pages held: A is the victim");
+
+    // evict A and let the next step re-admit it (replay completes within
+    // one prefill chunk). Pre-cooldown engines would name A again here —
+    // it still holds the most pages — and sustained pressure ping-pongs
+    // A forever while B never yields a page.
+    assert!(eng.preempt(a_id));
+    eng.step().unwrap();
+    assert_eq!(
+        eng.preemption_victim(),
+        Some(b_id),
+        "A is shielded by the resume cooldown; pressure must rotate to B"
+    );
+
+    // once the cooldown lapses, A's page holdings make it the victim again
+    clock::advance(cooldown + Duration::from_millis(1));
+    assert_eq!(eng.preemption_victim(), Some(a_id), "the shield expires with the cooldown");
+
+    // waiver: when every candidate is freshly resumed, selection must
+    // still name someone — pressure can never be left without a victim
+    assert!(eng.preempt(a_id));
+    assert!(eng.preempt(b_id));
+    eng.step().unwrap();
+    assert!(
+        eng.preemption_victim().is_some(),
+        "all-cooling-down candidates waive the filter instead of wedging pressure"
+    );
+
+    drive(&mut eng);
+    let (ta, fa) = terminal(&rx_a);
+    let (tb, fb) = terminal(&rx_b);
+    assert_eq!((ta, fa), (24, vec![FinishReason::MaxTokens]), "A finished despite evictions");
+    assert_eq!((tb, fb), (24, vec![FinishReason::MaxTokens]), "B finished despite evictions");
+}
+
+#[test]
 fn client_disconnect_storm_drains_clean_and_leaks_nothing() {
     let _g = lock();
     faults::silence_injected_panics();

@@ -1,0 +1,233 @@
+//! Token-identity properties for graceful degradation (ISSUE 9).
+//!
+//! The contract under test: neither tier movement nor an engine crash may
+//! change **what** a stream says — only **when** it says it. Two schedules
+//! are certified against an unperturbed baseline, for every batch size
+//! 1–8 on fp32 and every packed KV format:
+//!
+//! - **spill → restore**: a page-starved engine with a host tier evicts
+//!   victims by copying their packed KV pages out and splices them back
+//!   at re-admission. The restored stream must be bit-identical (tokens
+//!   *and* logprob bits) to the unpressured run — the spilled bytes are
+//!   the on-device layout verbatim, so the splice is exact by the paged
+//!   equivalence property.
+//! - **panic → resurrect**: `recover_after_panic` with `resurrect: true`
+//!   requeues every in-flight session instead of failing it; the chunked
+//!   prefill replay of `prompt ++ generated` must continue each stream
+//!   bit-identically (greedy decode is deterministic in the committed
+//!   context).
+//!
+//! Both properties also pin the zero-leak invariant: after the drain,
+//! every device page is back in the pool and the host tier holds nothing.
+
+use std::sync::mpsc;
+
+use llm_datatypes::coordinator::trainer;
+use llm_datatypes::model_io::{zoo, Checkpoint, ModelConfig};
+use llm_datatypes::serving::{
+    DecodeRequest, Engine, EngineConfig, FinishReason, SchedulerConfig, TokenEvent,
+};
+
+/// KV formats certified, `None` = fp32 lanes (spilled as raw f32 LE bytes).
+const KV_FORMATS: [Option<&str>; 4] = [None, Some("sf4"), Some("nf4"), Some("e2m1_sp")];
+
+const MAX_NEW: usize = 12;
+
+#[allow(clippy::too_many_arguments)]
+fn engine(
+    cfg: ModelConfig,
+    ckpt: Checkpoint,
+    slots: usize,
+    kv_format: Option<&'static str>,
+    page_size: usize,
+    kv_pages: usize,
+    host_tier_bytes: usize,
+    resurrect: bool,
+) -> Engine {
+    Engine::new(
+        cfg,
+        ckpt,
+        EngineConfig {
+            slots,
+            kv_format,
+            page_size,
+            kv_pages,
+            host_tier_bytes,
+            scheduler: SchedulerConfig { max_batch: slots, resurrect, ..SchedulerConfig::default() },
+            ..EngineConfig::default()
+        },
+    )
+}
+
+/// Deterministic varied-length prompt for lane `i` (2–6 tokens).
+fn prompt(cfg: &ModelConfig, i: usize) -> Vec<i32> {
+    (0..2 + (i * 3) % 5).map(|t| ((t * 7 + i * 11 + 1) % cfg.vocab) as i32).collect()
+}
+
+fn submit_batch(eng: &mut Engine, cfg: &ModelConfig, b: usize) -> Vec<mpsc::Receiver<TokenEvent>> {
+    (0..b)
+        .map(|i| {
+            let (req, rx) = DecodeRequest::new(prompt(cfg, i), MAX_NEW);
+            assert!(eng.submit(req), "submit must admit or queue, not reject");
+            rx
+        })
+        .collect()
+}
+
+/// Drain one stream: its `(token, logprob-bits)` trace + terminal reason.
+fn collect(rx: &mpsc::Receiver<TokenEvent>) -> (Vec<(i32, u32)>, Option<FinishReason>) {
+    let mut trace = Vec::new();
+    let mut finished = None;
+    while let Ok(ev) = rx.try_recv() {
+        match ev {
+            TokenEvent::Token { token, logprob, .. } => trace.push((token, logprob.to_bits())),
+            TokenEvent::Finished { reason, .. } => finished = Some(reason),
+            TokenEvent::Rejected { reason, .. } => panic!("unexpected rejection: {reason}"),
+        }
+    }
+    (trace, finished)
+}
+
+fn drain(eng: &mut Engine) {
+    while eng.has_work() {
+        eng.step().unwrap();
+    }
+}
+
+fn collect_all(rxs: &[mpsc::Receiver<TokenEvent>], what: &str) -> Vec<Vec<(i32, u32)>> {
+    rxs.iter()
+        .enumerate()
+        .map(|(lane, rx)| {
+            let (trace, fin) = collect(rx);
+            assert_eq!(fin, Some(FinishReason::MaxTokens), "{what}: lane {lane} terminal");
+            assert_eq!(trace.len(), MAX_NEW, "{what}: lane {lane} budget");
+            trace
+        })
+        .collect()
+}
+
+fn assert_no_leaks(eng: &Engine, what: &str) {
+    assert_eq!(
+        eng.cache().pages_free(),
+        eng.cache().pages_total(),
+        "{what}: device pages leaked after drain"
+    );
+    assert!(eng.cache().free_pages_are_zeroed(), "{what}: freed pages must be zeroed");
+    assert_eq!(eng.host_tier().sessions(), 0, "{what}: host entries leaked after drain");
+    assert_eq!(eng.host_tier().bytes_in_use(), 0, "{what}: host bytes leaked after drain");
+}
+
+/// The unperturbed reference: same slots/format, worst-case page pool
+/// (never any pressure), no host tier, no resurrection.
+fn baseline(cfg: &ModelConfig, ckpt: &Checkpoint, b: usize, kv: Option<&'static str>) -> Vec<Vec<(i32, u32)>> {
+    let mut eng = engine(*cfg, ckpt.clone(), b, kv, 8, 0, 0, false);
+    let rxs = submit_batch(&mut eng, cfg, b);
+    drain(&mut eng);
+    collect_all(&rxs, "baseline")
+}
+
+/// Headline property 1: a page-starved engine that spills victims to the
+/// host tier and splices them back streams bit-identically to the
+/// unpressured baseline, and actually exercises the tier (pages spilled,
+/// restores served) whenever pressure exists (b >= 2 here: the pool holds
+/// at most 3 pages per session against a ~5-page final context).
+#[test]
+fn spill_restore_streams_bit_identical_to_unpressured_run() {
+    let cfg = zoo("nano").unwrap();
+    let ckpt = trainer::init_lm_params(&cfg, 0x51f7);
+    for kv in KV_FORMATS {
+        for b in 1..=8usize {
+            let expect = baseline(&cfg, &ckpt, b, kv);
+            // a pool big enough to admit and finish any single session
+            // (final context <= 6 + 12 + 1 = 19 positions = 5 pages of 4)
+            // but far short of the batch's summed demand once b >= 2
+            let kv_pages = (3 * b).max(6);
+            let mut eng = engine(cfg, ckpt.clone(), b, kv, 4, kv_pages, 1 << 20, false);
+            let rxs = submit_batch(&mut eng, &cfg, b);
+            drain(&mut eng);
+            let got = collect_all(&rxs, "spill");
+            for (lane, (e, g)) in expect.iter().zip(&got).enumerate() {
+                assert_eq!(e, g, "kv={kv:?} b={b} lane {lane}: spill/restore diverged");
+            }
+            let report = eng.report();
+            if b >= 2 {
+                assert!(
+                    report.page_preemptions > 0,
+                    "kv={kv:?} b={b}: starved pool never hit pressure — test is vacuous"
+                );
+                assert!(report.pages_spilled > 0, "kv={kv:?} b={b}: no pages spilled");
+                assert!(report.restores > 0, "kv={kv:?} b={b}: no restores served");
+            }
+            assert_eq!(report.failed, 0, "kv={kv:?} b={b}: spill must not fail sessions");
+            assert_no_leaks(&eng, "spill");
+        }
+    }
+}
+
+/// Headline property 2: crashing the engine mid-decode and resurrecting
+/// every in-flight session continues each stream bit-identically. The
+/// supervisor contract is mirrored exactly: a panic escapes `step`, the
+/// owner calls `recover_after_panic`, then re-enters the serve loop —
+/// here compressed to calling the recovery at a step boundary, which is
+/// the state every escaped panic leaves behind (KV commit is atomic per
+/// step under `supervised_forward`).
+#[test]
+fn resurrection_streams_bit_identical_and_fail_nothing() {
+    let cfg = zoo("nano").unwrap();
+    let ckpt = trainer::init_lm_params(&cfg, 0x51f7);
+    for kv in KV_FORMATS {
+        for b in 1..=8usize {
+            let expect = baseline(&cfg, &ckpt, b, kv);
+            let mut eng = engine(cfg, ckpt.clone(), b, kv, 8, 0, 0, true);
+            let rxs = submit_batch(&mut eng, &cfg, b);
+            // step 1 admits + prefills (prompts fit one chunk) + first
+            // token; two more decode steps leave every lane mid-stream
+            for _ in 0..3 {
+                eng.step().unwrap();
+            }
+            eng.recover_after_panic();
+            drain(&mut eng);
+            let got = collect_all(&rxs, "resurrect");
+            for (lane, (e, g)) in expect.iter().zip(&got).enumerate() {
+                assert_eq!(e, g, "kv={kv:?} b={b} lane {lane}: resurrected stream diverged");
+            }
+            let report = eng.report();
+            assert_eq!(report.failed, 0, "kv={kv:?} b={b}: resurrection must fail nothing");
+            assert_eq!(
+                report.resurrections, b,
+                "kv={kv:?} b={b}: every in-flight session resurrects exactly once"
+            );
+            assert!(report.replay_tokens > 0, "kv={kv:?} b={b}: replay work not accounted");
+            assert_no_leaks(&eng, "resurrect");
+        }
+    }
+}
+
+/// Degradation layers compose: spill pressure *and* a mid-run crash with
+/// resurrection, together, still reproduce the baseline streams. This is
+/// the full ISSUE 9 stack in one schedule — spilled images survive the
+/// restart in the host tier only if their session terminally exits, so
+/// the recovery path must also keep host accounting leak-free.
+#[test]
+fn spill_plus_resurrection_compose_bit_identically() {
+    let cfg = zoo("nano").unwrap();
+    let ckpt = trainer::init_lm_params(&cfg, 0x51f7);
+    for kv in [None, Some("sf4")] {
+        let b = 4usize;
+        let expect = baseline(&cfg, &ckpt, b, kv);
+        let mut eng = engine(cfg, ckpt.clone(), b, kv, 4, 3 * b, 1 << 20, true);
+        let rxs = submit_batch(&mut eng, &cfg, b);
+        for _ in 0..4 {
+            eng.step().unwrap();
+        }
+        eng.recover_after_panic();
+        drain(&mut eng);
+        let got = collect_all(&rxs, "spill+resurrect");
+        for (lane, (e, g)) in expect.iter().zip(&got).enumerate() {
+            assert_eq!(e, g, "kv={kv:?} lane {lane}: composed degradation diverged");
+        }
+        let report = eng.report();
+        assert_eq!(report.failed, 0, "kv={kv:?}: composed degradation must fail nothing");
+        assert_no_leaks(&eng, "spill+resurrect");
+    }
+}
