@@ -19,21 +19,32 @@
 //!    PJRT on the same problem (skipped with a note when the artifact set
 //!    is absent).
 //!
+//! Since PR 10 the run opens with the scalar-vs-SIMD A/B: each of the
+//! three vectorized hot loops (gemm micro-tile, nibble -> LUT expansion,
+//! paged dequant-attention) is timed twice through the same body — once
+//! with `tensor::simd::force_scalar(true)` pinning the scalar oracle, once
+//! with SIMD dispatch live — and the per-cell speedup is printed and
+//! recorded. The W4A4 code x code cells ride along. `--smoke` runs only
+//! that A/B as a CI gate: on any vector-capable host the SIMD `lut_gemm`
+//! must not lose to the scalar oracle (skipped with a note when no vector
+//! ISA is detected).
+//!
 //! Every cell lands in `BENCH_kernel.json` (gflops + mean ms) so future
 //! PRs have a perf trajectory to regress against.
 use std::collections::HashMap;
 
-use llm_datatypes::bench_util::{bench, BenchJson, BenchStats};
+use llm_datatypes::bench_util::{bench, black_box, BenchJson, BenchStats};
 use llm_datatypes::coordinator::Session;
 use llm_datatypes::formats;
 use llm_datatypes::quant::{
-    lut_gemm, quantize_weight, BlockSize, Calib, KvFormat, PackedWeight, QuantConfig,
+    lut_gemm, quantize_weight, w4a4_gemm, ActQuantizer, BlockSize, Calib, KvFormat, PackedWeight,
+    QuantConfig,
 };
 use llm_datatypes::rng::Pcg64;
 use llm_datatypes::runtime::Value;
 use llm_datatypes::tensor::{
     attend_head, gemm, gemm_auto_threads, gemm_naive, gemm_threaded, lut_attend,
-    lut_attend_head, Tensor,
+    lut_attend_head, simd, Tensor,
 };
 
 /// The pre-PR-3 kernel, verbatim: ikj with the per-element `av == 0.0`
@@ -101,15 +112,148 @@ fn record(json: &mut BenchJson, name: &str, flops: usize, s: &BenchStats) {
     json.record(name, "mean_ms", s.mean_secs() * 1e3);
 }
 
+/// One scalar-vs-SIMD comparison: the identical body timed once with the
+/// kernels pinned to the scalar oracle (`simd::force_scalar(true)`) and
+/// once with SIMD dispatch live. Returns scalar mean / simd mean, so on a
+/// scalar-only host every cell reports ~x1.00.
+fn ab_cell(
+    json: &mut BenchJson,
+    name: &str,
+    flops: usize,
+    iters: usize,
+    body: &mut dyn FnMut(),
+) -> f64 {
+    simd::force_scalar(true);
+    let s_scalar = bench(&format!("{name}_scalar"), iters, || body());
+    record(json, &format!("{name}_scalar"), flops, &s_scalar);
+    simd::force_scalar(false);
+    let s_simd = bench(&format!("{name}_simd"), iters, || body());
+    record(json, &format!("{name}_simd"), flops, &s_simd);
+    let speedup = s_scalar.mean_secs() / s_simd.mean_secs();
+    println!("bench {name:40} x{speedup:.2} (simd vs scalar)");
+    json.record(name, "speedup", speedup);
+    speedup
+}
+
 fn main() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().collect();
+    let smoke = argv.iter().any(|a| a == "--smoke");
     let mut json = BenchJson::new();
     let (m, k, n, blk) = (256usize, 512usize, 512usize, 128usize);
     let flops = 2 * m * k * n;
     let mut rng = Pcg64::new(2);
     let x = Tensor::new(&[m, k], rng.normal_vec(m * k, 1.0));
+    let b = Tensor::new(&[k, n], rng.normal_vec(k * n, 1.0));
+    let (bm, dflops) = (4usize, 2 * 4 * k * n);
+    let xd = Tensor::new(&[bm, k], rng.normal_vec(bm * k, 1.0));
+    let spec = formats::must("sf4");
+    let w = Tensor::new(&[k, n], rng.student_t_vec(k * n, 5.0, 0.02));
+    let q = quantize_weight(
+        &w,
+        &QuantConfig { format: spec.clone(), block: BlockSize::Sub(blk), calib: Calib::None },
+    );
+    let packed = PackedWeight::from_quantized(&q, &spec);
+
+    // -- 0: scalar oracle vs SIMD microkernels (A/B via the force lever) ---
+    let isa = simd::detected();
+    println!("bench kernel_dispatch                          isa={} (code {})", isa.name(), isa.code());
+    json.record("kernel_dispatch", "isa_code", isa.code() as f64);
+    let ab_iters = if smoke { 8 } else { 24 };
+    let speedup_gemm = {
+        let mut dout = vec![0.0f32; bm * n];
+        ab_cell(&mut json, "simd_gemm_decode_4x512x512", dflops, 8 * ab_iters, &mut || {
+            dout.iter_mut().for_each(|v| *v = 0.0);
+            gemm(bm, k, n, xd.data(), b.data(), &mut dout);
+        })
+    };
+    let speedup_lut = ab_cell(&mut json, "simd_lut_gemm_256x512x512", flops, ab_iters, &mut || {
+        black_box(lut_gemm(&x, &packed));
+    });
+    let speedup_attend = {
+        let (rows, ad, heads) = (96usize, 256usize, 8usize);
+        let dh = ad / heads;
+        let kvf = KvFormat::new(&spec, dh);
+        let mut mk = |seed: u64| {
+            let mut r = Pcg64::new(seed);
+            let mut codes = vec![0u8; rows * kvf.codes_per_row(ad)];
+            let mut scales = vec![0.0f32; rows * kvf.scales_per_row(ad)];
+            for i in 0..rows {
+                let row = r.normal_vec(ad, 1.0);
+                kvf.encode_row(
+                    &row,
+                    &mut codes[i * ad / 2..(i + 1) * ad / 2],
+                    &mut scales[i * (ad / dh)..(i + 1) * (ad / dh)],
+                );
+            }
+            (codes, scales)
+        };
+        let (k_codes, k_scales) = mk(31);
+        let (v_codes, v_scales) = mk(32);
+        let klane = kvf.lane(&k_codes, &k_scales, ad);
+        let vlane = kvf.lane(&v_codes, &v_scales, ad);
+        let qrow = rng.normal_vec(ad, 1.0);
+        let ascale = 1.0 / (dh as f32).sqrt();
+        let aflops = 4 * rows * ad;
+        let mut att = vec![0.0f32; rows];
+        let mut ctx = vec![0.0f32; ad];
+        ab_cell(&mut json, "simd_lut_attend_96x256", aflops, 16 * ab_iters, &mut || {
+            ctx.iter_mut().for_each(|v| *v = 0.0);
+            for h in 0..heads {
+                let off = h * dh;
+                lut_attend_head(
+                    &qrow[off..off + dh],
+                    klane,
+                    vlane,
+                    off,
+                    rows,
+                    ascale,
+                    &mut att,
+                    &mut ctx[off..off + dh],
+                );
+            }
+        })
+    };
+    // hand dispatch back to the environment for the remaining cells
+    simd::force_scalar(
+        std::env::var("LLMDT_FORCE_SCALAR")
+            .map(|v| !(v.is_empty() || v == "0"))
+            .unwrap_or(false),
+    );
+
+    // W4A4: activations encoded to 4-bit codes per call — exactly what the
+    // serving path pays per linear per step — then code x code through the
+    // 16x16 product LUT. Compared against the fused W4-only lut_gemm above;
+    // the win is activation-side traffic, not FLOPs, so a modest ratio here
+    // is expected on cache-resident shapes.
+    let aq4 = ActQuantizer::new(&spec);
+    let s = bench("rust_w4a4_gemm_256x512x512", ab_iters, || {
+        let xq = aq4.encode(&x, packed.block);
+        black_box(w4a4_gemm(&xq, &packed));
+    });
+    record(&mut json, "rust_w4a4_gemm_256x512x512", flops, &s);
+    let s = bench("rust_w4a4_gemm_decode_4x512x512", 8 * ab_iters, || {
+        let xq = aq4.encode(&xd, packed.block);
+        black_box(w4a4_gemm(&xq, &packed));
+    });
+    record(&mut json, "rust_w4a4_gemm_decode_4x512x512", dflops, &s);
+
+    if smoke {
+        let _ = (speedup_gemm, speedup_attend);
+        if isa == simd::Isa::Scalar {
+            println!("note: SIMD smoke gate skipped — no vector ISA detected on this host");
+        } else {
+            // the SIMD acceptance gate (CI): the shuffle-based nibble -> LUT
+            // expansion must not lose to the scalar oracle it replaces
+            assert!(
+                speedup_lut >= 1.0,
+                "SIMD lut_gemm lost to the scalar oracle: x{speedup_lut:.2}"
+            );
+        }
+        json.write("BENCH_kernel.json")?;
+        return Ok(());
+    }
 
     // -- 1: GEMM kernel shootout (dense f32) -------------------------------
-    let b = Tensor::new(&[k, n], rng.normal_vec(k * n, 1.0));
     let mut out = vec![0.0f32; m * n];
     let s = bench("gemm_blocked_256x512x512", 48, || {
         out.iter_mut().for_each(|v| *v = 0.0);
@@ -129,9 +273,6 @@ fn main() -> anyhow::Result<()> {
 
     // batch-4 decode-shaped rows: dense activations, the shape the serving
     // engine issues per linear per step (the skip branch's worst case)
-    let bm = 4usize;
-    let dflops = 2 * bm * k * n;
-    let xd = Tensor::new(&[bm, k], rng.normal_vec(bm * k, 1.0));
     let mut dout = vec![0.0f32; bm * n];
     let s = bench("gemm_blocked_decode_4x512x512", 256, || {
         dout.iter_mut().for_each(|v| *v = 0.0);
@@ -145,13 +286,6 @@ fn main() -> anyhow::Result<()> {
     record(&mut json, "gemm_skipzero_decode_4x512x512", dflops, &s);
 
     // -- 2: fused packed-LUT GEMM vs dequant-then-matmul -------------------
-    let spec = formats::must("sf4");
-    let w = Tensor::new(&[k, n], rng.student_t_vec(k * n, 5.0, 0.02));
-    let q = quantize_weight(
-        &w,
-        &QuantConfig { format: spec.clone(), block: BlockSize::Sub(blk), calib: Calib::None },
-    );
-    let packed = PackedWeight::from_quantized(&q, &spec);
     let s_oracle = bench("rust_dequant_matmul_256x512x512", 12, || {
         let wt = q.dequant(&spec);
         x.matmul(&wt)

@@ -27,6 +27,11 @@
 //!    the whole 4-client mix concurrently. Cells record decode tok/s, peak
 //!    concurrent sessions, and page fragmentation.
 //!
+//! Since PR 10 workload 2b rides along: the packed-sf4, packed-KV batch-4
+//! decode cell timed with the kernels pinned to the scalar oracle vs with
+//! SIMD dispatch live (`tensor::simd::force_scalar`) — the serving-level
+//! A/B for the `--force-scalar` lever.
+//!
 //! `--page-size N` (default 16) sets the KV page size every decode cell
 //! runs with, so the whole bench — including the CI gates — exercises the
 //! paged path.
@@ -192,6 +197,41 @@ fn main() -> anyhow::Result<()> {
                 scaling
             );
         }
+    }
+
+    // -- workload 2b: SIMD vs forced-scalar kernels, end to end ------------
+    // the same packed-sf4, packed-KV batch-4 decode cell timed twice: once
+    // with every kernel pinned to the scalar oracle (the --force-scalar /
+    // LLMDT_FORCE_SCALAR lever) and once with SIMD dispatch live — the
+    // serving-level view of the perf_kernel scalar-vs-SIMD A/B. No gate:
+    // end-to-end decode is scheduler-noisy, so the acceptance assertion
+    // lives in perf_kernel --smoke where the kernels are timed in isolation.
+    {
+        use llm_datatypes::tensor::simd;
+        let weights =
+            packed_checkpoint(&cfg, &ckpt, &PipelineConfig::weight_only("sf4"), &corpus)?;
+        simd::force_scalar(true);
+        let (scalar_tps, _) =
+            decode_cell(cfg, &weights, &prompts, 4, per_client, max_new, Some("sf4"), page_size)?;
+        simd::force_scalar(false);
+        let (simd_tps, _) =
+            decode_cell(cfg, &weights, &prompts, 4, per_client, max_new, Some("sf4"), page_size)?;
+        // hand dispatch back to the environment for the remaining workloads
+        simd::force_scalar(
+            std::env::var("LLMDT_FORCE_SCALAR")
+                .map(|v| !(v.is_empty() || v == "0"))
+                .unwrap_or(false),
+        );
+        println!("bench serve_decode_sf4_packedkv_b4_scalar      tok/s={scalar_tps:8.1}");
+        println!("bench serve_decode_sf4_packedkv_b4_simd        tok/s={simd_tps:8.1}");
+        json.record("serve_decode_sf4_packedkv_b4_scalar", "tok_s", scalar_tps);
+        json.record("serve_decode_sf4_packedkv_b4_simd", "tok_s", simd_tps);
+        let win = simd_tps / scalar_tps;
+        println!(
+            "bench serve_decode_simd_vs_scalar_b4           x{win:.2} (isa {})",
+            simd::detected().name(),
+        );
+        json.record("serve_decode_simd_vs_scalar_b4", "x", win);
     }
 
     // -- workload 3: packed vs dense weight backends (weight-stream-bound) -

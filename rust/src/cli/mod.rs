@@ -5,7 +5,8 @@
 //! repro table        <1|2|3|4|5|6|7|8|9|10|12|14|15> [--quick] [--model NAME]
 //! repro figure       <2|3|4|7> [--quick] [--model NAME]
 //! repro serve        [--model NAME] [--format FMT] [--clients N] [--requests N]
-//! repro serve-decode [--model NAME] [--format FMT|fp32] [--packed]
+//! repro serve-decode [--model NAME] [--format FMT|fp32] [--packed] [--w4a4]
+//!                    [--force-scalar]
 //!                    [--kv-format fp32|FMT] [--clients N] [--requests N]
 //!                    [--max-new T] [--slots S] [--prefill-chunk P]
 //!                    [--page-size P] [--kv-pages N] [--host-tier-mb MB]
@@ -13,7 +14,8 @@
 //!                    [--resume-cooldown-ms MS]
 //!                    [--trace-out FILE] [--metrics-out FILE]
 //! repro serve-http   [--addr HOST:PORT] [--model NAME] [--format FMT|fp32]
-//!                    [--packed] [--kv-format fp32|FMT] [--slots S]
+//!                    [--packed] [--w4a4] [--force-scalar]
+//!                    [--kv-format fp32|FMT] [--slots S]
 //!                    [--max-queue N] [--prefill-chunk P] [--page-size P]
 //!                    [--kv-pages N] [--host-tier-mb MB]
 //!                    [--victim-policy most-pages|lru|fair-share]
@@ -92,7 +94,8 @@ commands:
           ids: 2 3 4 7
   serve   [--model N] [--format F] [--clients C] [--requests R]
           one-shot next-token scoring through the decode engine
-  serve-decode [--model N] [--format F|fp32] [--packed] [--kv-format fp32|F]
+  serve-decode [--model N] [--format F|fp32] [--packed] [--w4a4]
+               [--force-scalar] [--kv-format fp32|F]
                [--clients C] [--requests R] [--max-new T] [--slots S]
                [--prefill-chunk P] [--page-size P] [--kv-pages N]
                [--host-tier-mb MB] [--victim-policy most-pages|lru|fair-share]
@@ -101,7 +104,13 @@ commands:
           continuous-batching multi-token generation (streaming, paged KV
           cache with block tables, fused [B,d] batched decode step;
           --packed serves true 4-bit weights through the fused LUT
-          dequant-GEMM; --kv-format stores the KV cache itself in a 4-bit
+          dequant-GEMM; --w4a4 additionally encodes each activation tile to
+          4-bit codes on the fly and multiplies code x code through a 16x16
+          product LUT (implies --packed; accuracy is NLL-delta-gated, not
+          bit-identical); --force-scalar pins every kernel to the scalar
+          oracle path, disabling the SIMD microkernels (same as
+          LLMDT_FORCE_SCALAR=1) — the A/B lever for the perf benches;
+          --kv-format stores the KV cache itself in a 4-bit
           codebook, attended through the fused dequant-attention kernels;
           --page-size sets positions per KV page and --kv-pages bounds the
           page pool — 0 = worst case — so long-context mixes admit against
@@ -116,8 +125,8 @@ commands:
           the run's span timeline and writes Chrome trace-event JSON —
           load it in Perfetto/chrome://tracing — and --metrics-out writes
           the engine's metrics registry as Prometheus text)
-  serve-http [--addr A] [--model N] [--format F|fp32] [--packed]
-             [--kv-format fp32|F] [--slots S] [--max-queue Q]
+  serve-http [--addr A] [--model N] [--format F|fp32] [--packed] [--w4a4]
+             [--force-scalar] [--kv-format fp32|F] [--slots S] [--max-queue Q]
              [--prefill-chunk P] [--page-size P] [--kv-pages N]
              [--host-tier-mb MB] [--victim-policy most-pages|lru|fair-share]
              [--resume-cooldown-ms MS] [--resurrect]
@@ -296,20 +305,33 @@ fn load_or_init_checkpoint(
 }
 
 /// Weight path for the decode engine: fp32 passthrough, fake-quant
-/// (dequantized f32) through the requested codebook, or — with `packed` —
-/// true 4-bit packed weights decoded in-kernel by the fused LUT GEMM.
+/// (dequantized f32) through the requested codebook, with `packed` true
+/// 4-bit packed weights decoded in-kernel by the fused LUT GEMM, or with
+/// `w4a4` the packed weights plus an activation quantizer so the linears
+/// run code x code through the 16x16 product LUT.
 fn serving_checkpoint(
     cfg: &crate::model_io::ModelConfig,
     ckpt: &crate::model_io::Checkpoint,
     format: &str,
     packed: bool,
+    w4a4: bool,
 ) -> Result<crate::model_io::Checkpoint> {
-    use crate::coordinator::pipeline::{fake_quant_checkpoint, packed_checkpoint, PipelineConfig};
+    use crate::coordinator::pipeline::{
+        fake_quant_checkpoint, packed_checkpoint, w4a4_checkpoint, PipelineConfig,
+    };
     if format == "fp32" {
-        anyhow::ensure!(!packed, "--packed needs a 4-bit --format (fp32 weights stay dense)");
+        anyhow::ensure!(
+            !packed && !w4a4,
+            "--packed/--w4a4 need a 4-bit --format (fp32 weights stay dense)"
+        );
         return Ok(ckpt.clone());
     }
     let corpus = corpus_for(cfg);
+    if w4a4 {
+        // SmoothQuant stays off: the serving forward has no activation-side
+        // unscale hook (see pipeline::w4a4_checkpoint)
+        return w4a4_checkpoint(cfg, ckpt, &PipelineConfig::w4a4(format, false), &corpus);
+    }
     let pc = PipelineConfig::weight_only(format);
     if packed {
         packed_checkpoint(cfg, ckpt, &pc, &corpus)
@@ -337,10 +359,13 @@ fn cmd_serve(session: &Session, args: &Args) -> Result<()> {
     let format = args.flag("format", "sf4");
     let clients: usize = args.flag("clients", "8").parse()?;
     let requests: usize = args.flag("requests", "64").parse()?;
+    if args.has("force-scalar") {
+        crate::tensor::simd::force_scalar(true);
+    }
 
     let cfg = zoo(&model)?;
     let ckpt = load_or_init_checkpoint(session, &cfg);
-    let ckpt = serving_checkpoint(&cfg, &ckpt, &format, false)?;
+    let ckpt = serving_checkpoint(&cfg, &ckpt, &format, false, false)?;
     let server = Server::new(cfg, ckpt, ServeConfig::default());
     let prompts = serve_prompts(&cfg, 64, 1);
     let stats = run_loadgen(server, prompts, clients, requests / clients.max(1))?;
@@ -385,8 +410,14 @@ fn build_decode_engine(
 
     let model = args.flag("model", "small");
     let format = args.flag("format", "sf4");
-    let packed = args.has("packed");
+    let w4a4 = args.has("w4a4");
+    let packed = args.has("packed") || w4a4; // --w4a4 implies packed weights
     let kv_fmt = args.flag("kv-format", "fp32");
+    if args.has("force-scalar") {
+        // same lever as LLMDT_FORCE_SCALAR=1: pin every kernel to the
+        // scalar oracle path before any dispatch decision is observed
+        crate::tensor::simd::force_scalar(true);
+    }
     let slots: usize = args.flag("slots", "4").parse()?;
     let prefill_chunk: usize = args.flag("prefill-chunk", "32").parse()?;
     let page_size: usize = args.flag("page-size", "16").parse()?;
@@ -406,8 +437,10 @@ fn build_decode_engine(
 
     let cfg = zoo(&model)?;
     let ckpt = load_or_init_checkpoint(session, &cfg);
-    let ckpt = serving_checkpoint(&cfg, &ckpt, &format, packed)?;
-    let weight_label = if packed {
+    let ckpt = serving_checkpoint(&cfg, &ckpt, &format, packed, w4a4)?;
+    let weight_label = if w4a4 {
+        format!("{format} W4A4 code x code ({} KiB codes+scales)", ckpt.packed_bytes() / 1024)
+    } else if packed {
         format!("{format} packed-4bit ({} KiB codes+scales)", ckpt.packed_bytes() / 1024)
     } else if format == "fp32" {
         "fp32 dense".to_string()
@@ -458,10 +491,16 @@ fn build_decode_engine(
     } else {
         String::new()
     };
+    let isa = crate::tensor::simd::active();
+    let isa_label = if crate::tensor::simd::scalar_forced() {
+        format!("{} (forced)", isa.name())
+    } else {
+        isa.name().to_string()
+    };
     let banner = format!(
         "decode engine: model `{}` weights {} | paged KV: {} sequences over {} pages x {} \
          positions (block tables, {} lanes, {} KiB pool) | fused [B,d] batched step, \
-         prefill chunk {}, victim policy {}{}",
+         prefill chunk {}, victim policy {}{} | kernels: {} ISA",
         cfg.name,
         weight_label,
         engine.cache().slots_total(),
@@ -472,6 +511,7 @@ fn build_decode_engine(
         prefill_chunk,
         victim_policy.name(),
         tier_label,
+        isa_label,
     );
     Ok(DecodeEngineSetup { engine, cfg, banner })
 }

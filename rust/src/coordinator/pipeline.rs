@@ -302,6 +302,45 @@ pub fn packed_checkpoint(
     Ok(out)
 }
 
+/// W4A4 serving checkpoint: the weight side is exactly
+/// [`packed_checkpoint`] (packed codes + per-block scales per linear), plus
+/// an installed [`crate::quant::ActQuantizer`] that upgrades every packed
+/// linear to `LinearBackend::PackedW4a4` — `nn::apply_linear` then encodes
+/// each activation tile to 4-bit codes (absmax blocks matching the
+/// weight's) and multiplies code x code through `quant::w4a4_gemm`.
+///
+/// W4A4 changes numerics by design (the activations are quantized), so
+/// unlike the packed weight-only path there is no bit-identity contract;
+/// the accuracy gate is the Table-8-style NLL delta in
+/// `rust/tests/simd_kernels.rs`. SmoothQuant configs are refused: the
+/// smoothing fold needs an activation-side unscale hook the nn serving
+/// forward does not have (the artifact graphs apply `{name}.smooth`).
+pub fn w4a4_checkpoint(
+    cfg: &ModelConfig,
+    ckpt: &Checkpoint,
+    pc: &PipelineConfig,
+    corpus: &Corpus,
+) -> Result<Checkpoint> {
+    let act_fmt = pc.act_format.as_deref().unwrap_or(&pc.format);
+    anyhow::ensure!(
+        pc.smoothquant.is_none(),
+        "w4a4_checkpoint: SmoothQuant needs the artifact graphs' activation-side unscale; \
+         use PipelineConfig::w4a4(fmt, false)"
+    );
+    let act_spec = formats::must(act_fmt);
+    anyhow::ensure!(
+        act_spec.n_values() <= 16,
+        "w4a4_checkpoint: activation format `{}` has {} codebook values (> 4-bit)",
+        act_spec.name,
+        act_spec.n_values()
+    );
+    // weight side: the weight-only view of this config, packed verbatim
+    let wpc = PipelineConfig { act_format: None, smoothquant: None, ..pc.clone() };
+    let mut out = packed_checkpoint(cfg, ckpt, &wpc, corpus)?;
+    out.set_act_quant(Some(crate::quant::ActQuantizer::new(&act_spec)));
+    Ok(out)
+}
+
 /// fp32 "identity pipeline": artifact inputs for the fp32 eval graphs.
 pub fn fp32_values(cfg: &ModelConfig, ckpt: &Checkpoint) -> Result<HashMap<String, Value>> {
     let mut values = HashMap::new();
@@ -446,6 +485,54 @@ mod tests {
         // W4A4 configs are refused like the fake-quant path
         assert!(packed_checkpoint(&cfg, &c, &PipelineConfig::w4a4("sf4", true), &corpus)
             .is_err());
+    }
+
+    #[test]
+    fn w4a4_checkpoint_installs_act_quantizer_and_refuses_smoothquant() {
+        use crate::model_io::LinearBackend;
+        let cfg = zoo("nano").unwrap();
+        let c = ckpt(&cfg, 7);
+        let corpus = corpus_for(&cfg);
+        let pc = PipelineConfig::w4a4("sf4", false);
+        let w4a4 = w4a4_checkpoint(&cfg, &c, &pc, &corpus).unwrap();
+        let aq = w4a4.act_quant().expect("activation quantizer installed");
+        assert_eq!(aq.name, "sf4");
+        for name in cfg.quant_linear_names() {
+            assert_eq!(w4a4.backend(&name), LinearBackend::PackedW4a4, "{name}");
+        }
+        assert_eq!(w4a4.backend("embed"), LinearBackend::Dense);
+        // weight side is bit-for-bit the weight-only packed checkpoint
+        let packed =
+            packed_checkpoint(&cfg, &c, &PipelineConfig::weight_only("sf4"), &corpus).unwrap();
+        for name in cfg.quant_linear_names() {
+            let (a, b) =
+                (w4a4.get_packed(&name).unwrap(), packed.get_packed(&name).unwrap());
+            assert_eq!(a.packed, b.packed, "{name}");
+            assert_eq!(a.scales.data(), b.scales.data(), "{name}");
+        }
+        // nn dispatch runs the code x code path and stays close to the
+        // weight-only packed output (activations only lose 4-bit precision)
+        let name = &cfg.quant_linear_names()[0];
+        let k = packed.get_packed(name).unwrap().k;
+        let mut rng = Pcg64::new(0xac7);
+        let x = Tensor::new(&[3, k], rng.normal_vec(3 * k, 1.0));
+        let yq = nn::apply_linear(&w4a4, &x, name).unwrap();
+        let yw = nn::apply_linear(&packed, &x, name).unwrap();
+        assert_eq!(yq.shape(), yw.shape());
+        let denom: f64 = yw.data().iter().map(|&v| (v as f64).powi(2)).sum::<f64>().max(1e-9);
+        let err: f64 = yq
+            .data()
+            .iter()
+            .zip(yw.data())
+            .map(|(&a, &b)| ((a - b) as f64).powi(2))
+            .sum();
+        assert!(err / denom < 0.05, "relative act-quant error too large: {}", err / denom);
+        // SmoothQuant needs the artifact graphs' activation-side unscale
+        assert!(w4a4_checkpoint(&cfg, &c, &PipelineConfig::w4a4("sf4", true), &corpus).is_err());
+        // weight-only configs still work (act side defaults to the weight format)
+        assert!(w4a4_checkpoint(&cfg, &c, &PipelineConfig::weight_only("e2m1"), &corpus).is_ok());
+        // wide codebooks cannot feed the 16x16 product LUT
+        assert!(w4a4_checkpoint(&cfg, &c, &PipelineConfig::weight_only("int5"), &corpus).is_err());
     }
 
     #[test]

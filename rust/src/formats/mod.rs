@@ -359,6 +359,14 @@ pub fn all_names() -> Vec<&'static str> {
     ]
 }
 
+/// Names of every format whose codebook fits 4-bit nibble packing
+/// (<= 16 values) — the set the packed weight/KV/activation codecs and the
+/// SIMD differential harness (`rust/tests/simd_kernels.rs`) iterate over.
+/// Today this is everything in [`all_names`] except `int5` (32 values).
+pub fn packable_names() -> Vec<&'static str> {
+    all_names().into_iter().filter(|n| must(n).n_values() <= 16).collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -566,6 +574,16 @@ mod tests {
             for (&x, &c) in xs.iter().zip(&codes) {
                 assert_eq!(c as usize, enc.encode(x), "{name}: block/scalar disagree at {x}");
             }
+        }
+    }
+
+    #[test]
+    fn packable_names_excludes_only_wide_codebooks() {
+        let packable = packable_names();
+        assert!(!packable.contains(&"int5"), "int5 has 32 values");
+        assert_eq!(packable.len(), all_names().len() - 1);
+        for name in packable {
+            assert!(must(name).n_values() <= 16, "{name}");
         }
     }
 

@@ -12,7 +12,7 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
-use crate::quant::PackedWeight;
+use crate::quant::{ActQuantizer, PackedWeight};
 use crate::tensor::Tensor;
 
 /// Decoder-only LM hyperparameters — must stay in sync with `model.py` ZOO
@@ -108,6 +108,11 @@ pub enum LinearBackend {
     /// consumed in place by the fused `quant::lut_gemm` — the weight never
     /// exists as an f32 matrix.
     Packed4,
+    /// W4A4: packed 4-bit weights *and* activations encoded on the fly
+    /// through the checkpoint's `ActQuantizer`, multiplied code x code by
+    /// `quant::w4a4_gemm`'s 256-entry product LUT. Active for every packed
+    /// linear once an activation quantizer is installed.
+    PackedW4a4,
 }
 
 /// Ordered named tensors (insertion order = canonical parameter order),
@@ -121,6 +126,11 @@ pub struct Checkpoint {
     map: HashMap<String, Tensor>,
     packed_names: Vec<String>,
     packed: HashMap<String, PackedWeight>,
+    /// When set, every packed linear runs W4A4: activations are encoded
+    /// through this quantizer (with the weight's own scale block) and the
+    /// GEMM streams 4-bit codes on both sides. Runtime-only, like the
+    /// packed store.
+    act_quant: Option<ActQuantizer>,
 }
 
 impl Checkpoint {
@@ -158,10 +168,26 @@ impl Checkpoint {
             .with_context(|| format!("checkpoint missing packed weight `{name}`"))
     }
 
-    /// Backend for one named linear: packed wins when present.
+    /// Install (or clear) the W4A4 activation quantizer: with one set,
+    /// every packed linear dispatches to [`LinearBackend::PackedW4a4`].
+    pub fn set_act_quant(&mut self, aq: Option<ActQuantizer>) {
+        self.act_quant = aq;
+    }
+
+    /// The W4A4 activation quantizer, if one is installed.
+    pub fn act_quant(&self) -> Option<&ActQuantizer> {
+        self.act_quant.as_ref()
+    }
+
+    /// Backend for one named linear: packed wins when present, upgraded to
+    /// W4A4 when an activation quantizer is installed.
     pub fn backend(&self, name: &str) -> LinearBackend {
         if self.packed.contains_key(name) {
-            LinearBackend::Packed4
+            if self.act_quant.is_some() {
+                LinearBackend::PackedW4a4
+            } else {
+                LinearBackend::Packed4
+            }
         } else {
             LinearBackend::Dense
         }
@@ -361,6 +387,30 @@ mod tests {
         let d = Checkpoint::load(&path).unwrap();
         assert!(!d.has_packed());
         assert_eq!(d.names(), &["dense".to_string()]);
+    }
+
+    #[test]
+    fn act_quant_upgrades_packed_backend_to_w4a4() {
+        use crate::formats;
+        use crate::quant::{quantize_weight, BlockSize, Calib, QuantConfig};
+        let spec = formats::must("sf4");
+        let w = Tensor::from_fn(&[32, 4], |i| ((i % 11) as f32 - 5.0) * 0.1);
+        let q = quantize_weight(
+            &w,
+            &QuantConfig { format: spec.clone(), block: BlockSize::Sub(32), calib: Calib::None },
+        );
+        let mut c = Checkpoint::new();
+        c.insert_packed("l0.wq", PackedWeight::from_quantized(&q, &spec));
+        assert_eq!(c.backend("l0.wq"), LinearBackend::Packed4);
+        c.set_act_quant(Some(ActQuantizer::new(&spec)));
+        assert_eq!(c.backend("l0.wq"), LinearBackend::PackedW4a4);
+        assert_eq!(c.backend("missing"), LinearBackend::Dense, "dense stays dense under W4A4");
+        assert_eq!(c.act_quant().unwrap().name, "sf4");
+        // the quantizer survives Clone with the packed store
+        let c2 = c.clone();
+        assert_eq!(c2.backend("l0.wq"), LinearBackend::PackedW4a4);
+        c.set_act_quant(None);
+        assert_eq!(c.backend("l0.wq"), LinearBackend::Packed4, "clearing downgrades");
     }
 
     #[test]

@@ -78,9 +78,22 @@ pub fn gelu(x: f32) -> f32 {
 /// weight-traffic saving. Both run the same blocked `tensor::gemm` kernel
 /// with identical K-block boundaries, so switching backend never changes
 /// the batch-row bit-identity contract of the fused decode step.
+/// W4A4 (`PackedW4a4`) goes further: the activation tile is itself encoded
+/// to 4-bit codes on the fly (absmax blocks matching the weight's K-blocks)
+/// and the product runs code x code through a 16x16 product LUT. That path
+/// quantizes activations, so it trades the bit-identity contract for an
+/// NLL-delta gate (see `rust/tests/simd_kernels.rs`).
 pub fn apply_linear(p: &Checkpoint, x: &Tensor, name: &str) -> Result<Tensor> {
     match p.backend(name) {
         LinearBackend::Packed4 => Ok(crate::quant::lut_gemm(x, p.get_packed(name)?)),
+        LinearBackend::PackedW4a4 => {
+            let w = p.get_packed(name)?;
+            let aq = p.act_quant().ok_or_else(|| {
+                anyhow::anyhow!("backend says PackedW4a4 but no activation quantizer is installed")
+            })?;
+            let xq = aq.encode(x, w.block);
+            Ok(crate::quant::w4a4_gemm(&xq, w))
+        }
         LinearBackend::Dense => Ok(x.matmul(p.get(name)?)),
     }
 }

@@ -294,11 +294,17 @@ fn lut_gemm_blocks(
     xpanel: &mut [f32],
     out: &mut [f32],
 ) {
-    use crate::tensor::{gemm_auto_threads, gemm_threaded, GEMM_KC};
+    use crate::tensor::{gemm_auto_threads, gemm_threaded, simd, GEMM_KC};
     // One threading decision from the full problem, not per K-block: a
     // prefill-sized call threads its MAC exactly where the dense path
     // would (the per-block m*kb*n would under-count by k/KC).
     let threads = gemm_auto_threads(m, k, n);
+    // One ISA decision and one LUT byte-plane split per call: the SIMD
+    // expansion shuffles nibbles through the planes in-register, computing
+    // the exact per-element `lut[code] * scale` the scalar loop does
+    // (bit-identical — `rust/tests/simd_kernels.rs`).
+    let isa = simd::active();
+    let planes = simd::NibbleLut::new(lut);
     let mut k0 = 0usize;
     while k0 < k {
         let kb = GEMM_KC.min(k - k0);
@@ -307,12 +313,17 @@ fn lut_gemm_blocks(
             let srow = w.scales.row(kabs / w.block);
             let prow = &w.packed[kabs * row_bytes..(kabs + 1) * row_bytes];
             let wrow = &mut wtile[kk * n..kk * n + n];
-            for (jh, &byte) in prow.iter().enumerate() {
-                let j = 2 * jh;
-                wrow[j] = lut[(byte & 0x0f) as usize] * srow[j];
-                if j + 1 < n {
-                    wrow[j + 1] = lut[(byte >> 4) as usize] * srow[j + 1];
+            match isa {
+                simd::Isa::Scalar => {
+                    for (jh, &byte) in prow.iter().enumerate() {
+                        let j = 2 * jh;
+                        wrow[j] = lut[(byte & 0x0f) as usize] * srow[j];
+                        if j + 1 < n {
+                            wrow[j + 1] = lut[(byte >> 4) as usize] * srow[j + 1];
+                        }
+                    }
                 }
+                isa => simd::lut_expand_row(isa, &planes, lut, prow, &srow[..n], wrow),
             }
         }
         // feed the blocked kernel this K block's x columns: when the whole
@@ -331,6 +342,202 @@ fn lut_gemm_blocks(
         gemm_threaded(m, kb, n, xa, &wtile[..kb * n], out, threads);
         k0 += kb;
     }
+}
+
+// ---------------------------------------------------------------------------
+// W4A4: packed 4-bit activations + code x code GEMM
+// ---------------------------------------------------------------------------
+
+/// Activation-side 4-bit quantizer for the W4A4 serving path (the paper's
+/// Table 8 setting): encodes each activation row into nibble codes +
+/// per-block absmax scales through the same [`crate::formats::Encoder`]
+/// machinery as the weight and KV encoders. Stateless per call — the scale
+/// block is taken from the *weight* at apply time so both sides of
+/// [`w4a4_gemm`] share K-block boundaries.
+#[derive(Clone, Debug)]
+pub struct ActQuantizer {
+    /// Format name, for banners and error messages.
+    pub name: String,
+    lut: [f32; 16],
+    enc: crate::formats::Encoder,
+}
+
+impl ActQuantizer {
+    /// Build from a <= 4-bit format (panics on wider codebooks, mirroring
+    /// [`PackedWeight::from_quantized`]).
+    pub fn new(spec: &FormatSpec) -> ActQuantizer {
+        assert!(
+            spec.n_values() <= 16,
+            "{}: {} codebook values do not fit 4-bit activation packing",
+            spec.name,
+            spec.n_values()
+        );
+        let padded = spec.padded16();
+        let mut lut = [0.0f32; 16];
+        lut.copy_from_slice(&padded);
+        ActQuantizer { name: spec.name.to_string(), lut, enc: spec.encoder() }
+    }
+
+    /// The activation codebook padded to 16 f32 entries.
+    pub fn lut(&self) -> &[f32; 16] {
+        &self.lut
+    }
+
+    /// Encode `x [M, K]` with absmax scale blocks of `block` along K —
+    /// the per-row analogue of `KvFormat::encode_row`. `block` must be
+    /// even and divide K (weight blocks satisfy both: `BlockSize::resolve`
+    /// asserts divisibility and every zoo block is a power of two).
+    pub fn encode(&self, x: &Tensor, block: usize) -> PackedActivations {
+        let (m, k) = (x.rows(), x.cols());
+        assert!(block > 0 && block % 2 == 0, "activation block {block} must be even");
+        assert!(k % block == 0, "activation block {block} does not divide K={k}");
+        assert!(
+            block <= crate::tensor::LANE_MAX_BLOCK,
+            "activation block {block} exceeds LANE_MAX_BLOCK"
+        );
+        let row_bytes = k / 2;
+        let nb = k / block;
+        let mut codes = vec![0u8; m * row_bytes];
+        let mut scales = vec![0.0f32; m * nb];
+        let mut scaled = [0.0f32; crate::tensor::LANE_MAX_BLOCK];
+        let mut block_codes = [0i8; crate::tensor::LANE_MAX_BLOCK];
+        for i in 0..m {
+            let row = x.row(i);
+            for b in 0..nb {
+                let vals = &row[b * block..(b + 1) * block];
+                let s = block_scale_enc(&self.enc, vals, Calib::None);
+                let inv = 1.0 / s;
+                for (sv, &v) in scaled[..block].iter_mut().zip(vals) {
+                    *sv = v * inv;
+                }
+                self.enc.encode_block(&scaled[..block], &mut block_codes[..block]);
+                let cbase = i * row_bytes + (b * block) / 2;
+                for p in 0..block / 2 {
+                    let lo = block_codes[2 * p] as u8 & 0x0f;
+                    let hi = block_codes[2 * p + 1] as u8 & 0x0f;
+                    codes[cbase + p] = lo | (hi << 4);
+                }
+                scales[i * nb + b] = s;
+            }
+        }
+        PackedActivations { codes, scales, lut: self.lut, m, k, block }
+    }
+}
+
+/// An activation tile at its true 4-bit footprint: the [`PackedWeight`]
+/// nibble layout turned sideways — codes run along K within each *row*
+/// (two per byte, low nibble first) with one absmax scale per
+/// (row, K-block). Produced fresh per linear per micro-step by
+/// [`ActQuantizer::encode`]; consumed by [`w4a4_gemm`].
+#[derive(Clone, Debug)]
+pub struct PackedActivations {
+    /// `[M, K/2]` packed nibbles: column `2p` in the low nibble and
+    /// `2p+1` in the high nibble of byte `i * (K/2) + p`.
+    pub codes: Vec<u8>,
+    /// `[M, K/block]` per-block absmax scales.
+    pub scales: Vec<f32>,
+    /// The activation codebook padded to 16 f32 entries.
+    pub lut: [f32; 16],
+    pub m: usize,
+    pub k: usize,
+    pub block: usize,
+}
+
+impl PackedActivations {
+    /// Code at `(i, kk)` (unpacked nibble).
+    pub fn code(&self, i: usize, kk: usize) -> u8 {
+        let b = self.codes[i * (self.k / 2) + kk / 2];
+        (b >> (4 * (kk % 2))) & 0x0f
+    }
+
+    /// Dequantized f32 activations (`lut[c] * scale`) — the oracle the
+    /// W4A4 GEMM is tested against.
+    pub fn dequant(&self) -> Tensor {
+        let nb = self.k / self.block;
+        let mut out = vec![0.0f32; self.m * self.k];
+        for i in 0..self.m {
+            for kk in 0..self.k {
+                out[i * self.k + kk] =
+                    self.lut[self.code(i, kk) as usize] * self.scales[i * nb + kk / self.block];
+            }
+        }
+        Tensor::new(&[self.m, self.k], out)
+    }
+}
+
+/// W4A4 code x code GEMM: both operands stream as 4-bit codes and the
+/// inner product walks a 16 x 16 = 256-entry *product LUT*
+/// (`plut[ac * 16 + wc] = a_lut[ac] * w_lut[wc]`). Because both per-block
+/// scales factor out of the block's partial sum, one product LUT serves
+/// every (row, K-block, column) cell:
+///
+/// ```text
+/// out[i][j] = sum_b  a_scale[i][b] * w_scale[b][j] * sum_kk plut[ac, wc]
+/// ```
+///
+/// Numerically this is `xq.dequant() @ w.dequant()` with the scalar
+/// multiplications regrouped per block — W4A4 changes numerics *by design*
+/// (the activations themselves are quantized), so the contract is the
+/// Table-8-style NLL-delta gate in `rust/tests/simd_kernels.rs`, not
+/// bit-identity. Requires both sides to share K and scale-block size
+/// (the serving path encodes activations with the weight's own block).
+pub fn w4a4_gemm(xq: &PackedActivations, w: &PackedWeight) -> Tensor {
+    assert_eq!(xq.k, w.k, "w4a4_gemm: K mismatch ({} vs {})", xq.k, w.k);
+    assert_eq!(
+        xq.block, w.block,
+        "w4a4_gemm: scale blocks must align along K ({} vs {})",
+        xq.block, w.block
+    );
+    let (m, k, n) = (xq.m, xq.k, w.n);
+    let _span = crate::obs::trace::span("kernel", "quant.w4a4_gemm")
+        .arg("m", m as f64)
+        .arg("k", k as f64)
+        .arg("n", n as f64);
+    // activation-code-major so the inner column loop reads a contiguous
+    // 16-entry slice per K position
+    let mut plut = [0.0f32; 256];
+    for (ac, pl) in plut.chunks_mut(16).enumerate() {
+        for (wc, p) in pl.iter_mut().enumerate() {
+            *p = xq.lut[ac] * w.lut[wc];
+        }
+    }
+    let block = w.block;
+    let nb = k / block;
+    let wrow_bytes = w.row_bytes();
+    let arow_bytes = k / 2;
+    let mut out = vec![0.0f32; m * n];
+    let mut acc = vec![0.0f32; n];
+    let mut acodes = vec![0u8; block];
+    for i in 0..m {
+        for b in 0..nb {
+            // unpack this row-block's activation codes once
+            let abase = i * arow_bytes + (b * block) / 2;
+            for (p, &byte) in xq.codes[abase..abase + block / 2].iter().enumerate() {
+                acodes[2 * p] = byte & 0x0f;
+                acodes[2 * p + 1] = byte >> 4;
+            }
+            acc.fill(0.0);
+            for (kk, &ac) in acodes.iter().enumerate() {
+                let kabs = b * block + kk;
+                let prow = &w.packed[kabs * wrow_bytes..(kabs + 1) * wrow_bytes];
+                let pl = &plut[(ac as usize) * 16..(ac as usize) * 16 + 16];
+                for (jh, &byte) in prow.iter().enumerate() {
+                    let j = 2 * jh;
+                    acc[j] += pl[(byte & 0x0f) as usize];
+                    if j + 1 < n {
+                        acc[j + 1] += pl[(byte >> 4) as usize];
+                    }
+                }
+            }
+            let ascale = xq.scales[i * nb + b];
+            let wsrow = w.scales.row(b);
+            let orow = &mut out[i * n..(i + 1) * n];
+            for j in 0..n {
+                orow[j] += ascale * wsrow[j] * acc[j];
+            }
+        }
+    }
+    Tensor::new(&[m, n], out)
 }
 
 /// Scale for one block of values under the given calibration policy.
@@ -635,6 +842,85 @@ mod tests {
         let dense = x.matmul(&q.dequant(&spec));
         assert_eq!(fused.shape(), dense.shape());
         assert_eq!(fused.data(), dense.data(), "fused path must be bit-identical");
+    }
+
+    #[test]
+    fn packed_activations_roundtrip_codes_and_scales() {
+        let mut rng = Pcg64::new(21);
+        let x = Tensor::new(&[3, 64], rng.normal_vec(3 * 64, 1.0));
+        let spec = formats::must("sf4");
+        let aq = ActQuantizer::new(&spec);
+        let xq = aq.encode(&x, 32);
+        assert_eq!(xq.codes.len(), 3 * 32, "K/2 bytes per row");
+        assert_eq!(xq.scales.len(), 3 * 2, "K/block scales per row");
+        // every scale is the block absmax (Calib::None), and dequant is the
+        // exact lut[c] * scale expression per element
+        let enc = spec.encoder();
+        let deq = xq.dequant();
+        for i in 0..3 {
+            for b in 0..2 {
+                let vals = &x.row(i)[b * 32..(b + 1) * 32];
+                let s = block_scale_enc(&enc, vals, Calib::None);
+                assert_eq!(xq.scales[i * 2 + b], s, "({i},{b}) scale");
+            }
+            for kk in 0..64 {
+                let want = xq.lut[xq.code(i, kk) as usize] * xq.scales[i * 2 + kk / 32];
+                assert_eq!(deq.at2(i, kk), want, "({i},{kk}) dequant");
+            }
+        }
+    }
+
+    #[test]
+    fn w4a4_gemm_matches_dequant_dequant_matmul() {
+        // the product-LUT regrouping only reorders scalar multiplications,
+        // so against the dequantize-both-sides oracle the result is equal
+        // up to f32 reassociation of the per-block scale factors
+        for fmt in ["sf4", "int4", "e2m1"] {
+            let spec = formats::must(fmt);
+            let w = rand_w(128, 9, 31); // odd N: trailing high nibble unused
+            let cfg = QuantConfig {
+                format: spec.clone(),
+                block: BlockSize::Sub(32),
+                calib: Calib::None,
+            };
+            let q = quantize_weight(&w, &cfg);
+            let p = PackedWeight::from_quantized(&q, &spec);
+            let mut rng = Pcg64::new(37);
+            let x = Tensor::new(&[4, 128], rng.normal_vec(4 * 128, 1.0));
+            let aq = ActQuantizer::new(&spec);
+            let xq = aq.encode(&x, p.block);
+            let fused = w4a4_gemm(&xq, &p);
+            let dense = xq.dequant().matmul(&p.dequant());
+            assert_eq!(fused.shape(), dense.shape());
+            for (i, (a, b)) in fused.data().iter().zip(dense.data()).enumerate() {
+                assert!(
+                    (a - b).abs() <= 1e-4 * (1.0 + b.abs()),
+                    "{fmt} elem {i}: {a} vs {b}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn w4a4_padding_nibbles_do_not_leak_into_odd_n() {
+        // odd N leaves each weight row's trailing high nibble zero; the
+        // product LUT has plut[ac][0] != 0 in general, so the guard in the
+        // inner loop must keep the phantom column out of the result
+        let spec = formats::must("sf4");
+        let w = rand_w(32, 1, 41); // N=1: every byte is half padding
+        let cfg =
+            QuantConfig { format: spec.clone(), block: BlockSize::Sub(32), calib: Calib::None };
+        let q = quantize_weight(&w, &cfg);
+        let p = PackedWeight::from_quantized(&q, &spec);
+        let mut rng = Pcg64::new(43);
+        let x = Tensor::new(&[2, 32], rng.normal_vec(2 * 32, 1.0));
+        let aq = ActQuantizer::new(&spec);
+        let xq = aq.encode(&x, 32);
+        let fused = w4a4_gemm(&xq, &p);
+        let dense = xq.dequant().matmul(&p.dequant());
+        for (a, b) in fused.data().iter().zip(dense.data()) {
+            assert!((a - b).abs() <= 1e-4 * (1.0 + b.abs()), "{a} vs {b}");
+        }
     }
 
     #[test]

@@ -506,6 +506,15 @@ impl MetricsCollector {
             "Sustained generated tokens per wall-clock second.",
             r.decode_tps,
         );
+        // info-style gauge: the value is the dispatch code of the kernel
+        // ISA every gemm / LUT-expansion / paged-attention call routes
+        // through right now (0 = scalar, 1 = neon, 2 = avx2). Scalar on a
+        // vector-capable host means the force-scalar lever is on.
+        reg.gauge(
+            "llmdt_kernel_dispatch",
+            "Active SIMD kernel ISA (0 = scalar, 1 = neon, 2 = avx2).",
+            crate::tensor::simd::active().code() as f64,
+        );
         reg.gauge("llmdt_pool_workers", "Worker-pool threads.", pool.workers as f64);
         reg.gauge(
             "llmdt_pool_utilization",
@@ -835,6 +844,7 @@ mod tests {
             "llmdt_samples_dropped_total",
             "llmdt_sessions_failed_total",
             "llmdt_watchdog_kills_total",
+            "llmdt_kernel_dispatch",
             // spill / resurrection series are present (zero) even when the
             // host tier is disabled, so dashboards and CI greps never 404
             "llmdt_pages_spilled_total",

@@ -226,6 +226,16 @@ impl Engine {
                 crate::quant::KvFormat::for_model(&crate::formats::must(name), &model_cfg),
             ),
         };
+        // one-time kernel dispatch record: which ISA this engine's gemm /
+        // LUT-expansion / paged-attention microkernels selected (scalar may
+        // mean "forced" via LLMDT_FORCE_SCALAR / --force-scalar)
+        let isa = crate::tensor::simd::active();
+        if trace::enabled() {
+            trace::instant(trace::named_track("engine"), "kernel", "isa_selected", &[(
+                "isa",
+                isa.code() as f64,
+            )]);
+        }
         Ok(Engine {
             model_cfg,
             ckpt,

@@ -7,6 +7,7 @@
 //! (The offline vendor set has no ndarray; this module is the substitute.)
 
 mod linalg;
+pub mod simd;
 
 pub use linalg::{cholesky, cholesky_solve, invert_spd};
 
@@ -379,15 +380,29 @@ pub fn gemm_threaded(
 
 /// Row-block thread count [`gemm`] would pick for an `[m, k] x [k, n]`
 /// problem (`1` = stay serial). Decode-sized calls always return 1.
+/// ISA-aware fan-out sizing: the SIMD tiles retire multiply-adds a few
+/// times faster than the scalar chains, so the serial kernel covers ~2x
+/// larger problems before a `runtime::pool` dispatch pays for itself —
+/// the break-even threshold doubles when a vector ISA is active. Thread
+/// count never changes any row's arithmetic (see [`gemm_threaded`]), so
+/// this only moves the dispatch point, not a single bit.
 pub fn gemm_auto_threads(m: usize, k: usize, n: usize) -> usize {
-    if m < 2 * GEMM_MR || m.saturating_mul(k).saturating_mul(n) < GEMM_PAR_FLOPS {
+    let par_floor = match simd::active() {
+        simd::Isa::Scalar => GEMM_PAR_FLOPS,
+        _ => 2 * GEMM_PAR_FLOPS,
+    };
+    if m < 2 * GEMM_MR || m.saturating_mul(k).saturating_mul(n) < par_floor {
         return 1;
     }
     crate::runtime::pool::parallelism().min(m.div_ceil(GEMM_MR)).min(8)
 }
 
 /// Serial blocked kernel over one row range (see [`gemm`] for the layout).
+/// The ISA is resolved once per call; each micro-tile then runs the SIMD
+/// variant (bit-identical to the scalar chains — see `tensor::simd`) or
+/// the scalar oracle itself.
 fn gemm_block(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], out: &mut [f32]) {
+    let isa = simd::active();
     let mut k0 = 0usize;
     while k0 < k {
         let kb = GEMM_KC.min(k - k0);
@@ -395,10 +410,10 @@ fn gemm_block(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], out: &mut [f32
         let mut i0 = 0usize;
         while i0 < m {
             match m - i0 {
-                1 => micro_tile::<1>(kb, k, n, k0, i0, a, b_block, out),
-                2 => micro_tile::<2>(kb, k, n, k0, i0, a, b_block, out),
-                3 => micro_tile::<3>(kb, k, n, k0, i0, a, b_block, out),
-                _ => micro_tile::<GEMM_MR>(kb, k, n, k0, i0, a, b_block, out),
+                1 => simd::micro_tile_vec::<1>(isa, kb, k, n, k0, i0, a, b_block, out),
+                2 => simd::micro_tile_vec::<2>(isa, kb, k, n, k0, i0, a, b_block, out),
+                3 => simd::micro_tile_vec::<3>(isa, kb, k, n, k0, i0, a, b_block, out),
+                _ => simd::micro_tile_vec::<GEMM_MR>(isa, kb, k, n, k0, i0, a, b_block, out),
             }
             i0 += GEMM_MR.min(m - i0);
         }
@@ -724,8 +739,37 @@ pub fn lut_attend_head(
 /// `j % page_rows` of page `j / page_rows`; pages are walked in table
 /// order, so the per-position arithmetic (and therefore every bit) is
 /// identical to the contiguous kernel over the same codes.
+///
+/// Dispatches on the active ISA: the vector path
+/// (`simd::lut_attend_head_paged_vec`) expands each `lut * scale` dequant
+/// tile in-register and vectorizes the V accumulation while keeping the
+/// score reduction a scalar chain, so it is bit-identical to
+/// [`lut_attend_head_paged_scalar`] — the verbatim pre-SIMD body, kept as
+/// the oracle (`rust/tests/simd_kernels.rs`).
 #[allow(clippy::too_many_arguments)]
 pub fn lut_attend_head_paged(
+    q_head: &[f32],
+    k: PagedPackedLane<'_>,
+    v: PagedPackedLane<'_>,
+    off: usize,
+    rows: usize,
+    scale: f32,
+    att: &mut [f32],
+    ctx_head: &mut [f32],
+) {
+    match simd::active() {
+        simd::Isa::Scalar => {
+            lut_attend_head_paged_scalar(q_head, k, v, off, rows, scale, att, ctx_head)
+        }
+        isa => simd::lut_attend_head_paged_vec(isa, q_head, k, v, off, rows, scale, att, ctx_head),
+    }
+}
+
+/// The scalar oracle body of [`lut_attend_head_paged`] (pre-PR-10,
+/// verbatim). Public so the differential tests and the force-scalar bench
+/// cells can target it directly regardless of dispatch state.
+#[allow(clippy::too_many_arguments)]
+pub fn lut_attend_head_paged_scalar(
     q_head: &[f32],
     k: PagedPackedLane<'_>,
     v: PagedPackedLane<'_>,

@@ -1,0 +1,829 @@
+//! Explicit SIMD microkernels with one-time runtime dispatch (PR 10).
+//!
+//! Three hot loops get hand-written `core::arch` paths — the `gemm`
+//! MR×NR micro-tile, `lut_gemm`'s nibble→LUT row expansion, and
+//! `lut_attend_head_paged`'s per-(position, block) dequant tiles — behind
+//! a single [`Isa`] selector resolved once per process:
+//!
+//! * x86_64 with AVX2 → [`Isa::Avx2`] (256-bit tiles, `pshufb` LUT decode)
+//! * aarch64 with NEON → [`Isa::Neon`] (128-bit tiles, `tbl` LUT decode)
+//! * anything else, or `LLMDT_FORCE_SCALAR=1` / `--force-scalar` →
+//!   [`Isa::Scalar`], the verbatim pre-PR-10 loops.
+//!
+//! **Bit-identity contract.** Every SIMD path computes *the same f32
+//! operation sequence per output element* as its scalar oracle, so results
+//! are bit-identical (property-tested in `rust/tests/simd_kernels.rs`):
+//!
+//! * the GEMM tile vectorizes across the `GEMM_NR` *columns* — each
+//!   column's accumulator is still an independent mul-then-add chain in
+//!   `kk` order. Deliberately **no FMA**: a fused multiply-add rounds once
+//!   where the scalar oracle rounds twice, so the tile issues separate
+//!   `mul` + `add` vector ops. The win is register blocking + width, not
+//!   contraction.
+//! * LUT expansion is per-element independent (`lut[code] * scale`): the
+//!   16-entry f32 LUT is split into 4 byte planes and each unpacked nibble
+//!   becomes an in-register byte shuffle per plane; the reassembled f32 is
+//!   the exact LUT entry, and the one multiply per element matches the
+//!   scalar expression.
+//! * the attention score dot stays a scalar chain (reordering a reduction
+//!   changes bits); only the dequant expansion and the per-element V
+//!   accumulation (`ctx[t] += w * (lut[c] * s)`) vectorize.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::OnceLock;
+
+/// Instruction set the kernels dispatch to. `code()` is the stable numeric
+/// id exported as the `llmdt_kernel_dispatch` gauge (0/1/2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Isa {
+    /// Portable scalar loops — the bit-exact oracle every SIMD path is
+    /// property-tested against.
+    Scalar,
+    /// aarch64 NEON (128-bit, `tbl` byte shuffle).
+    Neon,
+    /// x86_64 AVX2 (256-bit tiles, `pshufb` byte shuffle).
+    Avx2,
+}
+
+impl Isa {
+    pub fn name(self) -> &'static str {
+        match self {
+            Isa::Scalar => "scalar",
+            Isa::Neon => "neon",
+            Isa::Avx2 => "avx2",
+        }
+    }
+
+    /// Stable numeric id for metrics/tracing (0 = scalar, 1 = neon,
+    /// 2 = avx2).
+    pub fn code(self) -> u8 {
+        match self {
+            Isa::Scalar => 0,
+            Isa::Neon => 1,
+            Isa::Avx2 => 2,
+        }
+    }
+}
+
+// The force flag initializes from LLMDT_FORCE_SCALAR on first query and can
+// be flipped at runtime (`--force-scalar`, the perf_kernel/perf_serve A/B
+// cells). Kernels re-read it through `active()` on every top-level call, so
+// a flip applies to the next kernel invocation — tests serialize around it.
+static FORCE_SCALAR: OnceLock<AtomicBool> = OnceLock::new();
+
+fn force_flag() -> &'static AtomicBool {
+    FORCE_SCALAR.get_or_init(|| {
+        let on = std::env::var("LLMDT_FORCE_SCALAR")
+            .map(|v| !(v.is_empty() || v == "0"))
+            .unwrap_or(false);
+        AtomicBool::new(on)
+    })
+}
+
+/// Pin (or unpin) the scalar oracle path in this process. `true` is what
+/// `LLMDT_FORCE_SCALAR=1` / `--force-scalar` set before serving starts.
+pub fn force_scalar(on: bool) {
+    force_flag().store(on, Ordering::SeqCst);
+}
+
+/// Whether the scalar path is currently forced.
+pub fn scalar_forced() -> bool {
+    force_flag().load(Ordering::Relaxed)
+}
+
+fn detect() -> Isa {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2") {
+            return Isa::Avx2;
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if std::arch::is_aarch64_feature_detected!("neon") {
+            return Isa::Neon;
+        }
+    }
+    Isa::Scalar
+}
+
+/// Best ISA this CPU supports (cached; ignores the force flag).
+pub fn detected() -> Isa {
+    static DETECTED: OnceLock<Isa> = OnceLock::new();
+    *DETECTED.get_or_init(detect)
+}
+
+/// The ISA kernels dispatch to right now: [`detected`] unless the scalar
+/// path is forced. One relaxed load + one cached lookup — cheap enough for
+/// every kernel entry point to query per call.
+pub fn active() -> Isa {
+    if scalar_forced() {
+        Isa::Scalar
+    } else {
+        detected()
+    }
+}
+
+/// `active().name()` — for banners and logs.
+pub fn isa_name() -> &'static str {
+    active().name()
+}
+
+// ---------------------------------------------------------------------------
+// Nibble→LUT expansion planes
+// ---------------------------------------------------------------------------
+
+/// A 16-entry f32 LUT split into its 4 little-endian byte planes: plane `p`
+/// holds byte `p` of each `lut[c]`. A 16-lane byte shuffle per plane turns
+/// 16 nibble codes into the 4 byte columns of 16 exact f32 LUT entries —
+/// the in-register decode both SIMD expansion kernels share.
+pub(crate) struct NibbleLut {
+    #[cfg_attr(
+        not(any(target_arch = "x86_64", target_arch = "aarch64")),
+        allow(dead_code)
+    )]
+    planes: [[u8; 16]; 4],
+}
+
+impl NibbleLut {
+    pub(crate) fn new(lut: &[f32; 16]) -> NibbleLut {
+        let mut planes = [[0u8; 16]; 4];
+        for (c, &v) in lut.iter().enumerate() {
+            let b = v.to_bits().to_le_bytes();
+            for (p, plane) in planes.iter_mut().enumerate() {
+                plane[c] = b[p];
+            }
+        }
+        NibbleLut { planes }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// GEMM micro-tile dispatch
+// ---------------------------------------------------------------------------
+
+/// One `[MB, n]` register-tiled pass over a K-block, dispatched by ISA.
+/// The scalar arm is `super::micro_tile` itself; the vector arms compute
+/// the identical per-(row, column) mul-then-add chain with 8-/4-lane
+/// columns (see the module docs for why this is bit-identical).
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn micro_tile_vec<const MB: usize>(
+    isa: Isa,
+    kb: usize,
+    k: usize,
+    n: usize,
+    k0: usize,
+    i0: usize,
+    a: &[f32],
+    b_block: &[f32],
+    out: &mut [f32],
+) {
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe { x86::micro_tile_avx2::<MB>(kb, k, n, k0, i0, a, b_block, out) },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => unsafe { arm::micro_tile_neon::<MB>(kb, k, n, k0, i0, a, b_block, out) },
+        _ => super::micro_tile::<MB>(kb, k, n, k0, i0, a, b_block, out),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// lut_gemm row expansion dispatch
+// ---------------------------------------------------------------------------
+
+/// Expand one packed weight row: `wrow[j] = lut[code(j)] * srow[j]` for all
+/// `j < wrow.len()` (`prow` holds two nibble codes per byte, low nibble
+/// first). Per-element independent, so fully vectorizable; every element is
+/// the scalar oracle's exact single-multiply expression.
+#[cfg_attr(
+    not(any(target_arch = "x86_64", target_arch = "aarch64")),
+    allow(unused_variables)
+)]
+pub(crate) fn lut_expand_row(
+    isa: Isa,
+    planes: &NibbleLut,
+    lut: &[f32; 16],
+    prow: &[u8],
+    srow: &[f32],
+    wrow: &mut [f32],
+) {
+    debug_assert_eq!(prow.len(), wrow.len().div_ceil(2));
+    debug_assert_eq!(srow.len(), wrow.len());
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe { x86::lut_expand_row_avx2(planes, lut, prow, srow, wrow) },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => unsafe { arm::lut_expand_row_neon(planes, lut, prow, srow, wrow) },
+        _ => lut_expand_row_tail(lut, prow, srow, wrow, 0),
+    }
+}
+
+/// Scalar expansion from output column `j0` (even) to the end — the tail of
+/// the vector kernels and the whole loop on the scalar path. Verbatim the
+/// pre-PR-10 `lut_gemm_blocks` inner loop.
+fn lut_expand_row_tail(lut: &[f32; 16], prow: &[u8], srow: &[f32], wrow: &mut [f32], j0: usize) {
+    let n = wrow.len();
+    for (jh, &byte) in prow.iter().enumerate().skip(j0 / 2) {
+        let j = 2 * jh;
+        wrow[j] = lut[(byte & 0x0f) as usize] * srow[j];
+        if j + 1 < n {
+            wrow[j + 1] = lut[(byte >> 4) as usize] * srow[j + 1];
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fused dequant-attention dispatch
+// ---------------------------------------------------------------------------
+
+/// Expand one packed block: `out[t] = lut[code(t)] * s` — the attention
+/// kernels' per-(position, block) dequant tile. `bytes` holds the block's
+/// packed nibbles (block is even, so always whole bytes).
+#[cfg_attr(
+    not(any(target_arch = "x86_64", target_arch = "aarch64")),
+    allow(unused_variables)
+)]
+fn expand_block(isa: Isa, planes: &NibbleLut, lut: &[f32; 16], bytes: &[u8], s: f32, out: &mut [f32]) {
+    debug_assert_eq!(bytes.len() * 2, out.len());
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe { x86::expand_block_avx2(planes, lut, bytes, s, out) },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => unsafe { arm::expand_block_neon(planes, lut, bytes, s, out) },
+        _ => expand_block_tail(lut, bytes, s, out, 0),
+    }
+}
+
+/// Scalar block expansion from element `t0` (even) to the end.
+fn expand_block_tail(lut: &[f32; 16], bytes: &[u8], s: f32, out: &mut [f32], t0: usize) {
+    for (p, &byte) in bytes.iter().enumerate().skip(t0 / 2) {
+        out[2 * p] = lut[(byte & 0x0f) as usize] * s;
+        out[2 * p + 1] = lut[(byte >> 4) as usize] * s;
+    }
+}
+
+/// `ys[t] += w * xs[t]` — the attention V accumulation, per-element
+/// independent so vectorizable with the oracle's mul-then-add per lane.
+#[cfg_attr(
+    not(any(target_arch = "x86_64", target_arch = "aarch64")),
+    allow(unused_variables)
+)]
+fn axpy(isa: Isa, w: f32, xs: &[f32], ys: &mut [f32]) {
+    debug_assert_eq!(xs.len(), ys.len());
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe { x86::axpy_avx2(w, xs, ys) },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => unsafe { arm::axpy_neon(w, xs, ys) },
+        _ => axpy_tail(w, xs, ys, 0),
+    }
+}
+
+fn axpy_tail(w: f32, xs: &[f32], ys: &mut [f32], t0: usize) {
+    for (y, &x) in ys.iter_mut().zip(xs).skip(t0) {
+        *y += w * x;
+    }
+}
+
+/// Vector-ISA body of `tensor::lut_attend_head_paged` (called with
+/// `isa != Scalar`): same page walk, same scalar score chain and softmax as
+/// the scalar oracle, but each block's `lut[c] * scale` dequant tile is
+/// expanded in-register and the V accumulation runs 8/4 lanes wide. Every
+/// per-element f32 operation sequence matches the oracle, so the result is
+/// bit-identical (`rust/tests/simd_kernels.rs`).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn lut_attend_head_paged_vec(
+    isa: Isa,
+    q_head: &[f32],
+    k: super::PagedPackedLane<'_>,
+    v: super::PagedPackedLane<'_>,
+    off: usize,
+    rows: usize,
+    scale: f32,
+    att: &mut [f32],
+    ctx_head: &mut [f32],
+) {
+    let dh = q_head.len();
+    debug_assert!(att.len() >= rows, "attention scratch too small");
+    debug_assert_eq!(ctx_head.len(), dh);
+    debug_assert_eq!(off % k.block, 0, "head offset must be block-aligned");
+    debug_assert_eq!(dh % k.block, 0, "head width must be whole blocks");
+    assert!(
+        k.pages_codes.len() * k.page_rows >= rows && v.pages_codes.len() * v.page_rows >= rows,
+        "block table holds {} K / {} V pages, attending {rows} rows",
+        k.pages_codes.len(),
+        v.pages_codes.len(),
+    );
+    assert!(k.block <= super::LANE_MAX_BLOCK && v.block <= super::LANE_MAX_BLOCK);
+    let k_planes = NibbleLut::new(k.lut);
+    let v_planes = NibbleLut::new(v.lut);
+    let mut buf = [0.0f32; super::LANE_MAX_BLOCK];
+
+    let mut mx = f32::NEG_INFINITY;
+    let mut j = 0usize;
+    'score: for p in 0..k.pages_codes.len() {
+        let lane = k.page(p);
+        let block = lane.block;
+        let row_bytes = lane.d / 2;
+        let srow_len = lane.d / block;
+        for r in 0..k.page_rows {
+            if j == rows {
+                break 'score;
+            }
+            let codes_row = &lane.codes[r * row_bytes..(r + 1) * row_bytes];
+            let scales_row = &lane.scales[r * srow_len..(r + 1) * srow_len];
+            let mut dot = 0.0f32;
+            let mut t = 0usize;
+            while t < dh {
+                let col0 = off + t;
+                let s = scales_row[col0 / block];
+                expand_block(
+                    isa,
+                    &k_planes,
+                    lane.lut,
+                    &codes_row[col0 / 2..(col0 + block) / 2],
+                    s,
+                    &mut buf[..block],
+                );
+                // the dot stays a scalar chain in t order — reordering a
+                // reduction would change bits
+                for (t2, &x) in buf[..block].iter().enumerate() {
+                    dot += q_head[t + t2] * x;
+                }
+                t += block;
+            }
+            att[j] = dot * scale;
+            mx = mx.max(att[j]);
+            j += 1;
+        }
+    }
+    let mut z = 0.0f32;
+    for a in att.iter_mut().take(rows) {
+        *a = (*a - mx).exp();
+        z += *a;
+    }
+    let mut j = 0usize;
+    'accum: for p in 0..v.pages_codes.len() {
+        let lane = v.page(p);
+        let block = lane.block;
+        let row_bytes = lane.d / 2;
+        let srow_len = lane.d / block;
+        for r in 0..v.page_rows {
+            if j == rows {
+                break 'accum;
+            }
+            let w = att[j] / z;
+            let codes_row = &lane.codes[r * row_bytes..(r + 1) * row_bytes];
+            let scales_row = &lane.scales[r * srow_len..(r + 1) * srow_len];
+            let mut t = 0usize;
+            while t < dh {
+                let col0 = off + t;
+                let s = scales_row[col0 / block];
+                expand_block(
+                    isa,
+                    &v_planes,
+                    lane.lut,
+                    &codes_row[col0 / 2..(col0 + block) / 2],
+                    s,
+                    &mut buf[..block],
+                );
+                axpy(isa, w, &buf[..block], &mut ctx_head[t..t + block]);
+                t += block;
+            }
+            j += 1;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// x86_64 AVX2 kernels
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use super::NibbleLut;
+    use crate::tensor::GEMM_NR;
+    use core::arch::x86_64::*;
+
+    /// AVX2 `[MB, n]` micro-tile: two 8-lane accumulators per row cover the
+    /// GEMM_NR=16 columns; per `kk` the broadcast `a` element is multiplied
+    /// and added in separate ops (no FMA — see module docs). The column
+    /// remainder runs the scalar chains verbatim.
+    #[target_feature(enable = "avx2")]
+    #[allow(clippy::too_many_arguments)]
+    pub(super) unsafe fn micro_tile_avx2<const MB: usize>(
+        kb: usize,
+        k: usize,
+        n: usize,
+        k0: usize,
+        i0: usize,
+        a: &[f32],
+        b_block: &[f32],
+        out: &mut [f32],
+    ) {
+        unsafe {
+            let a_rows: [&[f32]; MB] =
+                std::array::from_fn(|r| &a[(i0 + r) * k + k0..(i0 + r) * k + k0 + kb]);
+            let mut j0 = 0usize;
+            while j0 + GEMM_NR <= n {
+                let mut acc_lo = [_mm256_setzero_ps(); MB];
+                let mut acc_hi = [_mm256_setzero_ps(); MB];
+                let mut boff = j0;
+                for kk in 0..kb {
+                    let b_lo = _mm256_loadu_ps(b_block.as_ptr().add(boff));
+                    let b_hi = _mm256_loadu_ps(b_block.as_ptr().add(boff + 8));
+                    for r in 0..MB {
+                        let av = _mm256_set1_ps(a_rows[r][kk]);
+                        acc_lo[r] = _mm256_add_ps(acc_lo[r], _mm256_mul_ps(av, b_lo));
+                        acc_hi[r] = _mm256_add_ps(acc_hi[r], _mm256_mul_ps(av, b_hi));
+                    }
+                    boff += n;
+                }
+                for r in 0..MB {
+                    let o = out.as_mut_ptr().add((i0 + r) * n + j0);
+                    _mm256_storeu_ps(o, _mm256_add_ps(_mm256_loadu_ps(o), acc_lo[r]));
+                    let oh = o.add(8);
+                    _mm256_storeu_ps(oh, _mm256_add_ps(_mm256_loadu_ps(oh), acc_hi[r]));
+                }
+                j0 += GEMM_NR;
+            }
+            if j0 < n {
+                // column remainder: the scalar oracle's chains, verbatim
+                let rem = n - j0;
+                let mut acc = [[0.0f32; GEMM_NR]; MB];
+                let mut boff = j0;
+                for kk in 0..kb {
+                    let b_row = &b_block[boff..boff + rem];
+                    for r in 0..MB {
+                        let av = a_rows[r][kk];
+                        let accr = &mut acc[r];
+                        for t in 0..rem {
+                            accr[t] += av * b_row[t];
+                        }
+                    }
+                    boff += n;
+                }
+                for r in 0..MB {
+                    let o = (i0 + r) * n + j0;
+                    let o_row = &mut out[o..o + rem];
+                    for t in 0..rem {
+                        o_row[t] += acc[r][t];
+                    }
+                }
+            }
+        }
+    }
+
+    /// Decode 8 packed bytes (16 nibble codes) into 4 × 4 exact f32 LUT
+    /// entries via one `pshufb` per byte plane.
+    #[inline(always)]
+    unsafe fn gather16(
+        p0: __m128i,
+        p1: __m128i,
+        p2: __m128i,
+        p3: __m128i,
+        bytes: *const u8,
+    ) -> (__m128, __m128, __m128, __m128) {
+        unsafe {
+            let x = _mm_loadl_epi64(bytes as *const __m128i);
+            let nib = _mm_set1_epi8(0x0f);
+            let lo = _mm_and_si128(x, nib);
+            let hi = _mm_and_si128(_mm_srli_epi16::<4>(x), nib);
+            // interleave: idx[2i] = low nibble of byte i (column 2i),
+            // idx[2i+1] = high nibble (column 2i+1) — the packed layout
+            let idx = _mm_unpacklo_epi8(lo, hi);
+            let t0 = _mm_shuffle_epi8(p0, idx);
+            let t1 = _mm_shuffle_epi8(p1, idx);
+            let t2 = _mm_shuffle_epi8(p2, idx);
+            let t3 = _mm_shuffle_epi8(p3, idx);
+            // byte-plane transpose back to 16 little-endian f32s
+            let b01_lo = _mm_unpacklo_epi8(t0, t1);
+            let b01_hi = _mm_unpackhi_epi8(t0, t1);
+            let b23_lo = _mm_unpacklo_epi8(t2, t3);
+            let b23_hi = _mm_unpackhi_epi8(t2, t3);
+            (
+                _mm_castsi128_ps(_mm_unpacklo_epi16(b01_lo, b23_lo)),
+                _mm_castsi128_ps(_mm_unpackhi_epi16(b01_lo, b23_lo)),
+                _mm_castsi128_ps(_mm_unpacklo_epi16(b01_hi, b23_hi)),
+                _mm_castsi128_ps(_mm_unpackhi_epi16(b01_hi, b23_hi)),
+            )
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn lut_expand_row_avx2(
+        planes: &NibbleLut,
+        lut: &[f32; 16],
+        prow: &[u8],
+        srow: &[f32],
+        wrow: &mut [f32],
+    ) {
+        unsafe {
+            let p0 = _mm_loadu_si128(planes.planes[0].as_ptr() as *const __m128i);
+            let p1 = _mm_loadu_si128(planes.planes[1].as_ptr() as *const __m128i);
+            let p2 = _mm_loadu_si128(planes.planes[2].as_ptr() as *const __m128i);
+            let p3 = _mm_loadu_si128(planes.planes[3].as_ptr() as *const __m128i);
+            let n = wrow.len();
+            let mut j = 0usize;
+            while j + 16 <= n {
+                let (v0, v1, v2, v3) = gather16(p0, p1, p2, p3, prow.as_ptr().add(j / 2));
+                let sp = srow.as_ptr().add(j);
+                let wp = wrow.as_mut_ptr().add(j);
+                _mm_storeu_ps(wp, _mm_mul_ps(v0, _mm_loadu_ps(sp)));
+                _mm_storeu_ps(wp.add(4), _mm_mul_ps(v1, _mm_loadu_ps(sp.add(4))));
+                _mm_storeu_ps(wp.add(8), _mm_mul_ps(v2, _mm_loadu_ps(sp.add(8))));
+                _mm_storeu_ps(wp.add(12), _mm_mul_ps(v3, _mm_loadu_ps(sp.add(12))));
+                j += 16;
+            }
+            super::lut_expand_row_tail(lut, prow, srow, wrow, j);
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn expand_block_avx2(
+        planes: &NibbleLut,
+        lut: &[f32; 16],
+        bytes: &[u8],
+        s: f32,
+        out: &mut [f32],
+    ) {
+        unsafe {
+            let p0 = _mm_loadu_si128(planes.planes[0].as_ptr() as *const __m128i);
+            let p1 = _mm_loadu_si128(planes.planes[1].as_ptr() as *const __m128i);
+            let p2 = _mm_loadu_si128(planes.planes[2].as_ptr() as *const __m128i);
+            let p3 = _mm_loadu_si128(planes.planes[3].as_ptr() as *const __m128i);
+            let sv = _mm_set1_ps(s);
+            let n = out.len();
+            let mut t = 0usize;
+            while t + 16 <= n {
+                let (v0, v1, v2, v3) = gather16(p0, p1, p2, p3, bytes.as_ptr().add(t / 2));
+                let op = out.as_mut_ptr().add(t);
+                _mm_storeu_ps(op, _mm_mul_ps(v0, sv));
+                _mm_storeu_ps(op.add(4), _mm_mul_ps(v1, sv));
+                _mm_storeu_ps(op.add(8), _mm_mul_ps(v2, sv));
+                _mm_storeu_ps(op.add(12), _mm_mul_ps(v3, sv));
+                t += 16;
+            }
+            super::expand_block_tail(lut, bytes, s, out, t);
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn axpy_avx2(w: f32, xs: &[f32], ys: &mut [f32]) {
+        unsafe {
+            let wv = _mm256_set1_ps(w);
+            let n = ys.len();
+            let mut t = 0usize;
+            while t + 8 <= n {
+                let yp = ys.as_mut_ptr().add(t);
+                let prod = _mm256_mul_ps(wv, _mm256_loadu_ps(xs.as_ptr().add(t)));
+                _mm256_storeu_ps(yp, _mm256_add_ps(_mm256_loadu_ps(yp), prod));
+                t += 8;
+            }
+            super::axpy_tail(w, xs, ys, t);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// aarch64 NEON kernels
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "aarch64")]
+mod arm {
+    use super::NibbleLut;
+    use crate::tensor::GEMM_NR;
+    use core::arch::aarch64::*;
+
+    /// NEON `[MB, n]` micro-tile: four 4-lane accumulators per row cover
+    /// the GEMM_NR=16 columns; separate `vmul` + `vadd` (no FMA), scalar
+    /// column remainder — same contract as the AVX2 tile.
+    #[target_feature(enable = "neon")]
+    #[allow(clippy::too_many_arguments)]
+    pub(super) unsafe fn micro_tile_neon<const MB: usize>(
+        kb: usize,
+        k: usize,
+        n: usize,
+        k0: usize,
+        i0: usize,
+        a: &[f32],
+        b_block: &[f32],
+        out: &mut [f32],
+    ) {
+        unsafe {
+            let a_rows: [&[f32]; MB] =
+                std::array::from_fn(|r| &a[(i0 + r) * k + k0..(i0 + r) * k + k0 + kb]);
+            let mut j0 = 0usize;
+            while j0 + GEMM_NR <= n {
+                let mut acc = [[vdupq_n_f32(0.0); 4]; MB];
+                let mut boff = j0;
+                for kk in 0..kb {
+                    let bp = b_block.as_ptr().add(boff);
+                    let b0 = vld1q_f32(bp);
+                    let b1 = vld1q_f32(bp.add(4));
+                    let b2 = vld1q_f32(bp.add(8));
+                    let b3 = vld1q_f32(bp.add(12));
+                    for r in 0..MB {
+                        let av = vdupq_n_f32(a_rows[r][kk]);
+                        acc[r][0] = vaddq_f32(acc[r][0], vmulq_f32(av, b0));
+                        acc[r][1] = vaddq_f32(acc[r][1], vmulq_f32(av, b1));
+                        acc[r][2] = vaddq_f32(acc[r][2], vmulq_f32(av, b2));
+                        acc[r][3] = vaddq_f32(acc[r][3], vmulq_f32(av, b3));
+                    }
+                    boff += n;
+                }
+                for r in 0..MB {
+                    let o = out.as_mut_ptr().add((i0 + r) * n + j0);
+                    for (q, lane) in acc[r].iter().enumerate() {
+                        let op = o.add(4 * q);
+                        vst1q_f32(op, vaddq_f32(vld1q_f32(op), *lane));
+                    }
+                }
+                j0 += GEMM_NR;
+            }
+            if j0 < n {
+                let rem = n - j0;
+                let mut acc = [[0.0f32; GEMM_NR]; MB];
+                let mut boff = j0;
+                for kk in 0..kb {
+                    let b_row = &b_block[boff..boff + rem];
+                    for r in 0..MB {
+                        let av = a_rows[r][kk];
+                        let accr = &mut acc[r];
+                        for t in 0..rem {
+                            accr[t] += av * b_row[t];
+                        }
+                    }
+                    boff += n;
+                }
+                for r in 0..MB {
+                    let o = (i0 + r) * n + j0;
+                    let o_row = &mut out[o..o + rem];
+                    for t in 0..rem {
+                        o_row[t] += acc[r][t];
+                    }
+                }
+            }
+        }
+    }
+
+    /// Decode 8 packed bytes into 4 × 4 exact f32 LUT entries via one `tbl`
+    /// per byte plane.
+    #[inline(always)]
+    unsafe fn gather16(
+        p0: uint8x16_t,
+        p1: uint8x16_t,
+        p2: uint8x16_t,
+        p3: uint8x16_t,
+        bytes: *const u8,
+    ) -> (float32x4_t, float32x4_t, float32x4_t, float32x4_t) {
+        unsafe {
+            let x = vld1_u8(bytes);
+            let lo = vand_u8(x, vdup_n_u8(0x0f));
+            let hi = vshr_n_u8::<4>(x);
+            let idx = vcombine_u8(vzip1_u8(lo, hi), vzip2_u8(lo, hi));
+            let t0 = vqtbl1q_u8(p0, idx);
+            let t1 = vqtbl1q_u8(p1, idx);
+            let t2 = vqtbl1q_u8(p2, idx);
+            let t3 = vqtbl1q_u8(p3, idx);
+            let b01_lo = vzip1q_u8(t0, t1);
+            let b01_hi = vzip2q_u8(t0, t1);
+            let b23_lo = vzip1q_u8(t2, t3);
+            let b23_hi = vzip2q_u8(t2, t3);
+            (
+                vreinterpretq_f32_u16(vzip1q_u16(
+                    vreinterpretq_u16_u8(b01_lo),
+                    vreinterpretq_u16_u8(b23_lo),
+                )),
+                vreinterpretq_f32_u16(vzip2q_u16(
+                    vreinterpretq_u16_u8(b01_lo),
+                    vreinterpretq_u16_u8(b23_lo),
+                )),
+                vreinterpretq_f32_u16(vzip1q_u16(
+                    vreinterpretq_u16_u8(b01_hi),
+                    vreinterpretq_u16_u8(b23_hi),
+                )),
+                vreinterpretq_f32_u16(vzip2q_u16(
+                    vreinterpretq_u16_u8(b01_hi),
+                    vreinterpretq_u16_u8(b23_hi),
+                )),
+            )
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn lut_expand_row_neon(
+        planes: &NibbleLut,
+        lut: &[f32; 16],
+        prow: &[u8],
+        srow: &[f32],
+        wrow: &mut [f32],
+    ) {
+        unsafe {
+            let p0 = vld1q_u8(planes.planes[0].as_ptr());
+            let p1 = vld1q_u8(planes.planes[1].as_ptr());
+            let p2 = vld1q_u8(planes.planes[2].as_ptr());
+            let p3 = vld1q_u8(planes.planes[3].as_ptr());
+            let n = wrow.len();
+            let mut j = 0usize;
+            while j + 16 <= n {
+                let (v0, v1, v2, v3) = gather16(p0, p1, p2, p3, prow.as_ptr().add(j / 2));
+                let sp = srow.as_ptr().add(j);
+                let wp = wrow.as_mut_ptr().add(j);
+                vst1q_f32(wp, vmulq_f32(v0, vld1q_f32(sp)));
+                vst1q_f32(wp.add(4), vmulq_f32(v1, vld1q_f32(sp.add(4))));
+                vst1q_f32(wp.add(8), vmulq_f32(v2, vld1q_f32(sp.add(8))));
+                vst1q_f32(wp.add(12), vmulq_f32(v3, vld1q_f32(sp.add(12))));
+                j += 16;
+            }
+            super::lut_expand_row_tail(lut, prow, srow, wrow, j);
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn expand_block_neon(
+        planes: &NibbleLut,
+        lut: &[f32; 16],
+        bytes: &[u8],
+        s: f32,
+        out: &mut [f32],
+    ) {
+        unsafe {
+            let p0 = vld1q_u8(planes.planes[0].as_ptr());
+            let p1 = vld1q_u8(planes.planes[1].as_ptr());
+            let p2 = vld1q_u8(planes.planes[2].as_ptr());
+            let p3 = vld1q_u8(planes.planes[3].as_ptr());
+            let sv = vdupq_n_f32(s);
+            let n = out.len();
+            let mut t = 0usize;
+            while t + 16 <= n {
+                let (v0, v1, v2, v3) = gather16(p0, p1, p2, p3, bytes.as_ptr().add(t / 2));
+                let op = out.as_mut_ptr().add(t);
+                vst1q_f32(op, vmulq_f32(v0, sv));
+                vst1q_f32(op.add(4), vmulq_f32(v1, sv));
+                vst1q_f32(op.add(8), vmulq_f32(v2, sv));
+                vst1q_f32(op.add(12), vmulq_f32(v3, sv));
+                t += 16;
+            }
+            super::expand_block_tail(lut, bytes, s, out, t);
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn axpy_neon(w: f32, xs: &[f32], ys: &mut [f32]) {
+        unsafe {
+            let wv = vdupq_n_f32(w);
+            let n = ys.len();
+            let mut t = 0usize;
+            while t + 4 <= n {
+                let yp = ys.as_mut_ptr().add(t);
+                let prod = vmulq_f32(wv, vld1q_f32(xs.as_ptr().add(t)));
+                vst1q_f32(yp, vaddq_f32(vld1q_f32(yp), prod));
+                t += 4;
+            }
+            super::axpy_tail(w, xs, ys, t);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn isa_codes_and_names_are_stable() {
+        assert_eq!(Isa::Scalar.code(), 0);
+        assert_eq!(Isa::Neon.code(), 1);
+        assert_eq!(Isa::Avx2.code(), 2);
+        assert_eq!(Isa::Scalar.name(), "scalar");
+        assert_eq!(Isa::Neon.name(), "neon");
+        assert_eq!(Isa::Avx2.name(), "avx2");
+    }
+
+    #[test]
+    fn nibble_lut_planes_hold_le_bytes() {
+        let lut: [f32; 16] = std::array::from_fn(|i| (i as f32 - 7.5) * 0.25);
+        let planes = NibbleLut::new(&lut);
+        for (c, &v) in lut.iter().enumerate() {
+            let b = v.to_bits().to_le_bytes();
+            for p in 0..4 {
+                assert_eq!(planes.planes[p][c], b[p], "plane {p} code {c}");
+            }
+        }
+    }
+
+    #[test]
+    fn scalar_expand_matches_oracle_expression() {
+        let lut: [f32; 16] = std::array::from_fn(|i| (i as f32 - 8.0) * 0.1);
+        // 7 columns: odd N leaves the last high nibble unused
+        let prow = [0x21u8, 0x43, 0x65, 0x07];
+        let srow = [1.0f32, 0.5, 0.25, 2.0, 1.5, 0.75, 3.0];
+        let mut wrow = [0.0f32; 7];
+        lut_expand_row_tail(&lut, &prow, &srow, &mut wrow, 0);
+        let codes = [1usize, 2, 3, 4, 5, 6, 7];
+        for (j, &c) in codes.iter().enumerate() {
+            assert_eq!(wrow[j], lut[c] * srow[j], "col {j}");
+        }
+    }
+}

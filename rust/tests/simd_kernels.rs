@@ -1,0 +1,349 @@
+//! Differential harness for the `tensor::simd` microkernels (PR 10).
+//!
+//! The contract under test: every SIMD path — the gemm micro-tile, the
+//! nibble -> LUT row expansion inside `lut_gemm`, and the paged packed-KV
+//! attention — is **bit-identical** to the scalar oracle it replaced, for
+//! every <= 4-bit codebook, every batch size 1..=8, and ragged shapes that
+//! exercise the vector tails (odd N, non-multiple-of-tile K, partially
+//! filled last KV page). On a host with no vector ISA both sides run the
+//! scalar loops and the comparisons pass trivially — the harness is then a
+//! dispatch sanity check, and CI's `-Ctarget-cpu=native` leg provides the
+//! vector coverage.
+//!
+//! W4A4 is the exception by design: quantizing the activations changes the
+//! numbers, so its gate is an NLL delta on the `micro` zoo model (the
+//! Table 8 contract), not bit-identity.
+//!
+//! The force-scalar flag is process-global, so every test that toggles it
+//! serializes through one poison-tolerant mutex and restores the
+//! environment's setting before returning.
+
+use std::sync::{Mutex, MutexGuard};
+
+use llm_datatypes::coordinator::pipeline::{w4a4_checkpoint, PipelineConfig};
+use llm_datatypes::coordinator::{corpus_for, trainer};
+use llm_datatypes::formats;
+use llm_datatypes::model_io::{zoo, Checkpoint};
+use llm_datatypes::nn::{self, SeqKvCache};
+use llm_datatypes::quant::{
+    lut_gemm, quantize_weight, BlockSize, Calib, KvFormat, PackedWeight, QuantConfig,
+};
+use llm_datatypes::rng::Pcg64;
+use llm_datatypes::serving::{
+    DecodeRequest, Engine, EngineConfig, FinishReason, SchedulerConfig, TokenEvent,
+};
+use llm_datatypes::tensor::{
+    argmax, gemm, lut_attend_head_paged, lut_attend_head_paged_scalar, simd, PagedPackedLane,
+    Tensor,
+};
+
+static LOCK: Mutex<()> = Mutex::new(());
+
+/// Serialize force-flag toggling; a panicked holder must not wedge the rest
+/// of the suite, so poison is tolerated.
+fn guard() -> MutexGuard<'static, ()> {
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Hand the dispatch back to whatever LLMDT_FORCE_SCALAR says.
+fn restore_env_force() {
+    simd::force_scalar(
+        std::env::var("LLMDT_FORCE_SCALAR")
+            .map(|v| !(v.is_empty() || v == "0"))
+            .unwrap_or(false),
+    );
+}
+
+fn assert_bits_eq(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(
+            x.to_bits(),
+            y.to_bits(),
+            "{what}: element {i} diverged ({x:?} vs {y:?})"
+        );
+    }
+}
+
+/// Distinct deterministic seed per format name (no hash dep needed).
+fn seed_for(name: &str) -> u64 {
+    name.bytes().fold(0x51d0_u64, |a, b| a.wrapping_mul(131).wrapping_add(b as u64))
+}
+
+/// Page `p` of a row-major buffer split into `per_page`-element pages; the
+/// last page may be short (ragged block-table tail).
+fn page_slice<T>(buf: &[T], p: usize, per_page: usize) -> &[T] {
+    &buf[p * per_page..buf.len().min((p + 1) * per_page)]
+}
+
+/// gemm: the vectorized MR x NR micro-tile (and its scalar column
+/// remainder) must be bit-identical to the scalar oracle chain for ragged
+/// (M, K, N) — N crossing the NR=16 lanes, K crossing the KC=256 panel,
+/// M covering partial MR=4 tiles and batch sizes 1..=8.
+#[test]
+fn gemm_simd_bit_identical_to_scalar_oracle() {
+    let _g = guard();
+    let mut rng = Pcg64::new(0x9a3d);
+    for &(k, n) in &[(7usize, 5usize), (64, 16), (100, 33), (256, 1), (300, 130)] {
+        for m in (1..=8usize).chain([13]) {
+            let a = rng.normal_vec(m * k, 1.0);
+            let b = rng.normal_vec(k * n, 1.0);
+            let mut out_s = vec![0.0f32; m * n];
+            let mut out_v = vec![0.0f32; m * n];
+            simd::force_scalar(true);
+            gemm(m, k, n, &a, &b, &mut out_s);
+            simd::force_scalar(false);
+            gemm(m, k, n, &a, &b, &mut out_v);
+            assert_bits_eq(&out_s, &out_v, &format!("gemm m={m} k={k} n={n}"));
+        }
+    }
+    restore_env_force();
+}
+
+/// lut_gemm: the shuffle-based nibble -> LUT expansion must reproduce the
+/// scalar expansion bit for bit on every packable (<= 16-value) codebook,
+/// batch 1..=8, including the odd-N padding nibble.
+#[test]
+fn lut_gemm_simd_bit_identical_across_packable_formats() {
+    let _g = guard();
+    for name in formats::packable_names() {
+        let spec = formats::must(name);
+        let mut rng = Pcg64::new(seed_for(name));
+        let (k, n, block) = (96usize, 33usize, 32usize);
+        let w = Tensor::new(&[k, n], rng.student_t_vec(k * n, 5.0, 0.05));
+        let q = quantize_weight(
+            &w,
+            &QuantConfig { format: spec.clone(), block: BlockSize::Sub(block), calib: Calib::None },
+        );
+        let packed = PackedWeight::from_quantized(&q, &spec);
+        for m in 1..=8usize {
+            let x = Tensor::new(&[m, k], rng.normal_vec(m * k, 1.0));
+            simd::force_scalar(true);
+            let ys = lut_gemm(&x, &packed);
+            simd::force_scalar(false);
+            let yv = lut_gemm(&x, &packed);
+            assert_bits_eq(ys.data(), yv.data(), &format!("{name} lut_gemm m={m}"));
+        }
+    }
+    restore_env_force();
+}
+
+/// lut_gemm ragged-shape sweep on one format: K panels that are not
+/// multiples of the 16-wide expansion chunk, single-column N, N around the
+/// tile edge, and a 256-wide scale block (one block per KC panel).
+#[test]
+fn lut_gemm_simd_bit_identical_on_ragged_shapes() {
+    let _g = guard();
+    let spec = formats::must("sf4");
+    let mut rng = Pcg64::new(0x4a66);
+    for &(m, k, n, block) in &[
+        (1usize, 64usize, 1usize, 32usize),
+        (2, 128, 17, 64),
+        (5, 96, 40, 48),
+        (7, 320, 129, 64),
+        (3, 512, 15, 256),
+    ] {
+        let w = Tensor::new(&[k, n], rng.student_t_vec(k * n, 5.0, 0.05));
+        let q = quantize_weight(
+            &w,
+            &QuantConfig { format: spec.clone(), block: BlockSize::Sub(block), calib: Calib::None },
+        );
+        let packed = PackedWeight::from_quantized(&q, &spec);
+        let x = Tensor::new(&[m, k], rng.normal_vec(m * k, 1.0));
+        simd::force_scalar(true);
+        let ys = lut_gemm(&x, &packed);
+        simd::force_scalar(false);
+        let yv = lut_gemm(&x, &packed);
+        assert_bits_eq(ys.data(), yv.data(), &format!("lut_gemm m={m} k={k} n={n} blk={block}"));
+    }
+    restore_env_force();
+}
+
+/// Paged packed-KV attention: walk a block table whose last page is
+/// partially filled, on every packable codebook, and require the SIMD
+/// dequant-tile path — and the forced-scalar dispatch — to match the
+/// scalar oracle body (`lut_attend_head_paged_scalar`) bit for bit.
+#[test]
+fn lut_attend_paged_walk_simd_bit_identical_to_scalar() {
+    let _g = guard();
+    let (d, heads) = (64usize, 2usize);
+    let dh = d / heads;
+    let page_rows = 5usize;
+    for name in formats::packable_names() {
+        let spec = formats::must(name);
+        let kvf = KvFormat::new(&spec, dh);
+        let mut rng = Pcg64::new(seed_for(name) ^ 0xa77);
+        for &rows in &[1usize, 3, 5, 13] {
+            let row_bytes = kvf.codes_per_row(d);
+            let s_per = kvf.scales_per_row(d);
+            let mut mk = |seed: u64| {
+                let mut r = Pcg64::new(seed);
+                let mut codes = vec![0u8; rows * row_bytes];
+                let mut scales = vec![0.0f32; rows * s_per];
+                for i in 0..rows {
+                    let row = r.normal_vec(d, 1.0);
+                    kvf.encode_row(
+                        &row,
+                        &mut codes[i * row_bytes..(i + 1) * row_bytes],
+                        &mut scales[i * s_per..(i + 1) * s_per],
+                    );
+                }
+                (codes, scales)
+            };
+            let (kc, ks) = mk(seed_for(name).wrapping_add(rows as u64));
+            let (vc, vs) = mk(seed_for(name).wrapping_add(100 + rows as u64));
+            let q = rng.normal_vec(d, 1.0);
+            let scale = 1.0 / (dh as f32).sqrt();
+            // contiguous lanes give us the lut/block the codec resolved to
+            let klane = kvf.lane(&kc, &ks, d);
+            let vlane = kvf.lane(&vc, &vs, d);
+            // block-table views: fixed-size pages, ragged last page
+            let n_pages = rows.div_ceil(page_rows);
+            let kp_codes: Vec<&[u8]> =
+                (0..n_pages).map(|p| page_slice(&kc, p, page_rows * row_bytes)).collect();
+            let kp_scales: Vec<&[f32]> =
+                (0..n_pages).map(|p| page_slice(&ks, p, page_rows * s_per)).collect();
+            let vp_codes: Vec<&[u8]> =
+                (0..n_pages).map(|p| page_slice(&vc, p, page_rows * row_bytes)).collect();
+            let vp_scales: Vec<&[f32]> =
+                (0..n_pages).map(|p| page_slice(&vs, p, page_rows * s_per)).collect();
+            let kp = PagedPackedLane {
+                pages_codes: &kp_codes,
+                pages_scales: &kp_scales,
+                lut: klane.lut,
+                d,
+                block: klane.block,
+                page_rows,
+            };
+            let vp = PagedPackedLane {
+                pages_codes: &vp_codes,
+                pages_scales: &vp_scales,
+                lut: vlane.lut,
+                d,
+                block: vlane.block,
+                page_rows,
+            };
+            for h in 0..heads {
+                let off = h * dh;
+                let q_head = &q[off..off + dh];
+                let mut att_o = vec![0.0f32; rows];
+                let mut ctx_o = vec![0.0f32; dh];
+                lut_attend_head_paged_scalar(q_head, kp, vp, off, rows, scale, &mut att_o, &mut ctx_o);
+                let mut att_f = vec![0.0f32; rows];
+                let mut ctx_f = vec![0.0f32; dh];
+                simd::force_scalar(true);
+                lut_attend_head_paged(q_head, kp, vp, off, rows, scale, &mut att_f, &mut ctx_f);
+                let mut att_v = vec![0.0f32; rows];
+                let mut ctx_v = vec![0.0f32; dh];
+                simd::force_scalar(false);
+                lut_attend_head_paged(q_head, kp, vp, off, rows, scale, &mut att_v, &mut ctx_v);
+                let what = format!("{name} rows={rows} head={h}");
+                assert_bits_eq(&ctx_f, &ctx_o, &format!("{what} (forced-scalar dispatch)"));
+                assert_bits_eq(&att_f, &att_o, &format!("{what} att (forced-scalar dispatch)"));
+                assert_bits_eq(&ctx_v, &ctx_o, &format!("{what} (simd)"));
+                assert_bits_eq(&att_v, &att_o, &format!("{what} att (simd)"));
+            }
+        }
+    }
+    restore_env_force();
+}
+
+// ---------------------------------------------------------------------------
+// W4A4: the deliberate exception to bit-identity
+// ---------------------------------------------------------------------------
+
+/// Teacher-forced NLL over a heldout window on the `micro` zoo model, fp32
+/// weights vs the W4A4 checkpoint (packed 4-bit weights + on-the-fly 4-bit
+/// activations through the 16x16 product LUT). The Table-8 claim scaled to
+/// this zoo: quantizing *both* sides costs only a bounded NLL delta.
+#[test]
+fn w4a4_nll_within_table8_tolerance_on_micro() {
+    let cfg = zoo("micro").unwrap();
+    let ckpt = trainer::init_lm_params(&cfg, 0x9e11);
+    let corpus = corpus_for(&cfg);
+    let s = 32usize;
+    let tokens: Vec<i32> = (0..=s as i32).map(|i| (i * 7 + 3) % cfg.vocab as i32).collect();
+    let nll_over = |ck: &Checkpoint| -> f64 {
+        let mut kv = SeqKvCache::new(&cfg);
+        let mut total = 0.0f64;
+        for i in 0..s {
+            let logits = nn::forward_lm_step(&cfg, ck, tokens[i], &mut kv).unwrap();
+            let logp = logits.log_softmax_last();
+            total -= logp.at2(0, tokens[i + 1] as usize) as f64;
+        }
+        total / s as f64
+    };
+    let nll_fp32 = nll_over(&ckpt);
+    assert!(nll_fp32.is_finite());
+    for fmt in ["sf4", "e2m1"] {
+        let w4a4 =
+            w4a4_checkpoint(&cfg, &ckpt, &PipelineConfig::w4a4(fmt, false), &corpus).unwrap();
+        let nll_w4a4 = nll_over(&w4a4);
+        assert!(nll_w4a4.is_finite(), "{fmt}: W4A4 NLL must stay finite");
+        let delta = (nll_w4a4 - nll_fp32).abs();
+        assert!(
+            delta <= 0.15 * nll_fp32,
+            "{fmt}: W4A4 NLL {nll_w4a4:.4} drifted from fp32 {nll_fp32:.4} (delta {delta:.4})"
+        );
+    }
+}
+
+/// The full `serve-decode --w4a4` path in-process: the batched engine over
+/// a W4A4 checkpoint streams the same tokens as feeding the same prompt
+/// through the single-step forward — the code x code GEMM is row-wise
+/// deterministic, so batching must not change any stream.
+#[test]
+fn w4a4_checkpoint_serves_through_batched_engine() {
+    let cfg = zoo("nano").unwrap();
+    let fp32 = trainer::init_lm_params(&cfg, 0x44a4);
+    let corpus = corpus_for(&cfg);
+    let ckpt = w4a4_checkpoint(&cfg, &fp32, &PipelineConfig::w4a4("sf4", false), &corpus).unwrap();
+    let prompt = vec![4i32, 9, 1, 7];
+    let max_new = 8usize;
+
+    // sequential reference over the same checkpoint
+    let mut kv = SeqKvCache::new(&cfg);
+    let mut logits = None;
+    for &t in &prompt {
+        logits = Some(nn::forward_lm_step(&cfg, &ckpt, t, &mut kv).unwrap());
+    }
+    let mut expect = Vec::new();
+    while expect.len() < max_new {
+        let next = argmax(logits.as_ref().unwrap().row(0)) as i32;
+        expect.push(next);
+        if expect.len() >= max_new {
+            break;
+        }
+        logits = Some(nn::forward_lm_step(&cfg, &ckpt, next, &mut kv).unwrap());
+    }
+
+    let mut eng = Engine::new(
+        cfg,
+        ckpt,
+        EngineConfig {
+            slots: 2,
+            scheduler: SchedulerConfig { max_batch: 2, ..SchedulerConfig::default() },
+            ..EngineConfig::default()
+        },
+    );
+    let (req_a, rx_a) = DecodeRequest::new(prompt.clone(), max_new);
+    let (req_b, rx_b) = DecodeRequest::new(prompt, max_new);
+    eng.submit(req_a);
+    eng.submit(req_b);
+    while eng.has_work() {
+        eng.step().unwrap();
+    }
+    for rx in [&rx_a, &rx_b] {
+        let mut tokens = Vec::new();
+        let mut finished = None;
+        while let Ok(ev) = rx.try_recv() {
+            match ev {
+                TokenEvent::Token { token, .. } => tokens.push(token),
+                TokenEvent::Finished { reason, .. } => finished = Some(reason),
+                TokenEvent::Rejected { reason, .. } => panic!("unexpected rejection: {reason}"),
+            }
+        }
+        assert_eq!(tokens, expect, "W4A4 batched stream diverged from the sequential forward");
+        assert_eq!(finished, Some(FinishReason::MaxTokens));
+    }
+}
